@@ -1,0 +1,66 @@
+"""Perf hillclimb driver (§Perf): re-lower a target (arch x shape) with
+optimization knobs and report the three roofline terms vs baseline.
+
+  PYTHONPATH=src python benchmarks/hillclimb.py --pair smollm-360m:train_4k \
+      --variants baseline,sdpa_spread ...
+"""
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("DRYRUN_XLA_FLAGS")
+                           or "--xla_force_host_platform_device_count=512")
+import argparse, json, sys
+
+PEAK_FLOPS, HBM_BW, ICI_BW = 197e12, 819e9, 50e9
+
+VARIANTS = {
+    "baseline": {},
+    "megatron": {"megatron": True},
+    "sdpa_spread": {"sdpa_spread": True},
+    "sdpa_norestore": {"sdpa_spread": "norestore"},
+    "megatron+sdpa": {"megatron": True, "sdpa_spread": True},
+    "ssm_split_proj": {"ssm_split_proj": True},
+    "megatron+split": {"megatron": True, "ssm_split_proj": True},
+    "compress": {"compress": True},
+    "remat_dots": {"remat_policy": "dots"},
+    "split+dots": {"ssm_split_proj": True, "remat_policy": "dots"},
+    "sdpa+dots": {"sdpa_spread": "norestore", "remat_policy": "dots"},
+    "megatron+dots": {"megatron": True, "remat_policy": "dots"},
+    "mega+dots+nofsdp": {"megatron": True, "remat_policy": "dots", "no_fsdp": True},
+    "megatron+compress": {"megatron": True, "compress": True},
+}
+
+
+def terms(rec):
+    return (rec["flops_per_device"] / PEAK_FLOPS,
+            rec["traffic_per_device"] / HBM_BW,
+            rec["collective_bytes_per_device"] / ICI_BW)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--pair", required=True)  # arch:shape
+    ap.add_argument("--variants", default="baseline")
+    ap.add_argument("--cut", type=int, default=None)
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args()
+    arch, shape = args.pair.split(":")
+    from repro.launch.dryrun import dryrun_one
+    rows = []
+    for v in args.variants.split(","):
+        kw = VARIANTS[v]
+        rec = dryrun_one(arch, shape, multi_pod=False, cut=args.cut,
+                         verbose=False, **kw)
+        tc, tm, tl = terms(rec)
+        coll = {k: round(x/1e9, 1) for k, x in rec["collectives"].items()
+                if not k.startswith("count_")}
+        rows.append({"variant": v, "t_compute": tc, "t_memory": tm,
+                     "t_collective": tl, "coll_GB": coll,
+                     "flops_dev": rec["flops_per_device"],
+                     "compile_s": rec["t_compile_s"]})
+        print(f"{arch}:{shape} [{v:16s}] comp={tc:.3f}s mem={tm:.3f}s "
+              f"coll={tl:.3f}s  {coll}", flush=True)
+    if args.out:
+        json.dump(rows, open(args.out, "w"), indent=1)
+
+
+if __name__ == "__main__":
+    main()

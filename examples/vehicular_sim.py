@@ -1,0 +1,67 @@
+"""Vehicular mobility simulation: watch the adaptive cut-layer rule react as
+vehicles drive past the RSU (the paper's core 'adaptive' story).
+
+Eight vehicles approach, pass, and leave the RSU's coverage; at each round
+the channel model yields per-vehicle Shannon rates, and the three cut
+strategies (paper Eq. 3, latency-optimal, energy-aware) pick cut layers.
+Also demonstrates the memory-constrained clamp (a vehicle-side budget the
+DBRX-scale architectures force — DESIGN.md §4).
+
+  PYTHONPATH=src python examples/vehicular_sim.py
+"""
+import sys
+
+sys.path.insert(0, "src")
+
+import numpy as np
+
+from repro.core import adaptive, channel
+from repro.core.cost import resnet_profile, sfl_client_round_cost
+
+
+def main():
+    prof = resnet_profile()
+    fleet = channel.make_fleet(8, seed=7)
+    ch = channel.ChannelConfig()
+    flops = [v.compute_flops for v in fleet]
+    n_batches, batch, sf = 32, 16, 2e12
+
+    print("t(s) | vehicle rates (Mbit/s) -> cuts [paper Eq.3] "
+          "[latency-opt] [energy-aware]")
+    for t in np.linspace(0, 30, 7):
+        rates = channel.sample_round_rates(ch, fleet, float(t), seed=int(t))
+        in_rng = [channel.in_range(ch, v, float(t)) for v in fleet]
+        cuts_p = adaptive.paper_threshold(rates)
+        cuts_l = adaptive.latency_optimal(prof, rates, flops, sf, n_batches,
+                                          batch, candidate_cuts=(2, 4, 6, 8))
+        cuts_e = adaptive.energy_aware(prof, rates, flops, sf, n_batches,
+                                       batch, candidate_cuts=(2, 4, 6, 8))
+        rstr = " ".join(f"{r/1e6:5.1f}{'' if ok else '!'}"
+                        for r, ok in zip(rates, in_rng))
+        print(f"{t:4.0f} | {rstr} -> {cuts_p} {cuts_l} {cuts_e}")
+    print("('!' marks vehicles outside RSU coverage: they skip the round —")
+    print(" the mobility interruption problem the paper highlights)")
+
+    # round latency comparison at t=15
+    rates = channel.sample_round_rates(ch, fleet, 15.0, seed=15)
+    for name, cuts in [
+        ("fixed cut 4 (SFL)", [4] * 8),
+        ("paper Eq.3 (ASFL)", adaptive.paper_threshold(rates)),
+        ("latency-optimal  ", adaptive.latency_optimal(
+            prof, rates, flops, sf, n_batches, batch,
+            candidate_cuts=(2, 4, 6, 8))),
+    ]:
+        lat = max(sfl_client_round_cost(prof, c, n_batches, batch, r, f, sf,
+                                        local_epochs=5).latency
+                  for c, r, f in zip(cuts, rates, flops))
+        print(f"round latency {name}: {lat:7.1f}s  cuts={cuts}")
+
+    # vehicle-side memory budget (the DBRX argument)
+    budget = 64 * 1024 * 1024  # 64 MiB on-vehicle budget
+    cuts = adaptive.memory_constrained(prof, budget, adaptive.paper_threshold,
+                                       rates)
+    print(f"with a {budget>>20} MiB vehicle budget the cuts clamp to {cuts}")
+
+
+if __name__ == "__main__":
+    main()

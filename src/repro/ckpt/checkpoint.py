@@ -1,0 +1,71 @@
+"""Pytree <-> .npz checkpointing (no orbax offline).
+
+Leaves are stored under their tree path; restore rebuilds into a reference
+pytree (``like``) so dtypes/structure round-trip exactly.  Writes are atomic
+(tmp file + rename) — a killed run never leaves a torn checkpoint.
+"""
+from __future__ import annotations
+
+import os
+import re
+import tempfile
+from typing import Any, Optional
+
+import jax
+import numpy as np
+
+
+def _flatten(tree) -> dict:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = "/".join(str(p) for p in path)
+        arr = np.asarray(leaf)
+        if arr.dtype.name not in ("float64", "float32", "float16", "int64",
+                                  "int32", "int16", "int8", "uint64",
+                                  "uint32", "uint16", "uint8", "bool"):
+            # .npz cannot serialise ml_dtypes (bfloat16 &co): upcast
+            # losslessly to f32 — restore casts back to the reference dtype.
+            arr = np.asarray(jax.numpy.asarray(leaf, jax.numpy.float32))
+        flat[key] = arr
+    return flat
+
+
+def save_checkpoint(directory: str, step: int, tree: Any) -> str:
+    os.makedirs(directory, exist_ok=True)
+    path = os.path.join(directory, f"ckpt_{step:08d}.npz")
+    fd, tmp = tempfile.mkstemp(dir=directory, suffix=".tmp")
+    os.close(fd)
+    try:
+        with open(tmp, "wb") as f:
+            np.savez(f, **_flatten(tree))
+        os.replace(tmp, path)
+    finally:
+        if os.path.exists(tmp):
+            os.unlink(tmp)
+    return path
+
+
+def latest_step(directory: str) -> Optional[int]:
+    if not os.path.isdir(directory):
+        return None
+    steps = [int(m.group(1)) for f in os.listdir(directory)
+             if (m := re.fullmatch(r"ckpt_(\d+)\.npz", f))]
+    return max(steps) if steps else None
+
+
+def restore_checkpoint(directory: str, step: int, like: Any) -> Any:
+    path = os.path.join(directory, f"ckpt_{step:08d}.npz")
+    with np.load(path) as data:
+        flat = dict(data)
+    paths, treedef = jax.tree_util.tree_flatten_with_path(like)
+    leaves = []
+    for path_elts, ref in paths:
+        key = "/".join(str(p) for p in path_elts)
+        if key not in flat:
+            raise KeyError(f"checkpoint missing leaf {key}")
+        arr = flat[key]
+        ref_arr = np.asarray(ref)
+        if arr.shape != ref_arr.shape:
+            raise ValueError(f"shape mismatch for {key}: {arr.shape} vs {ref_arr.shape}")
+        leaves.append(jax.numpy.asarray(arr, dtype=ref_arr.dtype))
+    return jax.tree_util.tree_unflatten(treedef, leaves)

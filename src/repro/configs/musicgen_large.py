@@ -1,0 +1,30 @@
+"""musicgen-large — decoder-only over EnCodec tokens [arXiv:2306.05284].
+
+[audio] 48L d_model=2048 32H (kv=32, MHA) d_ff=8192 vocab=2048.
+The EnCodec conv codec + mel frontend is a STUB: ``input_specs`` provides
+per-codebook token ids; the model sums 4 codebook embeddings per frame
+(the MusicGen delay-pattern interleave collapses to this at the backbone).
+Plain (non-gated) GeLU FFN + sinusoidal positions per the paper.
+Pure full attention -> long_500k skipped.
+"""
+from repro.configs.base import ATTN, ArchConfig
+
+CONFIG = ArchConfig(
+    name="musicgen-large",
+    family="audio",
+    source="arXiv:2306.05284",
+    n_layers=48,
+    d_model=2048,
+    n_heads=32,
+    n_kv_heads=32,
+    head_dim=64,
+    d_ff=8192,
+    vocab_size=2048,
+    pattern=(ATTN,),
+    mlp_variant="gelu",
+    pos="sinusoidal",
+    frontend="audio",
+    n_codebooks=4,
+    default_cut=4,
+    subquadratic=False,
+)

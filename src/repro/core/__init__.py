@@ -1,0 +1,3 @@
+"""Core ASFL library: cut-layer splitting, adaptive cut selection, wireless
+channel model, FedAvg aggregation, the paper-faithful federation simulator,
+datacenter SFL train/serve steps, and smashed-data compression."""

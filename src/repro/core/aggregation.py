@@ -1,0 +1,62 @@
+"""Model aggregation — paper Eq. 1 (|D_n|-weighted global objective) and
+Eq. 2 (FedAvg of full models)."""
+from __future__ import annotations
+
+from typing import Any, List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def fedavg(trees: Sequence[Any], weights: Optional[Sequence[float]] = None) -> Any:
+    """Weighted average of pytrees.  Uniform weights give paper Eq. 2;
+    |D_n|-proportional weights realise the Eq. 1 objective."""
+    n = len(trees)
+    assert n > 0
+    if weights is None:
+        w = np.full((n,), 1.0 / n)
+    else:
+        w = np.asarray(weights, dtype=np.float64)
+        w = w / w.sum()
+
+    def avg(*leaves):
+        acc = sum(float(w[i]) * leaves[i].astype(jnp.float32) for i in range(n))
+        return acc.astype(leaves[0].dtype)
+
+    return jax.tree.map(avg, *trees)
+
+
+def fedavg_delta(global_tree: Any, client_trees: Sequence[Any],
+                 weights: Optional[Sequence[float]] = None,
+                 server_lr: float = 1.0) -> Any:
+    """Eq. 2 in delta form: w_{t+1} = w_t - eta_s * sum_n p_n (w_t - w_n).
+    With server_lr=1 and uniform p_n this equals fedavg(client_trees)."""
+    avg_clients = fedavg(client_trees, weights)
+
+    def upd(g, a):
+        return (g.astype(jnp.float32)
+                - server_lr * (g.astype(jnp.float32) - a.astype(jnp.float32))
+                ).astype(g.dtype)
+
+    return jax.tree.map(upd, global_tree, avg_clients)
+
+
+def unitwise_fedavg(unit_replicas: List[List[Any]],
+                    weights_per_unit: List[List[float]]) -> List[Any]:
+    """ASFL heterogeneous-cut aggregation: each stack unit is averaged over
+    every replica that trained it this round (vehicle-side copies for units
+    before each client's cut, RSU-side copies after)."""
+    out = []
+    for reps, ws in zip(unit_replicas, weights_per_unit):
+        out.append(fedavg(reps, ws))
+    return out
+
+
+def tree_sub(a: Any, b: Any) -> Any:
+    return jax.tree.map(lambda x, y: x - y, a, b)
+
+
+def tree_l2(a: Any) -> float:
+    return float(jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32)))
+                              for l in jax.tree.leaves(a))))

@@ -1,0 +1,85 @@
+"""Wireless channel + vehicle mobility model (VEI communication layer).
+
+Shannon-capacity rates with log-distance path loss over a drive-by mobility
+trace.  This supplies the per-vehicle, per-round transmission rates `r_n^t`
+that drive the paper's cut-layer selection rule (Eq. 3) and the latency /
+energy accounting of Fig. 5b.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Sequence
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class VehicleProfile:
+    """Static per-vehicle characteristics."""
+    compute_flops: float = 20e9     # sustained vehicle-side FLOP/s (CPU-class)
+    tx_power_w: float = 0.5         # uplink transmit power
+    compute_power_w: float = 15.0   # power draw while computing
+    x0_m: float = -200.0            # initial position along the road
+    speed_mps: float = 15.0         # vehicle speed (m/s)
+
+
+@dataclasses.dataclass
+class ChannelConfig:
+    bandwidth_hz: float = 10e6      # per-vehicle allocated bandwidth
+    noise_dbm_hz: float = -174.0    # thermal noise density
+    path_loss_exp: float = 3.0
+    ref_gain_db: float = -30.0      # gain at 1 m
+    rsu_range_m: float = 400.0
+    fading_std_db: float = 4.0      # shadow fading (log-normal)
+
+
+def distance_at(v: VehicleProfile, t: float) -> float:
+    """Distance to the RSU (at x=0, height folded in) at time t."""
+    x = v.x0_m + v.speed_mps * t
+    return float(np.sqrt(x * x + 10.0 ** 2))
+
+
+def rate_bps(cfg: ChannelConfig, v: VehicleProfile, t: float,
+             rng: np.random.Generator | None = None) -> float:
+    """Shannon rate B log2(1 + SNR) with path loss + optional shadow fading."""
+    d = distance_at(v, t)
+    pl_db = -cfg.ref_gain_db + 10 * cfg.path_loss_exp * np.log10(max(d, 1.0))
+    if rng is not None and cfg.fading_std_db > 0:
+        pl_db += rng.normal(0.0, cfg.fading_std_db)
+    p_rx_dbm = 10 * np.log10(v.tx_power_w * 1e3) - pl_db
+    noise_dbm = cfg.noise_dbm_hz + 10 * np.log10(cfg.bandwidth_hz)
+    snr = 10 ** ((p_rx_dbm - noise_dbm) / 10)
+    return float(cfg.bandwidth_hz * np.log2(1.0 + snr))
+
+
+def in_range(cfg: ChannelConfig, v: VehicleProfile, t: float) -> bool:
+    return abs(v.x0_m + v.speed_mps * t) <= cfg.rsu_range_m
+
+
+def residence_time(cfg: ChannelConfig, v: VehicleProfile, t: float) -> float:
+    """Remaining time within RSU coverage (the training-completion deadline)."""
+    x = v.x0_m + v.speed_mps * t
+    if abs(x) > cfg.rsu_range_m:
+        return 0.0
+    return (cfg.rsu_range_m - x) / max(v.speed_mps, 1e-9)
+
+
+def make_fleet(n: int, seed: int = 0) -> List[VehicleProfile]:
+    """Heterogeneous fleet: compute speeds and mobility vary per vehicle."""
+    rng = np.random.default_rng(seed)
+    fleet = []
+    for i in range(n):
+        fleet.append(VehicleProfile(
+            compute_flops=float(rng.uniform(5e9, 50e9)),
+            tx_power_w=float(rng.uniform(0.2, 1.0)),
+            compute_power_w=float(rng.uniform(8.0, 25.0)),
+            x0_m=float(rng.uniform(-350.0, -50.0)),
+            speed_mps=float(rng.uniform(8.0, 30.0)),
+        ))
+    return fleet
+
+
+def sample_round_rates(cfg: ChannelConfig, fleet: Sequence[VehicleProfile],
+                       t: float, seed: int) -> np.ndarray:
+    rng = np.random.default_rng(seed)
+    return np.array([rate_bps(cfg, v, t, rng) for v in fleet])

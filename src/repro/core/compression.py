@@ -1,0 +1,68 @@
+"""Smashed-data compression at the cut boundary (beyond-paper optimization).
+
+The paper's point is that SFL trades communication for computation; the
+natural next step (its §IV-D 'wireless resource allocation' direction) is to
+shrink the uplink itself.  We use per-group symmetric int8 quantisation of
+the cut activations (and, optionally, of the returned cut-layer gradients):
+4x fewer bytes over the wireless link in the simulator, and 4x fewer
+collective bytes at the sharding boundary in the datacenter realisation.
+
+A straight-through estimator keeps the backward path exact w.r.t. the
+dequantised values.  ``repro.kernels.quant`` provides the Pallas TPU kernel
+with identical semantics (this module is its oracle).
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+GROUP = 128  # quantisation group along the trailing axis
+
+
+def quantize_int8(x: jnp.ndarray, group: int = GROUP
+                  ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Per-(trailing-)group symmetric int8.  Returns (q int8, scales f32).
+    Trailing dim must be divisible by `group` (pad upstream if not)."""
+    *lead, d = x.shape
+    g = min(group, d)
+    if d % g:
+        g = d
+    xg = x.reshape(*lead, d // g, g).astype(jnp.float32)
+    amax = jnp.max(jnp.abs(xg), axis=-1, keepdims=True)
+    scale = jnp.maximum(amax, 1e-8) / 127.0
+    q = jnp.clip(jnp.round(xg / scale), -127, 127).astype(jnp.int8)
+    return q.reshape(*lead, d), scale[..., 0]
+
+
+def dequantize_int8(q: jnp.ndarray, scale: jnp.ndarray, dtype=jnp.float32
+                    ) -> jnp.ndarray:
+    *lead, d = q.shape
+    ng = scale.shape[-1]
+    g = d // ng
+    xg = q.reshape(*lead, ng, g).astype(jnp.float32) * scale[..., None]
+    return xg.reshape(*lead, d).astype(dtype)
+
+
+@jax.custom_vjp
+def fake_quant(x: jnp.ndarray) -> jnp.ndarray:
+    """Quantise-dequantise with a straight-through gradient."""
+    q, s = quantize_int8(x)
+    return dequantize_int8(q, s, x.dtype)
+
+
+def _fq_fwd(x):
+    return fake_quant(x), None
+
+
+def _fq_bwd(_, g):
+    return (g,)
+
+
+fake_quant.defvjp(_fq_fwd, _fq_bwd)
+
+
+def compression_ratio(dtype_bytes: int = 4, group: int = GROUP) -> float:
+    """Bytes(fp) / bytes(int8 + scales)."""
+    return dtype_bytes * group / (group + 4.0)

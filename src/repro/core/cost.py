@@ -1,0 +1,226 @@
+"""Per-cut communication / computation / energy accounting.
+
+This is the analytic model behind the paper's Fig. 5a (communication overhead
+per scheme and cut layer) and Fig. 5b (overall training time), and the input
+to the latency-optimal cut selection strategy (beyond-paper, adaptive.py).
+
+A :class:`SplitProfile` abstracts any layer-stack model: per-unit forward
+FLOPs, per-unit parameter bytes, and smashed-data bytes at each cut.  Both
+ResNet18 (the paper's model) and every assigned ArchConfig provide one.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Sequence
+
+import numpy as np
+
+from repro.configs.base import (ATTN, ATTN_LOCAL, ATTN_MOE, MLA_DENSE,
+                                MLA_MOE, RGLRU, SSM, ArchConfig)
+
+BYTES_F32 = 4
+BWD_FWD_RATIO = 2.0  # backward pass ~ 2x forward FLOPs
+
+
+@dataclasses.dataclass
+class SplitProfile:
+    name: str
+    unit_fwd_flops: List[float]      # per-sample forward FLOPs per unit
+    unit_param_bytes: List[int]      # parameter bytes per unit
+    smashed_bytes_per_sample: List[float]  # at cut c (index c-1), forward
+    head_flops: float = 0.0
+    head_param_bytes: int = 0
+
+    @property
+    def n_units(self) -> int:
+        return len(self.unit_fwd_flops)
+
+    def client_fwd_flops(self, cut: int) -> float:
+        return float(sum(self.unit_fwd_flops[:cut]))
+
+    def server_fwd_flops(self, cut: int) -> float:
+        return float(sum(self.unit_fwd_flops[cut:]) + self.head_flops)
+
+    def client_param_bytes(self, cut: int) -> int:
+        return int(sum(self.unit_param_bytes[:cut]))
+
+    def full_param_bytes(self) -> int:
+        return int(sum(self.unit_param_bytes) + self.head_param_bytes)
+
+    def smashed_bytes(self, cut: int, batch: int) -> float:
+        return self.smashed_bytes_per_sample[cut - 1] * batch
+
+
+def resnet_profile() -> SplitProfile:
+    from repro.models import resnet as R
+    unit_flops = [float(R.unit_flops(i)) for i in range(R.N_UNITS)]
+    unit_bytes = []
+    # analytic param bytes per unit
+    cin = 3
+    # stem
+    unit_bytes.append((3 * 3 * 3 * 64 + 2 * 64) * BYTES_F32)
+    cin = 64
+    for cout, stride in zip(R.STAGE_CHANNELS, R.STAGE_STRIDES):
+        n = 3 * 3 * cin * cout + 2 * cout + 3 * 3 * cout * cout + 2 * cout
+        if stride != 1 or cin != cout:
+            n += cin * cout + 2 * cout
+        unit_bytes.append(n * BYTES_F32)
+        cin = cout
+    smashed = [float(np.prod(R.smashed_shape(c, 1)[1:])) * BYTES_F32
+               for c in range(1, R.N_UNITS + 1)]
+    return SplitProfile(
+        name="resnet18",
+        unit_fwd_flops=unit_flops,
+        unit_param_bytes=unit_bytes,
+        smashed_bytes_per_sample=smashed,
+        head_flops=2 * 512 * 10,
+        head_param_bytes=(512 * 10 + 10) * BYTES_F32,
+    )
+
+
+def arch_profile(cfg: ArchConfig, seq: int, param_bytes_per: int = 2
+                 ) -> SplitProfile:
+    """SplitProfile for an assigned architecture at period granularity.
+    smashed data = (seq, d_model) activations at the period boundary."""
+    from repro.models import transformer as T
+    from repro.models.attention import attn_flops
+    from repro.models.mla import mla_flops
+    from repro.models.moe import moe_flops
+    from repro.models.rglru import rglru_flops
+    from repro.models.ssm import ssm_flops
+    from repro.models.layers import mlp_flops
+
+    def layer_flops(kind: str) -> float:
+        if kind in (ATTN, ATTN_MOE):
+            f = attn_flops(cfg, seq)
+        elif kind == ATTN_LOCAL:
+            f = attn_flops(cfg, seq, cfg.window)
+        elif kind in (MLA_DENSE, MLA_MOE):
+            f = mla_flops(cfg, seq)
+        elif kind == SSM:
+            return float(ssm_flops(cfg, seq, "train"))
+        elif kind == RGLRU:
+            f = rglru_flops(cfg)
+        else:
+            raise ValueError(kind)
+        if kind in (ATTN_MOE, MLA_MOE):
+            f += moe_flops(cfg)
+        elif kind != SSM:
+            f += mlp_flops(cfg.d_model, cfg.d_ff, cfg.mlp_variant)
+        return float(f)
+
+    def layer_params(kind: str) -> int:
+        # reuse the analytic counter via a 1-layer pseudo-config
+        import dataclasses as dc
+        one = dc.replace(cfg, n_layers=1, pattern=(kind,), tail=())
+        base = T.count_params(one)
+        emb = one.padded_vocab * one.d_model * (
+            one.n_codebooks if one.frontend == "audio" else 1)
+        head = one.d_model * one.padded_vocab * (
+            one.n_codebooks if one.frontend == "audio" else 1)
+        return (base - emb - head - one.d_model) * param_bytes_per
+
+    types = cfg.layer_types
+    segs = T.segments_of(cfg)
+    unit_flops, unit_bytes = [], []
+    li = 0
+    for pat, n in segs:
+        for _ in range(n):
+            f = sum(layer_flops(k) for k in pat) * seq
+            b = sum(layer_params(k) for k in pat)
+            unit_flops.append(float(f))
+            unit_bytes.append(int(b))
+            li += len(pat)
+    smashed = [float(seq * cfg.d_model * param_bytes_per)] * len(unit_flops)
+    vp = cfg.padded_vocab * (cfg.n_codebooks if cfg.frontend == "audio" else 1)
+    return SplitProfile(
+        name=cfg.name,
+        unit_fwd_flops=unit_flops,
+        unit_param_bytes=unit_bytes,
+        smashed_bytes_per_sample=smashed,
+        head_flops=float(2 * cfg.d_model * vp * seq),
+        head_param_bytes=2 * vp * cfg.d_model * param_bytes_per,
+    )
+
+
+# --------------------------------------------------------------------------
+# per-round cost model (Fig 5a / 5b)
+# --------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class RoundCost:
+    comm_bytes_up: float
+    comm_bytes_down: float
+    t_client_compute: float
+    t_server_compute: float
+    t_comm: float
+    energy_j: float
+
+    @property
+    def comm_bytes(self) -> float:
+        return self.comm_bytes_up + self.comm_bytes_down
+
+    @property
+    def latency(self) -> float:
+        return self.t_client_compute + self.t_server_compute + self.t_comm
+
+
+def sfl_client_round_cost(profile: SplitProfile, cut: int, n_batches: int,
+                          batch: int, rate_bps: float, client_flops: float,
+                          server_flops: float, local_epochs: int = 1,
+                          tx_power_w: float = 0.5, compute_power_w: float = 15.0,
+                          include_model_transfer: bool = True) -> RoundCost:
+    """One SFL round for ONE client: K local epochs of (client fwd -> smashed
+    up -> server fwd/bwd -> grad down -> client bwd), then client-model
+    upload for aggregation (and download of the fresh copy)."""
+    steps = n_batches * local_epochs
+    smashed = profile.smashed_bytes(cut, batch)
+    up = steps * smashed
+    down = steps * smashed  # cut-layer gradients, same size
+    if include_model_transfer:
+        up += profile.client_param_bytes(cut)
+        down += profile.client_param_bytes(cut)
+    c_fwd = profile.client_fwd_flops(cut) * batch
+    s_fwd = profile.server_fwd_flops(cut) * batch
+    t_client = steps * c_fwd * (1 + BWD_FWD_RATIO) / client_flops
+    t_server = steps * s_fwd * (1 + BWD_FWD_RATIO) / server_flops
+    t_comm = (up + down) / max(rate_bps / 8, 1e-9)  # rate in bits/s
+    energy = compute_power_w * t_client + tx_power_w * (up * 8 / max(rate_bps, 1e-9))
+    return RoundCost(up, down, t_client, t_server, t_comm, energy)
+
+
+def fl_client_round_cost(profile: SplitProfile, n_batches: int, batch: int,
+                         rate_bps: float, client_flops: float,
+                         local_epochs: int = 1, tx_power_w: float = 0.5,
+                         compute_power_w: float = 15.0) -> RoundCost:
+    """FL: full model trained on-vehicle; model up+down once per round."""
+    steps = n_batches * local_epochs
+    full = profile.full_param_bytes()
+    fwd = (profile.client_fwd_flops(profile.n_units) + profile.head_flops) * batch
+    t_client = steps * fwd * (1 + BWD_FWD_RATIO) / client_flops
+    t_comm = 2 * full / max(rate_bps / 8, 1e-9)
+    energy = compute_power_w * t_client + tx_power_w * (full * 8 / max(rate_bps, 1e-9))
+    return RoundCost(full, full, t_client, 0.0, t_comm, energy)
+
+
+def sl_round_cost(profile: SplitProfile, cut: int, n_batches_per_client: Sequence[int],
+                  batch: int, rates_bps: Sequence[float], client_flops: Sequence[float],
+                  server_flops: float, local_epochs: int = 1) -> RoundCost:
+    """Sequential SL: clients served one after another; the client-side model
+    additionally hops vehicle -> vehicle (via RSU) between turns."""
+    up = down = t_c = t_s = t_comm = energy = 0.0
+    for nb, r, cf in zip(n_batches_per_client, rates_bps, client_flops):
+        c = sfl_client_round_cost(profile, cut, nb, batch, r, cf, server_flops,
+                                  local_epochs, include_model_transfer=True)
+        up += c.comm_bytes_up
+        down += c.comm_bytes_down
+        t_c += c.t_client_compute          # sequential: times add up
+        t_s += c.t_server_compute
+        t_comm += c.t_comm
+        energy += c.energy_j
+    return RoundCost(up, down, t_c, t_s, t_comm, energy)
+
+
+def parallel_round_latency(costs: Sequence[RoundCost]) -> float:
+    """SFL/FL round latency: slowest client (straggler) bounds the round."""
+    return max(c.latency for c in costs)

@@ -1,0 +1,200 @@
+"""Datacenter-scale SFL: jit-compilable train / prefill / decode steps.
+
+Mapping (DESIGN.md §3): vehicles <-> the `data` mesh axis (one cohort per
+column), RSU-side model tensor-parallel over `model`, the smashed-data
+boundary an explicit sharding constraint, FedAvg the |D_n|-weighted gradient
+mean over the client axis (visible as the data-axis all-reduce in the HLO).
+The compiled step is sync-SFL (aggregation every step, K=1) — see DESIGN.md
+for the equivalence argument; K>1 divergent-replica SFL runs in fedsim.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, ShapeConfig
+from repro.core import split as SP
+from repro.core.compression import fake_quant
+from repro.models import layers as L
+from repro.models import transformer as T
+from repro import optim
+
+Params = Any
+
+
+@dataclasses.dataclass
+class DistOptions:
+    cut: int = 2
+    compress_smashed: bool = False
+    remat: bool = True
+    learning_rate: float = 3e-4
+    optimizer: str = "adamw"
+    grad_clip: float = 1.0
+    smashed_sharding: Optional[jax.sharding.NamedSharding] = None
+    param_dtype: Any = None       # None -> cfg.param_dtype
+
+
+def make_optimizer(opts: DistOptions) -> optim.Optimizer:
+    if opts.optimizer == "adamw":
+        return optim.adamw(opts.learning_rate, weight_decay=0.01)
+    if opts.optimizer == "adam":
+        return optim.adam(opts.learning_rate)
+    return optim.sgd(opts.learning_rate)
+
+
+def init_state(key, cfg: ArchConfig, opts: DistOptions) -> Dict[str, Any]:
+    params = T.init_params(key, cfg, opts.param_dtype)
+    opt = make_optimizer(opts)
+    return {"params": params, "opt": opt.init(params),
+            "step": jnp.zeros((), jnp.int32)}
+
+
+def weighted_ce(logits, labels, weights, true_vocab: int) -> jnp.ndarray:
+    """Per-sample-weighted token cross-entropy — realises the |D_n|-weighted
+    FedAvg objective (paper Eq. 1) inside one lowered step."""
+    logits = logits.astype(jnp.float32)
+    vpad = logits.shape[-1]
+    if true_vocab < vpad:
+        mask = jnp.concatenate([jnp.zeros((true_vocab,), jnp.float32),
+                                jnp.full((vpad - true_vocab,), -1e9)])
+        logits = logits + mask
+    logz = jax.scipy.special.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    per_tok = logz - gold                       # (b, s) or (b, s, k)
+    while per_tok.ndim > 1:
+        per_tok = jnp.mean(per_tok, axis=-1)
+    w = weights / jnp.maximum(jnp.sum(weights), 1e-9)
+    return jnp.sum(per_tok * w)
+
+
+def _labels_of(cfg: ArchConfig, batch):
+    if cfg.frontend == "audio":
+        return batch["codes"].swapaxes(1, 2)     # (b, s, K)
+    return batch["labels"]
+
+
+def make_train_step(cfg: ArchConfig, opts: DistOptions) -> Callable:
+    """SFL round step: client fwd -> smashed boundary -> server fwd/bwd ->
+    client bwd -> weighted FedAvg (the data-axis mean inside jax.grad)."""
+    opt = make_optimizer(opts)
+    cut = SP.clamp_cut(cfg, opts.cut)
+
+    def train_step(state, batch):
+        def loss_fn(params):
+            client, server = SP.split_params(params, cfg, cut)
+            smashed, positions, aux_c, _ = SP.client_forward(
+                client, cfg, batch, cut, "train")
+            if opts.smashed_sharding is not None:
+                smashed = jax.lax.with_sharding_constraint(
+                    smashed, opts.smashed_sharding)
+            if opts.compress_smashed:
+                smashed = fake_quant(smashed)     # int8 uplink (beyond-paper)
+            logits, aux_s, _ = SP.server_forward(
+                server, cfg, smashed, positions, cut, "train")
+            labels = _labels_of(cfg, batch)
+            if cfg.frontend == "vision":
+                logits = logits[:, cfg.n_patches:]
+            ce = weighted_ce(logits, labels, batch["weights"], cfg.vocab_size)
+            return ce + aux_c + aux_s, {"ce": ce, "aux": aux_c + aux_s}
+
+        (loss, metrics), grads = jax.value_and_grad(
+            loss_fn, has_aux=True)(state["params"])
+        if opts.grad_clip > 0:
+            grads, gnorm = optim.clip_by_global_norm(grads, opts.grad_clip)
+            metrics["grad_norm"] = gnorm
+        updates, opt_state = opt.update(grads, state["opt"], state["params"])
+        params = optim.apply_updates(state["params"], updates)
+        new_state = {"params": params, "opt": opt_state,
+                     "step": state["step"] + 1}
+        metrics["loss"] = loss
+        return new_state, metrics
+
+    return train_step
+
+
+def make_prefill_step(cfg: ArchConfig, opts: DistOptions,
+                      capacity: int) -> Callable:
+    """Split inference (paper §IV-C), prefill phase: vehicle-side layers run
+    on the cohort, one smashed upload, RSU-side layers fill their caches."""
+    cut = SP.clamp_cut(cfg, opts.cut)
+
+    def prefill_step(params, batch):
+        client, server = SP.split_params(params, cfg, cut)
+        smashed, positions, _, c_caches = SP.client_forward(
+            client, cfg, batch, cut, "prefill", capacity=capacity)
+        if opts.smashed_sharding is not None:
+            smashed = jax.lax.with_sharding_constraint(
+                smashed, opts.smashed_sharding)
+        if opts.compress_smashed:
+            smashed = fake_quant(smashed)
+        logits, _, s_caches = SP.server_forward(
+            server, cfg, smashed, positions, cut, "prefill", capacity=capacity)
+        return logits[:, -1:], (c_caches, s_caches)
+
+    return prefill_step
+
+
+def make_decode_step(cfg: ArchConfig, opts: DistOptions,
+                     capacity: int) -> Callable:
+    """Split inference, decode: ONE new token against seq_len of cache."""
+    cut = SP.clamp_cut(cfg, opts.cut)
+
+    def decode_step(params, batch, caches, pos):
+        client, server = SP.split_params(params, cfg, cut)
+        c_caches, s_caches = caches
+        smashed, positions, _, c_caches = SP.client_forward(
+            client, cfg, batch, cut, "decode", caches=c_caches,
+            capacity=capacity, pos_offset=pos)
+        if opts.smashed_sharding is not None:
+            smashed = jax.lax.with_sharding_constraint(
+                smashed, opts.smashed_sharding)
+        if opts.compress_smashed:
+            smashed = fake_quant(smashed)
+        logits, _, s_caches = SP.server_forward(
+            server, cfg, smashed, positions, cut, "decode", caches=s_caches,
+            capacity=capacity)
+        return logits, (c_caches, s_caches)
+
+    return decode_step
+
+
+# --------------------------------------------------------------------------
+# input specs (ShapeDtypeStruct stand-ins; no allocation — dry-run contract)
+# --------------------------------------------------------------------------
+
+def input_specs(cfg: ArchConfig, shape: ShapeConfig) -> Dict[str, Any]:
+    """Model inputs for one step at the given input shape."""
+    b = shape.global_batch
+    sds = jax.ShapeDtypeStruct
+    if shape.kind == "decode":
+        s = 1
+    else:
+        s = shape.seq_len
+    if cfg.frontend == "vision":
+        s_text = max(s - cfg.n_patches, 1) if shape.kind != "decode" else 1
+        batch = {"tokens": sds((b, s_text), jnp.int32)}
+        if shape.kind != "decode":
+            batch["patch_embeds"] = sds((b, cfg.n_patches, cfg.d_model), jnp.float32)
+        if shape.kind == "train":
+            batch["labels"] = sds((b, s_text), jnp.int32)
+    elif cfg.frontend == "audio":
+        batch = {"codes": sds((b, cfg.n_codebooks, s), jnp.int32)}
+    else:
+        batch = {"tokens": sds((b, s), jnp.int32)}
+        if shape.kind == "train":
+            batch["labels"] = sds((b, s), jnp.int32)
+    if shape.kind == "train":
+        batch["weights"] = sds((b,), jnp.float32)
+    return batch
+
+
+def cache_specs(cfg: ArchConfig, shape: ShapeConfig, cut: int,
+                dtype=jnp.bfloat16):
+    """Shape-only KV/state cache stand-ins for the decode dry-run."""
+    def build():
+        return SP.init_split_caches(cfg, shape.global_batch, shape.seq_len,
+                                    cut, dtype)
+    return jax.eval_shape(build)

@@ -1,0 +1,472 @@
+"""Paper-faithful federation simulator: CL / FL / SL / SFL(fixed cut) / ASFL.
+
+This engine reproduces the paper's Fig. 5 case study: ResNet18-class models,
+4 vehicles, non-IID (6-of-10 labels, power-law sizes), lr 1e-4, batch 16,
+local epochs 5.  The SFL message flow is realised explicitly — vehicle-side
+forward, smashed-data upload, RSU-side forward/backward, cut-layer-gradient
+download, vehicle-side backward — via jax.vjp, NOT one composite jax.grad,
+so the implementation is structurally the paper's Fig. 3 workflow (their
+mathematical equality is asserted in tests/test_sfl_math.py).
+
+The engine is generic over a :class:`UnitModel` (any stack of units with a
+head); ResNet18 (the paper's model) and the small transformer wrapper both
+implement it.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Dict, List, Optional, Protocol, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import adaptive, aggregation, channel, compression, cost
+from repro.data.pipeline import ClientDataset
+from repro import optim
+
+Params = Any
+
+
+class UnitModel(Protocol):
+    name: str
+    n_units: int
+
+    def init(self, key) -> Tuple[List[Params], Params]: ...
+    def apply_units(self, units: List[Params], x, start: int): ...
+    def head_loss(self, head: Params, feats, labels): ...
+    def head_predict(self, head: Params, feats): ...
+    def profile(self) -> cost.SplitProfile: ...
+
+
+class ResNetModel:
+    """The paper's ResNet18 over 32x32x3 inputs."""
+    name = "resnet18"
+
+    def __init__(self, n_classes: int = 10):
+        from repro.models import resnet as R
+        self.R = R
+        self.n_units = R.N_UNITS
+        self.n_classes = n_classes
+
+    def init(self, key):
+        p = self.R.init_resnet18(key, self.n_classes)
+        return list(p["units"]), p["head"]
+
+    def apply_units(self, units, x, start):
+        for j, u in enumerate(units):
+            x = self.R._apply_unit(u, x, start + j)
+        return x
+
+    def head_loss(self, head, feats, labels):
+        logits = jnp.mean(feats, axis=(1, 2)) @ head["w"] + head["b"]
+        logz = jax.scipy.special.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, labels[:, None], axis=-1)[:, 0]
+        return jnp.mean(logz - gold), logits
+
+    def head_predict(self, head, feats):
+        return jnp.mean(feats, axis=(1, 2)) @ head["w"] + head["b"]
+
+    def profile(self):
+        return cost.resnet_profile()
+
+
+@dataclasses.dataclass
+class SimConfig:
+    scheme: str = "asfl"          # cl | fl | sl | sfl | asfl
+    cut: int = 4                  # fixed cut for sl/sfl
+    n_clients: int = 4
+    batch_size: int = 16          # paper: 16
+    local_epochs: int = 5         # paper: 5
+    local_steps: Optional[int] = None  # overrides epochs if set
+    lr: float = 1e-4              # paper: 1e-4
+    rounds: int = 10
+    seed: int = 0
+    optimizer: str = "adam"
+    adaptive_strategy: str = "paper"   # paper | paper-literal | latency | energy
+    compress_smashed: bool = False
+    server_flops: float = 2e12    # RSU (GPU-class)
+    round_interval_s: float = 5.0
+    # mobility: vehicles outside RSU coverage at round start skip the round
+    # (the paper's §II-C training-interruption challenge)
+    mobility_dropout: bool = False
+
+
+@dataclasses.dataclass
+class RoundMetrics:
+    round: int
+    loss: float
+    test_acc: float
+    comm_bytes: float
+    sim_time_s: float
+    energy_j: float
+    cuts: List[int]
+
+
+def _make_opt(cfg: SimConfig):
+    if cfg.optimizer == "adam":
+        return optim.adam(cfg.lr)
+    if cfg.optimizer == "sgd":
+        return optim.sgd(cfg.lr)
+    return optim.momentum(cfg.lr)
+
+
+# --------------------------------------------------------------------------
+# jitted batch steps
+# --------------------------------------------------------------------------
+
+def make_sfl_batch_step(model: UnitModel, cfg: SimConfig, cut: int):
+    """One SFL batch for one client at a given cut (static).  Returns the
+    explicit message-flow step (client fwd -> server fwd/bwd -> client bwd)."""
+    opt = _make_opt(cfg)
+
+    @jax.jit
+    def step(client_units, server_units, head, c_opt, s_opt, batch):
+        x, y = batch["images"], batch["labels"]
+
+        def client_fwd(cu):
+            return model.apply_units(cu, x, 0)
+
+        smashed, client_vjp = jax.vjp(client_fwd, client_units)
+        sm_in = compression.fake_quant(smashed) if cfg.compress_smashed else smashed
+
+        def server_loss(sv, sm):
+            feats = model.apply_units(sv["units"], sm, cut)
+            loss, logits = model.head_loss(sv["head"], feats, y)
+            return loss, logits
+
+        sv_tree = {"units": server_units, "head": head}
+        (loss, logits), grads = jax.value_and_grad(
+            server_loss, argnums=(0, 1), has_aux=True)(sv_tree, sm_in)
+        g_server, g_smashed = grads
+        if cfg.compress_smashed:                    # downlink gradient, too
+            g_smashed = compression.fake_quant(g_smashed)
+        (g_client,) = client_vjp(g_smashed)
+
+        upd_c, c_opt = opt.update(g_client, c_opt, client_units)
+        client_units = optim.apply_updates(client_units, upd_c)
+        upd_s, s_opt = opt.update(g_server, s_opt, sv_tree)
+        sv_tree = optim.apply_updates(sv_tree, upd_s)
+        acc = jnp.mean((jnp.argmax(logits, -1) == y).astype(jnp.float32))
+        return client_units, sv_tree["units"], sv_tree["head"], c_opt, s_opt, loss, acc
+
+    return step
+
+
+def make_full_batch_step(model: UnitModel, cfg: SimConfig):
+    """Full-model step (CL and FL local training)."""
+    opt = _make_opt(cfg)
+
+    @jax.jit
+    def step(units, head, opt_state, batch):
+        x, y = batch["images"], batch["labels"]
+
+        def loss_fn(tree):
+            feats = model.apply_units(tree["units"], x, 0)
+            loss, logits = model.head_loss(tree["head"], feats, y)
+            return loss, logits
+
+        tree = {"units": units, "head": head}
+        (loss, logits), g = jax.value_and_grad(loss_fn, has_aux=True)(tree)
+        upd, opt_state = opt.update(g, opt_state, tree)
+        tree = optim.apply_updates(tree, upd)
+        acc = jnp.mean((jnp.argmax(logits, -1) == y).astype(jnp.float32))
+        return tree["units"], tree["head"], opt_state, loss, acc
+
+    return step
+
+
+# --------------------------------------------------------------------------
+# evaluation
+# --------------------------------------------------------------------------
+
+def evaluate(model: UnitModel, units, head, test: Dict[str, jnp.ndarray],
+             batch: int = 256) -> float:
+    n = test["labels"].shape[0]
+    correct = total = 0
+    for i in range(0, n, batch):
+        x = test["images"][i:i + batch]
+        y = test["labels"][i:i + batch]
+        feats = model.apply_units(units, x, 0)
+        logits = model.head_predict(head, feats)
+        correct += int(jnp.sum(jnp.argmax(logits, -1) == y))
+        total += int(y.size)
+    return correct / max(total, 1)
+
+
+# --------------------------------------------------------------------------
+# the simulator
+# --------------------------------------------------------------------------
+
+class FederationSim:
+    def __init__(self, model: UnitModel, clients: Sequence[ClientDataset],
+                 test: Dict[str, jnp.ndarray], cfg: SimConfig,
+                 fleet: Optional[List[channel.VehicleProfile]] = None,
+                 ch_cfg: Optional[channel.ChannelConfig] = None):
+        self.model = model
+        self.clients = list(clients)
+        self.test = test
+        self.cfg = cfg
+        self.fleet = fleet or channel.make_fleet(len(clients), cfg.seed)
+        self.ch = ch_cfg or channel.ChannelConfig()
+        self.profile = model.profile()
+        key = jax.random.PRNGKey(cfg.seed)
+        self.units, self.head = model.init(key)
+        self._sfl_steps: Dict[int, Callable] = {}
+        self._full_step = make_full_batch_step(model, cfg)
+        self.history: List[RoundMetrics] = []
+
+    # ---- helpers -----------------------------------------------------
+    def _sfl_step(self, cut: int):
+        if cut not in self._sfl_steps:
+            self._sfl_steps[cut] = make_sfl_batch_step(self.model, self.cfg, cut)
+        return self._sfl_steps[cut]
+
+    def _local_steps(self, client: ClientDataset) -> int:
+        if self.cfg.local_steps is not None:
+            return self.cfg.local_steps
+        nb = max(len(client) // self.cfg.batch_size, 1)
+        return nb * self.cfg.local_epochs
+
+    def _round_rates(self, rnd: int) -> np.ndarray:
+        t = rnd * self.cfg.round_interval_s
+        return channel.sample_round_rates(self.ch, self.fleet, t,
+                                          self.cfg.seed * 1000 + rnd)
+
+    def _participants(self, rnd: int) -> List[int]:
+        """Vehicle indices in RSU coverage this round (all, if mobility
+        dropout is disabled).  At least one vehicle always participates."""
+        if not self.cfg.mobility_dropout:
+            return list(range(len(self.clients)))
+        t = rnd * self.cfg.round_interval_s
+        inr = [ci for ci, v in enumerate(self.fleet)
+               if channel.in_range(self.ch, v, t)]
+        return inr or [0]
+
+    def _pick_cuts(self, rates: np.ndarray) -> List[int]:
+        c = self.cfg
+        if c.scheme == "sfl" or c.scheme == "sl":
+            return [c.cut] * len(self.clients)
+        strat = c.adaptive_strategy
+        if strat == "paper":
+            return adaptive.paper_threshold(rates)
+        if strat == "paper-literal":
+            return adaptive.paper_threshold(rates, literal_eq3=True)
+        flops = [v.compute_flops for v in self.fleet]
+        nb = max(len(self.clients[0]) // c.batch_size, 1)
+        if strat == "latency":
+            return adaptive.latency_optimal(self.profile, rates, flops,
+                                            c.server_flops, nb, c.batch_size,
+                                            c.local_epochs)
+        return adaptive.energy_aware(self.profile, rates, flops,
+                                     c.server_flops, nb, c.batch_size,
+                                     c.local_epochs)
+
+    # ---- schemes -----------------------------------------------------
+    def run(self) -> List[RoundMetrics]:
+        for rnd in range(self.cfg.rounds):
+            fn = getattr(self, f"_round_{self.cfg.scheme}")
+            metrics = fn(rnd)
+            self.history.append(metrics)
+        return self.history
+
+    def _metrics(self, rnd, losses, cuts, comm, time_s, energy) -> RoundMetrics:
+        acc = evaluate(self.model, self.units, self.head, self.test)
+        return RoundMetrics(rnd, float(np.mean(losses)), acc, comm, time_s,
+                            energy, cuts)
+
+    def _round_cl(self, rnd: int) -> RoundMetrics:
+        # centralized: pool every client's raw data at the RSU (the upper
+        # bound the paper argues against — raw-data upload included in comm)
+        opt = _make_opt(self.cfg)
+        if not hasattr(self, "_cl_opt"):
+            self._cl_opt = opt.init({"units": self.units, "head": self.head})
+        losses = []
+        comm = 0.0
+        for c in self.clients:
+            for batch in c.batches(self.cfg.batch_size, self.cfg.seed + rnd):
+                self.units, self.head, self._cl_opt, loss, _ = self._full_step(
+                    self.units, self.head, self._cl_opt, batch)
+                losses.append(float(loss))
+            if rnd == 0:
+                comm += c.images.nbytes
+        return self._metrics(rnd, losses, [], comm, 0.0, 0.0)
+
+    def _round_fl(self, rnd: int) -> RoundMetrics:
+        cfgc = self.cfg
+        opt = _make_opt(cfgc)
+        rates = self._round_rates(rnd)
+        participants = set(self._participants(rnd))
+        client_trees, weights, losses = [], [], []
+        comm = energy = 0.0
+        latencies = []
+        for ci, c in enumerate(self.clients):
+            if ci not in participants:
+                continue
+            units, head = jax.tree.map(lambda a: a, (self.units, self.head))
+            ostate = opt.init({"units": units, "head": head})
+            steps = self._local_steps(c)
+            for s in range(steps):
+                batch = c.sample_batch(cfgc.batch_size, cfgc.seed + rnd * 997 + s)
+                units, head, ostate, loss, _ = self._full_step(units, head,
+                                                               ostate, batch)
+                losses.append(float(loss))
+            client_trees.append({"units": units, "head": head})
+            weights.append(len(c))
+            rc = cost.fl_client_round_cost(
+                self.profile, max(len(c) // cfgc.batch_size, 1),
+                cfgc.batch_size, rates[ci], self.fleet[ci].compute_flops,
+                cfgc.local_epochs, self.fleet[ci].tx_power_w,
+                self.fleet[ci].compute_power_w)
+            comm += rc.comm_bytes
+            energy += rc.energy_j
+            latencies.append(rc.latency)
+        avg = aggregation.fedavg(client_trees, weights)
+        self.units, self.head = avg["units"], avg["head"]
+        return self._metrics(rnd, losses, [], comm, max(latencies), energy)
+
+    def _round_sl(self, rnd: int) -> RoundMetrics:
+        """Vanilla sequential SL: the vehicle-side model travels from vehicle
+        to vehicle; the RSU-side model trains continuously."""
+        cfgc = self.cfg
+        cut = cfgc.cut
+        step = self._sfl_step(cut)
+        opt = _make_opt(cfgc)
+        client_units = self.units[:cut]
+        server_units = self.units[cut:]
+        head = self.head
+        c_opt = opt.init(client_units)
+        s_opt = opt.init({"units": server_units, "head": head})
+        losses = []
+        rates = self._round_rates(rnd)
+        for ci, c in enumerate(self.clients):
+            for s in range(self._local_steps(c)):
+                batch = c.sample_batch(cfgc.batch_size, cfgc.seed + rnd * 991 + s)
+                client_units, server_units, head, c_opt, s_opt, loss, _ = step(
+                    client_units, server_units, head, c_opt, s_opt, batch)
+                losses.append(float(loss))
+        self.units = list(client_units) + list(server_units)
+        self.head = head
+        rc = cost.sl_round_cost(
+            self.profile, cut,
+            [max(len(c) // cfgc.batch_size, 1) for c in self.clients],
+            cfgc.batch_size, rates, [v.compute_flops for v in self.fleet],
+            cfgc.server_flops, cfgc.local_epochs)
+        return self._metrics(rnd, losses, [cut] * len(self.clients),
+                             rc.comm_bytes, rc.latency, rc.energy_j)
+
+    def _round_sfl(self, rnd: int) -> RoundMetrics:
+        return self._parallel_split_round(rnd)
+
+    def _round_asfl(self, rnd: int) -> RoundMetrics:
+        return self._parallel_split_round(rnd)
+
+    def _parallel_split_round(self, rnd: int) -> RoundMetrics:
+        """SFL/ASFL with SplitFed-V1 semantics: vehicle-side replicas train
+        in parallel at (possibly heterogeneous) cuts while the RSU keeps ONE
+        shared server-side model that is updated on every client batch (the
+        RSU 'sequentially performs forward propagation ... with the received
+        smashed data' — paper §III-B).  Round end: vehicle-side units are
+        FedAvg'd (|D_n|-weighted) with the RSU copy of any unit it trained."""
+        cfgc = self.cfg
+        rates = self._round_rates(rnd)
+        participants = set(self._participants(rnd))
+        cuts = [max(1, min(c, self.model.n_units - 1))
+                for c in self._pick_cuts(rates)]
+        opt = _make_opt(cfgc)
+        n_units = self.model.n_units
+
+        # shared RSU-side state over the FULL stack (per-cut slices train).
+        # Optimizer-state leaves mirror the {"units": [...], "head": ...}
+        # params tree, so slicing at a cut = slicing the unit lists.
+        server_units = [jax.tree.map(lambda a: a, u) for u in self.units]
+        head = self.head
+        s_opt_full = opt.init({"units": server_units, "head": head})
+
+        def slice_opt(cut):
+            out = {}
+            for k, v in s_opt_full.items():
+                if isinstance(v, dict) and "units" in v:
+                    out[k] = {"units": v["units"][cut:], "head": v["head"]}
+                else:
+                    out[k] = v
+            return out
+
+        def merge_opt(new, cut):
+            for k, v in new.items():
+                if isinstance(v, dict) and "units" in v:
+                    s_opt_full[k]["units"] = (
+                        list(s_opt_full[k]["units"][:cut]) + list(v["units"]))
+                    s_opt_full[k]["head"] = v["head"]
+                else:
+                    s_opt_full[k] = v
+        # per-vehicle client-side replicas
+        client_units = [[jax.tree.map(lambda a: a, u)
+                         for u in self.units[:cut]] for cut in cuts]
+        c_opts = [opt.init(cu) for cu in client_units]
+
+        losses = []
+        comm = energy = 0.0
+        latencies = []
+        steps = max(self._local_steps(c) for c in self.clients)
+        for s in range(steps):
+            for ci, c in enumerate(self.clients):
+                if ci not in participants or s >= self._local_steps(c):
+                    continue
+                cut = cuts[ci]
+                step = self._sfl_step(cut)
+                batch = c.sample_batch(cfgc.batch_size,
+                                       cfgc.seed + rnd * 983 + s * 31 + ci)
+                sv = server_units[cut:]
+                (client_units[ci], new_sv, head, c_opts[ci], new_s_opt,
+                 loss, _) = step(client_units[ci], sv, head, c_opts[ci],
+                                 slice_opt(cut), batch)
+                server_units[cut:] = list(new_sv)
+                merge_opt(new_s_opt, cut)
+                losses.append(float(loss))
+
+        # unit-wise FedAvg: vehicle replicas + the shared RSU copy
+        unit_replicas: List[List[Params]] = [[] for _ in range(n_units)]
+        unit_weights: List[List[float]] = [[] for _ in range(n_units)]
+        for ci, c in enumerate(self.clients):
+            if ci not in participants:
+                continue
+            w = float(len(c))
+            for u in range(cuts[ci]):
+                unit_replicas[u].append(client_units[ci][u])
+                unit_weights[u].append(w)
+        for u in range(n_units):
+            served = sum(len(c) for ci, c in enumerate(self.clients)
+                         if ci in participants and cuts[ci] <= u)
+            if served:
+                unit_replicas[u].append(server_units[u])
+                unit_weights[u].append(float(served))
+        merged = []
+        for u in range(n_units):
+            if unit_replicas[u]:
+                merged.append(aggregation.fedavg(unit_replicas[u],
+                                                 unit_weights[u]))
+            else:
+                merged.append(self.units[u])
+        self.units = merged
+        self.head = head
+
+        for ci, c in enumerate(self.clients):
+            if ci not in participants:
+                continue
+            rc = cost.sfl_client_round_cost(
+                self.profile, cuts[ci], max(len(c) // cfgc.batch_size, 1),
+                cfgc.batch_size, rates[ci], self.fleet[ci].compute_flops,
+                cfgc.server_flops, cfgc.local_epochs,
+                self.fleet[ci].tx_power_w, self.fleet[ci].compute_power_w)
+            if cfgc.compress_smashed:
+                ratio = compression.compression_ratio()
+                rc = dataclasses.replace(
+                    rc, comm_bytes_up=rc.comm_bytes_up / ratio,
+                    comm_bytes_down=rc.comm_bytes_down / ratio,
+                    t_comm=rc.t_comm / ratio)
+            comm += rc.comm_bytes
+            energy += rc.energy_j
+            latencies.append(rc.latency)
+        return self._metrics(rnd, losses, cuts, comm, max(latencies), energy)

@@ -1,0 +1,80 @@
+"""Transformer-as-UnitModel adapter: run the federation simulator (fedsim)
+over any assigned architecture's reduced config — SFL/ASFL with the paper's
+message flow on LM stacks, not just the paper's ResNet18.
+
+Unit granularity: unit 0 = token embedding (always vehicle-side — the raw
+tokens never leave the vehicle, the paper's privacy argument); units 1..P =
+the stack's periods; the head (final norm + LM head) lives with the RSU.
+Batches use the fedsim convention: ``images`` = token ids (b, s),
+``labels`` = next-token ids (b, s).
+"""
+from __future__ import annotations
+
+from typing import List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.core import cost
+from repro.models import layers as L
+from repro.models import transformer as T
+
+
+class TransformerUnitModel:
+    def __init__(self, cfg: ArchConfig):
+        assert cfg.frontend == "none", "fedsim LM adapter: text archs only"
+        self.cfg = cfg
+        self.name = cfg.name
+        # (segment index, pattern) per period, in stack order
+        self._period_seg: List[Tuple[int, Tuple[str, ...]]] = []
+        for si, (pat, n) in enumerate(T.segments_of(cfg)):
+            self._period_seg += [(si, pat)] * n
+        self.n_units = 1 + len(self._period_seg)
+
+    def init(self, key):
+        params = T.init_params(key, self.cfg)
+        units: List = [{"embed": params["embed"]}]
+        seg_start = {}
+        for pi, (si, _) in enumerate(self._period_seg):
+            seg_start.setdefault(si, pi)
+        for pi, (si, pat) in enumerate(self._period_seg):
+            local = pi - seg_start[si]       # period index within its segment
+            seg = params["segments"][si]
+            units.append(jax.tree.map(lambda a: a[local:local + 1], seg))
+        head = {"final_norm": params["final_norm"], "head": params["head"]}
+        return units, head
+
+    def apply_units(self, units, x, start: int):
+        cfg = self.cfg
+        i = start
+        for u in units:
+            if i == 0:
+                positions = jnp.arange(x.shape[1], dtype=jnp.int32)
+                x = T.embed_inputs(u, cfg, {"tokens": x}, positions)
+                self._positions = positions
+            else:
+                si, pat = self._period_seg[i - 1]
+                positions = jnp.arange(x.shape[1], dtype=jnp.int32)
+                x, _, _ = T._scan_segment(u, cfg, pat, x, "train", positions,
+                                          None, 0, remat=False)
+            i += 1
+        return x
+
+    def head_loss(self, head, feats, labels):
+        logits = T.unembed(head, self.cfg, feats)
+        ce = L.cross_entropy(logits, labels, self.cfg.vocab_size)
+        return ce, logits
+
+    def head_predict(self, head, feats):
+        return T.unembed(head, self.cfg, feats)
+
+    def profile(self) -> cost.SplitProfile:
+        prof = cost.arch_profile(self.cfg, seq=64, param_bytes_per=4)
+        # prepend the embedding unit
+        emb_bytes = self.cfg.padded_vocab * self.cfg.d_model * 4
+        prof.unit_fwd_flops.insert(0, 0.0)
+        prof.unit_param_bytes.insert(0, emb_bytes)
+        prof.smashed_bytes_per_sample.insert(
+            0, prof.smashed_bytes_per_sample[0])
+        return prof

@@ -1,0 +1,124 @@
+"""Cut-layer splitting of model parameters (paper §III-A: ω = {ω^V; ω^S}).
+
+For the assigned transformer architectures the cut is at *period*
+granularity (see models/transformer.py); for ResNet18 it is the paper's 9
+unit boundaries.  ``split_params``/``join_params`` are exact inverses —
+property-tested in tests/test_split.py.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import transformer as T
+
+Params = Dict[str, Any]
+
+
+def valid_cuts(cfg: ArchConfig) -> List[int]:
+    """Period boundaries 1..P-1 (both sides keep at least one period)."""
+    return list(range(1, T.total_periods(cfg)))
+
+
+def clamp_cut(cfg: ArchConfig, cut: int) -> int:
+    return max(1, min(cut, T.total_periods(cfg) - 1))
+
+
+def split_params(params: Params, cfg: ArchConfig, cut: int
+                 ) -> Tuple[Params, Params]:
+    """Vehicle side: embed + periods [0, cut).  RSU side: periods [cut, P) +
+    final norm + head."""
+    cut = clamp_cut(cfg, cut)
+    client: Params = {"embed": params["embed"], "segments": []}
+    server: Params = {"final_norm": params["final_norm"],
+                      "head": params["head"], "segments": []}
+    off = 0
+    for si, (pat, n) in enumerate(T.segments_of(cfg)):
+        lo, hi = max(cut - off, 0), n
+        seg = params["segments"][si]
+        client["segments"].append(
+            jax.tree.map(lambda a: a[:lo], seg) if lo > 0 else None)
+        server["segments"].append(
+            jax.tree.map(lambda a: a[lo:], seg) if lo < n else None)
+        off += n
+    client["segments"] = tuple(client["segments"])
+    server["segments"] = tuple(server["segments"])
+    return client, server
+
+
+def join_params(client: Params, server: Params, cfg: ArchConfig) -> Params:
+    segs = []
+    for c_seg, s_seg in zip(client["segments"], server["segments"]):
+        if c_seg is None:
+            segs.append(s_seg)
+        elif s_seg is None:
+            segs.append(c_seg)
+        else:
+            segs.append(jax.tree.map(
+                lambda a, b: jnp.concatenate([a, b], axis=0), c_seg, s_seg))
+    return {"embed": client["embed"], "segments": tuple(segs),
+            "final_norm": server["final_norm"], "head": server["head"]}
+
+
+def client_forward(client: Params, cfg: ArchConfig, batch, cut: int,
+                   mode: str = "train", caches=None, capacity: int = 0,
+                   pos_offset: int = 0):
+    """Vehicle-side forward: embed + periods [0, cut) -> smashed data."""
+    cut = clamp_cut(cfg, cut)
+    full_like = {"embed": client["embed"], "segments": client["segments"],
+                 "final_norm": None, "head": None}
+    if mode == "decode":
+        positions = jnp.asarray([pos_offset], jnp.int32)
+    else:
+        if cfg.frontend == "vision":
+            s = batch["tokens"].shape[1] + cfg.n_patches
+        elif cfg.frontend == "audio":
+            s = batch["codes"].shape[2]
+        else:
+            s = batch["tokens"].shape[1]
+        positions = jnp.arange(s, dtype=jnp.int32)
+    x = T.embed_inputs(client, cfg, batch, positions)
+    # client segments are the [0, cut) slice: run them fully (start=0)
+    x, aux, new_caches = _run_sliced(client["segments"], cfg, x, mode,
+                                     positions, caches, capacity)
+    return x, positions, aux, new_caches
+
+
+def server_forward(server: Params, cfg: ArchConfig, smashed, positions,
+                   cut: int, mode: str = "train", caches=None,
+                   capacity: int = 0):
+    """RSU-side forward: periods [cut, P) + head -> logits."""
+    x, aux, new_caches = _run_sliced(server["segments"], cfg, smashed, mode,
+                                     positions, caches, capacity)
+    logits = T.unembed(server, cfg, x)
+    return logits, aux, new_caches
+
+
+def _run_sliced(sliced_segments, cfg: ArchConfig, x, mode, positions,
+                caches, capacity):
+    """Run pre-sliced stacked segments (client or server part)."""
+    aux = jnp.zeros((), jnp.float32)
+    out_caches = []
+    for si, (pat, _) in enumerate(T.segments_of(cfg)):
+        seg = sliced_segments[si]
+        if seg is None:
+            out_caches.append(None)
+            continue
+        seg_c = caches[si] if caches is not None else None
+        x, a, nc = T._scan_segment(seg, cfg, pat, x, mode, positions, seg_c,
+                                   capacity, remat=(mode == "train"))
+        aux = aux + a
+        out_caches.append(nc)
+    return x, aux, tuple(out_caches)
+
+
+def init_split_caches(cfg: ArchConfig, batch: int, capacity: int, cut: int,
+                      dtype=jnp.float32):
+    """(client_caches, server_caches) for decode at the given cut."""
+    cut = clamp_cut(cfg, cut)
+    total = T.total_periods(cfg)
+    return (T.init_caches(cfg, batch, capacity, dtype, 0, cut),
+            T.init_caches(cfg, batch, capacity, dtype, cut, total))

@@ -1,0 +1,5 @@
+from repro.data.synthetic import (  # noqa: F401
+    make_cifar_like, make_bigram_lm, lm_batch_from_stream)
+from repro.data.partition import (  # noqa: F401
+    label_skew_power_law, dirichlet_partition, partition_stats)
+from repro.data.pipeline import ClientDataset, make_federated_data  # noqa: F401

@@ -1,0 +1,69 @@
+"""Jit'd public wrappers for the Pallas kernels.
+
+On this CPU container the kernels run in interpret mode (set
+``REPRO_PALLAS_INTERPRET=1``, the default off-TPU); on TPU they compile to
+Mosaic.  Each wrapper falls back to the jnp reference when
+``use_kernel=False`` — the models use the reference path by default so CPU
+tests stay fast, and the launch scripts flip them to kernels on TPU.
+"""
+from __future__ import annotations
+
+import functools
+import os
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref as REF
+from repro.kernels.flash_attention import flash_attention as _fa
+from repro.kernels.quant import dequantize_int8 as _dq, quantize_int8 as _q
+from repro.kernels.rmsnorm import rmsnorm as _rms
+from repro.kernels.ssd import ssd_chunk_scan as _ssd
+
+
+def _interpret() -> bool:
+    env = os.environ.get("REPRO_PALLAS_INTERPRET")
+    if env is not None:
+        return env not in ("0", "false", "")
+    return jax.default_backend() != "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window", "use_kernel",
+                                             "block_q", "block_k"))
+def attention(q, k, v, *, causal: bool = True, window: int = 0,
+              use_kernel: bool = True, block_q: int = 128,
+              block_k: int = 128) -> jnp.ndarray:
+    if not use_kernel:
+        return REF.attention_ref(q, k, v, causal=causal, window=window)
+    return _fa(q, k, v, causal=causal, window=window, block_q=block_q,
+               block_k=block_k, interpret=_interpret())
+
+
+@functools.partial(jax.jit, static_argnames=("group", "use_kernel"))
+def quantize(x, *, group: int = 128, use_kernel: bool = True):
+    if not use_kernel:
+        return REF.quantize_ref(x, group)
+    return _q(x, group, interpret=_interpret())
+
+
+@functools.partial(jax.jit, static_argnames=("use_kernel",))
+def dequantize(q, scales, *, use_kernel: bool = True):
+    if not use_kernel:
+        return REF.dequantize_ref(q, scales)
+    return _dq(q, scales, interpret=_interpret())
+
+
+@functools.partial(jax.jit, static_argnames=("eps", "use_kernel"))
+def rmsnorm(x, scale, *, eps: float = 1e-6, use_kernel: bool = True):
+    if not use_kernel:
+        return REF.rmsnorm_ref(x, scale, eps)
+    return _rms(x, scale, eps, interpret=_interpret())
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "use_kernel"))
+def ssd(x, dt, A, B, C, *, chunk: int = 128, use_kernel: bool = True):
+    if not use_kernel:
+        y, _ = REF.ssd_ref(x, dt, A, B, C, chunk)
+        return y
+    return _ssd(x, dt, A, B, C, chunk=chunk, interpret=_interpret())

@@ -1,0 +1,112 @@
+"""Mamba2 SSD chunk scan (Pallas) — the server-side hot spot for the SSM
+architecture (DESIGN.md §5).
+
+Grid = (batch, heads, num_chunks) with chunks innermost: TPU grids iterate
+sequentially, so the inter-chunk recurrent state (d_state x head_dim, f32)
+lives in VMEM scratch and carries across chunk steps — the TPU-native
+replacement for the paper's GPU chunk-parallel + cross-chunk scan.  Per
+grid step the kernel computes the intra-chunk quadratic block (the
+"attention-like" dual form, MXU matmuls over (chunk x chunk)) and folds the
+incoming state in, then updates the state for the next chunk.
+
+Inputs are pre-activation: dt already softplus'ed, A negative.  Oracle:
+repro.kernels.ref.ssd_naive (the literal recurrence) and models.ssm's
+chunked jnp reference.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _ssd_kernel(x_ref, dt_ref, a_ref, b_ref, c_ref, y_ref, state_scr):
+    ci = pl.program_id(2)
+
+    @pl.when(ci == 0)
+    def _init():
+        state_scr[...] = jnp.zeros_like(state_scr)
+
+    x = x_ref[0, 0].astype(jnp.float32)        # (q, p)
+    dt = dt_ref[0, 0].astype(jnp.float32)      # (q, 1) -- padded lane dim
+    a = a_ref[0]                               # scalar A for this head
+    bb = b_ref[0, 0].astype(jnp.float32)       # (q, n)
+    cc = c_ref[0, 0].astype(jnp.float32)       # (q, n)
+
+    la = dt[:, 0] * a                          # (q,) log-decay, <= 0
+    cum = jnp.cumsum(la)                       # inclusive
+    total = cum[-1]
+
+    # intra-chunk: scores[i,j] = (C_i . B_j) * exp(cum_i - cum_j) * dt_j, j<=i
+    cb = jax.lax.dot_general(cc, bb, (((1,), (1,)), ((), ())),
+                             preferred_element_type=jnp.float32)  # (q, q)
+    decay = jnp.exp(cum[:, None] - cum[None, :])
+    q = cb.shape[0]
+    ii = jax.lax.broadcasted_iota(jnp.int32, (q, q), 0)
+    jj = jax.lax.broadcasted_iota(jnp.int32, (q, q), 1)
+    scores = jnp.where(ii >= jj, cb * decay, 0.0) * dt[:, 0][None, :]
+    y = jax.lax.dot_general(scores, x, (((1,), (0,)), ((), ())),
+                            preferred_element_type=jnp.float32)   # (q, p)
+
+    # contribution of the incoming state: C_i @ H_prev * exp(cum_i)
+    h_prev = state_scr[...]                    # (n, p)
+    y += jnp.exp(cum)[:, None] * jax.lax.dot_general(
+        cc, h_prev, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+
+    # state update: H = exp(total) H_prev + sum_j exp(total - cum_j) dt_j B_j x_j
+    w = jnp.exp(total - cum) * dt[:, 0]        # (q,)
+    s_new = jax.lax.dot_general(bb * w[:, None], x, (((0,), (0,)), ((), ())),
+                                preferred_element_type=jnp.float32)  # (n, p)
+    state_scr[...] = jnp.exp(total) * h_prev + s_new
+    y_ref[0, 0] = y.astype(y_ref.dtype)
+
+
+def ssd_chunk_scan(x: jnp.ndarray, dt: jnp.ndarray, A: jnp.ndarray,
+                   B: jnp.ndarray, C: jnp.ndarray, *, chunk: int = 128,
+                   interpret: bool = False) -> jnp.ndarray:
+    """x (b,s,h,p), dt (b,s,h) [post-softplus], A (h,) [<0], B/C (b,s,g,n).
+    Returns y (b,s,h,p).  s is padded to a chunk multiple (dt=0 on pads)."""
+    b, s, h, p_ = x.shape
+    g, n = B.shape[2], B.shape[3]
+    rep = h // g
+    pad = (-s) % chunk
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        B = jnp.pad(B, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        C = jnp.pad(C, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    sp = s + pad
+    nc = sp // chunk
+
+    xh = x.swapaxes(1, 2)                       # (b, h, s, p)
+    dth = dt.swapaxes(1, 2)[..., None]          # (b, h, s, 1)
+    Bh = B.swapaxes(1, 2)                       # (b, g, s, n)
+    Ch = C.swapaxes(1, 2)
+
+    grid = (b, h, nc)
+    y = pl.pallas_call(
+        _ssd_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, chunk, p_), lambda bi, hi, ci: (bi, hi, ci, 0)),
+            pl.BlockSpec((1, 1, chunk, 1), lambda bi, hi, ci: (bi, hi, ci, 0)),
+            pl.BlockSpec((1,), lambda bi, hi, ci: (hi,)),
+            pl.BlockSpec((1, 1, chunk, n),
+                         lambda bi, hi, ci, r=rep: (bi, hi // r, ci, 0)),
+            pl.BlockSpec((1, 1, chunk, n),
+                         lambda bi, hi, ci, r=rep: (bi, hi // r, ci, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, chunk, p_),
+                               lambda bi, hi, ci: (bi, hi, ci, 0)),
+        out_shape=jax.ShapeDtypeStruct(xh.shape, x.dtype),
+        scratch_shapes=[pltpu.VMEM((n, p_), jnp.float32)],
+        interpret=interpret,
+    )(xh, dth, A.astype(jnp.float32), Bh, Ch)
+    y = y.swapaxes(1, 2)
+    if pad:
+        y = y[:, :s]
+    return y

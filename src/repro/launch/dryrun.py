@@ -1,0 +1,232 @@
+"""Multi-pod dry-run: prove every (arch x input-shape x mesh) combination
+lowers + compiles on the production mesh, and extract roofline inputs.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch smollm-360m --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod] [--out out.json]
+
+The first two lines below MUST run before any other import: jax locks the
+device count on first backend init, and the dry-run needs 512 placeholder
+host devices to build the 2x16x16 production mesh.
+"""
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("DRYRUN_XLA_FLAGS")
+                           or "--xla_force_host_platform_device_count=512")
+
+import argparse      # noqa: E402
+import json          # noqa: E402
+import re            # noqa: E402
+import sys           # noqa: E402
+import time          # noqa: E402
+import traceback     # noqa: E402
+from typing import Any, Dict, Optional  # noqa: E402
+
+import jax           # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+
+from repro.configs import ARCH_IDS, INPUT_SHAPES, get_config  # noqa: E402
+from repro.core import distributed as D  # noqa: E402
+from repro.launch import mesh as MX  # noqa: E402
+from repro.launch.hlo_analysis import analyze_hlo  # noqa: E402
+
+# long_500k runs only for sub-quadratic architectures (DESIGN.md §4)
+def combos():
+    for arch in ARCH_IDS:
+        cfg = get_config(arch)
+        for shape in INPUT_SHAPES.values():
+            if shape.name == "long_500k" and not cfg.subquadratic:
+                continue
+            yield arch, shape.name
+
+
+def dryrun_one(arch: str, shape_name: str, multi_pod: bool = False,
+               cut: Optional[int] = None, compress: bool = False,
+               verbose: bool = True, megatron: bool = False,
+               sdpa_spread: bool = False, remat_policy=None,
+               ssm_split_proj: bool = False,
+               no_fsdp: bool = False) -> Dict[str, Any]:
+    import dataclasses as _dc
+    from repro.models import attention as _ATT
+    from repro.models import transformer as _T
+    _T.set_remat_policy(remat_policy)
+    old_thresh = MX.FSDP_PARAM_THRESHOLD
+    if no_fsdp:
+        MX.FSDP_PARAM_THRESHOLD = float("inf")
+
+    cfg = get_config(arch)
+    if ssm_split_proj and cfg.ssm is not None:
+        cfg = _dc.replace(cfg, ssm=_dc.replace(cfg.ssm, fused_proj=False))
+    shape = INPUT_SHAPES[shape_name]
+    mesh = MX.make_production_mesh(multi_pod=multi_pod)
+    n_chips = mesh.size
+    opts = D.DistOptions(
+        cut=cut if cut is not None else cfg.default_cut,
+        compress_smashed=compress,
+        param_dtype=jnp.bfloat16,
+        smashed_sharding=jax.sharding.NamedSharding(
+            mesh, MX.smashed_spec(mesh)),
+    )
+
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    dp = MX.dp_axes(mesh)
+    spread_axes = None
+    if sdpa_spread:
+        if shape.global_batch % mesh.size == 0:
+            spread_axes = tuple(dp) + ("model",)
+        elif shape.global_batch % (mesh.shape["data"]
+                                   * mesh.shape["model"]) == 0:
+            spread_axes = ("data", "model")   # pod axis stays pure DP
+    if spread_axes:
+        spread = NamedSharding(mesh, P(spread_axes, None, None, None))
+        restore = None
+        if sdpa_spread != "norestore":
+            restore = NamedSharding(mesh, P(dp if len(dp) > 1 else dp[0],
+                                            None, None, None))
+        _ATT.set_sdpa_spread((spread, restore))
+    else:
+        _ATT.set_sdpa_spread(None)
+
+    t0 = time.time()
+    key_spec = jax.ShapeDtypeStruct((2,), jnp.uint32)
+    state_shape = jax.eval_shape(
+        lambda k: D.init_state(k, cfg, opts), key_spec)
+    batch_shape = D.input_specs(cfg, shape)
+
+    state_spec = MX.named(mesh, MX.state_specs(cfg, state_shape, mesh,
+                                               megatron=megatron))
+    batch_spec = MX.named(mesh, MX.batch_specs(shape, batch_shape, mesh))
+    param_spec = state_spec["params"]
+
+    if shape.kind == "train":
+        step = D.make_train_step(cfg, opts)
+        jitted = jax.jit(step, in_shardings=(state_spec, batch_spec))
+        lowered = jitted.lower(state_shape, batch_shape)
+    elif shape.kind == "prefill":
+        step = D.make_prefill_step(cfg, opts, capacity=shape.seq_len)
+        jitted = jax.jit(step, in_shardings=(param_spec, batch_spec))
+        lowered = jitted.lower(state_shape["params"], batch_shape)
+    else:  # decode
+        step = D.make_decode_step(cfg, opts, capacity=shape.seq_len)
+        cache_shape = D.cache_specs(cfg, shape, opts.cut)
+        cache_spec = MX.named(mesh, MX.cache_specs_tree(cache_shape, mesh))
+        pos_spec = jax.ShapeDtypeStruct((), jnp.int32)
+        jitted = jax.jit(step, in_shardings=(
+            param_spec, batch_spec, cache_spec,
+            jax.sharding.NamedSharding(mesh, jax.sharding.PartitionSpec())))
+        lowered = jitted.lower(state_shape["params"], batch_shape,
+                               cache_shape, pos_spec)
+    t_lower = time.time() - t0
+    _ATT.set_sdpa_spread(None)   # trace-time switches; reset after lowering
+    _T.set_remat_policy(None)
+    MX.FSDP_PARAM_THRESHOLD = old_thresh
+
+    t0 = time.time()
+    compiled = lowered.compile()
+    t_compile = time.time() - t0
+
+    cost = compiled.cost_analysis() or {}
+    try:
+        mem = compiled.memory_analysis()
+        mem_info = {
+            "argument_bytes": getattr(mem, "argument_size_in_bytes", None),
+            "output_bytes": getattr(mem, "output_size_in_bytes", None),
+            "temp_bytes": getattr(mem, "temp_size_in_bytes", None),
+            "peak_bytes": getattr(mem, "peak_memory_in_bytes", None),
+        }
+    except Exception:   # pragma: no cover - backend-dependent
+        mem_info = {}
+    # scan-aware per-device costs from the partitioned HLO (hlo_analysis.py);
+    # cost_analysis() is kept for reference but undercounts while bodies.
+    hc = analyze_hlo(compiled.as_text())
+
+    rec = {
+        "arch": arch,
+        "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "chips": n_chips,
+        "cut": opts.cut,
+        "compress": compress,
+        "kind": shape.kind,
+        "variant": {"megatron": megatron, "sdpa_spread": sdpa_spread,
+                    "ssm_split_proj": ssm_split_proj,
+                    "remat_policy": remat_policy, "no_fsdp": no_fsdp},
+        "flops_per_device": hc.flops,
+        "traffic_per_device": hc.traffic,
+        "collectives": dict(hc.collective),
+        "collective_bytes_per_device": hc.collective_bytes,
+        "xla_cost_analysis_flops": float(cost.get("flops", 0.0)),
+        "memory": mem_info,
+        "t_lower_s": round(t_lower, 2),
+        "t_compile_s": round(t_compile, 2),
+        "params": cfg.param_count(),
+        "active_params": cfg.active_param_count(),
+    }
+    if verbose:
+        print(f"[dryrun] {arch} x {shape_name} x {rec['mesh']}: "
+              f"flops/dev={hc.flops:.3e} traffic/dev={hc.traffic:.3e}B "
+              f"coll/dev={hc.collective_bytes:.3e}B "
+              f"(lower {t_lower:.1f}s compile {t_compile:.1f}s)")
+        if mem_info.get("temp_bytes") is not None:
+            print(f"  memory_analysis: {mem_info}")
+    return rec
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--cut", type=int, default=None)
+    ap.add_argument("--compress", action="store_true")
+    ap.add_argument("--megatron", action="store_true",
+                    help="name-aware column/row/expert-parallel TP rules")
+    ap.add_argument("--sdpa-spread", action="store_true",
+                    help="respread batch over (data x model) for SDPA")
+    ap.add_argument("--ssm-split-proj", action="store_true",
+                    help="shard-aligned z/x/B/C/dt stream split (mamba2)")
+    ap.add_argument("--remat-policy", default=None, choices=[None, "dots"])
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args(argv)
+
+    targets = []
+    if args.all:
+        targets = list(combos())
+    else:
+        assert args.arch and args.shape, "--arch and --shape (or --all)"
+        targets = [(args.arch, args.shape)]
+
+    meshes = [args.multi_pod]
+    if args.both_meshes:
+        meshes = [False, True]
+
+    records, failures = [], []
+    for arch, shape in targets:
+        for mp in meshes:
+            try:
+                records.append(dryrun_one(
+                    arch, shape, mp, args.cut, args.compress,
+                    megatron=args.megatron,
+                    sdpa_spread="norestore" if args.sdpa_spread else False,
+                    ssm_split_proj=args.ssm_split_proj,
+                    remat_policy=args.remat_policy))
+            except Exception as e:  # noqa: BLE001
+                traceback.print_exc()
+                failures.append((arch, shape, mp, repr(e)))
+
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump(records, f, indent=1)
+        print(f"wrote {len(records)} records to {args.out}")
+    if failures:
+        print(f"FAILURES ({len(failures)}):")
+        for f in failures:
+            print("  ", f)
+        return 1
+    print(f"dry-run OK: {len(records)} combination(s) lowered + compiled")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

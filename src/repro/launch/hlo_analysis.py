@@ -1,0 +1,227 @@
+"""Roofline-term extraction from compiled (SPMD-partitioned) HLO text.
+
+XLA's ``compiled.cost_analysis()`` counts a ``while`` body once, so any
+scan-over-layers model is undercounted by ~n_layers.  This module parses the
+post-optimization HLO, recursively walks fusion / call / while computations,
+multiplies while bodies by their trip count (from the
+``known_trip_count`` backend config, falling back to the loop-condition
+constant), and accumulates:
+
+  * ``flops``      — 2*M*N*K for every dot (contracting dims resolved via a
+                     per-computation symbol table) + conv window FLOPs
+  * ``traffic``    — result bytes of materialising top-level ops (HBM-traffic
+                     proxy; fusion-internal intermediates excluded)
+  * ``collective`` — result bytes per collective kind (all-gather,
+                     all-reduce, reduce-scatter, all-to-all, collective-permute)
+
+All values are PER DEVICE: shapes in post-SPMD HLO are per-partition.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List, Optional
+
+_DTYPE_BYTES = {"bf16": 2, "f16": 2, "f32": 4, "f64": 8, "s8": 1, "u8": 1,
+                "s16": 2, "u16": 2, "s32": 4, "u32": 4, "s64": 8, "u64": 8,
+                "pred": 1, "c64": 8, "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1}
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+# name = shape op(args...), attrs
+_LINE_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%([\w\.\-]+)\s*=\s*((?:\([^()]*(?:\([^()]*\)[^()]*)*\))|\S+)"
+    r"\s+([\w\-]+)\((.*)$")
+_HEADER_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w\.\-]+)\s*\(.*\)\s*->\s*.*\{\s*$")
+_TRIP_RE = re.compile(r'known_trip_count[":{ ]+n["\s:]+"?(\d+)')
+_CALL_RE = re.compile(r"(?:calls|to_apply)=%?([\w\.\-]+)")
+_WHILE_RE = re.compile(r"(body|condition)=%?([\w\.\-]+)")
+_OPERAND_RE = re.compile(r"%([\w\.\-]+)")
+
+_SKIP_TRAFFIC_OPS = {"parameter", "constant", "tuple", "get-tuple-element",
+                     "bitcast", "after-all", "iota", "partition-id"}
+
+
+def _shape_bytes(text: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(text):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _first_shape_dims(text: str) -> List[int]:
+    m = _SHAPE_RE.search(text)
+    if not m:
+        return []
+    return [int(d) for d in m.group(2).split(",") if d]
+
+
+def _elems(dims: List[int]) -> int:
+    n = 1
+    for d in dims:
+        n *= d
+    return n
+
+
+@dataclasses.dataclass
+class Op:
+    name: str
+    shape: str
+    op: str
+    rest: str  # args + attrs tail of the line
+
+
+@dataclasses.dataclass
+class Costs:
+    flops: float = 0.0
+    traffic: float = 0.0
+    collective: Dict[str, float] = dataclasses.field(default_factory=dict)
+
+    def add(self, other: "Costs", mult: float = 1.0):
+        self.flops += mult * other.flops
+        self.traffic += mult * other.traffic
+        for k, v in other.collective.items():
+            self.collective[k] = self.collective.get(k, 0.0) + mult * v
+
+    @property
+    def collective_bytes(self) -> float:
+        return sum(v for k, v in self.collective.items()
+                   if not k.startswith("count_"))
+
+    def as_dict(self) -> Dict:
+        return {"flops": self.flops, "traffic": self.traffic,
+                "collective": dict(self.collective),
+                "collective_bytes_total": self.collective_bytes}
+
+
+class HloModule:
+    def __init__(self, text: str):
+        self.computations: Dict[str, List[Op]] = {}
+        self.symbols: Dict[str, Dict[str, str]] = {}
+        self.entry: Optional[str] = None
+        self._parse(text)
+        self._memo: Dict[str, Costs] = {}
+
+    def _parse(self, text: str):
+        cur: Optional[str] = None
+        for raw in text.splitlines():
+            line = raw.rstrip()
+            stripped = line.strip()
+            hm = _HEADER_RE.match(stripped)
+            if hm and "=" not in stripped.split("(")[0]:
+                cur = hm.group(1)
+                self.computations[cur] = []
+                self.symbols[cur] = {}
+                if stripped.startswith("ENTRY"):
+                    self.entry = cur
+                continue
+            if stripped == "}":
+                cur = None
+                continue
+            if cur is None:
+                continue
+            lm = _LINE_RE.match(stripped)
+            if lm:
+                op = Op(lm.group(1), lm.group(2), lm.group(3), lm.group(4))
+                self.computations[cur].append(op)
+                self.symbols[cur][op.name] = op.shape
+        if self.entry is None:
+            mains = [k for k in self.computations if "main" in k]
+            self.entry = mains[0] if mains else next(iter(self.computations), None)
+
+    # ------------------------------------------------------------------
+    def _dot_flops(self, comp: str, op: Op) -> float:
+        out = _elems(_first_shape_dims(op.shape))
+        if op.op == "convolution":
+            win = 1
+            wm = re.search(r"size=([0-9x]+)", op.rest)
+            if wm:
+                for d in wm.group(1).split("x"):
+                    win *= int(d)
+            kin = 1
+            ops = _OPERAND_RE.findall(op.rest.split("),")[0])
+            if len(ops) > 1:
+                kshape = _first_shape_dims(self.symbols[comp].get(ops[1], ""))
+                # HWIO kernel: in-features is dim -2
+                if len(kshape) >= 2:
+                    kin = kshape[-2]
+            return 2.0 * out * win * kin
+        cm = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", op.rest)
+        args = _OPERAND_RE.findall(op.rest.split(")", 1)[0])
+        k = 1
+        if cm and args:
+            lhs_dims = _first_shape_dims(self.symbols[comp].get(args[0], ""))
+            for i in (int(i) for i in cm.group(1).split(",") if i):
+                if i < len(lhs_dims):
+                    k *= lhs_dims[i]
+        return 2.0 * out * k
+
+    def _trip_count(self, op: Op) -> int:
+        tm = _TRIP_RE.search(op.rest)
+        if tm:
+            return int(tm.group(1))
+        refs = dict(_WHILE_RE.findall(op.rest))
+        cond = refs.get("condition")
+        consts = []
+        for o in self.computations.get(cond or "", []):
+            cm = re.search(r"constant\((\d+)\)", o.rest + o.shape)
+            if cm:
+                consts.append(int(cm.group(1)))
+        return max(consts) if consts else 1
+
+    def cost_of(self, comp: Optional[str]) -> Costs:
+        if comp is None or comp not in self.computations:
+            return Costs()
+        if comp in self._memo:
+            return self._memo[comp]
+        total = Costs()
+        self._memo[comp] = total
+        for op in self.computations[comp]:
+            base = op.op.replace("-start", "")
+            if op.op in ("dot", "convolution"):
+                total.flops += self._dot_flops(comp, op)
+            elif base in _COLLECTIVES:
+                b = _shape_bytes(op.shape)
+                total.collective[base] = total.collective.get(base, 0.0) + b
+                ck = "count_" + base
+                total.collective[ck] = total.collective.get(ck, 0.0) + 1
+                total.traffic += 2.0 * b
+            if op.op == "while":
+                refs = dict(_WHILE_RE.findall(op.rest))
+                trip = self._trip_count(op)
+                total.add(self.cost_of(refs.get("body")), trip)
+                total.add(self.cost_of(refs.get("condition")), trip)
+            elif op.op in ("fusion", "call", "custom-call", "map", "reduce",
+                           "reduce-window", "sort", "scatter", "select-and-scatter"):
+                m = _CALL_RE.search(op.rest)
+                if m:
+                    sub = self.cost_of(m.group(1))
+                    total.add(Costs(flops=sub.flops,
+                                    collective=sub.collective))
+                if op.op not in ("call",):
+                    total.traffic += _shape_bytes(op.shape)
+            elif op.op == "conditional":
+                names = re.findall(r"%([\w\.\-]+)", op.rest)
+                subs = [self.cost_of(n) for n in names
+                        if n in self.computations]
+                if subs:
+                    worst = max(subs, key=lambda c: c.flops)
+                    total.add(worst)
+            elif op.op not in _SKIP_TRAFFIC_OPS:
+                total.traffic += _shape_bytes(op.shape)
+        self._memo[comp] = total
+        return total
+
+    def analyze(self) -> Costs:
+        return self.cost_of(self.entry)
+
+
+def analyze_hlo(text: str) -> Costs:
+    return HloModule(text).analyze()

@@ -1,0 +1,246 @@
+"""Production mesh + sharding rules.
+
+Mesh: single-pod (data=16, model=16) = 256 chips; multi-pod adds a leading
+pod=2 axis (512 chips).  SFL mapping: `data` hosts the vehicle cohorts (the
+FedAvg/client axis), `model` is RSU-side tensor parallelism.
+
+Sharding is decided by one divisibility heuristic (``spec_for``): per tensor,
+the largest dim divisible by the model-axis size is sharded over `model`
+(preferring trailing dims — output features / head_dim); for FSDP-eligible
+architectures (>1.5B params) the largest remaining dim divisible by the data
+axis is sharded over (`pod`,`data`).  Small leaves (<64 KiB elements) stay
+replicated.  KV caches shard batch over the data axes and head_dim/latent
+dims over `model` (all assigned head_dims are multiples of 16), so the
+decode-time dynamic-update-slice stays shard-local — no cache regather.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ArchConfig, ShapeConfig
+
+FSDP_PARAM_THRESHOLD = 1.5e9   # params; above this, shard params over data
+REPLICATE_BELOW = 65536        # leaves smaller than this stay replicated
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes,
+                         axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+def dp_axes(mesh: Mesh) -> Tuple[str, ...]:
+    return tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+
+
+def _axis_size(mesh: Mesh, axes) -> int:
+    if isinstance(axes, str):
+        axes = (axes,)
+    n = 1
+    for a in axes:
+        n *= mesh.shape[a]
+    return n
+
+
+def spec_for(shape: Sequence[int], mesh: Mesh, *, skip_dims: Tuple[int, ...] = (),
+             batch_dim: Optional[int] = None, fsdp: bool = False,
+             size_threshold: int = REPLICATE_BELOW) -> P:
+    """The generic divisibility heuristic described in the module docstring."""
+    ndim = len(shape)
+    entries: list = [None] * ndim
+    total = 1
+    for d in shape:
+        total *= d
+    if total < size_threshold:
+        return P(*entries)
+
+    used = set(skip_dims)
+    dp = dp_axes(mesh)
+    # batch dim -> data axes (if divisible)
+    if batch_dim is not None and batch_dim not in used:
+        if shape[batch_dim] % _axis_size(mesh, dp) == 0:
+            entries[batch_dim] = dp if len(dp) > 1 else dp[0]
+            used.add(batch_dim)
+        elif shape[batch_dim] % mesh.shape["data"] == 0:
+            entries[batch_dim] = "data"
+            used.add(batch_dim)
+
+    mdl = mesh.shape["model"]
+    # model axis: largest divisible dim, preferring trailing dims
+    cands = [i for i in range(ndim)
+             if i not in used and shape[i] % mdl == 0 and shape[i] >= mdl]
+    if cands:
+        best = max(cands, key=lambda i: (shape[i], i))
+        entries[best] = "model"
+        used.add(best)
+
+    if fsdp:
+        dn = _axis_size(mesh, dp)
+        cands = [i for i in range(ndim)
+                 if i not in used and shape[i] % dn == 0 and shape[i] >= dn]
+        if cands:
+            best = max(cands, key=lambda i: (shape[i], i))
+            entries[best] = dp if len(dp) > 1 else dp[0]
+        else:
+            # fall back to the data axis alone (pod replicates)
+            dn = mesh.shape["data"]
+            cands = [i for i in range(ndim)
+                     if i not in used and shape[i] % dn == 0 and shape[i] >= dn]
+            if cands:
+                best = max(cands, key=lambda i: (shape[i], i))
+                entries[best] = "data"
+    return P(*entries)
+
+
+def _is_segment_path(path) -> bool:
+    return any(getattr(p, "key", None) == "segments" or
+               str(getattr(p, "key", "")) == "segments" for p in path)
+
+
+def _leaf_name(path) -> str:
+    for p in reversed(path):
+        k = getattr(p, "key", None)
+        if isinstance(k, str):
+            return k
+    return ""
+
+
+# Megatron-style name-aware tensor-parallel rules (§Perf knob): shard OUTPUT
+# feature dims (heads / latent heads / d_ff) for column-parallel weights and
+# the CONTRACTION dim for the closing row-parallel weight, so each block
+# incurs exactly one activation all-reduce instead of one per matmul.
+# Maps leaf name -> preferred shard dim counted FROM THE END of the shape
+# (period-stack leading axes make absolute indices ambiguous).
+_MEGATRON_PREF = {
+    # attention: q/k/v column-parallel on heads; wo row-parallel on heads
+    "wq": -2, "wk": -2, "wv": -2, "wo": -3,
+    # MLA: absorbers column-parallel on heads
+    "w_uk": -2, "w_uv": -2, "w_dkv": -1, "w_kr": -1,
+    # MLPs: wi column-parallel on d_ff; (mlp) wo handled above (ff at -2)
+    "wi_gate": -1, "wi_up": -1, "wi": -1,
+    # rglru
+    "w_gate": -1, "w_x": -1, "w_a": -1, "w_i": -1, "w_out": -2,
+    # ssm
+    "in_proj": -1, "in_z": -1, "in_x": -1, "in_b": -1, "in_c": -1,
+    "in_dt": -1, "out_proj": -2,
+}
+
+
+def _megatron_spec(path, leaf, mesh: Mesh, fsdp: bool) -> Optional[P]:
+    name = _leaf_name(path)
+    pref = _MEGATRON_PREF.get(name)
+    if pref is None:
+        return None
+    shape = leaf.shape
+    # expert-parallel preference: MoE expert tensors carry a leading expert
+    # dim ((n_periods,) e, d, ff) — shard experts over `model` so dispatch/
+    # combine lower to the canonical EP all-to-all.
+    if name in ("wi_gate", "wi_up", "wo"):
+        nd = len(shape) - (1 if _is_segment_path(path) else 0)
+        if nd == 4 or (nd == 3 and name != "wo"):
+            pref = -3
+    if name == "wo" and len(shape) - (1 if _is_segment_path(path) else 0) == 2:
+        pref = -2  # plain MLP row-parallel: contract d_ff
+    total = 1
+    for d in shape:
+        total *= d
+    if total < REPLICATE_BELOW:
+        return P(*([None] * len(shape)))
+    i = len(shape) + pref
+    if i < 0 or i >= len(shape):
+        return None
+    mdl = mesh.shape["model"]
+    if shape[i] % mdl or shape[i] < mdl:
+        return None          # fall back to the generic heuristic
+    entries: list = [None] * len(shape)
+    entries[i] = "model"
+    if fsdp:
+        dp = dp_axes(mesh)
+        dn = _axis_size(mesh, dp)
+        skip0 = 1 if _is_segment_path(path) else 0
+        cands = [j for j in range(skip0, len(shape))
+                 if j != i and shape[j] % dn == 0 and shape[j] >= dn]
+        if cands:
+            best = max(cands, key=lambda j: (shape[j], j))
+            entries[best] = dp if len(dp) > 1 else dp[0]
+    return P(*entries)
+
+
+def param_specs(cfg: ArchConfig, params_shape: Any, mesh: Mesh,
+                megatron: bool = False) -> Any:
+    """PartitionSpec pytree mirroring the params tree (works on either real
+    params or eval_shape output).  ``megatron=True`` applies the name-aware
+    column/row-parallel rules before the generic divisibility heuristic."""
+    fsdp = cfg.param_count() > FSDP_PARAM_THRESHOLD
+
+    def rule(path, leaf):
+        if megatron:
+            spec = _megatron_spec(path, leaf, mesh, fsdp)
+            if spec is not None:
+                return spec
+        skip = (0,) if _is_segment_path(path) else ()
+        return spec_for(leaf.shape, mesh, skip_dims=skip, fsdp=fsdp)
+
+    return jax.tree_util.tree_map_with_path(rule, params_shape)
+
+
+def state_specs(cfg: ArchConfig, state_shape: Any, mesh: Mesh,
+                megatron: bool = False) -> Any:
+    """Optimizer state mirrors params; scalars replicate."""
+    fsdp = cfg.param_count() > FSDP_PARAM_THRESHOLD
+
+    def rule(path, leaf):
+        if leaf.ndim == 0:
+            return P()
+        if megatron:
+            spec = _megatron_spec(path, leaf, mesh, fsdp)
+            if spec is not None:
+                return spec
+        skip = (0,) if _is_segment_path(path) else ()
+        return spec_for(leaf.shape, mesh, skip_dims=skip, fsdp=fsdp)
+
+    return jax.tree_util.tree_map_with_path(rule, state_shape)
+
+
+def batch_specs(shape_cfg: ShapeConfig, batch_shape: Any, mesh: Mesh) -> Any:
+    def rule(path, leaf):
+        if leaf.ndim == 0:
+            return P()
+        return spec_for(leaf.shape, mesh, batch_dim=0, size_threshold=2)
+
+    return jax.tree_util.tree_map_with_path(rule, batch_shape)
+
+
+def cache_specs_tree(cache_shape: Any, mesh: Mesh) -> Any:
+    """KV/state caches: batch over data axes, trailing feature dims over
+    model (head_dim / latent rank / conv channels / d_state)."""
+    def rule(path, leaf):
+        if leaf.ndim == 0:
+            return P()
+        if leaf.ndim == 1:        # k_pos vectors etc.
+            return P()
+        # skip the stacked-period leading axis: caches come stacked like
+        # params (n_periods, batch, ...) inside segment scans
+        return spec_for(leaf.shape, mesh, skip_dims=(0,), batch_dim=1,
+                        size_threshold=2 ** 14)
+
+    return jax.tree_util.tree_map_with_path(rule, cache_shape)
+
+
+def named(mesh: Mesh, spec_tree: Any) -> Any:
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), spec_tree,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def smashed_spec(mesh: Mesh, ndim: int = 3) -> P:
+    """Smashed data (b, s, d): clients over the data axes — the explicit
+    SFL uplink boundary."""
+    dp = dp_axes(mesh)
+    entries = [dp if len(dp) > 1 else dp[0]] + [None] * (ndim - 1)
+    return P(*entries)

@@ -1,0 +1,94 @@
+"""Split-inference serving driver (paper §IV-C).
+
+Prefill + batched decode with the model split at the cut layer: vehicle-side
+layers produce the one-token smashed activation, the RSU-side layers decode
+against the KV cache.  ``--smoke`` serves a reduced config on CPU.
+
+Example:
+  PYTHONPATH=src python -m repro.launch.serve --arch smollm-360m --smoke \
+      --prompt-len 32 --decode-steps 16 --batch 4
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.core import distributed as D
+from repro.models import transformer as T
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--decode-steps", type=int, default=16)
+    ap.add_argument("--cut", type=int, default=None)
+    ap.add_argument("--temperature", type=float, default=1.0)
+    args = ap.parse_args(argv)
+
+    cfg = get_config(args.arch)
+    if args.smoke:
+        cfg = cfg.reduced()
+    capacity = args.prompt_len + args.decode_steps
+    opts = D.DistOptions(
+        cut=args.cut if args.cut is not None else cfg.default_cut)
+
+    key = jax.random.PRNGKey(0)
+    params = T.init_params(key, cfg)
+    prefill = jax.jit(D.make_prefill_step(cfg, opts, capacity))
+    decode = jax.jit(D.make_decode_step(cfg, opts, capacity))
+
+    b = args.batch
+    if cfg.frontend == "audio":
+        batch = {"codes": jax.random.randint(
+            key, (b, cfg.n_codebooks, args.prompt_len), 0, cfg.vocab_size)}
+    elif cfg.frontend == "vision":
+        s_text = max(args.prompt_len - cfg.n_patches, 1)
+        batch = {"tokens": jax.random.randint(key, (b, s_text), 0,
+                                              cfg.vocab_size),
+                 "patch_embeds": 0.02 * jax.random.normal(
+                     key, (b, cfg.n_patches, cfg.d_model))}
+    else:
+        batch = {"tokens": jax.random.randint(key, (b, args.prompt_len), 0,
+                                              cfg.vocab_size)}
+
+    t0 = time.time()
+    logits, caches = prefill(params, batch)
+    print(f"[serve] {cfg.name} prefill({args.prompt_len}) "
+          f"-> logits {logits.shape} in {time.time()-t0:.2f}s")
+
+    tokens = []
+    pos = args.prompt_len
+    t0 = time.time()
+    for i in range(args.decode_steps):
+        key, sk = jax.random.split(key)
+        if cfg.frontend == "audio":
+            nxt = jax.random.categorical(
+                sk, logits[:, -1] / args.temperature, axis=-1)  # (b, K)
+            step_batch = {"codes": nxt[..., None].swapaxes(1, 2).reshape(
+                b, cfg.n_codebooks, 1)}
+        else:
+            nxt = jax.random.categorical(
+                sk, logits[:, -1] / args.temperature, axis=-1)  # (b,)
+            # padded-vocab safety: clamp into the true vocab
+            nxt = jnp.minimum(nxt, cfg.vocab_size - 1)
+            step_batch = {"tokens": nxt[:, None]}
+        tokens.append(nxt)
+        logits, caches = decode(params, step_batch, caches, jnp.asarray(pos))
+        pos += 1
+    dt = time.time() - t0
+    print(f"[serve] decoded {args.decode_steps} steps x batch {b} "
+          f"in {dt:.2f}s ({dt/args.decode_steps*1e3:.1f} ms/step)")
+    first = tokens[0]
+    print(f"[serve] first sampled ids: {jnp.ravel(first)[:8].tolist()}")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,214 @@
+"""Attention: GQA, qk-norm, causal + sliding-window, KV-cache decode.
+
+Training/prefill attention is computed in q-chunks (a jnp blockwise
+formulation, scan over query blocks) so the materialised score block is
+bounded — the same tiling the Pallas flash_attention kernel uses on TPU.
+The kernel (repro.kernels.flash_attention) is injectable via ``use_kernel``.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import layers as L
+
+Params = Dict[str, Any]
+NEG_INF = -2.0e38
+
+# q-chunk length for the blockwise softmax (static; clipped to seq len)
+Q_CHUNK = 512
+
+# Optional SDPA batch-spread (perf knob, set at trace time by the launcher):
+# when the per-layer activations can only shard batch over the data axes
+# (head counts not divisible by the model axis), resharding the batch over
+# (data x model) for the SDPA inner block removes the model-axis replication
+# of the score tensors.  Holds a pair (spread_sharding, restore_sharding) of
+# NamedShardings for (b, s, heads, head_dim) activations, or None.
+SDPA_SPREAD = None
+
+
+def set_sdpa_spread(spread_restore):
+    """Install (spread, restore) NamedShardings for 4-D attention
+    activations, or None to disable.  Trace-time switch."""
+    global SDPA_SPREAD
+    SDPA_SPREAD = spread_restore
+
+
+def init_attn(key, cfg: ArchConfig, dtype=jnp.float32) -> Params:
+    d, h, kv, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim_
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    p = {
+        "wq": L.trunc_normal(k1, (d, h, hd), 1.0 / math.sqrt(d), dtype),
+        "wk": L.trunc_normal(k2, (d, kv, hd), 1.0 / math.sqrt(d), dtype),
+        "wv": L.trunc_normal(k3, (d, kv, hd), 1.0 / math.sqrt(d), dtype),
+        "wo": L.trunc_normal(k4, (h, hd, d), 1.0 / math.sqrt(h * hd), dtype),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = jnp.ones((hd,), dtype)
+        p["k_norm"] = jnp.ones((hd,), dtype)
+    return p
+
+
+def _qkv(p: Params, cfg: ArchConfig, x: jnp.ndarray, positions: jnp.ndarray):
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"].astype(x.dtype))
+    k = jnp.einsum("bsd,dnk->bsnk", x, p["wk"].astype(x.dtype))
+    v = jnp.einsum("bsd,dnk->bsnk", x, p["wv"].astype(x.dtype))
+    if cfg.qk_norm:
+        q = L.rms_head_norm(p["q_norm"], q)
+        k = L.rms_head_norm(p["k_norm"], k)
+    if cfg.pos == "rope":
+        q = L.apply_rope(q, positions, cfg.rope_theta)
+        k = L.apply_rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def _sdpa(q, k, v, q_pos, k_pos, window: int, scale: float):
+    """One score block.  q (b,sq,n,g,hd), k/v (b,sk,n,hd),
+    q_pos (sq,), k_pos (sk,) — k_pos < 0 marks invalid slots."""
+    s = jnp.einsum("bsngh,btnh->bngst", q, k).astype(jnp.float32) * scale
+    mask = k_pos[None, :] <= q_pos[:, None]
+    mask &= k_pos[None, :] >= 0
+    if window > 0:
+        mask &= k_pos[None, :] > q_pos[:, None] - window
+    s = jnp.where(mask, s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    # rows with no valid key (fully masked) produce uniform junk; zero them
+    any_valid = jnp.any(mask, axis=-1)
+    p = jnp.where(any_valid[..., None], p, 0.0).astype(v.dtype)
+    return jnp.einsum("bngst,btnh->bsngh", p, v)
+
+
+def _full_attention(cfg: ArchConfig, q, k, v, q_pos, k_pos, window: int):
+    """Blockwise over q-chunks; k optionally sliced to the window span."""
+    b, sq, h, hd = q.shape
+    kvh = k.shape[2]
+    g = h // kvh
+    spread = SDPA_SPREAD
+    if spread is not None:
+        sp, _ = spread
+        q = jax.lax.with_sharding_constraint(q, sp)
+        k = jax.lax.with_sharding_constraint(k, sp)
+        v = jax.lax.with_sharding_constraint(v, sp)
+    q = q.reshape(b, sq, kvh, g, hd)
+    scale = 1.0 / math.sqrt(hd)
+    sk = k.shape[1]
+    cq = min(Q_CHUNK, sq)
+    if sq % cq:
+        cq = sq  # ragged seq (smoke tests): single block
+    n_chunks = sq // cq
+    if n_chunks == 1:
+        o = _sdpa(q, k, v, q_pos, k_pos, window, scale)
+        o = o.reshape(b, sq, h, hd)
+        if spread is not None and spread[1] is not None:
+            o = jax.lax.with_sharding_constraint(o, spread[1])
+        return o
+
+    slice_k = window > 0 and sk > 2 * window and (window + cq) < sk
+    span = min(sk, window + cq) if slice_k else sk
+
+    def body(_, idx):
+        q0 = idx * cq
+        qc = jax.lax.dynamic_slice_in_dim(q, q0, cq, axis=1)
+        qp = jax.lax.dynamic_slice_in_dim(q_pos, q0, cq, axis=0)
+        if slice_k:
+            start = jnp.clip(q0 - window, 0, sk - span)
+            kc = jax.lax.dynamic_slice_in_dim(k, start, span, axis=1)
+            vc = jax.lax.dynamic_slice_in_dim(v, start, span, axis=1)
+            kp = jax.lax.dynamic_slice_in_dim(k_pos, start, span, axis=0)
+        else:
+            kc, vc, kp = k, v, k_pos
+        return None, _sdpa(qc, kc, vc, qp, kp, window, scale)
+
+    _, o = jax.lax.scan(body, None, jnp.arange(n_chunks))
+    o = jnp.moveaxis(o, 0, 1).reshape(b, n_chunks * cq, kvh, g, hd)
+    o = o.reshape(b, sq, h, hd)
+    if spread is not None and spread[1] is not None:
+        o = jax.lax.with_sharding_constraint(o, spread[1])
+    return o
+
+
+# --------------------------------------------------------------------------
+# public entry points
+# --------------------------------------------------------------------------
+
+def attn_train(p: Params, cfg: ArchConfig, x: jnp.ndarray,
+               positions: jnp.ndarray, window: int = 0) -> jnp.ndarray:
+    """Causal self-attention over the full sequence (no cache)."""
+    q, k, v = _qkv(p, cfg, x, positions)
+    o = _full_attention(cfg, q, k, v, positions, positions, window)
+    return jnp.einsum("bshk,hkd->bsd", o, p["wo"].astype(x.dtype))
+
+
+def init_cache(cfg: ArchConfig, batch: int, capacity: int, window: int,
+               dtype=jnp.float32) -> Params:
+    kv, hd = cfg.n_kv_heads, cfg.head_dim_
+    size = min(window, capacity) if window > 0 else capacity
+    return {
+        "k": jnp.zeros((batch, size, kv, hd), dtype),
+        "v": jnp.zeros((batch, size, kv, hd), dtype),
+        "k_pos": jnp.full((size,), -1, jnp.int32),
+        "pos": jnp.zeros((), jnp.int32),
+    }
+
+
+def attn_prefill(p: Params, cfg: ArchConfig, x: jnp.ndarray,
+                 positions: jnp.ndarray, capacity: int,
+                 window: int = 0) -> Tuple[jnp.ndarray, Params]:
+    """Full-sequence attention that also returns a filled KV cache."""
+    b, s, _ = x.shape
+    q, k, v = _qkv(p, cfg, x, positions)
+    o = _full_attention(cfg, q, k, v, positions, positions, window)
+    y = jnp.einsum("bshk,hkd->bsd", o, p["wo"].astype(x.dtype))
+    cache = init_cache(cfg, b, capacity, window, k.dtype)
+    size = cache["k"].shape[1]
+    if window > 0 and s >= size:
+        # ring buffer: slot of position p is p % size
+        k_last = k[:, s - size:, :, :]
+        v_last = v[:, s - size:, :, :]
+        shift = s % size
+        cache["k"] = jnp.roll(k_last, shift, axis=1)
+        cache["v"] = jnp.roll(v_last, shift, axis=1)
+        kp = jnp.arange(s - size, s, dtype=jnp.int32)
+        cache["k_pos"] = jnp.roll(kp, shift, axis=0)
+    else:
+        n = min(s, size)
+        cache["k"] = jax.lax.dynamic_update_slice_in_dim(cache["k"], k[:, :n], 0, axis=1)
+        cache["v"] = jax.lax.dynamic_update_slice_in_dim(cache["v"], v[:, :n], 0, axis=1)
+        cache["k_pos"] = cache["k_pos"].at[:n].set(jnp.arange(n, dtype=jnp.int32))
+    cache["pos"] = jnp.asarray(s, jnp.int32)
+    return y, cache
+
+
+def attn_decode(p: Params, cfg: ArchConfig, x: jnp.ndarray,
+                cache: Params, window: int = 0) -> Tuple[jnp.ndarray, Params]:
+    """One-token decode.  x (b, 1, d)."""
+    b = x.shape[0]
+    pos = cache["pos"]
+    positions = pos[None].astype(jnp.int32)  # (1,)
+    q, k, v = _qkv(p, cfg, x, positions)
+    size = cache["k"].shape[1]
+    slot = jnp.mod(pos, size) if window > 0 else jnp.minimum(pos, size - 1)
+    ck = jax.lax.dynamic_update_slice_in_dim(cache["k"], k, slot, axis=1)
+    cv = jax.lax.dynamic_update_slice_in_dim(cache["v"], v, slot, axis=1)
+    kp = jax.lax.dynamic_update_slice_in_dim(
+        cache["k_pos"], pos[None], slot, axis=0)
+    h, kvh, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim_
+    qh = q.reshape(b, 1, kvh, h // kvh, hd)
+    o = _sdpa(qh, ck, cv, positions, kp, window, 1.0 / math.sqrt(hd))
+    o = o.reshape(b, 1, h, hd)
+    y = jnp.einsum("bshk,hkd->bsd", o, p["wo"].astype(x.dtype))
+    new_cache = {"k": ck, "v": cv, "k_pos": kp, "pos": pos + 1}
+    return y, new_cache
+
+
+def attn_flops(cfg: ArchConfig, seq: int, window: int = 0) -> int:
+    """Per-token matmul FLOPs for one attention layer at context `seq`."""
+    d, h, kv, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim_
+    proj = 2 * d * hd * (2 * h + 2 * kv)
+    ctx = min(seq, window) if window > 0 else seq
+    sdpa = 2 * 2 * h * hd * ctx  # qk + pv
+    return proj + sdpa

@@ -1,0 +1,132 @@
+"""ResNet18 (the paper's case-study model, Fig. 4) in functional JAX.
+
+The stack is expressed as 9 *units* = [stem] + 8 BasicBlocks; the paper's
+9 split points are the unit boundaries, and its cut-layer rule (Eq. 3)
+selects c in {2,4,6,8}.  ``resnet_forward(params, x, start, end)`` runs units
+[start, end) so the same code serves vehicle-side and RSU-side sub-models.
+
+BatchNorm uses batch statistics in both train and eval (common practice in
+FL simulations; avoids FedBN running-stat aggregation questions — noted in
+DESIGN.md).
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Params = Dict[str, Any]
+
+N_UNITS = 9          # stem + 8 basic blocks  (the paper's 9 split points)
+STAGE_CHANNELS = (64, 64, 128, 128, 256, 256, 512, 512)
+STAGE_STRIDES = (1, 1, 2, 1, 2, 1, 2, 1)
+
+
+def _conv_init(key, kh, kw, cin, cout):
+    fan_in = kh * kw * cin
+    return jax.random.normal(key, (kh, kw, cin, cout), jnp.float32) * math.sqrt(2.0 / fan_in)
+
+
+def _conv(x, w, stride=1):
+    return jax.lax.conv_general_dilated(
+        x, w, (stride, stride), "SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+
+
+def _bn_init(c):
+    return {"scale": jnp.ones((c,)), "bias": jnp.zeros((c,))}
+
+
+def _bn(p, x, eps=1e-5):
+    mean = jnp.mean(x, axis=(0, 1, 2), keepdims=True)
+    var = jnp.var(x, axis=(0, 1, 2), keepdims=True)
+    xn = (x - mean) * jax.lax.rsqrt(var + eps)
+    return xn * p["scale"] + p["bias"]
+
+
+def init_resnet18(key, n_classes: int = 10) -> Params:
+    ks = list(jax.random.split(key, 2 + 3 * len(STAGE_CHANNELS)))
+    units: List[Params] = [{
+        "conv": _conv_init(ks[0], 3, 3, 3, 64), "bn": _bn_init(64)}]
+    cin = 64
+    ki = 1
+    for cout, stride in zip(STAGE_CHANNELS, STAGE_STRIDES):
+        blk = {
+            "conv1": _conv_init(ks[ki], 3, 3, cin, cout), "bn1": _bn_init(cout),
+            "conv2": _conv_init(ks[ki + 1], 3, 3, cout, cout), "bn2": _bn_init(cout),
+        }
+        if stride != 1 or cin != cout:
+            blk["proj"] = _conv_init(ks[ki + 2], 1, 1, cin, cout)
+            blk["bn_proj"] = _bn_init(cout)
+        units.append(blk)
+        cin = cout
+        ki += 3
+    head = {
+        "w": jax.random.normal(ks[-1], (512, n_classes)) * math.sqrt(1.0 / 512),
+        "b": jnp.zeros((n_classes,)),
+    }
+    return {"units": units, "head": head}
+
+
+def _apply_unit(p: Params, x: jnp.ndarray, idx: int) -> jnp.ndarray:
+    if idx == 0:
+        return jax.nn.relu(_bn(p["bn"], _conv(x, p["conv"], 1)))
+    stride = STAGE_STRIDES[idx - 1]
+    h = jax.nn.relu(_bn(p["bn1"], _conv(x, p["conv1"], stride)))
+    h = _bn(p["bn2"], _conv(h, p["conv2"], 1))
+    sc = x
+    if "proj" in p:
+        sc = _bn(p["bn_proj"], _conv(x, p["proj"], stride))
+    return jax.nn.relu(h + sc)
+
+
+def resnet_forward(params: Params, x: jnp.ndarray,
+                   start: int = 0, end: int = N_UNITS) -> jnp.ndarray:
+    """Run units [start, end).  x: images (b,32,32,3) if start==0, else the
+    smashed activation at split point `start`."""
+    for i in range(start, end):
+        x = _apply_unit(params["units"][i], x, i)
+    return x
+
+
+def resnet_logits(params: Params, x: jnp.ndarray) -> jnp.ndarray:
+    feats = jnp.mean(x, axis=(1, 2))
+    return feats @ params["head"]["w"] + params["head"]["b"]
+
+
+def _hw_at(cut: int) -> int:
+    """Spatial size of the activation at split point `cut` (32x32 inputs)."""
+    if cut <= 3:
+        return 32
+    return 32 // (2 ** min((cut - 2) // 2, 3))
+
+
+def smashed_shape(cut: int, batch: int) -> Tuple[int, ...]:
+    """Activation shape at split point `cut` for 32x32 inputs (Fig 5a)."""
+    assert 1 <= cut <= N_UNITS
+    ch = 64 if cut == 1 else STAGE_CHANNELS[cut - 2]
+    hw = _hw_at(cut)
+    return (batch, hw, hw, ch)
+
+
+def unit_flops(idx: int) -> int:
+    """Forward matmul FLOPs per sample for unit idx (3x3 convs dominate)."""
+    if idx == 0:
+        return 2 * 32 * 32 * 3 * 3 * 3 * 64
+    cout = STAGE_CHANNELS[idx - 1]
+    cin = 64 if idx == 1 else STAGE_CHANNELS[idx - 2]
+    stride = STAGE_STRIDES[idx - 1]
+    hw_out = _hw_at(idx + 1) if idx < N_UNITS - 1 else 4
+    f = 2 * hw_out * hw_out * 3 * 3 * cin * cout          # conv1
+    f += 2 * hw_out * hw_out * 3 * 3 * cout * cout        # conv2
+    if stride != 1 or cin != cout:
+        f += 2 * hw_out * hw_out * cin * cout
+    return f
+
+
+def param_bytes(params: Params, start: int, end: int) -> int:
+    units = params["units"][start:end]
+    leaves = jax.tree.leaves(units)
+    return sum(l.size * 4 for l in leaves)

@@ -1,0 +1,137 @@
+"""RG-LRU recurrent block (Griffin / RecurrentGemma, arXiv:2402.19427).
+
+Block: x -> {gate branch: linear+GeLU} x {recurrent branch: linear -> causal
+conv1d(width 4) -> RG-LRU} -> output linear.  The linear recurrence
+h_t = a_t h_{t-1} + sqrt(1-a_t^2) (i_t * x_t) is evaluated with
+jax.lax.associative_scan in train/prefill and as a single step in decode;
+state is constant-size -> long_500k eligible.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import layers as L
+
+Params = Dict[str, Any]
+
+
+def _d_rnn(cfg: ArchConfig) -> int:
+    return cfg.rglru.d_rnn or cfg.d_model
+
+
+def init_rglru(key, cfg: ArchConfig, dtype=jnp.float32) -> Params:
+    r = cfg.rglru
+    d, dr = cfg.d_model, _d_rnn(cfg)
+    ks = jax.random.split(key, 6)
+    s = 1.0 / math.sqrt(d)
+    return {
+        "w_gate": L.init_dense(ks[0], d, dr, dtype),
+        "w_x": L.init_dense(ks[1], d, dr, dtype),
+        "conv_w": L.trunc_normal(ks[2], (r.d_conv, dr), 1.0 / math.sqrt(r.d_conv), dtype),
+        "conv_b": jnp.zeros((dr,), dtype),
+        "w_a": L.trunc_normal(ks[3], (dr, dr), 1.0 / math.sqrt(dr), dtype),
+        "b_a": jnp.zeros((dr,), jnp.float32),
+        "w_i": L.trunc_normal(ks[4], (dr, dr), 1.0 / math.sqrt(dr), dtype),
+        "b_i": jnp.zeros((dr,), jnp.float32),
+        # Lambda init so a = sigmoid(L)^(c r) gives decay ~0.9..0.999
+        "lam": jnp.linspace(2.0, 7.0, dr, dtype=jnp.float32),
+        "w_out": L.init_dense(ks[5], dr, d, dtype),
+    }
+
+
+def _causal_conv(x, w, b):
+    width = w.shape[0]
+    pad = jnp.pad(x, ((0, 0), (width - 1, 0), (0, 0)))
+    y = jnp.zeros_like(x)
+    for i in range(width):
+        y = y + pad[:, i:i + x.shape[1], :] * w[i].astype(x.dtype)
+    return y + b.astype(x.dtype)
+
+
+def _gates(p: Params, cfg: ArchConfig, xr: jnp.ndarray):
+    """Returns (log_a, gated_input) for the recurrence, float32."""
+    r32 = xr.astype(jnp.float32)
+    rgate = jax.nn.sigmoid(r32 @ p["w_a"].astype(jnp.float32) + p["b_a"])
+    igate = jax.nn.sigmoid(r32 @ p["w_i"].astype(jnp.float32) + p["b_i"])
+    log_a = cfg.rglru.c_exponent * rgate * jax.nn.log_sigmoid(p["lam"])
+    a = jnp.exp(log_a)
+    gated = jnp.sqrt(jnp.maximum(1.0 - jnp.square(a), 1e-6)) * (igate * r32)
+    return a, gated
+
+
+def rglru_seq(p: Params, cfg: ArchConfig, xr: jnp.ndarray,
+              h0=None) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Linear recurrence over the sequence via associative scan.
+    xr (b,s,dr) post-conv; returns (h (b,s,dr), final state (b,dr))."""
+    a, gated = _gates(p, cfg, xr)
+    if h0 is not None:
+        # fold the incoming state in as a virtual step 0
+        a = jnp.concatenate([jnp.zeros_like(a[:, :1]), a], axis=1)
+        gated = jnp.concatenate([h0[:, None].astype(jnp.float32), gated], axis=1)
+
+    def combine(left, right):
+        al, bl = left
+        ar, br = right
+        return al * ar, ar * bl + br
+
+    av, hv = jax.lax.associative_scan(combine, (a, gated), axis=1)
+    if h0 is not None:
+        hv = hv[:, 1:]
+    return hv.astype(xr.dtype), hv[:, -1]
+
+
+def rglru_train(p: Params, cfg: ArchConfig, x: jnp.ndarray) -> jnp.ndarray:
+    y, _ = _rglru_full(p, cfg, x, None)
+    return y
+
+
+def _rglru_full(p, cfg, x, h0):
+    gate = jax.nn.gelu(L.dense(p["w_gate"], x), approximate=True)
+    xr = L.dense(p["w_x"], x)
+    xr_conv = _causal_conv(xr, p["conv_w"], p["conv_b"])
+    h, h_last = rglru_seq(p, cfg, xr_conv, h0)
+    return L.dense(p["w_out"], gate * h), (xr, h_last)
+
+
+def init_rglru_cache(cfg: ArchConfig, batch: int, dtype=jnp.float32) -> Params:
+    r = cfg.rglru
+    dr = _d_rnn(cfg)
+    return {
+        "conv": jnp.zeros((batch, r.d_conv - 1, dr), dtype),
+        "state": jnp.zeros((batch, dr), jnp.float32),
+        "pos": jnp.zeros((), jnp.int32),
+    }
+
+
+def rglru_prefill(p: Params, cfg: ArchConfig, x: jnp.ndarray
+                  ) -> Tuple[jnp.ndarray, Params]:
+    y, (xr_pre, h_last) = _rglru_full(p, cfg, x, None)
+    r = cfg.rglru
+    cache = init_rglru_cache(cfg, x.shape[0], x.dtype)
+    cache["conv"] = xr_pre[:, -(r.d_conv - 1):, :]
+    cache["state"] = h_last.astype(jnp.float32)
+    cache["pos"] = jnp.asarray(x.shape[1], jnp.int32)
+    return y, cache
+
+
+def rglru_decode(p: Params, cfg: ArchConfig, x: jnp.ndarray,
+                 cache: Params) -> Tuple[jnp.ndarray, Params]:
+    gate = jax.nn.gelu(L.dense(p["w_gate"], x), approximate=True)   # (b,1,dr)
+    xr = L.dense(p["w_x"], x)
+    window = jnp.concatenate([cache["conv"], xr], axis=1)
+    conv_out = (jnp.einsum("bwc,wc->bc", window, p["conv_w"].astype(x.dtype))
+                + p["conv_b"].astype(x.dtype))[:, None, :]
+    a, gated = _gates(p, cfg, conv_out)
+    h = a[:, 0] * cache["state"] + gated[:, 0]
+    y = L.dense(p["w_out"], gate * h[:, None].astype(x.dtype))
+    return y, {"conv": window[:, 1:], "state": h, "pos": cache["pos"] + 1}
+
+
+def rglru_flops(cfg: ArchConfig) -> int:
+    d, dr = cfg.d_model, _d_rnn(cfg)
+    return 2 * d * dr * 3 + 2 * dr * dr * 2 + 2 * cfg.rglru.d_conv * dr + 10 * dr

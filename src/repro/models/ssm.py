@@ -1,0 +1,270 @@
+"""Mamba2 block — SSD (state-space duality, arXiv:2405.21060).
+
+Train/prefill uses the chunked SSD decomposition (intra-chunk quadratic block
++ inter-chunk linear state recurrence); decode is the O(1) recurrence over a
+constant-size (heads, head_dim, d_state) state — the reason mamba2 is
+long_500k-eligible.  The pure-jnp chunk math here is also the oracle for the
+Pallas ssd kernel (repro/kernels/ssd.py).
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import layers as L
+
+Params = Dict[str, Any]
+
+
+def dims(cfg: ArchConfig):
+    s = cfg.ssm
+    d_inner = s.expand * cfg.d_model
+    n_heads = d_inner // s.head_dim
+    conv_dim = d_inner + 2 * s.n_groups * s.d_state
+    return d_inner, n_heads, conv_dim
+
+
+def init_ssm(key, cfg: ArchConfig, dtype=jnp.float32) -> Params:
+    s = cfg.ssm
+    d_inner, n_heads, conv_dim = dims(cfg)
+    d_in_proj = 2 * d_inner + 2 * s.n_groups * s.d_state + n_heads
+    k1, k2, k3, k4, k5 = jax.random.split(key, 5)
+    if s.fused_proj:
+        proj = {"in_proj": L.init_dense(k1, cfg.d_model, d_in_proj, dtype)}
+    else:
+        # fully stream-split projections: every stream (z/x/B/C/dt) shards
+        # cleanly on the model axis — no shard-boundary crossings (§Perf)
+        k6, k7 = jax.random.split(k5)
+        gn = s.n_groups * s.d_state
+        proj = {"in_z": L.init_dense(k1, cfg.d_model, d_inner, dtype),
+                "in_x": L.init_dense(k4, cfg.d_model, d_inner, dtype),
+                "in_b": L.init_dense(k6, cfg.d_model, gn, dtype),
+                "in_c": L.init_dense(k7, cfg.d_model, gn, dtype),
+                "in_dt": L.init_dense(k5, cfg.d_model, n_heads, dtype)}
+    return {
+        **proj,
+        "conv_w": L.trunc_normal(k2, (s.d_conv, conv_dim),
+                                 1.0 / math.sqrt(s.d_conv), dtype),
+        "conv_b": jnp.zeros((conv_dim,), dtype),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, n_heads, dtype=jnp.float32)),
+        "D": jnp.ones((n_heads,), jnp.float32),
+        "dt_bias": jnp.log(jnp.expm1(
+            jnp.linspace(1e-3, 1e-1, n_heads, dtype=jnp.float32))),
+        "norm": L.init_rmsnorm(d_inner, dtype),
+        "out_proj": L.init_dense(k3, d_inner, cfg.d_model, dtype),
+    }
+
+
+def _causal_conv(x: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """Depthwise causal conv. x (b,s,c), w (width,c)."""
+    width = w.shape[0]
+    pad = jnp.pad(x, ((0, 0), (width - 1, 0), (0, 0)))
+    y = jnp.zeros_like(x)
+    for i in range(width):
+        y = y + pad[:, i:i + x.shape[1], :] * w[i].astype(x.dtype)
+    return y + b.astype(x.dtype)
+
+
+def _split_proj(p: Params, cfg: ArchConfig, u: jnp.ndarray):
+    """Returns (z, xBC_pre_conv, dt).  In split mode xBC is produced as
+    separate shard-aligned streams and only *logically* concatenated; the
+    conv is applied per stream (see _conv_xbc) so no op ever crosses the
+    x|B|C boundary."""
+    s = cfg.ssm
+    d_inner, n_heads, conv_dim = dims(cfg)
+    if s.fused_proj:
+        zxbcdt = L.dense(p["in_proj"], u)
+        z = zxbcdt[..., :d_inner]
+        xBC = zxbcdt[..., d_inner:d_inner + conv_dim]
+        dt = zxbcdt[..., d_inner + conv_dim:]
+        return z, xBC, dt
+    streams = (L.dense(p["in_x"], u), L.dense(p["in_b"], u),
+               L.dense(p["in_c"], u))
+    return L.dense(p["in_z"], u), streams, L.dense(p["in_dt"], u)
+
+
+def _conv_xbc(p: Params, cfg: ArchConfig, xBC):
+    """Causal conv + silu over the xBC streams (fused or per-stream)."""
+    s = cfg.ssm
+    d_inner, _, conv_dim = dims(cfg)
+    gn = s.n_groups * s.d_state
+    if s.fused_proj:
+        return jax.nn.silu(_causal_conv(xBC, p["conv_w"], p["conv_b"]))
+    xs, bs, cs = xBC
+    w, b = p["conv_w"], p["conv_b"]
+    x = jax.nn.silu(_causal_conv(xs, w[:, :d_inner], b[:d_inner]))
+    bb = jax.nn.silu(_causal_conv(bs, w[:, d_inner:d_inner + gn],
+                                  b[d_inner:d_inner + gn]))
+    cc = jax.nn.silu(_causal_conv(cs, w[:, d_inner + gn:],
+                                  b[d_inner + gn:]))
+    return jnp.concatenate([x, bb, cc], axis=-1)
+
+
+def _unpack_xbc(cfg: ArchConfig, xBC: jnp.ndarray):
+    s = cfg.ssm
+    d_inner, n_heads, _ = dims(cfg)
+    gn = s.n_groups * s.d_state
+    x = xBC[..., :d_inner]
+    B = xBC[..., d_inner:d_inner + gn]
+    C = xBC[..., d_inner + gn:]
+    lead = x.shape[:-1]
+    x = x.reshape(*lead, n_heads, s.head_dim)
+    B = B.reshape(*lead, s.n_groups, s.d_state)
+    C = C.reshape(*lead, s.n_groups, s.d_state)
+    return x, B, C
+
+
+def ssd_chunked(x, dt, A, B, C, chunk: int):
+    """SSD reference.  x (b,s,h,p), dt (b,s,h) [post-softplus], A (h,) [<0],
+    B,C (b,s,g,n).  Returns y (b,s,h,p) and final state (b,h,n,p)."""
+    b, s, h, p_ = x.shape
+    g, n = B.shape[2], B.shape[3]
+    rep = h // g
+    pad = (-s) % chunk
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        B = jnp.pad(B, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        C = jnp.pad(C, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    sp = s + pad
+    nc = sp // chunk
+    xc = x.reshape(b, nc, chunk, h, p_)
+    dtc = dt.reshape(b, nc, chunk, h).astype(jnp.float32)
+    # broadcast groups -> heads
+    Bc = jnp.repeat(B.reshape(b, nc, chunk, g, n), rep, axis=3)
+    Cc = jnp.repeat(C.reshape(b, nc, chunk, g, n), rep, axis=3)
+
+    la = dtc * A  # (b,nc,q,h) log-decay per step, <= 0
+    cum = jnp.cumsum(la, axis=2)                      # inclusive
+    total = cum[:, :, -1]                             # (b,nc,h)
+
+    # intra-chunk (the quadratic "attention-like" block)
+    cb = jnp.einsum("bcihn,bcjhn->bchij", Cc.astype(jnp.float32),
+                    Bc.astype(jnp.float32))
+    # decay[b,c,h,i,j] = exp(cum_i - cum_j)
+    ci = jnp.transpose(cum, (0, 1, 3, 2))             # (b,nc,h,q)
+    decay = jnp.exp(ci[..., :, None] - ci[..., None, :])
+    idx = jnp.arange(chunk)
+    mask = idx[:, None] >= idx[None, :]
+    scores = cb * jnp.where(mask, decay, 0.0)
+    dtj = jnp.transpose(dtc, (0, 1, 3, 2))            # (b,nc,h,q_j)
+    y_intra = jnp.einsum("bchij,bcjhp->bcihp",
+                         scores * dtj[..., None, :], xc.astype(jnp.float32))
+
+    # per-chunk outgoing state: sum_j exp(total - cum_j) dt_j B_j x_j
+    w = jnp.exp(total[:, :, None, :] - cum) * dtc     # (b,nc,q,h)
+    S = jnp.einsum("bcjhn,bcjhp->bchnp", Bc.astype(jnp.float32) * w[..., None],
+                   xc.astype(jnp.float32))
+
+    # inter-chunk recurrence
+    def step(hprev, inp):
+        tot_c, s_c = inp
+        hnew = jnp.exp(tot_c)[..., None, None] * hprev + s_c
+        return hnew, hprev
+
+    h0 = jnp.zeros((b, h, n, p_), jnp.float32)
+    final, hprev = jax.lax.scan(
+        step, h0, (jnp.moveaxis(total, 1, 0), jnp.moveaxis(S, 1, 0)))
+    hprev = jnp.moveaxis(hprev, 0, 1)                  # (b,nc,h,n,p)
+
+    y_inter = jnp.einsum("bcihn,bchnp->bcihp",
+                         Cc.astype(jnp.float32) * jnp.exp(cum)[..., None], hprev)
+    y = (y_intra + y_inter).reshape(b, sp, h, p_)[:, :s]
+    return y.astype(x.dtype), final
+
+
+def ssm_train(p: Params, cfg: ArchConfig, u: jnp.ndarray) -> jnp.ndarray:
+    y, _ = _ssm_full_keep(p, cfg, u)
+    return y
+
+
+def init_ssm_cache(cfg: ArchConfig, batch: int, dtype=jnp.float32) -> Params:
+    s = cfg.ssm
+    d_inner, n_heads, conv_dim = dims(cfg)
+    return {
+        "conv": jnp.zeros((batch, s.d_conv - 1, conv_dim), dtype),
+        "state": jnp.zeros((batch, n_heads, s.d_state, s.head_dim), jnp.float32),
+        "pos": jnp.zeros((), jnp.int32),
+    }
+
+
+def ssm_prefill(p: Params, cfg: ArchConfig, u: jnp.ndarray
+                ) -> Tuple[jnp.ndarray, Params]:
+    y, (xBC_pre, state) = _ssm_full_keep(p, cfg, u)
+    s = cfg.ssm
+    cache = init_ssm_cache(cfg, u.shape[0], u.dtype)
+    cache["conv"] = xBC_pre[:, -(s.d_conv - 1):, :]
+    cache["state"] = state                    # (b, h, n, p) from ssd_chunked
+    cache["pos"] = jnp.asarray(u.shape[1], jnp.int32)
+    return y, cache
+
+
+def _ssm_full_keep(p, cfg, u):
+    """Like _ssm_full but keeps the *pre-conv* xBC for the conv cache."""
+    s = cfg.ssm
+    z, xBC_pre, dt = _split_proj(p, cfg, u)
+    xBC = _conv_xbc(p, cfg, xBC_pre)
+    if isinstance(xBC_pre, tuple):
+        xBC_pre = jnp.concatenate(xBC_pre, axis=-1)   # cache keeps fused layout
+    x, B, C = _unpack_xbc(cfg, xBC)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])
+    A = -jnp.exp(p["A_log"])
+    y, state = ssd_chunked(x, dt, A, B, C, s.chunk)
+    y = y + x * p["D"][:, None].astype(x.dtype)
+    b, sl = u.shape[0], u.shape[1]
+    y = y.reshape(b, sl, dims(cfg)[0])
+    y = L.rmsnorm(p["norm"], y * jax.nn.silu(z))
+    return L.dense(p["out_proj"], y), (xBC_pre, state)
+
+
+def ssm_decode(p: Params, cfg: ArchConfig, u: jnp.ndarray,
+               cache: Params) -> Tuple[jnp.ndarray, Params]:
+    """One-step recurrence.  u (b, 1, d)."""
+    s = cfg.ssm
+    b = u.shape[0]
+    z, xBC_new, dt = _split_proj(p, cfg, u)          # (b,1,·)
+    if isinstance(xBC_new, tuple):
+        xBC_new = jnp.concatenate(xBC_new, axis=-1)
+    window = jnp.concatenate([cache["conv"], xBC_new], axis=1)  # (b,d_conv,c)
+    conv_out = (jnp.einsum("bwc,wc->bc", window, p["conv_w"].astype(u.dtype))
+                + p["conv_b"].astype(u.dtype))[:, None, :]
+    xBC = jax.nn.silu(conv_out)
+    x, B, C = _unpack_xbc(cfg, xBC)                   # x (b,1,h,p), B/C (b,1,g,n)
+    x, B, C = x[:, 0], B[:, 0], C[:, 0]
+    dt = jax.nn.softplus(dt[:, 0].astype(jnp.float32) + p["dt_bias"])  # (b,h)
+    A = -jnp.exp(p["A_log"])
+    a = jnp.exp(dt * A)                               # (b,h)
+    rep = dims(cfg)[1] // s.n_groups
+    Bh = jnp.repeat(B, rep, axis=1)                   # (b,h,n)
+    Ch = jnp.repeat(C, rep, axis=1)
+    upd = jnp.einsum("bhn,bhp->bhnp", Bh.astype(jnp.float32) * dt[..., None],
+                     x.astype(jnp.float32))
+    state = a[..., None, None] * cache["state"] + upd
+    y = jnp.einsum("bhn,bhnp->bhp", Ch.astype(jnp.float32), state)
+    y = y.astype(u.dtype) + x * p["D"][:, None].astype(u.dtype)
+    y = y.reshape(b, 1, dims(cfg)[0])
+    y = L.rmsnorm(p["norm"], y * jax.nn.silu(z))
+    y = L.dense(p["out_proj"], y)
+    new_cache = {"conv": window[:, 1:], "state": state, "pos": cache["pos"] + 1}
+    return y, new_cache
+
+
+def ssm_flops(cfg: ArchConfig, seq: int, kind: str) -> int:
+    """Per-token matmul-ish FLOPs for one mamba2 block."""
+    s = cfg.ssm
+    d_inner, n_heads, conv_dim = dims(cfg)
+    d_in_proj = 2 * d_inner + 2 * s.n_groups * s.d_state + n_heads
+    proj = 2 * cfg.d_model * d_in_proj + 2 * d_inner * cfg.d_model
+    conv = 2 * s.d_conv * conv_dim
+    if kind == "decode":
+        ssd = 4 * n_heads * s.d_state * s.head_dim
+    else:
+        q = s.chunk
+        ssd = (2 * n_heads * s.d_state * q      # CB^T per token (q cols)
+               + 2 * n_heads * q * s.head_dim   # scores @ x
+               + 4 * n_heads * s.d_state * s.head_dim)  # state in/out
+    return proj + conv + ssd

@@ -1,0 +1,114 @@
+"""Minimal optax-like optimizers (pure JAX; optax is not available offline).
+
+Each optimizer is a pair of pure functions ``init(params) -> state`` and
+``update(grads, state, params) -> (updates, state)``; ``apply_updates`` adds
+the updates.  States are pytrees mirroring the params, so any sharding rule
+that applies to params applies verbatim to optimizer state (ZeRO-style
+sharding falls out of the dry-run in_shardings).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple, Optional, Union
+
+import jax
+import jax.numpy as jnp
+
+Schedule = Union[float, Callable[[jnp.ndarray], jnp.ndarray]]
+
+
+@dataclasses.dataclass(frozen=True)
+class Optimizer:
+    init: Callable[[Any], Any]
+    update: Callable[..., Any]  # (grads, state, params) -> (updates, state)
+
+
+def _lr_at(lr: Schedule, count: jnp.ndarray) -> jnp.ndarray:
+    return lr(count) if callable(lr) else jnp.asarray(lr, jnp.float32)
+
+
+def _treecast(tree, dtype):
+    return jax.tree.map(lambda a: jnp.asarray(a, dtype), tree)
+
+
+def sgd(lr: Schedule) -> Optimizer:
+    def init(params):
+        return {"count": jnp.zeros((), jnp.int32)}
+
+    def update(grads, state, params=None):
+        step = _lr_at(lr, state["count"])
+        upd = jax.tree.map(lambda g: -step * g.astype(jnp.float32), grads)
+        return upd, {"count": state["count"] + 1}
+
+    return Optimizer(init, update)
+
+
+def momentum(lr: Schedule, beta: float = 0.9, nesterov: bool = False) -> Optimizer:
+    def init(params):
+        return {"count": jnp.zeros((), jnp.int32),
+                "mu": jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)}
+
+    def update(grads, state, params=None):
+        step = _lr_at(lr, state["count"])
+        mu = jax.tree.map(lambda m, g: beta * m + g.astype(jnp.float32),
+                          state["mu"], grads)
+        if nesterov:
+            upd = jax.tree.map(lambda m, g: -step * (beta * m + g.astype(jnp.float32)),
+                               mu, grads)
+        else:
+            upd = jax.tree.map(lambda m: -step * m, mu)
+        return upd, {"count": state["count"] + 1, "mu": mu}
+
+    return Optimizer(init, update)
+
+
+def adam(lr: Schedule, b1: float = 0.9, b2: float = 0.999,
+         eps: float = 1e-8) -> Optimizer:
+    return adamw(lr, b1, b2, eps, weight_decay=0.0)
+
+
+def adamw(lr: Schedule, b1: float = 0.9, b2: float = 0.999, eps: float = 1e-8,
+          weight_decay: float = 0.0) -> Optimizer:
+    def init(params):
+        zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+        return {"count": jnp.zeros((), jnp.int32),
+                "m": jax.tree.map(zeros, params),
+                "v": jax.tree.map(zeros, params)}
+
+    def update(grads, state, params=None):
+        c = state["count"] + 1
+        step = _lr_at(lr, state["count"])
+        m = jax.tree.map(lambda m_, g: b1 * m_ + (1 - b1) * g.astype(jnp.float32),
+                         state["m"], grads)
+        v = jax.tree.map(lambda v_, g: b2 * v_ + (1 - b2) * jnp.square(g.astype(jnp.float32)),
+                         state["v"], grads)
+        bc1 = 1 - b1 ** c.astype(jnp.float32)
+        bc2 = 1 - b2 ** c.astype(jnp.float32)
+
+        def upd(m_, v_, p):
+            u = -step * (m_ / bc1) / (jnp.sqrt(v_ / bc2) + eps)
+            if weight_decay:
+                u = u - step * weight_decay * p.astype(jnp.float32)
+            return u
+
+        updates = jax.tree.map(upd, m, v,
+                               params if params is not None else m)
+        return updates, {"count": c, "m": m, "v": v}
+
+    return Optimizer(init, update)
+
+
+def apply_updates(params, updates):
+    return jax.tree.map(lambda p, u: (p.astype(jnp.float32) + u).astype(p.dtype),
+                        params, updates)
+
+
+def global_norm(tree) -> jnp.ndarray:
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32))) for l in leaves))
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / (norm + 1e-9))
+    return jax.tree.map(lambda g: g * scale.astype(g.dtype), grads), norm

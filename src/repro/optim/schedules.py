@@ -1,0 +1,35 @@
+"""Learning-rate schedules (count -> lr)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def constant(lr: float):
+    return lambda count: jnp.asarray(lr, jnp.float32)
+
+
+def linear_warmup(lr: float, warmup_steps: int):
+    def f(count):
+        frac = jnp.minimum(count.astype(jnp.float32) / max(warmup_steps, 1), 1.0)
+        return lr * frac
+    return f
+
+
+def cosine_decay(lr: float, decay_steps: int, alpha: float = 0.0):
+    def f(count):
+        frac = jnp.clip(count.astype(jnp.float32) / max(decay_steps, 1), 0.0, 1.0)
+        cos = 0.5 * (1.0 + jnp.cos(jnp.pi * frac))
+        return lr * ((1 - alpha) * cos + alpha)
+    return f
+
+
+def warmup_cosine(lr: float, warmup_steps: int, decay_steps: int,
+                  alpha: float = 0.0):
+    def f(count):
+        c = count.astype(jnp.float32)
+        warm = lr * c / max(warmup_steps, 1)
+        frac = jnp.clip((c - warmup_steps) / max(decay_steps - warmup_steps, 1),
+                        0.0, 1.0)
+        cos = lr * ((1 - alpha) * 0.5 * (1.0 + jnp.cos(jnp.pi * frac)) + alpha)
+        return jnp.where(c < warmup_steps, warm, cos)
+    return f

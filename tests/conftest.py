@@ -1,0 +1,10 @@
+import os
+
+# Kernels run in interpret mode on CPU; keep tests independent of any
+# inherited XLA device-count flags (the dry-run sets its own in-process).
+os.environ.setdefault("REPRO_PALLAS_INTERPRET", "1")
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+import jax  # noqa: E402
+
+jax.config.update("jax_enable_x64", False)

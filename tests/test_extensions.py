@@ -1,0 +1,105 @@
+"""Extensions beyond the paper's case study: SFL over transformer stacks in
+the simulator, mobility dropout, optimized-sharding model variants."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core import channel
+from repro.core.fedsim import FederationSim, ResNetModel, SimConfig
+from repro.core.lm_unit import TransformerUnitModel
+from repro.data.pipeline import ClientDataset, make_federated_data
+from repro.data.synthetic import make_bigram_lm
+
+
+def _lm_clients(cfg, n_clients=3, seq=32):
+    clients = []
+    for i in range(n_clients):
+        s = np.asarray(make_bigram_lm(jax.random.PRNGKey(i), cfg.vocab_size,
+                                      1500))
+        n = (len(s) - 1) // seq
+        x = np.stack([s[j * seq:(j + 1) * seq] for j in range(n)])
+        y = np.stack([s[j * seq + 1:(j + 1) * seq + 1] for j in range(n)])
+        clients.append(ClientDataset(x, y, i))
+    t = np.asarray(make_bigram_lm(jax.random.PRNGKey(99), cfg.vocab_size, 700))
+    test = {"images": jnp.asarray(np.stack([t[j * seq:(j + 1) * seq]
+                                            for j in range(10)])),
+            "labels": jnp.asarray(np.stack([t[j * seq + 1:(j + 1) * seq + 1]
+                                            for j in range(10)]))}
+    return clients, test
+
+
+def test_transformer_unit_model_multi_cut_sfl():
+    """ASFL over a 4-period smollm stack: every cut splits/learns."""
+    base = get_config("smollm-360m").reduced()
+    cfg = dataclasses.replace(base, n_layers=4)   # 4 periods -> 5 units
+    model = TransformerUnitModel(cfg)
+    assert model.n_units == 5
+    clients, test = _lm_clients(cfg)
+    sim = FederationSim(model, clients, test,
+                        SimConfig(scheme="sfl", cut=2, rounds=2,
+                                  local_steps=3, lr=3e-3, batch_size=4))
+    hist = sim.run()
+    assert hist[-1].loss < hist[0].loss + 1e-6
+    assert np.isfinite(hist[-1].loss)
+
+
+def test_transformer_unit_model_matches_whole_model():
+    """Unit-stacked forward == monolithic transformer forward."""
+    from repro.models import transformer as T
+    cfg = dataclasses.replace(get_config("smollm-360m").reduced(), n_layers=3)
+    model = TransformerUnitModel(cfg)
+    key = jax.random.PRNGKey(0)
+    units, head = model.init(key)
+    toks = jax.random.randint(key, (2, 16), 0, cfg.vocab_size)
+    feats = model.apply_units(units, toks, 0)
+    logits_units = model.head_predict(head, feats)
+
+    params = T.init_params(key, cfg)   # same key -> same weights
+    logits_full, _, _ = T.forward(params, cfg, {"tokens": toks}, "train")
+    np.testing.assert_allclose(np.asarray(logits_units),
+                               np.asarray(logits_full), rtol=2e-4, atol=2e-4)
+
+
+def test_mobility_dropout_skips_out_of_range_vehicles():
+    clients, test = make_federated_data(0, n_train=256, n_test=64,
+                                        n_clients=4)
+    # fleet engineered so vehicles 2,3 are out of range at t=0
+    fleet = [channel.VehicleProfile(x0_m=-100.0, speed_mps=0.0),
+             channel.VehicleProfile(x0_m=-200.0, speed_mps=0.0),
+             channel.VehicleProfile(x0_m=-900.0, speed_mps=0.0),
+             channel.VehicleProfile(x0_m=-900.0, speed_mps=0.0)]
+    cfg = SimConfig(scheme="sfl", cut=2, rounds=1, local_steps=1,
+                    batch_size=8, mobility_dropout=True)
+    sim = FederationSim(ResNetModel(), clients, test, cfg, fleet=fleet)
+    assert sim._participants(0) == [0, 1]
+    hist = sim.run()
+    assert np.isfinite(hist[0].loss)
+
+
+def test_ssm_split_proj_variant_param_count_unchanged():
+    cfg = get_config("mamba2-780m")
+    split = dataclasses.replace(cfg, ssm=dataclasses.replace(
+        cfg.ssm, fused_proj=False))
+    assert cfg.param_count() == split.param_count()
+
+
+def test_megatron_specs_shard_experts():
+    """EP preference: expert weights shard the expert dim over `model`."""
+    import os
+    from repro.launch import mesh as MX
+    mesh = jax.make_mesh((1, 1), ("data", "model"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    # fake 16-way model axis via a mesh-like shim is overkill; check the
+    # rule function directly with a synthetic path
+    class Leaf:
+        shape = (27, 64, 2048, 1408)   # (periods, experts, d, ff)
+    path = (jax.tree_util.DictKey("segments"), jax.tree_util.DictKey("wi_gate"))
+    mesh16 = jax.make_mesh((1, 1), ("data", "model"),
+                           axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    spec = MX._megatron_spec(path, Leaf(), mesh16, fsdp=False)
+    # model axis size 1 divides everything; expert dim (-3) must be chosen
+    assert spec == jax.sharding.PartitionSpec(None, "model", None, None)

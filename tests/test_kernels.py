@@ -1,0 +1,147 @@
+"""Per-kernel validation: shape/dtype sweeps, interpret mode vs jnp oracle."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref as REF
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.quant import dequantize_int8, quantize_int8
+from repro.kernels.rmsnorm import rmsnorm as rmsnorm_k
+from repro.kernels.ssd import ssd_chunk_scan
+from repro.core import compression as COMP
+
+KEY = jax.random.PRNGKey(0)
+
+
+# ---------------------------------------------------------------- flash attn
+@pytest.mark.parametrize("b,sq,sk,h,kv,d", [
+    (2, 256, 256, 4, 2, 64),
+    (1, 128, 128, 8, 8, 128),
+    (1, 128, 128, 4, 1, 256),    # MQA, gemma-class head_dim
+    (2, 192, 192, 6, 3, 64),     # non-pow2 seq (pad path)
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention_causal(b, sq, sk, h, kv, d, dtype):
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (b, sq, h, d), dtype)
+    k = jax.random.normal(ks[1], (b, sk, kv, d), dtype)
+    v = jax.random.normal(ks[2], (b, sk, kv, d), dtype)
+    out = flash_attention(q, k, v, causal=True, block_q=64, block_k=64,
+                          interpret=True)
+    refo = REF.attention_ref(q, k, v, causal=True)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 2e-5
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(refo, np.float32),
+                               rtol=tol, atol=tol)
+
+
+@pytest.mark.parametrize("window", [32, 64, 128])
+def test_flash_attention_sliding_window(window):
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (1, 256, 4, 64))
+    k = jax.random.normal(ks[1], (1, 256, 2, 64))
+    v = jax.random.normal(ks[2], (1, 256, 2, 64))
+    out = flash_attention(q, k, v, causal=True, window=window,
+                          block_q=64, block_k=64, interpret=True)
+    refo = REF.attention_ref(q, k, v, causal=True, window=window)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(refo),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_flash_attention_noncausal():
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (2, 128, 2, 64))
+    k = jax.random.normal(ks[1], (2, 128, 2, 64))
+    v = jax.random.normal(ks[2], (2, 128, 2, 64))
+    out = flash_attention(q, k, v, causal=False, block_q=64, block_k=64,
+                          interpret=True)
+    refo = REF.attention_ref(q, k, v, causal=False)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(refo),
+                               rtol=2e-5, atol=2e-5)
+
+
+# ------------------------------------------------------------------- quant
+@pytest.mark.parametrize("shape", [(4, 256), (2, 64, 128), (3, 5, 384)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_quant_roundtrip_matches_ref(shape, dtype):
+    x = (jax.random.normal(KEY, shape) * 5).astype(dtype)
+    qk, sk_ = quantize_int8(x, interpret=True)
+    qr, sr = COMP.quantize_int8(x)
+    np.testing.assert_array_equal(np.asarray(qk), np.asarray(qr))
+    np.testing.assert_allclose(np.asarray(sk_), np.asarray(sr), rtol=1e-5)
+    xk = dequantize_int8(qk, sk_, interpret=True)
+    xr = COMP.dequantize_int8(qr, sr)
+    np.testing.assert_allclose(np.asarray(xk), np.asarray(xr),
+                               rtol=1e-5, atol=1e-6)
+
+
+def test_quant_error_bound():
+    """|x - dq(q(x))| <= scale/2 per group (half-ulp of the int8 grid)."""
+    x = jax.random.normal(KEY, (16, 256)) * 3
+    q, s = COMP.quantize_int8(x)
+    xd = COMP.dequantize_int8(q, s)
+    err = np.abs(np.asarray(x) - np.asarray(xd))
+    bound = np.repeat(np.asarray(s), 128, axis=-1) * 0.5 + 1e-7
+    assert (err <= bound).all()
+
+
+# ------------------------------------------------------------------ rmsnorm
+@pytest.mark.parametrize("shape", [(8, 256), (2, 33, 512), (1, 7, 960)])
+def test_rmsnorm_kernel(shape):
+    x = jax.random.normal(KEY, shape)
+    g = jax.random.normal(jax.random.PRNGKey(1), shape[-1:]) * 0.1 + 1.0
+    out = rmsnorm_k(x, g, interpret=True)
+    refo = REF.rmsnorm_ref(x, g)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(refo),
+                               rtol=2e-5, atol=2e-6)
+
+
+# --------------------------------------------------------------------- ssd
+@pytest.mark.parametrize("s,chunk", [(64, 32), (96, 32), (128, 128), (100, 32)])
+def test_ssd_kernel_vs_naive(s, chunk):
+    b, h, p, g, n = 2, 4, 32, 2, 16
+    ks = jax.random.split(KEY, 5)
+    x = jax.random.normal(ks[0], (b, s, h, p)) * 0.5
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (b, s, h)))
+    A = -jnp.exp(jax.random.normal(ks[2], (h,)) * 0.3)
+    B = jax.random.normal(ks[3], (b, s, g, n)) * 0.5
+    C = jax.random.normal(ks[4], (b, s, g, n)) * 0.5
+    yk = ssd_chunk_scan(x, dt, A, B, C, chunk=chunk, interpret=True)
+    yn, _ = REF.ssd_naive(x, dt, A, B, C)
+    np.testing.assert_allclose(np.asarray(yk), np.asarray(yn),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_model_ssd_reference_vs_naive():
+    """The model's chunked jnp SSD (used in training) is itself validated
+    against the literal recurrence."""
+    b, s, h, p, g, n = 1, 64, 2, 16, 1, 8
+    ks = jax.random.split(KEY, 5)
+    x = jax.random.normal(ks[0], (b, s, h, p)) * 0.5
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (b, s, h)))
+    A = -jnp.exp(jax.random.normal(ks[2], (h,)) * 0.3)
+    B = jax.random.normal(ks[3], (b, s, g, n)) * 0.5
+    C = jax.random.normal(ks[4], (b, s, g, n)) * 0.5
+    ym, fm = REF.ssd_ref(x, dt, A, B, C, chunk=16)
+    yn, fn = REF.ssd_naive(x, dt, A, B, C)
+    np.testing.assert_allclose(np.asarray(ym), np.asarray(yn),
+                               rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(np.asarray(fm), np.asarray(fn),
+                               rtol=2e-4, atol=2e-4)
+
+
+# ---------------------------------------------------------------- ops layer
+def test_ops_dispatch():
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (1, 64, 2, 64))
+    k = jax.random.normal(ks[1], (1, 64, 2, 64))
+    v = jax.random.normal(ks[2], (1, 64, 2, 64))
+    a = ops.attention(q, k, v, use_kernel=True, block_q=32, block_k=32)
+    b = ops.attention(q, k, v, use_kernel=False)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=2e-5,
+                               atol=2e-5)
+    x = jax.random.normal(KEY, (4, 256))
+    qq, ss = ops.quantize(x)
+    np.testing.assert_allclose(np.asarray(ops.dequantize(qq, ss)),
+                               np.asarray(x), atol=0.05)

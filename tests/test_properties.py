@@ -1,0 +1,131 @@
+"""Hypothesis property tests on the system's invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import adaptive, aggregation, channel
+from repro.core.compression import dequantize_int8, quantize_int8
+from repro.core.cost import resnet_profile, sfl_client_round_cost
+from repro.data.partition import label_skew_power_law
+
+SET = settings(max_examples=25, deadline=None)
+
+
+# ---------------------------------------------------------------- fedavg
+@SET
+@given(st.integers(1, 5), st.integers(0, 2 ** 31 - 1))
+def test_fedavg_of_identical_trees_is_identity(n, seed):
+    key = jax.random.PRNGKey(seed)
+    tree = {"w": jax.random.normal(key, (3, 4)), "b": jnp.ones((2,))}
+    avg = aggregation.fedavg([tree] * n)
+    jax.tree.map(lambda a, b: np.testing.assert_allclose(
+        np.asarray(a), np.asarray(b), rtol=1e-6), avg, tree)
+
+
+@SET
+@given(st.lists(st.floats(0.1, 100.0), min_size=2, max_size=6),
+       st.integers(0, 2 ** 31 - 1))
+def test_fedavg_convexity(weights, seed):
+    """Weighted average stays inside the convex hull of the leaves."""
+    key = jax.random.PRNGKey(seed)
+    trees = [{"w": jax.random.normal(k, (4,))}
+             for k in jax.random.split(key, len(weights))]
+    avg = aggregation.fedavg(trees, weights)
+    stack = np.stack([np.asarray(t["w"]) for t in trees])
+    assert (np.asarray(avg["w"]) <= stack.max(0) + 1e-5).all()
+    assert (np.asarray(avg["w"]) >= stack.min(0) - 1e-5).all()
+
+
+# ------------------------------------------------------------- quantisation
+@SET
+@given(st.integers(1, 8), st.integers(1, 4), st.floats(0.01, 50.0),
+       st.integers(0, 2 ** 31 - 1))
+def test_quant_error_bounded_by_half_scale(rows, groups, amp, seed):
+    key = jax.random.PRNGKey(seed)
+    x = amp * jax.random.normal(key, (rows, groups * 128))
+    q, s = quantize_int8(x)
+    xd = dequantize_int8(q, s)
+    err = np.abs(np.asarray(x) - np.asarray(xd))
+    bound = np.repeat(np.asarray(s), 128, axis=-1) * 0.5 + 1e-6
+    assert (err <= bound).all()
+    assert (np.asarray(s) > 0).all()
+    assert np.abs(np.asarray(q, np.int32)).max() <= 127
+
+
+# ------------------------------------------------------------ partitioner
+@SET
+@given(st.integers(2, 8), st.integers(1, 6), st.integers(0, 10_000))
+def test_label_skew_partition_invariants(n_clients, labels_per_client, seed):
+    rng = np.random.default_rng(seed)
+    labels = rng.integers(0, 10, size=800)
+    parts = label_skew_power_law(seed, labels, n_clients,
+                                 labels_per_client=labels_per_client)
+    assert len(parts) == n_clients
+    for p in parts:
+        assert len(p) > 0
+        # each client sees at most `labels_per_client` distinct labels
+        assert len(set(labels[p].tolist())) <= labels_per_client
+        assert (p >= 0).all() and (p < len(labels)).all()
+
+
+# ------------------------------------------------------------------ channel
+@SET
+@given(st.floats(1.0, 500.0), st.floats(1.0, 500.0),
+       st.floats(0.1, 1.0))
+def test_rate_monotonically_decreases_with_distance(d1, d2, power):
+    cfg = channel.ChannelConfig(fading_std_db=0.0)
+    v1 = channel.VehicleProfile(x0_m=-min(d1, d2), speed_mps=0.0,
+                                tx_power_w=power)
+    v2 = channel.VehicleProfile(x0_m=-max(d1, d2), speed_mps=0.0,
+                                tx_power_w=power)
+    r_near = channel.rate_bps(cfg, v1, 0.0)
+    r_far = channel.rate_bps(cfg, v2, 0.0)
+    assert r_near >= r_far > 0
+
+
+# ----------------------------------------------------------------- adaptive
+@SET
+@given(st.lists(st.floats(1e5, 1e9), min_size=1, max_size=8))
+def test_paper_threshold_in_valid_set_and_monotone(rates):
+    cuts = adaptive.paper_threshold(rates)
+    assert all(c in adaptive.DEFAULT_CUTS for c in cuts)
+    # text-consistent rule: higher rate -> earlier (smaller) cut
+    pairs = sorted(zip(rates, cuts))
+    for (r1, c1), (r2, c2) in zip(pairs, pairs[1:]):
+        assert c2 <= c1 or r1 == r2
+
+
+@SET
+@given(st.floats(1e5, 1e9), st.floats(1e9, 1e11))
+def test_latency_optimal_never_worse_than_fixed_cuts(rate, cflops):
+    prof = resnet_profile()
+    cuts = adaptive.latency_optimal(prof, [rate], [cflops], 2e12, 4, 16)
+    best = sfl_client_round_cost(prof, cuts[0], 4, 16, rate, cflops, 2e12).latency
+    for c in range(1, prof.n_units):
+        lat = sfl_client_round_cost(prof, c, 4, 16, rate, cflops, 2e12).latency
+        assert best <= lat + 1e-9
+
+
+@SET
+@given(st.floats(1e4, 1e8))
+def test_memory_constraint_respected(budget):
+    prof = resnet_profile()
+    cuts = adaptive.memory_constrained(
+        prof, budget, adaptive.paper_threshold, [1e6, 5e7, 2e8])
+    for c in cuts:
+        assert c >= 1
+        if c > 1:
+            assert prof.client_param_bytes(c) <= budget
+
+
+# -------------------------------------------------------------- cost model
+@SET
+@given(st.integers(1, 8), st.floats(1e5, 1e9))
+def test_smashed_comm_decreases_with_later_cut(batch, rate):
+    """Paper Fig. 5a: communication overhead falls as the cut moves later."""
+    prof = resnet_profile()
+    comm = [sfl_client_round_cost(prof, c, 4, batch, rate, 1e10, 1e12,
+                                  include_model_transfer=False).comm_bytes
+            for c in (2, 4, 6, 8)]
+    assert comm == sorted(comm, reverse=True)

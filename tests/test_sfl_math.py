@@ -1,0 +1,119 @@
+"""SFL mathematical-faithfulness tests.
+
+1. The explicit message-flow step (client fwd -> smashed up -> server
+   fwd/bwd -> cut-gradient down -> client bwd, via jax.vjp) produces EXACTLY
+   the gradients of the composite loss — the paper's Fig. 3 flow computes
+   true gradients.
+2. Sync-SFL (K=1) equivalence used by the compiled datacenter step
+   (DESIGN.md §3): FedAvg of one-SGD-step-diverged client models equals one
+   SGD step with the |D_n|-weighted mean gradient.
+3. Eq. 2 delta-form FedAvg == plain weighted average.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import aggregation
+from repro.core.fedsim import ResNetModel, SimConfig, make_sfl_batch_step
+from repro.models import resnet as R
+from repro import optim
+
+
+def _data(key, n=8):
+    kx, ky = jax.random.split(key)
+    return {"images": jax.random.normal(kx, (n, 32, 32, 3)),
+            "labels": jax.random.randint(ky, (n,), 0, 10)}
+
+
+def test_message_flow_grads_equal_composite_grads():
+    model = ResNetModel()
+    key = jax.random.PRNGKey(0)
+    units, head = model.init(key)
+    batch = _data(jax.random.PRNGKey(1))
+    cut = 4
+
+    # --- explicit message flow (what fedsim does) ---
+    def client_fwd(cu):
+        return model.apply_units(cu, batch["images"], 0)
+
+    smashed, vjp = jax.vjp(client_fwd, units[:cut])
+
+    def server_loss(sv, sm):
+        feats = model.apply_units(sv["units"], sm, cut)
+        return model.head_loss(sv["head"], feats, batch["labels"])[0]
+
+    loss_mf, grads = jax.value_and_grad(server_loss, argnums=(0, 1))(
+        {"units": units[cut:], "head": head}, smashed)
+    g_server, g_smashed = grads
+    (g_client,) = vjp(g_smashed)
+
+    # --- composite grad (one jax.grad over the whole model) ---
+    def full_loss(tree):
+        feats = model.apply_units(tree["units"], batch["images"], 0)
+        return model.head_loss(tree["head"], feats, batch["labels"])[0]
+
+    loss_full, g_full = jax.value_and_grad(full_loss)(
+        {"units": units, "head": head})
+
+    np.testing.assert_allclose(float(loss_mf), float(loss_full), rtol=1e-6)
+    for i in range(cut):
+        jax.tree.map(lambda a, b: np.testing.assert_allclose(
+            np.asarray(a), np.asarray(b), rtol=1e-4, atol=1e-5),
+            g_client[i], g_full["units"][i])
+    for i in range(cut, R.N_UNITS):
+        jax.tree.map(lambda a, b: np.testing.assert_allclose(
+            np.asarray(a), np.asarray(b), rtol=1e-4, atol=1e-5),
+            g_server["units"][i - cut], g_full["units"][i])
+
+
+def test_sync_sfl_equivalence():
+    """FedAvg of one-step-SGD-diverged replicas == one step with the weighted
+    mean gradient (the compiled K=1 datacenter formulation)."""
+    key = jax.random.PRNGKey(3)
+    w0 = {"a": jax.random.normal(key, (4, 4)), "b": jnp.ones((4,))}
+    grads = [jax.tree.map(lambda x: jax.random.normal(k, x.shape), w0)
+             for k in jax.random.split(key, 3)]
+    weights = [1.0, 2.0, 5.0]
+    lr = 0.1
+
+    # per-client step then weighted FedAvg
+    replicas = [jax.tree.map(lambda w, g: w - lr * g, w0, g) for g in grads]
+    fedavg_result = aggregation.fedavg(replicas, weights)
+
+    # weighted mean gradient, single step
+    wsum = sum(weights)
+    gmean = jax.tree.map(
+        lambda *gs: sum(weights[i] / wsum * gs[i] for i in range(3)), *grads)
+    direct = jax.tree.map(lambda w, g: w - lr * g, w0, gmean)
+
+    jax.tree.map(lambda a, b: np.testing.assert_allclose(
+        np.asarray(a), np.asarray(b), rtol=1e-6), fedavg_result, direct)
+
+
+def test_fedavg_delta_form_matches_eq2():
+    key = jax.random.PRNGKey(5)
+    g = {"w": jax.random.normal(key, (3, 3))}
+    clients = [{"w": jax.random.normal(k, (3, 3))}
+               for k in jax.random.split(key, 4)]
+    lhs = aggregation.fedavg_delta(g, clients)          # Eq. 2
+    rhs = aggregation.fedavg(clients)                   # plain average
+    np.testing.assert_allclose(np.asarray(lhs["w"]), np.asarray(rhs["w"]),
+                               rtol=1e-5, atol=1e-6)
+
+
+def test_sfl_batch_step_runs_and_learns():
+    model = ResNetModel()
+    cfg = SimConfig(scheme="sfl", cut=2, lr=1e-3)
+    step = make_sfl_batch_step(model, cfg, cut=2)
+    key = jax.random.PRNGKey(0)
+    units, head = model.init(key)
+    opt = optim.adam(cfg.lr)
+    c_opt = opt.init(units[:2])
+    s_opt = opt.init({"units": units[2:], "head": head})
+    batch = _data(jax.random.PRNGKey(7), n=16)
+    cu, su, head_, c_opt, s_opt, l0, _ = step(units[:2], units[2:], head,
+                                              c_opt, s_opt, batch)
+    for _ in range(8):
+        cu, su, head_, c_opt, s_opt, loss, _ = step(cu, su, head_, c_opt,
+                                                    s_opt, batch)
+    assert float(loss) < float(l0), "SFL step should overfit one batch"

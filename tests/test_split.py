@@ -1,0 +1,62 @@
+"""Cut-layer splitting: split/join inverse + split forward == full forward,
+for every assigned architecture (reduced configs, all valid cuts)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCH_IDS, get_config
+from repro.core import split as SP
+from repro.models import transformer as T
+
+
+def _batch(cfg, key, b=2, s=32):
+    if cfg.frontend == "vision":
+        return {"tokens": jax.random.randint(key, (b, s - cfg.n_patches), 0,
+                                             cfg.vocab_size),
+                "patch_embeds": jax.random.normal(
+                    key, (b, cfg.n_patches, cfg.d_model))}
+    if cfg.frontend == "audio":
+        return {"codes": jax.random.randint(key, (b, cfg.n_codebooks, s), 0,
+                                            cfg.vocab_size)}
+    return {"tokens": jax.random.randint(key, (b, s), 0, cfg.vocab_size)}
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_split_join_inverse(arch):
+    cfg = get_config(arch).reduced()
+    params = T.init_params(jax.random.PRNGKey(0), cfg)
+    for cut in SP.valid_cuts(cfg):
+        client, server = SP.split_params(params, cfg, cut)
+        joined = SP.join_params(client, server, cfg)
+        jax.tree.map(lambda a, b: np.testing.assert_array_equal(
+            np.asarray(a), np.asarray(b)), params, joined)
+
+
+@pytest.mark.parametrize("arch", ["smollm-360m", "gemma3-4b", "mamba2-780m",
+                                  "recurrentgemma-2b", "deepseek-v2-lite-16b",
+                                  "dbrx-132b", "internvl2-1b", "musicgen-large"])
+def test_split_forward_equals_full_forward(arch):
+    cfg = get_config(arch).reduced()
+    key = jax.random.PRNGKey(1)
+    params = T.init_params(key, cfg)
+    batch = _batch(cfg, key)
+    full_logits, _, _ = T.forward(params, cfg, batch, "train")
+    for cut in SP.valid_cuts(cfg):
+        client, server = SP.split_params(params, cfg, cut)
+        smashed, positions, _, _ = SP.client_forward(client, cfg, batch, cut,
+                                                     "train")
+        logits, _, _ = SP.server_forward(server, cfg, smashed, positions, cut,
+                                         "train")
+        np.testing.assert_allclose(np.asarray(logits),
+                                   np.asarray(full_logits),
+                                   rtol=2e-4, atol=2e-4)
+
+
+def test_valid_cuts_and_clamp():
+    cfg = get_config("gemma3-4b").reduced()
+    cuts = SP.valid_cuts(cfg)
+    total = T.total_periods(cfg)
+    assert cuts == list(range(1, total))
+    assert SP.clamp_cut(cfg, 0) == 1
+    assert SP.clamp_cut(cfg, 999) == total - 1
