@@ -1,0 +1,311 @@
+"""Cohort-engine scaling benchmark: fleet sizes {4, 16, 64, 256}, sfl/asfl.
+
+Compares the vectorized :class:`CohortEngine` federation round against the
+seed per-client Python loop (one jit dispatch + one ``float(loss)`` host sync
+per client per batch, per-batch host staging, Python slice/merge optimizer
+surgery) at EQUAL rounds/local-steps/batches — both sides consume identical
+batch streams and make identical cut decisions, and evaluation is disabled on
+both, so the measured gap is pure round-execution overhead.
+
+The default model is a 9-unit split MLP: small enough that a local step is
+milliseconds, which is exactly the regime where the seed loop's per-dispatch
+overhead dominates at fleet scale (a vehicle-side perception model is small;
+the simulator's job is to scale the *federation*, not the FLOPs).  ``--model
+resnet`` runs the paper's ResNet18 instead — on CPU containers that is
+conv-compute-bound and mostly measures XLA's conv throughput, not the
+engine (see DESIGN.md §6).
+
+Timing is post-warmup: each simulator runs once to compile every round
+structure, is reset (same seeds => same rate draws => same cuts => warm
+caches), and only the re-run is timed.
+
+  PYTHONPATH=src python benchmarks/bench_fedsim.py
+  -> BENCH_fedsim.json (repo root) + benchmarks/out/BENCH_fedsim.json
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import math
+import os
+import time
+from typing import List
+
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import aggregation, cost
+from repro.core.fedsim import (FederationSim, ResNetModel, SimConfig,
+                               _make_opt, make_sfl_batch_step)
+from repro.data.pipeline import ClientDataset
+from repro import optim
+
+ROOT = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
+OUT_DIR = os.path.join(os.path.dirname(__file__), "out")
+
+
+# --------------------------------------------------------------- bench model
+class MLPUnitModel:
+    """9-unit split MLP over feature vectors — the dispatch-bound bench model
+    (mirrors the ResNet's 9 split points; every cut in {2,4,6,8} is valid)."""
+    name = "mlp-split"
+    scan_friendly = True
+
+    def __init__(self, dim: int = 48, width: int = 64, n_units: int = 9,
+                 n_classes: int = 10):
+        self.dim, self.width, self.n_units = dim, width, n_units
+        self.n_classes = n_classes
+
+    def init(self, key):
+        ks = jax.random.split(key, self.n_units + 1)
+        units = []
+        d_in = self.dim
+        for i in range(self.n_units):
+            units.append({
+                "w": jax.random.normal(ks[i], (d_in, self.width))
+                * math.sqrt(2.0 / d_in),
+                "b": jnp.zeros((self.width,)),
+            })
+            d_in = self.width
+        head = {"w": jax.random.normal(ks[-1], (self.width, self.n_classes))
+                * math.sqrt(1.0 / self.width),
+                "b": jnp.zeros((self.n_classes,))}
+        return units, head
+
+    def apply_units(self, units, x, start):
+        for u in units:
+            x = jax.nn.relu(x @ u["w"] + u["b"])
+        return x
+
+    def head_loss(self, head, feats, labels):
+        logits = feats @ head["w"] + head["b"]
+        logz = jax.scipy.special.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, labels[:, None], axis=-1)[:, 0]
+        return jnp.mean(logz - gold), logits
+
+    def head_predict(self, head, feats):
+        return feats @ head["w"] + head["b"]
+
+    def profile(self):
+        w, d = self.width, self.dim
+        flops = [2.0 * d * w] + [2.0 * w * w] * (self.n_units - 1)
+        pbytes = [(d * w + w) * 4] + [(w * w + w) * 4] * (self.n_units - 1)
+        return cost.SplitProfile(
+            name=self.name, unit_fwd_flops=flops, unit_param_bytes=pbytes,
+            smashed_bytes_per_sample=[w * 4.0] * self.n_units,
+            head_flops=2.0 * w * self.n_classes,
+            head_param_bytes=(w * self.n_classes + self.n_classes) * 4)
+
+
+def make_mlp_fleet_data(n_clients: int, per_client: int, dim: int, seed: int):
+    """Class-structured feature vectors, one shard per vehicle."""
+    rng = np.random.default_rng(seed)
+    templates = rng.normal(size=(10, dim)).astype(np.float32)
+    clients = []
+    for i in range(n_clients):
+        y = rng.integers(0, 10, size=per_client)
+        x = templates[y] + 0.5 * rng.normal(size=(per_client, dim))
+        clients.append(ClientDataset(x.astype(np.float32),
+                                     y.astype(np.int32), i))
+    yt = rng.integers(0, 10, size=256)
+    xt = templates[yt] + 0.5 * rng.normal(size=(256, dim))
+    test = {"images": jnp.asarray(xt.astype(np.float32)),
+            "labels": jnp.asarray(yt.astype(np.int32))}
+    return clients, test
+
+
+# ------------------------------------------------- seed per-client loop sim
+class SeedLoopSim(FederationSim):
+    """The seed FederationSim's `_parallel_split_round`, verbatim: a Python
+    loop over clients per local step, one jitted dispatch and one
+    `float(loss)` host sync per client batch, per-batch `sample_batch`
+    staging, Python dict surgery on the shared RSU optimizer state, and
+    Python-list unit-wise FedAvg at round end."""
+
+    def __init__(self, *args, **kwargs):
+        super().__init__(*args, **kwargs)
+        self._sfl_steps = {}
+
+    def _sfl_step(self, cut):
+        if cut not in self._sfl_steps:
+            self._sfl_steps[cut] = make_sfl_batch_step(self.model, self.cfg,
+                                                       cut)
+        return self._sfl_steps[cut]
+
+    def _parallel_split_round(self, rnd):
+        from repro.core.fedsim import RoundMetrics
+        cfgc = self.cfg
+        rates = self._round_rates(rnd)
+        participants = set(self._participants(rnd))
+        cuts = [max(1, min(c, self.model.n_units - 1))
+                for c in self._pick_cuts(rates)]
+        opt = _make_opt(cfgc)
+        n_units = self.model.n_units
+
+        server_units = [jax.tree.map(lambda a: a, u) for u in self.units]
+        head = self.head
+        s_opt_full = opt.init({"units": server_units, "head": head})
+
+        def slice_opt(cut):
+            out = {}
+            for k, v in s_opt_full.items():
+                if isinstance(v, dict) and "units" in v:
+                    out[k] = {"units": v["units"][cut:], "head": v["head"]}
+                else:
+                    out[k] = v
+            return out
+
+        def merge_opt(new, cut):
+            for k, v in new.items():
+                if isinstance(v, dict) and "units" in v:
+                    s_opt_full[k]["units"] = (
+                        list(s_opt_full[k]["units"][:cut]) + list(v["units"]))
+                    s_opt_full[k]["head"] = v["head"]
+                else:
+                    s_opt_full[k] = v
+
+        client_units = [[jax.tree.map(lambda a: a, u)
+                         for u in self.units[:cut]] for cut in cuts]
+        c_opts = [opt.init(cu) for cu in client_units]
+
+        losses = []
+        steps = max(self._local_steps(c) for c in self.clients)
+        for s in range(steps):
+            for ci, c in enumerate(self.clients):
+                if ci not in participants or s >= self._local_steps(c):
+                    continue
+                cut = cuts[ci]
+                step = self._sfl_step(cut)
+                batch = c.sample_batch(cfgc.batch_size,
+                                       cfgc.seed + rnd * 983 + s * 31 + ci)
+                sv = server_units[cut:]
+                (client_units[ci], new_sv, head, c_opts[ci], new_s_opt,
+                 loss, _) = step(client_units[ci], sv, head, c_opts[ci],
+                                 slice_opt(cut), batch)
+                server_units[cut:] = list(new_sv)
+                merge_opt(new_s_opt, cut)
+                losses.append(float(loss))
+
+        unit_replicas = [[] for _ in range(n_units)]
+        unit_weights = [[] for _ in range(n_units)]
+        for ci, c in enumerate(self.clients):
+            if ci not in participants:
+                continue
+            w = float(len(c))
+            for u in range(cuts[ci]):
+                unit_replicas[u].append(client_units[ci][u])
+                unit_weights[u].append(w)
+        for u in range(n_units):
+            served = sum(len(c) for ci, c in enumerate(self.clients)
+                         if ci in participants and cuts[ci] <= u)
+            if served:
+                unit_replicas[u].append(server_units[u])
+                unit_weights[u].append(float(served))
+        self.units = [aggregation.fedavg(unit_replicas[u], unit_weights[u])
+                      if unit_replicas[u] else self.units[u]
+                      for u in range(n_units)]
+        self.head = head
+        return self._metrics(rnd, float(np.mean(losses)), cuts, 0.0, 0.0, 0.0)
+
+
+# ----------------------------------------------------------------- protocol
+def _timed_run(sim) -> float:
+    """Warmup run (compiles every round structure), reset, timed re-run.
+    Returns seconds per round."""
+    sim.run()
+    sim.reset()
+    t0 = time.perf_counter()
+    hist = sim.run()
+    dt = time.perf_counter() - t0
+    assert all(np.isfinite(m.loss) for m in hist)
+    return dt / len(hist)
+
+
+def bench(sizes: List[int], schemes: List[str], model_kind: str,
+          per_client: int, local_steps: int, batch: int, rounds: int,
+          seed_loop_max: int) -> dict:
+    results = []
+    for n in sizes:
+        if model_kind == "mlp":
+            model_f = lambda: MLPUnitModel()
+            clients, test = make_mlp_fleet_data(n, per_client, 48, seed=n)
+        else:
+            from repro.data.pipeline import make_federated_data
+            model_f = lambda: ResNetModel()
+            clients, test = make_federated_data(0, n_train=per_client * n,
+                                                n_test=256, n_clients=n)
+        for scheme in schemes:
+            cfg = SimConfig(scheme=scheme, rounds=rounds,
+                            local_steps=local_steps, batch_size=batch,
+                            lr=1e-3, eval_every=0)
+            eng = FederationSim(model_f(), clients, test, cfg)
+            t_eng = _timed_run(eng)
+            row = {"scheme": scheme, "n_clients": n, "mode": eng.engine.mode,
+                   "engine_round_s": t_eng, "seed_round_s": None,
+                   "speedup": None}
+            if n <= seed_loop_max and scheme in ("sfl", "asfl"):
+                ref = SeedLoopSim(model_f(), clients, test, cfg)
+                t_ref = _timed_run(ref)
+                row["seed_round_s"] = t_ref
+                row["speedup"] = t_ref / t_eng
+                # both sides consumed identical batch streams & cuts
+                np.testing.assert_allclose(
+                    eng.history[-1].loss, ref.history[-1].loss,
+                    rtol=0.05, atol=0.05)
+            results.append(row)
+            print(f"{scheme:5s} n={n:4d} mode={row['mode']:6s} "
+                  f"engine={t_eng*1e3:9.1f} ms/round"
+                  + (f"  seed={row['seed_round_s']*1e3:9.1f} ms/round"
+                     f"  speedup={row['speedup']:.1f}x"
+                     if row["speedup"] else ""), flush=True)
+    return {
+        "config": {"model": model_kind, "per_client": per_client,
+                   "local_steps": local_steps, "batch": batch,
+                   "rounds": rounds, "backend": jax.default_backend()},
+        "results": results,
+    }
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--sizes", default="4,16,64,256")
+    ap.add_argument("--schemes", default="sfl,asfl")
+    ap.add_argument("--model", default="mlp", choices=["mlp", "resnet"])
+    ap.add_argument("--per-client", type=int, default=64)
+    ap.add_argument("--local-steps", type=int, default=2)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--rounds", type=int, default=2)
+    ap.add_argument("--seed-loop-max", type=int, default=256,
+                    help="largest fleet to also run the seed loop at")
+    args = ap.parse_args()
+    sizes = [int(s) for s in args.sizes.split(",")]
+    schemes = args.schemes.split(",")
+
+    out = bench(sizes, schemes, args.model, args.per_client,
+                args.local_steps, args.batch, args.rounds,
+                args.seed_loop_max)
+
+    key = [r for r in out["results"]
+           if r["scheme"] == "asfl" and r["n_clients"] == 64 and r["speedup"]]
+    if key:
+        out["asfl_64_speedup"] = key[0]["speedup"]
+        out["asfl_64_speedup_ge_5x"] = key[0]["speedup"] >= 5.0
+        print(f"\nasfl @ 64 vehicles: {key[0]['speedup']:.1f}x "
+              f"(>=5x: {out['asfl_64_speedup_ge_5x']})")
+
+    os.makedirs(OUT_DIR, exist_ok=True)
+    for path in (os.path.join(ROOT, "BENCH_fedsim.json"),
+                 os.path.join(OUT_DIR, "BENCH_fedsim.json")):
+        with open(path, "w") as f:
+            json.dump(out, f, indent=1, default=float)
+    print(f"wrote {os.path.join(ROOT, 'BENCH_fedsim.json')}")
+
+
+if __name__ == "__main__":
+    main()

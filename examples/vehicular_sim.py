@@ -2,14 +2,18 @@
 vehicles drive past the RSU (the paper's core 'adaptive' story).
 
 Eight vehicles approach, pass, and leave the RSU's coverage; at each round
-the channel model yields per-vehicle Shannon rates, and the three cut
-strategies (paper Eq. 3, latency-optimal, energy-aware) pick cut layers.
-Also demonstrates the memory-constrained clamp (a vehicle-side budget the
-DBRX-scale architectures force — DESIGN.md §4).
+the channel model yields per-vehicle Shannon rates (one vectorized draw for
+the whole fleet), and the three cut strategies (paper Eq. 3, latency-optimal,
+energy-aware) pick cut layers.  Also demonstrates the memory-constrained
+clamp (a vehicle-side budget the DBRX-scale architectures force — DESIGN.md
+§4), and finishes by training the fleet for two ASFL rounds through the
+cohort engine (DESIGN.md §6) with per-vehicle memory budgets.
 
-  PYTHONPATH=src python examples/vehicular_sim.py
+  PYTHONPATH=src python examples/vehicular_sim.py          # strategy trace
+  PYTHONPATH=src python examples/vehicular_sim.py --train  # + engine rounds
 """
 import sys
+import time
 
 sys.path.insert(0, "src")
 
@@ -56,12 +60,43 @@ def main():
                   for c, r, f in zip(cuts, rates, flops))
         print(f"round latency {name}: {lat:7.1f}s  cuts={cuts}")
 
-    # vehicle-side memory budget (the DBRX argument)
+    # vehicle-side memory budget (the DBRX argument): fleet-wide scalar ...
     budget = 64 * 1024 * 1024  # 64 MiB on-vehicle budget
     cuts = adaptive.memory_constrained(prof, budget, adaptive.paper_threshold,
                                        rates)
     print(f"with a {budget>>20} MiB vehicle budget the cuts clamp to {cuts}")
+    # ... or per-vehicle (VehicleProfile.memory_budget_bytes)
+    het = channel.make_fleet(8, seed=7, memory_budget_bytes=(1e5, 8e6))
+    cuts = adaptive.memory_constrained(
+        prof, channel.fleet_arrays(het)["memory_budget_bytes"],
+        adaptive.paper_threshold, rates)
+    print(f"with per-vehicle budgets (0.1-8 MB) they clamp to    {cuts}")
+
+
+def train(n_vehicles: int = 8, rounds: int = 2):
+    """Two ASFL rounds over the fleet through the cohort engine: the whole
+    round (all buckets, all local steps, the unit-wise FedAvg) runs as one
+    or a few compiled programs with per-vehicle memory-clamped cuts."""
+    from repro.core.fedsim import FederationSim, ResNetModel, SimConfig
+    from repro.data.pipeline import make_federated_data
+
+    clients, test = make_federated_data(0, n_train=32 * n_vehicles,
+                                        n_test=128, n_clients=n_vehicles)
+    fleet = channel.make_fleet(n_vehicles, seed=7,
+                               memory_budget_bytes=(5e5, 5e7))
+    cfg = SimConfig(scheme="asfl", adaptive_strategy="memory", rounds=rounds,
+                    local_steps=2, batch_size=8, lr=1e-3)
+    sim = FederationSim(ResNetModel(), clients, test, cfg, fleet=fleet)
+    print(f"\ntraining {n_vehicles} vehicles, scheme=asfl(memory), "
+          f"engine mode={sim.engine.mode}")
+    t0 = time.time()
+    for m in sim.run():
+        print(f"round {m.round}: loss={m.loss:.3f} acc={m.test_acc:.3f} "
+              f"cuts={m.cuts}")
+    print(f"({time.time()-t0:.1f}s wall incl. compile)")
 
 
 if __name__ == "__main__":
     main()
+    if "--train" in sys.argv:
+        train()

@@ -7,22 +7,29 @@ band to cut 2, whose smashed data is the LARGEST (Fig. 5a) — contradicting
 the surrounding text ("when the vehicle's transmission rate is higher, we can
 choose a smaller split layer").  We implement the text-consistent ordering by
 default (high rate -> early cut -> more offload) and keep the literal printed
-mapping behind ``literal_eq3=True``.  See DESIGN.md.
+mapping behind ``literal_eq3=True``.  See DESIGN.md §2.
+
+Every strategy is vectorized over the fleet: selection for 256 vehicles is a
+handful of numpy vector ops, not a Python loop of per-vehicle cost-model
+evaluations (DESIGN.md §6).  All strategies return a plain list of ints so
+results stay JSON-serializable and usable as static jit keys.
 
 Beyond-paper strategies:
   * `latency_optimal` — per-vehicle argmin of the analytic round latency
     (cost.py), the multi-objective direction the paper lists as future work.
   * `memory_constrained` — upper-bounds the vehicle-side model bytes first
     (vehicles cannot hold a DBRX layer), then applies another strategy.
+    Accepts a scalar budget or per-vehicle budgets (VehicleProfile.
+    memory_budget_bytes, wired as ``SimConfig.adaptive_strategy="memory"``).
   * `energy_aware` — weighted latency+energy objective.
 """
 from __future__ import annotations
 
-from typing import Callable, List, Optional, Sequence, Tuple
+from typing import Callable, List, Optional, Sequence, Tuple, Union
 
 import numpy as np
 
-from repro.core.cost import SplitProfile, sfl_client_round_cost
+from repro.core.cost import SplitProfile, sfl_round_cost_arrays
 
 DEFAULT_CUTS = (2, 4, 6, 8)
 # Threshold rates (bps), R1<=R2<=R3<=R4 as in Eq. 3.  The paper leaves the
@@ -36,37 +43,37 @@ def paper_threshold(rates_bps: Sequence[float],
                     thresholds: Sequence[float] = DEFAULT_THRESHOLDS,
                     cuts: Sequence[int] = DEFAULT_CUTS,
                     literal_eq3: bool = False) -> List[int]:
-    """Eq. 3: banded rate -> cut layer, per vehicle."""
-    t1, t2, t3, _ = thresholds
-    out = []
-    for r in rates_bps:
-        if r <= t1:
-            band = 0
-        elif r <= t2:
-            band = 1
-        elif r <= t3:
-            band = 2
-        else:
-            band = 3
-        if literal_eq3:
-            out.append(cuts[band])            # printed Eq. 3: low rate -> cut 2
-        else:
-            out.append(cuts[len(cuts) - 1 - band])  # text: high rate -> cut 2
-    return out
+    """Eq. 3: banded rate -> cut layer, per vehicle (one digitize call)."""
+    rates = np.asarray(rates_bps, dtype=np.float64)
+    band = np.digitize(rates, np.asarray(thresholds[:3]), right=True)
+    cuts_arr = np.asarray(cuts)
+    if literal_eq3:
+        out = cuts_arr[band]                  # printed Eq. 3: low rate -> cut 2
+    else:
+        out = cuts_arr[len(cuts) - 1 - band]  # text: high rate -> cut 2
+    return [int(c) for c in out]
+
+
+def _cost_matrix(profile: SplitProfile, rates_bps, client_flops,
+                 server_flops: float, n_batches: int, batch: int,
+                 local_epochs: int, candidate_cuts):
+    """(n_vehicles, n_cuts) RoundCostArrays via one broadcast evaluation."""
+    cuts = np.asarray(list(candidate_cuts), dtype=np.int64)
+    rates = np.asarray(rates_bps, dtype=np.float64)[:, None]
+    flops = np.asarray(client_flops, dtype=np.float64)[:, None]
+    return cuts, sfl_round_cost_arrays(profile, cuts[None, :], n_batches,
+                                       batch, rates, flops, server_flops,
+                                       local_epochs)
 
 
 def latency_optimal(profile: SplitProfile, rates_bps: Sequence[float],
                     client_flops: Sequence[float], server_flops: float,
                     n_batches: int, batch: int, local_epochs: int = 1,
                     candidate_cuts: Optional[Sequence[int]] = None) -> List[int]:
-    cuts = list(candidate_cuts or range(1, profile.n_units))
-    out = []
-    for r, cf in zip(rates_bps, client_flops):
-        lat = [sfl_client_round_cost(profile, c, n_batches, batch, r, cf,
-                                     server_flops, local_epochs).latency
-               for c in cuts]
-        out.append(cuts[int(np.argmin(lat))])
-    return out
+    cuts, costs = _cost_matrix(profile, rates_bps, client_flops, server_flops,
+                               n_batches, batch, local_epochs,
+                               candidate_cuts or range(1, profile.n_units))
+    return [int(c) for c in cuts[np.argmin(costs.latency, axis=1)]]
 
 
 def energy_aware(profile: SplitProfile, rates_bps: Sequence[float],
@@ -74,29 +81,32 @@ def energy_aware(profile: SplitProfile, rates_bps: Sequence[float],
                  n_batches: int, batch: int, local_epochs: int = 1,
                  latency_weight: float = 0.5,
                  candidate_cuts: Optional[Sequence[int]] = None) -> List[int]:
-    cuts = list(candidate_cuts or range(1, profile.n_units))
-    out = []
-    for r, cf in zip(rates_bps, client_flops):
-        costs = [sfl_client_round_cost(profile, c, n_batches, batch, r, cf,
-                                       server_flops, local_epochs)
-                 for c in cuts]
-        lat = np.array([c.latency for c in costs])
-        en = np.array([c.energy_j for c in costs])
-        score = latency_weight * lat / lat.max() + (1 - latency_weight) * en / en.max()
-        out.append(cuts[int(np.argmin(score))])
-    return out
+    cuts, costs = _cost_matrix(profile, rates_bps, client_flops, server_flops,
+                               n_batches, batch, local_epochs,
+                               candidate_cuts or range(1, profile.n_units))
+    lat, en = costs.latency, costs.energy_j
+    score = (latency_weight * lat / lat.max(axis=1, keepdims=True)
+             + (1 - latency_weight) * en / en.max(axis=1, keepdims=True))
+    return [int(c) for c in cuts[np.argmin(score, axis=1)]]
 
 
-def memory_constrained(profile: SplitProfile, budget_bytes: float,
+def max_cut_for_budget(profile: SplitProfile,
+                       budget_bytes: Union[float, Sequence[float]]
+                       ) -> np.ndarray:
+    """Largest cut whose vehicle-side params fit each budget (>= 1: the
+    first unit always stays on-vehicle — the paper's privacy floor)."""
+    cum = np.cumsum(np.asarray(profile.unit_param_bytes, dtype=np.float64))
+    budgets = np.atleast_1d(np.asarray(budget_bytes, dtype=np.float64))
+    max_cuts = np.searchsorted(cum, budgets, side="right")
+    return np.maximum(max_cuts, 1)
+
+
+def memory_constrained(profile: SplitProfile,
+                       budget_bytes: Union[float, Sequence[float]],
                        inner: Callable[..., List[int]], *args,
                        **kwargs) -> List[int]:
-    """Clamp any strategy's cuts so the vehicle-side model fits the budget."""
-    cuts = inner(*args, **kwargs)
-    max_cut = 0
-    for c in range(1, profile.n_units + 1):
-        if profile.client_param_bytes(c) <= budget_bytes:
-            max_cut = c
-        else:
-            break
-    max_cut = max(max_cut, 1)  # at least the first unit stays on-vehicle
-    return [min(c, max_cut) for c in cuts]
+    """Clamp any strategy's cuts so the vehicle-side model fits the budget.
+    ``budget_bytes`` is a scalar (fleet-wide) or per-vehicle array."""
+    cuts = np.asarray(inner(*args, **kwargs))
+    max_cuts = max_cut_for_budget(profile, budget_bytes)
+    return [int(c) for c in np.minimum(cuts, max_cuts)]

@@ -42,6 +42,30 @@ def fedavg_delta(global_tree: Any, client_trees: Sequence[Any],
     return jax.tree.map(upd, global_tree, avg_clients)
 
 
+def stacked_weighted_sum(stacked_tree: Any, weights: jnp.ndarray) -> Any:
+    """On-device FedAvg numerator over a stacked replica axis: every leaf of
+    ``stacked_tree`` carries the replicas on its leading axis and is reduced
+    with one tensordot — no Python list of per-replica trees, so it is jit-
+    traceable inside the cohort engine's round program.  A zero weight
+    excludes a replica (padding slots, out-of-coverage vehicles)."""
+    w = jnp.asarray(weights, jnp.float32)
+
+    def f(a):
+        return jnp.tensordot(w, a.astype(jnp.float32), axes=(0, 0))
+
+    return jax.tree.map(f, stacked_tree)
+
+
+def stacked_fedavg(stacked_tree: Any, weights: jnp.ndarray) -> Any:
+    """Weighted average over the stacked leading axis (Eq. 1/2 realised as
+    one on-device reduction).  Weights need not be normalised."""
+    w = jnp.asarray(weights, jnp.float32)
+    num = stacked_weighted_sum(stacked_tree, w)
+    den = jnp.sum(w)
+    return jax.tree.map(
+        lambda n, ref: (n / den).astype(ref.dtype), num, stacked_tree)
+
+
 def unitwise_fedavg(unit_replicas: List[List[Any]],
                     weights_per_unit: List[List[float]]) -> List[Any]:
     """ASFL heterogeneous-cut aggregation: each stack unit is averaged over

@@ -8,7 +8,7 @@ energy accounting of Fig. 5b.
 from __future__ import annotations
 
 import dataclasses
-from typing import List, Sequence
+from typing import List, Sequence, Tuple
 
 import numpy as np
 
@@ -21,6 +21,10 @@ class VehicleProfile:
     compute_power_w: float = 15.0   # power draw while computing
     x0_m: float = -200.0            # initial position along the road
     speed_mps: float = 15.0         # vehicle speed (m/s)
+    # on-vehicle parameter budget for the client-side sub-model; inf = the
+    # vehicle can hold the whole stack (adaptive_strategy="memory" clamps
+    # cuts so client_param_bytes(cut) fits this budget)
+    memory_budget_bytes: float = float("inf")
 
 
 @dataclasses.dataclass
@@ -33,23 +37,33 @@ class ChannelConfig:
     fading_std_db: float = 4.0      # shadow fading (log-normal)
 
 
+RSU_HEIGHT_M = 10.0
+
+
+def _shannon_rate(cfg: ChannelConfig, d, tx_power_w, fading_db):
+    """B log2(1 + SNR) with log-distance path loss — the one place the
+    channel math lives; scalars and fleet arrays broadcast alike."""
+    pl_db = (-cfg.ref_gain_db
+             + 10 * cfg.path_loss_exp * np.log10(np.maximum(d, 1.0))
+             + fading_db)
+    p_rx_dbm = 10 * np.log10(np.asarray(tx_power_w) * 1e3) - pl_db
+    noise_dbm = cfg.noise_dbm_hz + 10 * np.log10(cfg.bandwidth_hz)
+    snr = 10 ** ((p_rx_dbm - noise_dbm) / 10)
+    return cfg.bandwidth_hz * np.log2(1.0 + snr)
+
+
 def distance_at(v: VehicleProfile, t: float) -> float:
     """Distance to the RSU (at x=0, height folded in) at time t."""
     x = v.x0_m + v.speed_mps * t
-    return float(np.sqrt(x * x + 10.0 ** 2))
+    return float(np.sqrt(x * x + RSU_HEIGHT_M ** 2))
 
 
 def rate_bps(cfg: ChannelConfig, v: VehicleProfile, t: float,
              rng: np.random.Generator | None = None) -> float:
-    """Shannon rate B log2(1 + SNR) with path loss + optional shadow fading."""
-    d = distance_at(v, t)
-    pl_db = -cfg.ref_gain_db + 10 * cfg.path_loss_exp * np.log10(max(d, 1.0))
-    if rng is not None and cfg.fading_std_db > 0:
-        pl_db += rng.normal(0.0, cfg.fading_std_db)
-    p_rx_dbm = 10 * np.log10(v.tx_power_w * 1e3) - pl_db
-    noise_dbm = cfg.noise_dbm_hz + 10 * np.log10(cfg.bandwidth_hz)
-    snr = 10 ** ((p_rx_dbm - noise_dbm) / 10)
-    return float(cfg.bandwidth_hz * np.log2(1.0 + snr))
+    """Shannon rate for one vehicle + optional shadow fading."""
+    fading = (rng.normal(0.0, cfg.fading_std_db)
+              if rng is not None and cfg.fading_std_db > 0 else 0.0)
+    return float(_shannon_rate(cfg, distance_at(v, t), v.tx_power_w, fading))
 
 
 def in_range(cfg: ChannelConfig, v: VehicleProfile, t: float) -> bool:
@@ -64,8 +78,12 @@ def residence_time(cfg: ChannelConfig, v: VehicleProfile, t: float) -> float:
     return (cfg.rsu_range_m - x) / max(v.speed_mps, 1e-9)
 
 
-def make_fleet(n: int, seed: int = 0) -> List[VehicleProfile]:
-    """Heterogeneous fleet: compute speeds and mobility vary per vehicle."""
+def make_fleet(n: int, seed: int = 0,
+               memory_budget_bytes: float | Tuple[float, float] | None = None
+               ) -> List[VehicleProfile]:
+    """Heterogeneous fleet: compute speeds and mobility vary per vehicle.
+    ``memory_budget_bytes``: None = unconstrained; a scalar applies to every
+    vehicle; a (lo, hi) pair samples per-vehicle budgets uniformly."""
     rng = np.random.default_rng(seed)
     fleet = []
     for i in range(n):
@@ -76,10 +94,47 @@ def make_fleet(n: int, seed: int = 0) -> List[VehicleProfile]:
             x0_m=float(rng.uniform(-350.0, -50.0)),
             speed_mps=float(rng.uniform(8.0, 30.0)),
         ))
+    if memory_budget_bytes is not None:
+        if isinstance(memory_budget_bytes, tuple):
+            lo, hi = memory_budget_bytes
+            budgets = rng.uniform(lo, hi, size=n)
+        else:
+            budgets = np.full(n, float(memory_budget_bytes))
+        for v, b in zip(fleet, budgets):
+            v.memory_budget_bytes = float(b)
     return fleet
+
+
+def fleet_arrays(fleet: Sequence[VehicleProfile]) -> dict:
+    """Column-major view of a fleet: one np array per attribute, so per-round
+    channel sampling and cut selection cost one vector op for 256+ vehicles
+    instead of a Python loop per vehicle."""
+    return {
+        "compute_flops": np.array([v.compute_flops for v in fleet]),
+        "tx_power_w": np.array([v.tx_power_w for v in fleet]),
+        "compute_power_w": np.array([v.compute_power_w for v in fleet]),
+        "x0_m": np.array([v.x0_m for v in fleet]),
+        "speed_mps": np.array([v.speed_mps for v in fleet]),
+        "memory_budget_bytes": np.array([v.memory_budget_bytes
+                                         for v in fleet]),
+    }
 
 
 def sample_round_rates(cfg: ChannelConfig, fleet: Sequence[VehicleProfile],
                        t: float, seed: int) -> np.ndarray:
+    """Per-vehicle Shannon rates at time t, vectorized over the fleet
+    (:func:`_shannon_rate` with one rng draw per vehicle, fleet-wide)."""
     rng = np.random.default_rng(seed)
-    return np.array([rate_bps(cfg, v, t, rng) for v in fleet])
+    fa = fleet if isinstance(fleet, dict) else fleet_arrays(fleet)
+    x = fa["x0_m"] + fa["speed_mps"] * t
+    d = np.sqrt(x * x + RSU_HEIGHT_M ** 2)
+    fading = (rng.normal(0.0, cfg.fading_std_db, size=d.shape)
+              if cfg.fading_std_db > 0 else 0.0)
+    return _shannon_rate(cfg, d, fa["tx_power_w"], fading)
+
+
+def in_range_mask(cfg: ChannelConfig, fleet: Sequence[VehicleProfile],
+                  t: float) -> np.ndarray:
+    """Vectorized :func:`in_range` over the fleet -> bool (n,)."""
+    fa = fleet if isinstance(fleet, dict) else fleet_arrays(fleet)
+    return np.abs(fa["x0_m"] + fa["speed_mps"] * t) <= cfg.rsu_range_m

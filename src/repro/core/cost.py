@@ -189,6 +189,80 @@ def sfl_client_round_cost(profile: SplitProfile, cut: int, n_batches: int,
     return RoundCost(up, down, t_client, t_server, t_comm, energy)
 
 
+@dataclasses.dataclass
+class RoundCostArrays:
+    """Vectorized :class:`RoundCost`: every field is an np array broadcast
+    over the fleet (and optionally a candidate-cut axis).  This makes round
+    accounting and cut selection one vector op for 256+ vehicles."""
+    comm_bytes_up: np.ndarray
+    comm_bytes_down: np.ndarray
+    t_client_compute: np.ndarray
+    t_server_compute: np.ndarray
+    t_comm: np.ndarray
+    energy_j: np.ndarray
+
+    @property
+    def comm_bytes(self) -> np.ndarray:
+        return self.comm_bytes_up + self.comm_bytes_down
+
+    @property
+    def latency(self) -> np.ndarray:
+        return self.t_client_compute + self.t_server_compute + self.t_comm
+
+
+def sfl_round_cost_arrays(profile: SplitProfile, cuts, n_batches, batch: int,
+                          rates_bps, client_flops, server_flops: float,
+                          local_epochs: int = 1, tx_power_w=0.5,
+                          compute_power_w=15.0,
+                          include_model_transfer: bool = True
+                          ) -> RoundCostArrays:
+    """Vectorized :func:`sfl_client_round_cost`.  ``cuts``, ``n_batches``,
+    ``rates_bps``, ``client_flops``, ``tx_power_w``, ``compute_power_w`` may
+    be scalars or arrays; everything broadcasts (e.g. rates (n,1) against
+    candidate cuts (k,) yields an (n,k) cost matrix for cut selection)."""
+    cuts = np.asarray(cuts, dtype=np.int64)
+    fwd_cum = np.concatenate([[0.0], np.cumsum(profile.unit_fwd_flops)])
+    bytes_cum = np.concatenate([[0], np.cumsum(profile.unit_param_bytes)])
+    smashed_per = np.asarray(profile.smashed_bytes_per_sample)
+
+    steps = np.asarray(n_batches) * local_epochs
+    smashed = smashed_per[cuts - 1] * batch
+    up = steps * smashed
+    down = steps * smashed
+    if include_model_transfer:
+        up = up + bytes_cum[cuts]
+        down = down + bytes_cum[cuts]
+    c_fwd = fwd_cum[cuts] * batch
+    s_fwd = (fwd_cum[-1] - fwd_cum[cuts] + profile.head_flops) * batch
+    t_client = steps * c_fwd * (1 + BWD_FWD_RATIO) / np.asarray(client_flops)
+    t_server = steps * s_fwd * (1 + BWD_FWD_RATIO) / server_flops
+    rate = np.asarray(rates_bps, dtype=np.float64)
+    t_comm = (up + down) / np.maximum(rate / 8, 1e-9)
+    energy = (np.asarray(compute_power_w) * t_client
+              + np.asarray(tx_power_w) * (up * 8 / np.maximum(rate, 1e-9)))
+    b = np.broadcast_arrays(up, down, t_client, t_server, t_comm, energy)
+    return RoundCostArrays(*[np.asarray(a, dtype=np.float64) for a in b])
+
+
+def fl_round_cost_arrays(profile: SplitProfile, n_batches, batch: int,
+                         rates_bps, client_flops, local_epochs: int = 1,
+                         tx_power_w=0.5, compute_power_w=15.0
+                         ) -> RoundCostArrays:
+    """Vectorized :func:`fl_client_round_cost` over the fleet."""
+    steps = np.asarray(n_batches) * local_epochs
+    full = float(profile.full_param_bytes())
+    fwd = (profile.client_fwd_flops(profile.n_units) + profile.head_flops) * batch
+    t_client = steps * fwd * (1 + BWD_FWD_RATIO) / np.asarray(client_flops)
+    rate = np.asarray(rates_bps, dtype=np.float64)
+    t_comm = 2 * full / np.maximum(rate / 8, 1e-9)
+    energy = (np.asarray(compute_power_w) * t_client
+              + np.asarray(tx_power_w) * (full * 8 / np.maximum(rate, 1e-9)))
+    b = np.broadcast_arrays(np.full_like(t_client, full),
+                            np.full_like(t_client, full),
+                            t_client, np.zeros_like(t_client), t_comm, energy)
+    return RoundCostArrays(*[np.asarray(a, dtype=np.float64) for a in b])
+
+
 def fl_client_round_cost(profile: SplitProfile, n_batches: int, batch: int,
                          rate_bps: float, client_flops: float,
                          local_epochs: int = 1, tx_power_w: float = 0.5,

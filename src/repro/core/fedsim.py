@@ -8,6 +8,19 @@ download, vehicle-side backward — via jax.vjp, NOT one composite jax.grad,
 so the implementation is structurally the paper's Fig. 3 workflow (their
 mathematical equality is asserted in tests/test_sfl_math.py).
 
+Scaling design (DESIGN.md §6): a federation round is compiled as ONE jitted
+program by the :class:`CohortEngine`.  Clients are bucketed by cut layer and
+stacked along a leading replica axis; local steps are driven by `lax.scan`
+over pre-staged batch-index tensors (batches are gathered from the on-device
+:class:`StackedClients` tensors inside the scan); losses are accumulated
+on-device and fetched once per round.  Within a bucket the vehicle-side
+compute runs either `jax.vmap`-vectorized across replicas (accelerators) or
+as a fused `lax.scan` (CPU, where XLA lowers per-replica-filter convolutions
+to slow grouped convs) — both schedules compute the same math.  The seed's
+4-client Python loop (one jit dispatch + one `float(loss)` host sync per
+client per batch) is gone; the 4-vehicle paper case study is just a small
+configuration of the same engine.
+
 The engine is generic over a :class:`UnitModel` (any stack of units with a
 head); ResNet18 (the paper's model) and the small transformer wrapper both
 implement it.
@@ -21,9 +34,12 @@ from typing import Any, Callable, Dict, List, Optional, Protocol, Sequence, Tupl
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax import lax
 
 from repro.core import adaptive, aggregation, channel, compression, cost
-from repro.data.pipeline import ClientDataset
+from repro.data.pipeline import (ClientDataset, StackedClients,
+                                 epoch_batch_indices, sample_batch_indices,
+                                 stack_clients)
 from repro import optim
 
 Params = Any
@@ -43,6 +59,9 @@ class UnitModel(Protocol):
 class ResNetModel:
     """The paper's ResNet18 over 32x32x3 inputs."""
     name = "resnet18"
+    # conv gradients inside lax.scan bodies hit XLA:CPU's slow generic path;
+    # the cohort engine unrolls replicas for this model on CPU (DESIGN.md §6)
+    scan_friendly = False
 
     def __init__(self, n_classes: int = 10):
         from repro.models import resnet as R
@@ -84,13 +103,21 @@ class SimConfig:
     rounds: int = 10
     seed: int = 0
     optimizer: str = "adam"
-    adaptive_strategy: str = "paper"   # paper | paper-literal | latency | energy
+    # paper | paper-literal | latency | energy | memory
+    adaptive_strategy: str = "paper"
     compress_smashed: bool = False
     server_flops: float = 2e12    # RSU (GPU-class)
     round_interval_s: float = 5.0
     # mobility: vehicles outside RSU coverage at round start skip the round
     # (the paper's §II-C training-interruption challenge)
     mobility_dropout: bool = False
+    # intra-bucket schedule: "vmap" vectorizes client replicas across the
+    # stacked axis (accelerators), "scan" fuses them sequentially (CPU);
+    # "auto" picks by platform.  Same math either way (DESIGN.md §6).
+    cohort_parallel: str = "auto"
+    # evaluate the global model every k rounds (0 = never; test_acc is NaN
+    # for skipped rounds).  Evaluation itself is jitted.
+    eval_every: int = 1
 
 
 @dataclasses.dataclass
@@ -113,7 +140,9 @@ def _make_opt(cfg: SimConfig):
 
 
 # --------------------------------------------------------------------------
-# jitted batch steps
+# jitted single-client batch step (kept as the oracle: tests/test_sfl_math.py
+# asserts it computes composite-loss gradients; the parity suite and the
+# benchmark replay the seed per-client loop with it against the cohort engine)
 # --------------------------------------------------------------------------
 
 def make_sfl_batch_step(model: UnitModel, cfg: SimConfig, cut: int):
@@ -154,45 +183,600 @@ def make_sfl_batch_step(model: UnitModel, cfg: SimConfig, cut: int):
     return step
 
 
-def make_full_batch_step(model: UnitModel, cfg: SimConfig):
-    """Full-model step (CL and FL local training)."""
-    opt = _make_opt(cfg)
-
-    @jax.jit
-    def step(units, head, opt_state, batch):
-        x, y = batch["images"], batch["labels"]
-
-        def loss_fn(tree):
-            feats = model.apply_units(tree["units"], x, 0)
-            loss, logits = model.head_loss(tree["head"], feats, y)
-            return loss, logits
-
-        tree = {"units": units, "head": head}
-        (loss, logits), g = jax.value_and_grad(loss_fn, has_aux=True)(tree)
-        upd, opt_state = opt.update(g, opt_state, tree)
-        tree = optim.apply_updates(tree, upd)
-        acc = jnp.mean((jnp.argmax(logits, -1) == y).astype(jnp.float32))
-        return tree["units"], tree["head"], opt_state, loss, acc
-
-    return step
-
-
 # --------------------------------------------------------------------------
-# evaluation
+# evaluation (jitted; one compiled program per slice shape, cached per model)
 # --------------------------------------------------------------------------
+
+def make_eval_fn(model: UnitModel):
+    # cached on the model instance (a WeakKeyDictionary would never evict:
+    # the jitted fn closes over `model`, pinning its own key; the attribute
+    # cycle model -> fn -> model is ordinary gc-collectable garbage)
+    fn = getattr(model, "_eval_fn", None)
+    if fn is None:
+        @jax.jit
+        def fn(units, head, x, y):
+            feats = model.apply_units(units, x, 0)
+            logits = model.head_predict(head, feats)
+            return jnp.sum(jnp.argmax(logits, -1) == y)
+        model._eval_fn = fn
+    return fn
+
 
 def evaluate(model: UnitModel, units, head, test: Dict[str, jnp.ndarray],
              batch: int = 256) -> float:
+    fn = make_eval_fn(model)
     n = test["labels"].shape[0]
-    correct = total = 0
+    correct = []
+    total = 0
     for i in range(0, n, batch):
         x = test["images"][i:i + batch]
         y = test["labels"][i:i + batch]
-        feats = model.apply_units(units, x, 0)
-        logits = model.head_predict(head, feats)
-        correct += int(jnp.sum(jnp.argmax(logits, -1) == y))
-        total += int(y.size)
-    return correct / max(total, 1)
+        correct.append(fn(units, head, x, y))
+        total += int(np.prod(y.shape))
+    return int(sum(correct)) / max(total, 1)
+
+
+# --------------------------------------------------------------------------
+# cohort engine internals
+# --------------------------------------------------------------------------
+
+def _pow2(n: int) -> int:
+    return 1 << max(n - 1, 0).bit_length()
+
+
+def _select(mask, new, old):
+    """tree_map(where): pick `new` where mask else `old`.  mask broadcasts
+    from the left (a (n,) mask over stacked (n, ...) leaves; a scalar mask
+    over whole trees)."""
+    mask = jnp.asarray(mask)
+
+    def f(a, b):
+        m = mask.reshape(mask.shape + (1,) * (a.ndim - mask.ndim))
+        return jnp.where(m, a, b)
+
+    return jax.tree.map(f, new, old)
+
+
+def _gather_batch(data, idx):
+    """data (n, L, ...), idx (n, B) -> (n, B, ...): per-replica batch gather
+    inside the scanned round (no host staging per batch)."""
+    return jax.vmap(lambda d, i: d[i])(data, idx)
+
+
+def _suffix_state(state, cut):
+    """Slice the RSU optimizer state (whose leaves mirror the full
+    {"units": [...], "head": ...} tree) down to the units after `cut`.
+    This is static pytree surgery at trace time — the stacked-state
+    replacement for the seed's per-batch Python slice_opt/merge_opt."""
+    out = {}
+    for k, v in state.items():
+        if isinstance(v, dict) and "units" in v:
+            out[k] = {"units": list(v["units"][cut:]), "head": v["head"]}
+        else:
+            out[k] = v
+    return out
+
+
+def _merge_state(full, suffix, cut):
+    out = {}
+    for k, v in full.items():
+        if isinstance(v, dict) and "units" in v:
+            out[k] = {"units": list(v["units"][:cut]) + list(suffix[k]["units"]),
+                      "head": suffix[k]["head"]}
+        else:
+            out[k] = suffix[k]
+    return out
+
+
+@dataclasses.dataclass
+class RoundPlan:
+    """Host-side staging of one federation round.  Static fields key the
+    compile cache; array fields are the per-round inputs of the compiled
+    program (so rounds with the same structure never retrace)."""
+    cuts_sig: Tuple[Tuple[int, int], ...]      # ((cut, n_padded), ...) static
+    steps: int                                 # static
+    bucket_rows: List[np.ndarray]              # (n_pad,) client row per slot
+    bucket_idx: List[np.ndarray]               # (steps, n_pad, B)
+    bucket_mask: List[np.ndarray]              # (steps, n_pad) bool
+    bucket_w: List[np.ndarray]                 # (n_pad,) aggregation weights
+    server_unit_w: np.ndarray                  # (n_units,) RSU copy weights
+
+
+class CohortEngine:
+    """Compiles and runs whole federation rounds with one (or a few) jitted
+    dispatches instead of a Python loop per client per batch.
+
+    One instance per simulation: it owns the stacked client data (device
+    resident, staged once) and a compile cache keyed by round structure
+    (bucket cuts/sizes, local steps, batch).  See DESIGN.md §6 for the
+    equivalence argument with the seed per-client loop.
+
+    Intra-bucket schedules (same math, different compilation):
+      * "vmap"   — vehicle-side compute vectorized across the stacked replica
+                   axis, local steps scanned.  The accelerator schedule.
+      * "scan"   — replicas AND steps fused into nested lax.scans: one
+                   dispatch per round.  The CPU schedule for matmul-dominated
+                   models (transformer units, MLPs).
+      * "unroll" — replicas unrolled inside a per-step program, Python loop
+                   over steps.  XLA:CPU lowers convolution *gradients* inside
+                   while-loop bodies (and per-replica-filter convs, i.e.
+                   vmapped client backward passes) to a slow generic path —
+                   ~20-45x slower than straight-line code — so conv models on
+                   CPU keep convs out of while bodies entirely.  Still one
+                   dispatch per step (not per client-batch) and zero host
+                   syncs inside the round.
+
+    "auto" picks vmap on accelerators; on CPU, scan when the model declares
+    ``scan_friendly`` else unroll."""
+
+    def __init__(self, model: UnitModel, cfg: SimConfig,
+                 clients: Sequence[ClientDataset]):
+        self.model = model
+        self.cfg = cfg
+        self.opt = _make_opt(cfg)
+        self.stacked: StackedClients = stack_clients(clients)
+        self._programs: Dict[Any, Callable] = {}
+        mode = cfg.cohort_parallel
+        if mode == "auto":
+            if jax.default_backend() == "cpu":
+                mode = "scan" if getattr(model, "scan_friendly", False) \
+                    else "unroll"
+            else:
+                mode = "vmap"
+        assert mode in ("vmap", "scan", "unroll"), mode
+        self.mode = mode
+
+    # ---- the shared SFL message-flow math (one client batch) ---------
+    def _sfl_client_batch(self, cut, sv, so, cu_i, co_i, x_i, y_i):
+        """Explicit message flow for one client batch against the shared
+        RSU state: client fwd -> smashed -> server fwd/bwd -> cut-gradient
+        -> client bwd.  Returns updated (sv, so, cu, co, loss)."""
+        model, opt, cfg = self.model, self.opt, self.cfg
+
+        def client_fwd(c):
+            return model.apply_units(c, x_i, 0)
+
+        smashed, cvjp = jax.vjp(client_fwd, cu_i)
+        sm_in = compression.fake_quant(smashed) if cfg.compress_smashed else smashed
+
+        def server_loss(svt, sm):
+            feats = model.apply_units(svt["units"], sm, cut)
+            loss, logits = model.head_loss(svt["head"], feats, y_i)
+            return loss, logits
+
+        (loss, _), grads = jax.value_and_grad(
+            server_loss, argnums=(0, 1), has_aux=True)(sv, sm_in)
+        g_sv, g_sm = grads
+        if cfg.compress_smashed:
+            g_sm = compression.fake_quant(g_sm)
+        (g_cu,) = cvjp(g_sm)
+        upd_c, co2 = opt.update(g_cu, co_i, cu_i)
+        cu2 = optim.apply_updates(cu_i, upd_c)
+        upd_s, so2 = opt.update(g_sv, so, sv)
+        sv2 = optim.apply_updates(sv, upd_s)
+        return sv2, so2, cu2, co2, loss
+
+    def _full_batch(self, tree, ost, x_i, y_i):
+        """One full-model (CL / FL local) batch step."""
+        model, opt = self.model, self.opt
+
+        def loss_fn(t):
+            feats = model.apply_units(t["units"], x_i, 0)
+            loss, logits = model.head_loss(t["head"], feats, y_i)
+            return loss, logits
+
+        (loss, _), g = jax.value_and_grad(loss_fn, has_aux=True)(tree)
+        upd, ost2 = opt.update(g, ost, tree)
+        return optim.apply_updates(tree, upd), ost2, loss
+
+    # ---- intra-bucket schedules --------------------------------------
+    def _bucket_scan(self, cut, sv, so, cu, co, x, y, msk):
+        """Fused sequential schedule: one lax.scan over the bucket's client
+        axis; the body is the full message flow.  Exactly the seed loop's
+        update order for this bucket."""
+        def body(carry, inp):
+            sv, so = carry
+            cu_i, co_i, x_i, y_i, act = inp
+            sv2, so2, cu2, co2, loss = self._sfl_client_batch(
+                cut, sv, so, cu_i, co_i, x_i, y_i)
+            sv = _select(act, sv2, sv)
+            so = _select(act, so2, so)
+            cu2 = _select(act, cu2, cu_i)
+            co2 = _select(act, co2, co_i)
+            return (sv, so), (cu2, co2, jnp.where(act, loss, 0.0))
+
+        (sv, so), (cu, co, losses) = lax.scan(body, (sv, so),
+                                              (cu, co, x, y, msk))
+        return cu, co, sv, so, losses
+
+    def _bucket_unroll(self, cut, sv, so, cu, co, x, y, msk):
+        """Unrolled schedule: same client order and math as _bucket_scan,
+        emitted as straight-line code (fast conv grads on XLA:CPU)."""
+        n_pad = msk.shape[0]
+        cus, cos, losses = [], [], []
+        for i in range(n_pad):
+            cu_i = jax.tree.map(lambda a: a[i], cu)
+            co_i = jax.tree.map(lambda a: a[i], co)
+            sv2, so2, cu2, co2, loss = self._sfl_client_batch(
+                cut, sv, so, cu_i, co_i, x[i], y[i])
+            act = msk[i]
+            sv = _select(act, sv2, sv)
+            so = _select(act, so2, so)
+            cus.append(_select(act, cu2, cu_i))
+            cos.append(_select(act, co2, co_i))
+            losses.append(jnp.where(act, loss, 0.0))
+        cu = jax.tree.map(lambda *a: jnp.stack(a), *cus)
+        co = jax.tree.map(lambda *a: jnp.stack(a), *cos)
+        return cu, co, sv, so, jnp.stack(losses)
+
+    def _bucket_vmap(self, cut, sv, so, cu, co, x, y, msk):
+        """Vectorized schedule: vehicle-side fwd/bwd vmapped across the
+        stacked replica axis; the shared RSU state still consumes the
+        smashed batches sequentially (paper §III-B semantics), via scan."""
+        model, opt, cfg = self.model, self.opt, self.cfg
+
+        def client_fwd(cu_all):
+            return jax.vmap(lambda c, xb: model.apply_units(c, xb, 0))(cu_all, x)
+
+        smashed, cvjp = jax.vjp(client_fwd, cu)
+        sm_in = compression.fake_quant(smashed) if cfg.compress_smashed else smashed
+
+        def body(carry, inp):
+            sv, so = carry
+            sm, y_i, act = inp
+
+            def server_loss(svt, s):
+                feats = model.apply_units(svt["units"], s, cut)
+                loss, logits = model.head_loss(svt["head"], feats, y_i)
+                return loss, logits
+
+            (loss, _), grads = jax.value_and_grad(
+                server_loss, argnums=(0, 1), has_aux=True)(sv, sm)
+            g_sv, g_sm = grads
+            if cfg.compress_smashed:
+                g_sm = compression.fake_quant(g_sm)
+            upd_s, so2 = opt.update(g_sv, so, sv)
+            sv2 = optim.apply_updates(sv, upd_s)
+            sv = _select(act, sv2, sv)
+            so = _select(act, so2, so)
+            g_sm = jnp.where(act, g_sm, jnp.zeros_like(g_sm))
+            return (sv, so), (g_sm, jnp.where(act, loss, 0.0))
+
+        (sv, so), (g_sm, losses) = lax.scan(body, (sv, so), (sm_in, y, msk))
+        (g_cu,) = cvjp(g_sm)
+        upd, co2 = jax.vmap(self.opt.update)(g_cu, co, cu)
+        cu2 = optim.apply_updates(cu, upd)
+        cu = _select(msk, cu2, cu)
+        co = _select(msk, co2, co)
+        return cu, co, sv, so, losses
+
+    def _bucket_fn(self):
+        return {"scan": self._bucket_scan, "vmap": self._bucket_vmap,
+                "unroll": self._bucket_unroll}[self.mode]
+
+    # ---- shared round pieces -----------------------------------------
+    def _split_step_body(self, cuts_sig, carry, xs, bdata):
+        """One local step across every bucket: client fwd/bwd on all
+        (active) replicas, shared RSU state threaded through bucket after
+        bucket in ascending-cut order."""
+        bucket_fn = self._bucket_fn()
+        server, s_opt, bstates = carry
+        loss_sum = jnp.zeros((), jnp.float32)
+        cnt = jnp.zeros((), jnp.float32)
+        new_bstates = []
+        for bi, (cut, n_pad) in enumerate(cuts_sig):
+            cu, co = bstates[bi]
+            idx, msk = xs[bi]
+            x = _gather_batch(bdata[bi][0], idx)
+            y = _gather_batch(bdata[bi][1], idx)
+            sv = {"units": list(server["units"][cut:]),
+                  "head": server["head"]}
+            so = _suffix_state(s_opt, cut)
+            cu, co, sv, so, losses = bucket_fn(cut, sv, so, cu, co, x, y, msk)
+            server = {"units": list(server["units"][:cut])
+                      + list(sv["units"]), "head": sv["head"]}
+            s_opt = _merge_state(s_opt, so, cut)
+            new_bstates.append((cu, co))
+            loss_sum = loss_sum + jnp.sum(losses)
+            cnt = cnt + jnp.sum(msk.astype(jnp.float32))
+        return (server, s_opt, new_bstates), loss_sum, cnt
+
+    def _split_agg(self, cuts_sig, server, bstates, ws, server_unit_w):
+        """Unit-wise FedAvg over the stacked axis: vehicle replicas of every
+        unit before their cut + the RSU copy of units it served, reduced
+        on-device (aggregation.stacked_weighted_sum)."""
+        n_units = self.model.n_units
+        merged = []
+        for u in range(n_units):
+            swu = server_unit_w[u]
+            num = jax.tree.map(
+                lambda a: swu * a.astype(jnp.float32), server["units"][u])
+            den = swu
+            for bi, (cut, n_pad) in enumerate(cuts_sig):
+                if cut > u:
+                    part = aggregation.stacked_weighted_sum(
+                        bstates[bi][0][u], ws[bi])
+                    num = jax.tree.map(jnp.add, num, part)
+                    den = den + jnp.sum(ws[bi])
+            merged.append(jax.tree.map(
+                lambda nm, ref: (nm / den).astype(ref.dtype),
+                num, server["units"][u]))
+        return merged, server["head"]
+
+    def _split_init(self, units, head, rows_list, cuts_sig, data_images,
+                    data_labels):
+        """Fresh per-round state: shared RSU tree + opt, broadcast client
+        replicas + stacked opt states, per-bucket data rows."""
+        opt = self.opt
+        server = {"units": list(units), "head": head}
+        s_opt = opt.init(server)
+        bstates, bdata = [], []
+        for (cut, n_pad), r in zip(cuts_sig, rows_list):
+            cu = jax.tree.map(
+                lambda a: jnp.broadcast_to(a, (n_pad,) + a.shape),
+                list(units[:cut]))
+            co = jax.vmap(opt.init)(cu)
+            bstates.append((cu, co))
+            bdata.append((data_images[r], data_labels[r]))
+        return server, s_opt, bstates, bdata
+
+    # ---- compiled programs -------------------------------------------
+    def _split_round_program(self, cuts_sig, steps: int, batch: int):
+        """scan/vmap modes: the whole round (init, every local step, the
+        aggregation) is ONE jitted program; losses come back as two scalars."""
+        key = ("split", cuts_sig, steps, batch, self.mode)
+        if key in self._programs:
+            return self._programs[key]
+
+        @jax.jit
+        def round_fn(units, head, data_images, data_labels, rows, idxs,
+                     masks, ws, server_unit_w):
+            server, s_opt, bstates, bdata = self._split_init(
+                units, head, rows, cuts_sig, data_images, data_labels)
+
+            def body(carry, xs):
+                carry, ls, cs = self._split_step_body(cuts_sig, carry, xs,
+                                                      bdata)
+                return carry, (ls, cs)
+
+            (server, s_opt, bstates), (ls, cs) = lax.scan(
+                body, (server, s_opt, bstates), tuple(zip(idxs, masks)))
+            merged, head2 = self._split_agg(cuts_sig, server, bstates, ws,
+                                            server_unit_w)
+            return merged, head2, jnp.sum(ls), jnp.sum(cs)
+
+        self._programs[key] = round_fn
+        return round_fn
+
+    def _split_step_program(self, cuts_sig, batch: int):
+        """unroll mode: one jitted program per local step (all buckets, all
+        replicas, straight-line).  The carry is donated: step s+1 reuses
+        step s's buffers."""
+        key = ("splitstep", cuts_sig, batch, self.mode)
+        if key in self._programs:
+            return self._programs[key]
+
+        @functools.partial(jax.jit, donate_argnums=(0,))
+        def step_fn(carry, xs, bdata):
+            return self._split_step_body(cuts_sig, carry, xs, bdata)
+
+        self._programs[key] = step_fn
+        return step_fn
+
+    def _split_agg_program(self, cuts_sig):
+        key = ("splitagg", cuts_sig)
+        if key in self._programs:
+            return self._programs[key]
+
+        @jax.jit
+        def agg_fn(server, bstates, ws, server_unit_w):
+            return self._split_agg(cuts_sig, server, bstates, ws,
+                                   server_unit_w)
+
+        self._programs[key] = agg_fn
+        return agg_fn
+
+    def _fl_step_body(self, n_pad, carry, idx_s, msk, bimgs, blabs):
+        st, ost = carry
+        x = _gather_batch(bimgs, idx_s)
+        y = _gather_batch(blabs, idx_s)
+        if self.mode == "vmap":
+            st2, ost2, losses = jax.vmap(self._full_batch)(st, ost, x, y)
+        elif self.mode == "scan":
+            def body(_, inp):
+                t_i, o_i, x_i, y_i = inp
+                t2, o2, loss = self._full_batch(t_i, o_i, x_i, y_i)
+                return (), (t2, o2, loss)
+            _, (st2, ost2, losses) = lax.scan(body, (), (st, ost, x, y))
+        else:
+            ts, os_, ls = [], [], []
+            for i in range(n_pad):
+                t_i = jax.tree.map(lambda a: a[i], st)
+                o_i = jax.tree.map(lambda a: a[i], ost)
+                t2, o2, loss = self._full_batch(t_i, o_i, x[i], y[i])
+                ts.append(t2)
+                os_.append(o2)
+                ls.append(loss)
+            st2 = jax.tree.map(lambda *a: jnp.stack(a), *ts)
+            ost2 = jax.tree.map(lambda *a: jnp.stack(a), *os_)
+            losses = jnp.stack(ls)
+        st = _select(msk, st2, st)
+        ost = _select(msk, ost2, ost)
+        return (st, ost), (jnp.sum(jnp.where(msk, losses, 0.0)),
+                           jnp.sum(msk.astype(jnp.float32)))
+
+    def _fl_round_program(self, n_pad: int, steps: int, batch: int):
+        key = ("fl", n_pad, steps, batch, self.mode)
+        if key in self._programs:
+            return self._programs[key]
+        opt = self.opt
+
+        @jax.jit
+        def round_fn(units, head, data_images, data_labels, rows, idx,
+                     mask, w):
+            tree = {"units": list(units), "head": head}
+            st = jax.tree.map(
+                lambda a: jnp.broadcast_to(a, (n_pad,) + a.shape), tree)
+            ost = jax.vmap(opt.init)(st)
+            bimgs, blabs = data_images[rows], data_labels[rows]
+
+            def body(carry, xs):
+                idx_s, msk = xs
+                carry, out = self._fl_step_body(n_pad, carry, idx_s, msk,
+                                                bimgs, blabs)
+                return carry, out
+
+            (st, ost), (ls, cs) = lax.scan(body, (st, ost), (idx, mask))
+            avg = aggregation.stacked_fedavg(st, w)
+            return avg["units"], avg["head"], jnp.sum(ls), jnp.sum(cs)
+
+        self._programs[key] = round_fn
+        return round_fn
+
+    def _fl_step_program(self, n_pad: int, batch: int):
+        key = ("flstep", n_pad, batch, self.mode)
+        if key in self._programs:
+            return self._programs[key]
+
+        @functools.partial(jax.jit, donate_argnums=(0,))
+        def step_fn(carry, idx_s, msk, bimgs, blabs):
+            return self._fl_step_body(n_pad, carry, idx_s, msk, bimgs, blabs)
+
+        self._programs[key] = step_fn
+        return step_fn
+
+    def _chain_step(self, kind, cut, carry, x_i, y_i):
+        if kind == "sl":
+            cu, sv, co, so = carry
+            sv, so, cu, co, loss = self._sfl_client_batch(
+                cut, sv, so, cu, co, x_i, y_i)
+            return (cu, sv, co, so), loss
+        tree, ost = carry
+        tree, ost, loss = self._full_batch(tree, ost, x_i, y_i)
+        return (tree, ost), loss
+
+    def _chain_round_program(self, kind: str, cut: int, total_steps: int,
+                             batch: int):
+        """SL (one traveling vehicle-side model) and CL (centralized) are
+        inherently sequential chains; scan/vmap modes fuse the whole chain
+        into one scan."""
+        key = (kind, cut, total_steps, batch)
+        if key in self._programs:
+            return self._programs[key]
+
+        @jax.jit
+        def round_fn(carry, data_images, data_labels, rows, idx):
+            imgs = data_images[rows[:, None], idx]
+            labs = data_labels[rows[:, None], idx]
+
+            def body(carry, inp):
+                return self._chain_step(kind, cut, carry, *inp)
+
+            carry, losses = lax.scan(body, carry, (imgs, labs))
+            return carry, jnp.sum(losses)
+
+        self._programs[key] = round_fn
+        return round_fn
+
+    def _chain_step_program(self, kind: str, cut: int, batch: int):
+        key = (kind + "step", cut, batch)
+        if key in self._programs:
+            return self._programs[key]
+
+        @functools.partial(jax.jit, donate_argnums=(0,))
+        def step_fn(carry, x_i, y_i):
+            return self._chain_step(kind, cut, carry, x_i, y_i)
+
+        self._programs[key] = step_fn
+        return step_fn
+
+    # ---- public entry points -----------------------------------------
+    def split_round(self, units, head, plan: RoundPlan, batch: int):
+        rows = [jnp.asarray(r) for r in plan.bucket_rows]
+        ws = tuple(jnp.asarray(w, jnp.float32) for w in plan.bucket_w)
+        suw = jnp.asarray(plan.server_unit_w, jnp.float32)
+        if self.mode != "unroll":
+            fn = self._split_round_program(plan.cuts_sig, plan.steps, batch)
+            idxs = tuple(jnp.asarray(i) for i in plan.bucket_idx)
+            masks = tuple(jnp.asarray(m) for m in plan.bucket_mask)
+            units, head, ls, cnt = fn(units, head, self.stacked.images,
+                                      self.stacked.labels, rows, idxs,
+                                      masks, ws, suw)
+            return list(units), head, ls, cnt
+        step_fn = self._split_step_program(plan.cuts_sig, batch)
+        agg_fn = self._split_agg_program(plan.cuts_sig)
+        server, s_opt, bstates, bdata = self._split_init(
+            units, head, rows, plan.cuts_sig, self.stacked.images,
+            self.stacked.labels)
+        carry = (server, s_opt, bstates)
+        ls = cnt = None
+        for s in range(plan.steps):
+            xs = tuple((jnp.asarray(i[s]), jnp.asarray(m[s]))
+                       for i, m in zip(plan.bucket_idx, plan.bucket_mask))
+            carry, ls_s, cs_s = step_fn(carry, xs, bdata)
+            ls = ls_s if ls is None else ls + ls_s
+            cnt = cs_s if cnt is None else cnt + cs_s
+        server, s_opt, bstates = carry
+        units, head = agg_fn(server, bstates, ws, suw)
+        return list(units), head, ls, cnt
+
+    def fl_round(self, units, head, rows, idx, mask, w, batch: int):
+        n_pad = len(rows)
+        rows = jnp.asarray(rows)
+        w = jnp.asarray(w, jnp.float32)
+        if self.mode != "unroll":
+            fn = self._fl_round_program(n_pad, idx.shape[0], batch)
+            units, head, ls, cnt = fn(units, head, self.stacked.images,
+                                      self.stacked.labels, rows,
+                                      jnp.asarray(idx), jnp.asarray(mask), w)
+            return list(units), head, ls, cnt
+        step_fn = self._fl_step_program(n_pad, batch)
+        tree = {"units": list(units), "head": head}
+        st = jax.tree.map(
+            lambda a: jnp.broadcast_to(a, (n_pad,) + a.shape), tree)
+        ost = jax.vmap(self.opt.init)(st)
+        bimgs = self.stacked.images[rows]
+        blabs = self.stacked.labels[rows]
+        carry, ls, cnt = (st, ost), None, None
+        for s in range(idx.shape[0]):
+            carry, (ls_s, cs_s) = step_fn(carry, jnp.asarray(idx[s]),
+                                          jnp.asarray(mask[s]), bimgs, blabs)
+            ls = ls_s if ls is None else ls + ls_s
+            cnt = cs_s if cnt is None else cnt + cs_s
+        avg = aggregation.stacked_fedavg(carry[0], w)
+        return list(avg["units"]), avg["head"], ls, cnt
+
+    def _chain_round(self, kind, cut, carry, rows, idx, batch):
+        rows = jnp.asarray(rows)
+        idx = jnp.asarray(idx)
+        if self.mode == "scan" or self.mode == "vmap":
+            fn = self._chain_round_program(kind, cut, idx.shape[0], batch)
+            carry, ls = fn(carry, self.stacked.images, self.stacked.labels,
+                           rows, idx)
+            return carry, ls
+        step_fn = self._chain_step_program(kind, cut, batch)
+        imgs = self.stacked.images[rows[:, None], idx]
+        labs = self.stacked.labels[rows[:, None], idx]
+        ls = None
+        for s in range(idx.shape[0]):
+            carry, loss = step_fn(carry, imgs[s], labs[s])
+            ls = loss if ls is None else ls + loss
+        return carry, ls
+
+    def sl_round(self, units, head, cut, rows, idx, batch: int):
+        carry = (list(units[:cut]),
+                 {"units": list(units[cut:]), "head": head},
+                 self.opt.init(list(units[:cut])),
+                 self.opt.init({"units": list(units[cut:]), "head": head}))
+        (cu, sv, co, so), ls = self._chain_round("sl", cut, carry, rows,
+                                                 idx, batch)
+        return list(cu) + list(sv["units"]), sv["head"], ls
+
+    def cl_round(self, units, head, cl_opt, rows, idx, batch: int):
+        carry = ({"units": list(units), "head": head}, cl_opt)
+        (tree, cl_opt), ls = self._chain_round("cl", 0, carry, rows, idx,
+                                               batch)
+        return list(tree["units"]), tree["head"], cl_opt, ls
 
 
 # --------------------------------------------------------------------------
@@ -209,20 +793,21 @@ class FederationSim:
         self.test = test
         self.cfg = cfg
         self.fleet = fleet or channel.make_fleet(len(clients), cfg.seed)
+        self.fleet_arr = channel.fleet_arrays(self.fleet)
         self.ch = ch_cfg or channel.ChannelConfig()
         self.profile = model.profile()
-        key = jax.random.PRNGKey(cfg.seed)
-        self.units, self.head = model.init(key)
-        self._sfl_steps: Dict[int, Callable] = {}
-        self._full_step = make_full_batch_step(model, cfg)
+        self.engine = CohortEngine(model, cfg, self.clients)
+        self.reset()
+
+    def reset(self):
+        """Re-initialise parameters and history (compiled round programs and
+        staged data are kept — benchmarks time warm re-runs with this)."""
+        key = jax.random.PRNGKey(self.cfg.seed)
+        self.units, self.head = self.model.init(key)
+        self._cl_opt = None
         self.history: List[RoundMetrics] = []
 
     # ---- helpers -----------------------------------------------------
-    def _sfl_step(self, cut: int):
-        if cut not in self._sfl_steps:
-            self._sfl_steps[cut] = make_sfl_batch_step(self.model, self.cfg, cut)
-        return self._sfl_steps[cut]
-
     def _local_steps(self, client: ClientDataset) -> int:
         if self.cfg.local_steps is not None:
             return self.cfg.local_steps
@@ -231,7 +816,7 @@ class FederationSim:
 
     def _round_rates(self, rnd: int) -> np.ndarray:
         t = rnd * self.cfg.round_interval_s
-        return channel.sample_round_rates(self.ch, self.fleet, t,
+        return channel.sample_round_rates(self.ch, self.fleet_arr, t,
                                           self.cfg.seed * 1000 + rnd)
 
     def _participants(self, rnd: int) -> List[int]:
@@ -240,9 +825,8 @@ class FederationSim:
         if not self.cfg.mobility_dropout:
             return list(range(len(self.clients)))
         t = rnd * self.cfg.round_interval_s
-        inr = [ci for ci, v in enumerate(self.fleet)
-               if channel.in_range(self.ch, v, t)]
-        return inr or [0]
+        inr = np.nonzero(channel.in_range_mask(self.ch, self.fleet_arr, t))[0]
+        return list(map(int, inr)) or [0]
 
     def _pick_cuts(self, rates: np.ndarray) -> List[int]:
         c = self.cfg
@@ -253,7 +837,11 @@ class FederationSim:
             return adaptive.paper_threshold(rates)
         if strat == "paper-literal":
             return adaptive.paper_threshold(rates, literal_eq3=True)
-        flops = [v.compute_flops for v in self.fleet]
+        if strat == "memory":
+            return adaptive.memory_constrained(
+                self.profile, self.fleet_arr["memory_budget_bytes"],
+                adaptive.paper_threshold, rates)
+        flops = self.fleet_arr["compute_flops"]
         nb = max(len(self.clients[0]) // c.batch_size, 1)
         if strat == "latency":
             return adaptive.latency_optimal(self.profile, rates, flops,
@@ -271,90 +859,93 @@ class FederationSim:
             self.history.append(metrics)
         return self.history
 
-    def _metrics(self, rnd, losses, cuts, comm, time_s, energy) -> RoundMetrics:
-        acc = evaluate(self.model, self.units, self.head, self.test)
-        return RoundMetrics(rnd, float(np.mean(losses)), acc, comm, time_s,
-                            energy, cuts)
+    def _metrics(self, rnd, loss, cuts, comm, time_s, energy) -> RoundMetrics:
+        ev = self.cfg.eval_every
+        if ev and rnd % ev == 0:
+            acc = evaluate(self.model, self.units, self.head, self.test)
+        else:
+            acc = float("nan")
+        return RoundMetrics(rnd, float(loss), acc, comm, time_s, energy, cuts)
 
     def _round_cl(self, rnd: int) -> RoundMetrics:
         # centralized: pool every client's raw data at the RSU (the upper
         # bound the paper argues against — raw-data upload included in comm)
-        opt = _make_opt(self.cfg)
-        if not hasattr(self, "_cl_opt"):
-            self._cl_opt = opt.init({"units": self.units, "head": self.head})
-        losses = []
-        comm = 0.0
-        for c in self.clients:
-            for batch in c.batches(self.cfg.batch_size, self.cfg.seed + rnd):
-                self.units, self.head, self._cl_opt, loss, _ = self._full_step(
-                    self.units, self.head, self._cl_opt, batch)
-                losses.append(float(loss))
-            if rnd == 0:
-                comm += c.images.nbytes
-        return self._metrics(rnd, losses, [], comm, 0.0, 0.0)
+        cfgc = self.cfg
+        if self._cl_opt is None:
+            self._cl_opt = self.engine.opt.init(
+                {"units": self.units, "head": self.head})
+        rows_l, idx_l = [], []
+        for ci, c in enumerate(self.clients):
+            eidx = epoch_batch_indices(len(c), cfgc.batch_size,
+                                       cfgc.seed + rnd)
+            rows_l += [ci] * len(eidx)
+            idx_l.append(eidx)
+        rows = np.asarray(rows_l, np.int32)
+        idx = np.concatenate(idx_l).astype(np.int32)
+        self.units, self.head, self._cl_opt, ls = self.engine.cl_round(
+            self.units, self.head, self._cl_opt, rows, idx, cfgc.batch_size)
+        comm = sum(c.images.nbytes for c in self.clients) if rnd == 0 else 0.0
+        return self._metrics(rnd, float(ls) / max(len(rows), 1), [], comm,
+                             0.0, 0.0)
 
     def _round_fl(self, rnd: int) -> RoundMetrics:
         cfgc = self.cfg
-        opt = _make_opt(cfgc)
         rates = self._round_rates(rnd)
-        participants = set(self._participants(rnd))
-        client_trees, weights, losses = [], [], []
-        comm = energy = 0.0
-        latencies = []
-        for ci, c in enumerate(self.clients):
-            if ci not in participants:
-                continue
-            units, head = jax.tree.map(lambda a: a, (self.units, self.head))
-            ostate = opt.init({"units": units, "head": head})
-            steps = self._local_steps(c)
-            for s in range(steps):
-                batch = c.sample_batch(cfgc.batch_size, cfgc.seed + rnd * 997 + s)
-                units, head, ostate, loss, _ = self._full_step(units, head,
-                                                               ostate, batch)
-                losses.append(float(loss))
-            client_trees.append({"units": units, "head": head})
-            weights.append(len(c))
-            rc = cost.fl_client_round_cost(
-                self.profile, max(len(c) // cfgc.batch_size, 1),
-                cfgc.batch_size, rates[ci], self.fleet[ci].compute_flops,
-                cfgc.local_epochs, self.fleet[ci].tx_power_w,
-                self.fleet[ci].compute_power_w)
-            comm += rc.comm_bytes
-            energy += rc.energy_j
-            latencies.append(rc.latency)
-        avg = aggregation.fedavg(client_trees, weights)
-        self.units, self.head = avg["units"], avg["head"]
-        return self._metrics(rnd, losses, [], comm, max(latencies), energy)
+        part = self._participants(rnd)
+        n_pad = _pow2(len(part))
+        steps_i = [self._local_steps(self.clients[ci]) for ci in part]
+        steps = max(steps_i)
+        rows = np.zeros(n_pad, np.int32)
+        rows[:len(part)] = part
+        idx = np.zeros((steps, n_pad, cfgc.batch_size), np.int32)
+        mask = np.zeros((steps, n_pad), bool)
+        w = np.zeros(n_pad, np.float64)
+        for j, ci in enumerate(part):
+            ln = len(self.clients[ci])
+            w[j] = ln
+            for s in range(steps_i[j]):
+                idx[s, j] = sample_batch_indices(ln, cfgc.batch_size,
+                                                 cfgc.seed + rnd * 997 + s)
+                mask[s, j] = True
+        self.units, self.head, ls, cnt = self.engine.fl_round(
+            self.units, self.head, rows, idx, mask, w, cfgc.batch_size)
+
+        nb = np.array([max(len(self.clients[ci]) // cfgc.batch_size, 1)
+                       for ci in part])
+        rc = cost.fl_round_cost_arrays(
+            self.profile, nb, cfgc.batch_size, rates[part],
+            self.fleet_arr["compute_flops"][part], cfgc.local_epochs,
+            self.fleet_arr["tx_power_w"][part],
+            self.fleet_arr["compute_power_w"][part])
+        return self._metrics(rnd, float(ls) / max(float(cnt), 1.0), [],
+                             float(rc.comm_bytes.sum()),
+                             float(rc.latency.max()),
+                             float(rc.energy_j.sum()))
 
     def _round_sl(self, rnd: int) -> RoundMetrics:
         """Vanilla sequential SL: the vehicle-side model travels from vehicle
         to vehicle; the RSU-side model trains continuously."""
         cfgc = self.cfg
         cut = cfgc.cut
-        step = self._sfl_step(cut)
-        opt = _make_opt(cfgc)
-        client_units = self.units[:cut]
-        server_units = self.units[cut:]
-        head = self.head
-        c_opt = opt.init(client_units)
-        s_opt = opt.init({"units": server_units, "head": head})
-        losses = []
         rates = self._round_rates(rnd)
+        rows_l, idx_l = [], []
         for ci, c in enumerate(self.clients):
             for s in range(self._local_steps(c)):
-                batch = c.sample_batch(cfgc.batch_size, cfgc.seed + rnd * 991 + s)
-                client_units, server_units, head, c_opt, s_opt, loss, _ = step(
-                    client_units, server_units, head, c_opt, s_opt, batch)
-                losses.append(float(loss))
-        self.units = list(client_units) + list(server_units)
-        self.head = head
+                rows_l.append(ci)
+                idx_l.append(sample_batch_indices(
+                    len(c), cfgc.batch_size, cfgc.seed + rnd * 991 + s))
+        rows = np.asarray(rows_l, np.int32)
+        idx = np.stack(idx_l).astype(np.int32)
+        self.units, self.head, ls = self.engine.sl_round(
+            self.units, self.head, cut, rows, idx, cfgc.batch_size)
         rc = cost.sl_round_cost(
             self.profile, cut,
             [max(len(c) // cfgc.batch_size, 1) for c in self.clients],
-            cfgc.batch_size, rates, [v.compute_flops for v in self.fleet],
+            cfgc.batch_size, rates, self.fleet_arr["compute_flops"],
             cfgc.server_flops, cfgc.local_epochs)
-        return self._metrics(rnd, losses, [cut] * len(self.clients),
-                             rc.comm_bytes, rc.latency, rc.energy_j)
+        return self._metrics(rnd, float(ls) / max(len(rows), 1),
+                             [cut] * len(self.clients), rc.comm_bytes,
+                             rc.latency, rc.energy_j)
 
     def _round_sfl(self, rnd: int) -> RoundMetrics:
         return self._parallel_split_round(rnd)
@@ -362,111 +953,80 @@ class FederationSim:
     def _round_asfl(self, rnd: int) -> RoundMetrics:
         return self._parallel_split_round(rnd)
 
+    def _plan_split_round(self, rnd: int, cuts: List[int],
+                          participants: List[int]) -> RoundPlan:
+        """Stage one SFL/ASFL round: bucket participants by cut (ascending,
+        stable by client index), pad buckets to powers of two (bounds the
+        compile cache under per-round adaptive cut churn), and pre-draw every
+        client's batch-index stream for the whole round."""
+        cfgc = self.cfg
+        n_units = self.model.n_units
+        buckets: Dict[int, List[int]] = {}
+        for ci in participants:
+            buckets.setdefault(cuts[ci], []).append(ci)
+        steps = max(self._local_steps(self.clients[ci])
+                    for ci in participants)
+        cuts_sig, rows_l, idx_l, mask_l, w_l = [], [], [], [], []
+        for cut in sorted(buckets):
+            members = sorted(buckets[cut])
+            n_pad = _pow2(len(members))
+            rows = np.zeros(n_pad, np.int32)
+            rows[:len(members)] = members
+            idx = np.zeros((steps, n_pad, cfgc.batch_size), np.int32)
+            mask = np.zeros((steps, n_pad), bool)
+            w = np.zeros(n_pad, np.float64)
+            for j, ci in enumerate(members):
+                ln = len(self.clients[ci])
+                w[j] = ln
+                for s in range(self._local_steps(self.clients[ci])):
+                    idx[s, j] = sample_batch_indices(
+                        ln, cfgc.batch_size,
+                        cfgc.seed + rnd * 983 + s * 31 + ci)
+                    mask[s, j] = True
+            cuts_sig.append((cut, n_pad))
+            rows_l.append(rows)
+            idx_l.append(idx)
+            mask_l.append(mask)
+            w_l.append(w)
+        server_unit_w = np.array(
+            [sum(len(self.clients[ci]) for ci in participants
+                 if cuts[ci] <= u) for u in range(n_units)], np.float64)
+        return RoundPlan(tuple(cuts_sig), steps, rows_l, idx_l, mask_l, w_l,
+                         server_unit_w)
+
     def _parallel_split_round(self, rnd: int) -> RoundMetrics:
         """SFL/ASFL with SplitFed-V1 semantics: vehicle-side replicas train
         in parallel at (possibly heterogeneous) cuts while the RSU keeps ONE
         shared server-side model that is updated on every client batch (the
         RSU 'sequentially performs forward propagation ... with the received
         smashed data' — paper §III-B).  Round end: vehicle-side units are
-        FedAvg'd (|D_n|-weighted) with the RSU copy of any unit it trained."""
+        FedAvg'd (|D_n|-weighted) with the RSU copy of any unit it trained.
+        The whole round — every bucket, every local step, the aggregation —
+        is one compiled CohortEngine program."""
         cfgc = self.cfg
         rates = self._round_rates(rnd)
-        participants = set(self._participants(rnd))
+        participants = self._participants(rnd)
         cuts = [max(1, min(c, self.model.n_units - 1))
                 for c in self._pick_cuts(rates)]
-        opt = _make_opt(cfgc)
-        n_units = self.model.n_units
+        plan = self._plan_split_round(rnd, cuts, participants)
+        self.units, self.head, ls, cnt = self.engine.split_round(
+            self.units, self.head, plan, cfgc.batch_size)
 
-        # shared RSU-side state over the FULL stack (per-cut slices train).
-        # Optimizer-state leaves mirror the {"units": [...], "head": ...}
-        # params tree, so slicing at a cut = slicing the unit lists.
-        server_units = [jax.tree.map(lambda a: a, u) for u in self.units]
-        head = self.head
-        s_opt_full = opt.init({"units": server_units, "head": head})
-
-        def slice_opt(cut):
-            out = {}
-            for k, v in s_opt_full.items():
-                if isinstance(v, dict) and "units" in v:
-                    out[k] = {"units": v["units"][cut:], "head": v["head"]}
-                else:
-                    out[k] = v
-            return out
-
-        def merge_opt(new, cut):
-            for k, v in new.items():
-                if isinstance(v, dict) and "units" in v:
-                    s_opt_full[k]["units"] = (
-                        list(s_opt_full[k]["units"][:cut]) + list(v["units"]))
-                    s_opt_full[k]["head"] = v["head"]
-                else:
-                    s_opt_full[k] = v
-        # per-vehicle client-side replicas
-        client_units = [[jax.tree.map(lambda a: a, u)
-                         for u in self.units[:cut]] for cut in cuts]
-        c_opts = [opt.init(cu) for cu in client_units]
-
-        losses = []
-        comm = energy = 0.0
-        latencies = []
-        steps = max(self._local_steps(c) for c in self.clients)
-        for s in range(steps):
-            for ci, c in enumerate(self.clients):
-                if ci not in participants or s >= self._local_steps(c):
-                    continue
-                cut = cuts[ci]
-                step = self._sfl_step(cut)
-                batch = c.sample_batch(cfgc.batch_size,
-                                       cfgc.seed + rnd * 983 + s * 31 + ci)
-                sv = server_units[cut:]
-                (client_units[ci], new_sv, head, c_opts[ci], new_s_opt,
-                 loss, _) = step(client_units[ci], sv, head, c_opts[ci],
-                                 slice_opt(cut), batch)
-                server_units[cut:] = list(new_sv)
-                merge_opt(new_s_opt, cut)
-                losses.append(float(loss))
-
-        # unit-wise FedAvg: vehicle replicas + the shared RSU copy
-        unit_replicas: List[List[Params]] = [[] for _ in range(n_units)]
-        unit_weights: List[List[float]] = [[] for _ in range(n_units)]
-        for ci, c in enumerate(self.clients):
-            if ci not in participants:
-                continue
-            w = float(len(c))
-            for u in range(cuts[ci]):
-                unit_replicas[u].append(client_units[ci][u])
-                unit_weights[u].append(w)
-        for u in range(n_units):
-            served = sum(len(c) for ci, c in enumerate(self.clients)
-                         if ci in participants and cuts[ci] <= u)
-            if served:
-                unit_replicas[u].append(server_units[u])
-                unit_weights[u].append(float(served))
-        merged = []
-        for u in range(n_units):
-            if unit_replicas[u]:
-                merged.append(aggregation.fedavg(unit_replicas[u],
-                                                 unit_weights[u]))
-            else:
-                merged.append(self.units[u])
-        self.units = merged
-        self.head = head
-
-        for ci, c in enumerate(self.clients):
-            if ci not in participants:
-                continue
-            rc = cost.sfl_client_round_cost(
-                self.profile, cuts[ci], max(len(c) // cfgc.batch_size, 1),
-                cfgc.batch_size, rates[ci], self.fleet[ci].compute_flops,
-                cfgc.server_flops, cfgc.local_epochs,
-                self.fleet[ci].tx_power_w, self.fleet[ci].compute_power_w)
-            if cfgc.compress_smashed:
-                ratio = compression.compression_ratio()
-                rc = dataclasses.replace(
-                    rc, comm_bytes_up=rc.comm_bytes_up / ratio,
-                    comm_bytes_down=rc.comm_bytes_down / ratio,
-                    t_comm=rc.t_comm / ratio)
-            comm += rc.comm_bytes
-            energy += rc.energy_j
-            latencies.append(rc.latency)
-        return self._metrics(rnd, losses, cuts, comm, max(latencies), energy)
+        part = np.asarray(participants)
+        rc = cost.sfl_round_cost_arrays(
+            self.profile, np.asarray(cuts)[part],
+            np.array([max(len(self.clients[ci]) // cfgc.batch_size, 1)
+                      for ci in participants]),
+            cfgc.batch_size, rates[part],
+            self.fleet_arr["compute_flops"][part], cfgc.server_flops,
+            cfgc.local_epochs, self.fleet_arr["tx_power_w"][part],
+            self.fleet_arr["compute_power_w"][part])
+        comm_up, comm_down, t_comm = rc.comm_bytes_up, rc.comm_bytes_down, rc.t_comm
+        if cfgc.compress_smashed:
+            ratio = compression.compression_ratio()
+            comm_up, comm_down, t_comm = (comm_up / ratio, comm_down / ratio,
+                                          t_comm / ratio)
+        latency = rc.t_client_compute + rc.t_server_compute + t_comm
+        return self._metrics(rnd, float(ls) / max(float(cnt), 1.0), cuts,
+                             float((comm_up + comm_down).sum()),
+                             float(latency.max()), float(rc.energy_j.sum()))

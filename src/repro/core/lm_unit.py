@@ -22,6 +22,10 @@ from repro.models import transformer as T
 
 
 class TransformerUnitModel:
+    # matmul-dominated: gradients scan fine on every backend, so the cohort
+    # engine may fuse replicas and steps into nested lax.scans on CPU too
+    scan_friendly = True
+
     def __init__(self, cfg: ArchConfig):
         assert cfg.frontend == "none", "fedsim LM adapter: text archs only"
         self.cfg = cfg

@@ -12,6 +12,22 @@ from repro.data.partition import label_skew_power_law
 from repro.data.synthetic import make_cifar_like
 
 
+def sample_batch_indices(n_items: int, batch_size: int, seed: int) -> np.ndarray:
+    """The index stream behind :meth:`ClientDataset.sample_batch` — exposed so
+    the cohort engine can pre-stage whole rounds of batches as one tensor."""
+    rng = np.random.default_rng(seed)
+    return rng.choice(n_items, size=batch_size, replace=n_items < batch_size)
+
+
+def epoch_batch_indices(n_items: int, batch_size: int, seed: int) -> np.ndarray:
+    """Full-batch permutation epoch (drop remainder) as an index matrix
+    (n_full, batch) — the staged form of :meth:`ClientDataset.batches`."""
+    rng = np.random.default_rng(seed)
+    order = rng.permutation(n_items)
+    n_full = n_items // batch_size
+    return order[:n_full * batch_size].reshape(n_full, batch_size)
+
+
 @dataclasses.dataclass
 class ClientDataset:
     images: np.ndarray   # (n, ...) features
@@ -23,24 +39,49 @@ class ClientDataset:
 
     def batches(self, batch_size: int, seed: int,
                 drop_remainder: bool = True) -> Iterator[Dict[str, jnp.ndarray]]:
-        rng = np.random.default_rng(seed)
-        order = rng.permutation(len(self.labels))
+        # same permutation draw as epoch_batch_indices (the staged form used
+        # by the cohort engine), so both consume identical epochs
+        order = np.random.default_rng(seed).permutation(len(self.labels))
         n_full = len(order) // batch_size
-        for i in range(n_full):
-            sel = order[i * batch_size:(i + 1) * batch_size]
-            yield {"images": jnp.asarray(self.images[sel]),
-                   "labels": jnp.asarray(self.labels[sel])}
+        splits = np.split(order[:n_full * batch_size], n_full) if n_full else []
         if not drop_remainder and len(order) % batch_size:
-            sel = order[n_full * batch_size:]
+            splits.append(order[n_full * batch_size:])
+        for sel in splits:
             yield {"images": jnp.asarray(self.images[sel]),
                    "labels": jnp.asarray(self.labels[sel])}
 
     def sample_batch(self, batch_size: int, seed: int) -> Dict[str, jnp.ndarray]:
-        rng = np.random.default_rng(seed)
-        sel = rng.choice(len(self.labels), size=batch_size,
-                         replace=len(self.labels) < batch_size)
+        sel = sample_batch_indices(len(self.labels), batch_size, seed)
         return {"images": jnp.asarray(self.images[sel]),
                 "labels": jnp.asarray(self.labels[sel])}
+
+
+@dataclasses.dataclass
+class StackedClients:
+    """All client shards padded to a common length and stacked on a leading
+    client axis, resident on device once — the cohort engine gathers batches
+    out of these tensors *inside* its scanned round, so no per-batch host
+    staging or transfer happens.
+
+    Padding rows are never indexed: batch index streams are drawn modulo each
+    client's true ``lengths[i]``."""
+    images: jnp.ndarray   # (n_clients, max_len, ...)
+    labels: jnp.ndarray   # (n_clients, max_len, ...)
+    lengths: np.ndarray   # (n_clients,) true shard sizes (host-side, static)
+
+
+def stack_clients(clients) -> StackedClients:
+    n = len(clients)
+    lengths = np.array([len(c) for c in clients], dtype=np.int64)
+    max_len = int(lengths.max())
+    img_shape = clients[0].images.shape[1:]
+    lab_shape = clients[0].labels.shape[1:]
+    images = np.zeros((n, max_len) + img_shape, dtype=clients[0].images.dtype)
+    labels = np.zeros((n, max_len) + lab_shape, dtype=clients[0].labels.dtype)
+    for i, c in enumerate(clients):
+        images[i, :lengths[i]] = c.images
+        labels[i, :lengths[i]] = c.labels
+    return StackedClients(jnp.asarray(images), jnp.asarray(labels), lengths)
 
 
 def make_federated_data(seed: int, n_train: int = 4096, n_test: int = 1024,

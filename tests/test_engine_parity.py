@@ -1,0 +1,185 @@
+"""Cohort-engine parity: the vectorized round (CohortEngine) must reproduce
+the seed per-client Python loop's loss/accuracy trajectory.
+
+The reference below is the seed's `_parallel_split_round` verbatim (per-client
+jit dispatch, `float(loss)` host sync per batch, slice/merge optimizer-state
+surgery, Python-list unit-wise FedAvg), with one defined difference: clients
+are visited in the engine's bucket order (ascending cut, then client index)
+instead of raw client order.  For fixed-cut SFL the two orders coincide, so
+that case is parity against the literal seed.  See DESIGN.md §6.
+"""
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core import adaptive, aggregation, channel
+from repro.core.fedsim import (FederationSim, ResNetModel, SimConfig,
+                               _make_opt, evaluate, make_sfl_batch_step)
+from repro.data.pipeline import make_federated_data
+from repro import optim
+
+
+# ------------------------------------------------------------------ reference
+def _seed_loop_split_round(model, cfg, clients, fleet, ch, units, head, rnd,
+                           sfl_steps):
+    """The seed FederationSim._parallel_split_round, bucket-ordered."""
+    t = rnd * cfg.round_interval_s
+    rates = channel.sample_round_rates(ch, fleet, t, cfg.seed * 1000 + rnd)
+    if cfg.scheme in ("sfl", "sl"):
+        cuts = [cfg.cut] * len(clients)
+    else:
+        cuts = adaptive.paper_threshold(rates)
+    cuts = [max(1, min(c, model.n_units - 1)) for c in cuts]
+    participants = set(range(len(clients)))
+    opt = _make_opt(cfg)
+    n_units = model.n_units
+
+    server_units = [jax.tree.map(lambda a: a, u) for u in units]
+    s_head = head
+    s_opt_full = opt.init({"units": server_units, "head": s_head})
+
+    def slice_opt(cut):
+        out = {}
+        for k, v in s_opt_full.items():
+            if isinstance(v, dict) and "units" in v:
+                out[k] = {"units": v["units"][cut:], "head": v["head"]}
+            else:
+                out[k] = v
+        return out
+
+    def merge_opt(new, cut):
+        for k, v in new.items():
+            if isinstance(v, dict) and "units" in v:
+                s_opt_full[k]["units"] = (
+                    list(s_opt_full[k]["units"][:cut]) + list(v["units"]))
+                s_opt_full[k]["head"] = v["head"]
+            else:
+                s_opt_full[k] = v
+
+    client_units = [[jax.tree.map(lambda a: a, u)
+                     for u in units[:cut]] for cut in cuts]
+    c_opts = [opt.init(cu) for cu in client_units]
+
+    def local_steps(c):
+        if cfg.local_steps is not None:
+            return cfg.local_steps
+        return max(len(c) // cfg.batch_size, 1) * cfg.local_epochs
+
+    # engine visit order: buckets ascending by cut, clients ascending inside
+    order = sorted(participants, key=lambda ci: (cuts[ci], ci))
+    losses = []
+    steps = max(local_steps(c) for c in clients)
+    for s in range(steps):
+        for ci in order:
+            c = clients[ci]
+            if s >= local_steps(c):
+                continue
+            cut = cuts[ci]
+            if cut not in sfl_steps:
+                sfl_steps[cut] = make_sfl_batch_step(model, cfg, cut)
+            step = sfl_steps[cut]
+            batch = c.sample_batch(cfg.batch_size,
+                                   cfg.seed + rnd * 983 + s * 31 + ci)
+            sv = server_units[cut:]
+            (client_units[ci], new_sv, s_head, c_opts[ci], new_s_opt,
+             loss, _) = step(client_units[ci], sv, s_head, c_opts[ci],
+                             slice_opt(cut), batch)
+            server_units[cut:] = list(new_sv)
+            merge_opt(new_s_opt, cut)
+            losses.append(float(loss))
+
+    unit_replicas = [[] for _ in range(n_units)]
+    unit_weights = [[] for _ in range(n_units)]
+    for ci, c in enumerate(clients):
+        w = float(len(c))
+        for u in range(cuts[ci]):
+            unit_replicas[u].append(client_units[ci][u])
+            unit_weights[u].append(w)
+    for u in range(n_units):
+        served = sum(len(c) for ci, c in enumerate(clients) if cuts[ci] <= u)
+        if served:
+            unit_replicas[u].append(server_units[u])
+            unit_weights[u].append(float(served))
+    merged = [aggregation.fedavg(unit_replicas[u], unit_weights[u])
+              if unit_replicas[u] else units[u] for u in range(n_units)]
+    return merged, s_head, losses, cuts
+
+
+def _run_reference(model, cfg, clients, fleet, ch, rounds):
+    units, head = model.init(jax.random.PRNGKey(cfg.seed))
+    sfl_steps = {}
+    round_losses, all_cuts = [], []
+    for rnd in range(rounds):
+        units, head, losses, cuts = _seed_loop_split_round(
+            model, cfg, clients, fleet, ch, units, head, rnd, sfl_steps)
+        round_losses.append(float(np.mean(losses)))
+        all_cuts.append(cuts)
+    return units, head, round_losses, all_cuts
+
+
+def _tree_allclose(a, b, atol):
+    ok = []
+    jax.tree.map(lambda x, y: ok.append(
+        np.allclose(np.asarray(x), np.asarray(y), atol=atol, rtol=1e-3)),
+        a, b)
+    return all(ok)
+
+
+@pytest.fixture(scope="module")
+def small_fed():
+    return make_federated_data(0, n_train=128, n_test=96, n_clients=4)
+
+
+# SGD parity is exact up to fp reassociation (~1e-7 on params after a full
+# round).  Adam's eps=1e-8 amplifies 1e-6-level XLA-fusion noise into
+# lr-sized update flips wherever |grad| ~ 0, so its trajectory tolerance is
+# necessarily looser — the drift is fp chaos, not an engine/seed semantic
+# difference (verified by the sgd rows of this very test).
+@pytest.mark.parametrize("scheme,optimizer,loss_tol,param_atol,acc_tol", [
+    ("sfl", "sgd", 1e-4, 1e-5, 0.02),
+    # param_atol=None: adam's chaotic per-parameter drift makes elementwise
+    # comparison meaningless at round 2; trajectory+accuracy carry the check
+    ("sfl", "adam", 3e-2, None, 0.05),
+    ("asfl", "adam", 3e-2, None, 0.05),
+])
+def test_engine_matches_seed_loop(small_fed, scheme, optimizer, loss_tol,
+                                  param_atol, acc_tol):
+    clients, test = small_fed
+    cfg = SimConfig(scheme=scheme, cut=4, rounds=2, local_steps=2,
+                    lr=1e-3, batch_size=8, optimizer=optimizer)
+    sim = FederationSim(ResNetModel(), clients, test, cfg)
+    hist = sim.run()
+
+    ref_units, ref_head, ref_losses, ref_cuts = _run_reference(
+        sim.model, cfg, clients, sim.fleet, sim.ch, cfg.rounds)
+
+    # same cut decisions, same loss trajectory, same final model
+    assert [m.cuts for m in hist] == ref_cuts
+    eng_losses = [m.loss for m in hist]
+    np.testing.assert_allclose(eng_losses, ref_losses, rtol=loss_tol,
+                               atol=loss_tol)
+    if param_atol is not None:
+        assert _tree_allclose(sim.units, ref_units, atol=param_atol)
+        assert _tree_allclose(sim.head, ref_head, atol=param_atol)
+
+    ref_acc = evaluate(sim.model, ref_units, ref_head, test)
+    assert abs(hist[-1].test_acc - ref_acc) <= acc_tol
+
+
+@pytest.mark.parametrize("mode", ["scan", "vmap"])
+def test_schedules_agree_with_unroll(small_fed, mode):
+    """The three intra-bucket schedules compute the same round (fp tol)."""
+    clients, test = small_fed
+    base = SimConfig(scheme="sfl", cut=5, rounds=1, local_steps=1,
+                     lr=1e-3, batch_size=4, eval_every=0, optimizer="sgd",
+                     cohort_parallel="unroll")
+    ref = FederationSim(ResNetModel(), clients, test, base)
+    ref.run()
+    alt = FederationSim(ResNetModel(), clients, test,
+                        dataclasses.replace(base, cohort_parallel=mode))
+    alt.run()
+    np.testing.assert_allclose(alt.history[0].loss, ref.history[0].loss,
+                               rtol=1e-4, atol=1e-4)
+    assert _tree_allclose(alt.units, ref.units, atol=1e-4)

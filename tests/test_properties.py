@@ -2,7 +2,11 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+import pytest
+
+pytest.importorskip("hypothesis", reason="optional dependency: property "
+                    "tests run only where hypothesis is installed")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core import adaptive, aggregation, channel
 from repro.core.compression import dequantize_int8, quantize_int8

@@ -43,6 +43,27 @@ def test_asfl_adapts_cuts_to_rates(fed_data):
         assert all(c in (2, 4, 6, 8) for c in m.cuts)
 
 
+def test_memory_constrained_strategy_clamps_cuts(fed_data):
+    """adaptive_strategy='memory': per-vehicle memory budgets upper-bound
+    the vehicle-side sub-model (then the paper rule applies underneath)."""
+    from repro.core import adaptive, channel
+    from repro.core.cost import resnet_profile
+    clients, test = fed_data
+    budgets = [1e4, 4e5, float("inf"), float("inf")]
+    fleet = channel.make_fleet(4, seed=0)
+    for v, b in zip(fleet, budgets):
+        v.memory_budget_bytes = b
+    cfg = SimConfig(scheme="asfl", adaptive_strategy="memory", rounds=1,
+                    local_steps=1, batch_size=8)
+    sim = FederationSim(ResNetModel(), clients, test, cfg, fleet=fleet)
+    hist = sim.run()
+    max_cuts = adaptive.max_cut_for_budget(resnet_profile(), budgets)
+    cuts = hist[0].cuts
+    assert all(c <= m for c, m in zip(cuts, max_cuts))
+    assert cuts[0] == 1                      # 10 KB: only the stem fits
+    assert np.isfinite(hist[0].loss)
+
+
 def test_compressed_sfl_reduces_comm(fed_data):
     clients, test = fed_data
     base = SimConfig(scheme="sfl", rounds=1, local_steps=1, batch_size=8)
