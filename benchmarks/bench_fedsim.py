@@ -100,7 +100,8 @@ class MLPUnitModel:
             name=self.name, unit_fwd_flops=flops, unit_param_bytes=pbytes,
             smashed_bytes_per_sample=[w * 4.0] * self.n_units,
             head_flops=2.0 * w * self.n_classes,
-            head_param_bytes=(w * self.n_classes + self.n_classes) * 4)
+            head_param_bytes=(w * self.n_classes + self.n_classes) * 4,
+            smashed_trailing_dim=[w] * self.n_units)
 
 
 def make_mlp_fleet_data(n_clients: int, per_client: int, dim: int, seed: int):

@@ -1,0 +1,103 @@
+"""Scenario-layer benchmark: rounds/s per mobility scenario at fleet scale.
+
+Runs the multi-RSU :class:`ScenarioEngine` (one compiled CohortEngine cohort
+per RSU per round, handover, hierarchical edge->cloud aggregation) over every
+registered scenario at fleet sizes {64, 256}.  The round hot path is the
+compiled cohort program — membership churn from mobility only reshuffles
+rows/buckets (pow2-padded signatures key the compile cache), so the timed
+re-run measures steady-state round throughput with warm caches.
+
+  PYTHONPATH=src python benchmarks/bench_scenarios.py
+  -> BENCH_scenarios.json (repo root) + benchmarks/out/BENCH_scenarios.json
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))
+
+import jax
+import numpy as np
+
+from bench_fedsim import MLPUnitModel, make_mlp_fleet_data
+from repro.core import scenario
+from repro.core.fedsim import ScenarioEngine, SimConfig
+
+ROOT = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
+OUT_DIR = os.path.join(os.path.dirname(__file__), "out")
+
+
+def bench_one(name: str, n: int, rounds: int, local_steps: int, batch: int,
+              strategy: str, sync: int) -> dict:
+    sc = scenario.make_scenario(name, n, seed=n)
+    clients, test = make_mlp_fleet_data(n, 64, 48, seed=n)
+    cfg = SimConfig(scheme="asfl", adaptive_strategy=strategy, rounds=rounds,
+                    local_steps=local_steps, batch_size=batch, lr=1e-3,
+                    eval_every=0, round_interval_s=10.0)
+    eng = ScenarioEngine(MLPUnitModel(), clients, test, cfg, sc,
+                         cloud_sync_every=sync)
+    t_warm0 = time.perf_counter()
+    eng.run()                      # warmup: compiles every round structure
+    t_warm = time.perf_counter() - t_warm0
+    eng.reset()
+    t0 = time.perf_counter()
+    hist = eng.run()
+    dt = time.perf_counter() - t0
+    assert all(np.isfinite(m.loss) for m in hist)
+    sched = [m.n_scheduled for m in hist]
+    return {
+        "scenario": name, "n_vehicles": n, "n_rsus": len(sc.rsu_positions),
+        "mode": eng.engine.mode, "rounds": rounds,
+        "round_s": dt / rounds, "rounds_per_s": rounds / dt,
+        "warmup_s": t_warm,
+        "scheduled_per_round": sched,
+        "handovers": int(sum(m.n_handover for m in hist)),
+        "final_loss": float(hist[-1].loss),
+    }
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--sizes", default="64,256")
+    ap.add_argument("--scenarios", default=",".join(sorted(scenario.SCENARIOS)))
+    ap.add_argument("--rounds", type=int, default=2)
+    ap.add_argument("--local-steps", type=int, default=2)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--strategy", default="paper",
+                    help="cut strategy (paper | residence | ...)")
+    ap.add_argument("--sync", type=int, default=1)
+    args = ap.parse_args()
+
+    results = []
+    for name in args.scenarios.split(","):
+        for n in (int(s) for s in args.sizes.split(",")):
+            row = bench_one(name, n, args.rounds, args.local_steps,
+                            args.batch, args.strategy, args.sync)
+            results.append(row)
+            print(f"{name:17s} n={n:4d} rsus={row['n_rsus']} "
+                  f"mode={row['mode']:6s} round={row['round_s']*1e3:9.1f} ms "
+                  f"({row['rounds_per_s']:.2f} rounds/s) "
+                  f"handovers={row['handovers']}", flush=True)
+
+    out = {
+        "config": {"local_steps": args.local_steps, "batch": args.batch,
+                   "rounds": args.rounds, "strategy": args.strategy,
+                   "cloud_sync_every": args.sync,
+                   "backend": jax.default_backend()},
+        "results": results,
+    }
+    os.makedirs(OUT_DIR, exist_ok=True)
+    for path in (os.path.join(ROOT, "BENCH_scenarios.json"),
+                 os.path.join(OUT_DIR, "BENCH_scenarios.json")):
+        with open(path, "w") as f:
+            json.dump(out, f, indent=1, default=float)
+    print(f"wrote {os.path.join(ROOT, 'BENCH_scenarios.json')}")
+
+
+if __name__ == "__main__":
+    main()

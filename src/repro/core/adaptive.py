@@ -22,6 +22,10 @@ Beyond-paper strategies:
     Accepts a scalar budget or per-vehicle budgets (VehicleProfile.
     memory_budget_bytes, wired as ``SimConfig.adaptive_strategy="memory"``).
   * `energy_aware` — weighted latency+energy objective.
+  * `residence_aware` — deadline-aware: the largest-offload cut whose
+    analytic round latency fits the vehicle's remaining residence time in
+    its serving cell (the ASFL direction of arXiv:2405.18707), falling back
+    to SKIP when no cut fits.
 """
 from __future__ import annotations
 
@@ -59,8 +63,9 @@ def _cost_matrix(profile: SplitProfile, rates_bps, client_flops,
                  local_epochs: int, candidate_cuts):
     """(n_vehicles, n_cuts) RoundCostArrays via one broadcast evaluation."""
     cuts = np.asarray(list(candidate_cuts), dtype=np.int64)
-    rates = np.asarray(rates_bps, dtype=np.float64)[:, None]
-    flops = np.asarray(client_flops, dtype=np.float64)[:, None]
+    rates = np.atleast_1d(np.asarray(rates_bps, dtype=np.float64))[:, None]
+    flops = np.atleast_1d(np.asarray(client_flops,
+                                     dtype=np.float64))[:, None]
     return cuts, sfl_round_cost_arrays(profile, cuts[None, :], n_batches,
                                        batch, rates, flops, server_flops,
                                        local_epochs)
@@ -88,6 +93,32 @@ def energy_aware(profile: SplitProfile, rates_bps: Sequence[float],
     score = (latency_weight * lat / lat.max(axis=1, keepdims=True)
              + (1 - latency_weight) * en / en.max(axis=1, keepdims=True))
     return [int(c) for c in cuts[np.argmin(score, axis=1)]]
+
+
+SKIP = 0  # sentinel cut: the vehicle sits this round out
+
+
+def residence_aware(profile: SplitProfile, rates_bps: Sequence[float],
+                    client_flops: Sequence[float], server_flops: float,
+                    n_batches: int, batch: int, local_epochs: int,
+                    residence_s: Sequence[float],
+                    candidate_cuts: Optional[Sequence[int]] = None
+                    ) -> List[int]:
+    """Deadline-aware selection: among candidate cuts (ascending), pick the
+    LARGEST-OFFLOAD cut — the smallest vehicle-side prefix, i.e. the most
+    work pushed to the RSU — whose analytic round latency (cost.py) fits the
+    vehicle's remaining residence time; :data:`SKIP` (0) when no cut fits
+    (the vehicle would leave coverage mid-round, the §II-C interruption the
+    scenario layer models).  One broadcast cost-matrix evaluation for the
+    whole fleet."""
+    cand = sorted(candidate_cuts or range(1, profile.n_units))
+    cuts, costs = _cost_matrix(profile, rates_bps, client_flops, server_flops,
+                               n_batches, batch, local_epochs, cand)
+    res = np.asarray(residence_s, dtype=np.float64)[:, None]
+    feasible = costs.latency <= res
+    first = np.argmax(feasible, axis=1)          # smallest feasible cut
+    out = np.where(feasible.any(axis=1), cuts[first], SKIP)
+    return [int(c) for c in out]
 
 
 def max_cut_for_budget(profile: SplitProfile,

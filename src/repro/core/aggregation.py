@@ -1,5 +1,9 @@
 """Model aggregation — paper Eq. 1 (|D_n|-weighted global objective) and
-Eq. 2 (FedAvg of full models)."""
+Eq. 2 (FedAvg of full models), plus the hierarchical edge→cloud tier used by
+the multi-RSU scenario layer (DESIGN.md §7): per-RSU FedAvg at the edge,
+then a sample-weighted merge across RSUs at the cloud.  The two-tier form is
+numerically the flat weighted FedAvg whenever the cloud weights are the
+per-edge sample sums — asserted in tests/test_scenario.py."""
 from __future__ import annotations
 
 from typing import Any, List, Optional, Sequence
@@ -75,6 +79,41 @@ def unitwise_fedavg(unit_replicas: List[List[Any]],
     for reps, ws in zip(unit_replicas, weights_per_unit):
         out.append(fedavg(reps, ws))
     return out
+
+
+def edge_aggregate(trees: Sequence[Any], weights: Sequence[float],
+                   groups: Sequence[int]):
+    """Edge tier of hierarchical FedAvg: one |D_n|-weighted FedAvg per RSU.
+    ``groups[i]`` is the serving-RSU index of client ``i``.  Returns
+    (group_ids, edge_trees, edge_weights) where ``edge_weights`` are the
+    per-RSU sample sums — exactly the cloud weights that make the cloud
+    merge equal flat FedAvg."""
+    groups = np.asarray(groups)
+    w = np.asarray(weights, dtype=np.float64)
+    gids = sorted(set(int(g) for g in groups))
+    edge_trees, edge_w = [], []
+    for g in gids:
+        sel = [i for i in range(len(trees)) if groups[i] == g]
+        edge_trees.append(fedavg([trees[i] for i in sel], w[sel]))
+        edge_w.append(float(w[sel].sum()))
+    return gids, edge_trees, edge_w
+
+
+def cloud_aggregate(edge_trees: Sequence[Any],
+                    edge_weights: Sequence[float]) -> Any:
+    """Cloud tier: sample-weighted merge of per-RSU edge models (Eq. 2 one
+    level up — the edge models are themselves weighted means)."""
+    return fedavg(edge_trees, edge_weights)
+
+
+def hierarchical_fedavg(trees: Sequence[Any], weights: Sequence[float],
+                        groups: Sequence[int]) -> Any:
+    """Two-tier FedAvg: per-RSU edge aggregation, then cloud merge.  Because
+    both tiers are weighted means, sum_g (W_g/W) * (sum_{i in g} w_i/W_g *
+    x_i) = sum_i w_i/W * x_i — equal to ``fedavg(trees, weights)`` up to fp
+    reassociation for ANY grouping (tests/test_scenario.py)."""
+    _, edge_trees, edge_w = edge_aggregate(trees, weights, groups)
+    return cloud_aggregate(edge_trees, edge_w)
 
 
 def tree_sub(a: Any, b: Any) -> Any:

@@ -1,9 +1,15 @@
-"""Wireless channel + vehicle mobility model (VEI communication layer).
+"""Wireless channel model (VEI radio layer).
 
-Shannon-capacity rates with log-distance path loss over a drive-by mobility
-trace.  This supplies the per-vehicle, per-round transmission rates `r_n^t`
-that drive the paper's cut-layer selection rule (Eq. 3) and the latency /
-energy accounting of Fig. 5b.
+Shannon-capacity rates with log-distance path loss.  This supplies the
+per-vehicle, per-round transmission rates `r_n^t` that drive the paper's
+cut-layer selection rule (Eq. 3) and the latency / energy accounting of
+Fig. 5b.
+
+Mobility lives one layer up, in ``core/scenario.py`` (multi-RSU corridors,
+urban grids, trace replay); this module keeps only the radio math
+(:func:`rates_from_distance`) plus the seed's single-RSU drive-by trace
+helpers, which the paper-faithful 4-vehicle case study (`FederationSim`)
+still uses — they are the `n_rsus=1` special case of the scenario layer.
 """
 from __future__ import annotations
 
@@ -50,6 +56,20 @@ def _shannon_rate(cfg: ChannelConfig, d, tx_power_w, fading_db):
     noise_dbm = cfg.noise_dbm_hz + 10 * np.log10(cfg.bandwidth_hz)
     snr = 10 ** ((p_rx_dbm - noise_dbm) / 10)
     return cfg.bandwidth_hz * np.log2(1.0 + snr)
+
+
+def rates_from_distance(cfg: ChannelConfig, d_m, tx_power_w,
+                        seed: int | None = None) -> np.ndarray:
+    """Vectorized Shannon rates at given vehicle->RSU distances (the scenario
+    layer's entry point: mobility hands in distances, radio hands back
+    rates).  ``seed`` draws one shadow-fading sample per vehicle."""
+    d = np.asarray(d_m, dtype=np.float64)
+    if seed is not None and cfg.fading_std_db > 0:
+        fading = np.random.default_rng(seed).normal(0.0, cfg.fading_std_db,
+                                                    size=d.shape)
+    else:
+        fading = 0.0
+    return _shannon_rate(cfg, d, tx_power_w, fading)
 
 
 def distance_at(v: VehicleProfile, t: float) -> float:
@@ -124,13 +144,10 @@ def sample_round_rates(cfg: ChannelConfig, fleet: Sequence[VehicleProfile],
                        t: float, seed: int) -> np.ndarray:
     """Per-vehicle Shannon rates at time t, vectorized over the fleet
     (:func:`_shannon_rate` with one rng draw per vehicle, fleet-wide)."""
-    rng = np.random.default_rng(seed)
     fa = fleet if isinstance(fleet, dict) else fleet_arrays(fleet)
     x = fa["x0_m"] + fa["speed_mps"] * t
     d = np.sqrt(x * x + RSU_HEIGHT_M ** 2)
-    fading = (rng.normal(0.0, cfg.fading_std_db, size=d.shape)
-              if cfg.fading_std_db > 0 else 0.0)
-    return _shannon_rate(cfg, d, fa["tx_power_w"], fading)
+    return rates_from_distance(cfg, d, fa["tx_power_w"], seed)
 
 
 def in_range_mask(cfg: ChannelConfig, fleet: Sequence[VehicleProfile],

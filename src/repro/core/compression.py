@@ -13,10 +13,11 @@ with identical semantics (this module is its oracle).
 """
 from __future__ import annotations
 
-from typing import Tuple
+from typing import Optional, Tuple, Union
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 GROUP = 128  # quantisation group along the trailing axis
 
@@ -63,6 +64,27 @@ def _fq_bwd(_, g):
 fake_quant.defvjp(_fq_fwd, _fq_bwd)
 
 
-def compression_ratio(dtype_bytes: int = 4, group: int = GROUP) -> float:
-    """Bytes(fp) / bytes(int8 + scales)."""
-    return dtype_bytes * group / (group + 4.0)
+def effective_group(trailing_dim, group: int = GROUP):
+    """The group size :func:`quantize_int8` actually uses for a trailing dim
+    ``d``: min(group, d), falling back to one whole-row group when ``d`` is
+    not divisible.  Vectorized over arrays of trailing dims (per-cut smashed
+    channel counts)."""
+    d = np.asarray(trailing_dim)
+    g = np.minimum(group, d)
+    return np.where(d % np.maximum(g, 1) != 0, d, g)
+
+
+def compression_ratio(dtype_bytes: int = 4, group: int = GROUP,
+                      trailing_dim: Optional[Union[int, np.ndarray]] = None
+                      ) -> Union[float, np.ndarray]:
+    """Bytes(fp) / bytes(int8 + f32 scale per group).
+
+    Pass ``trailing_dim`` (scalar or per-cut array) to account with the group
+    size :func:`quantize_int8` actually used — e.g. a 64-channel smashed
+    tensor quantizes in 64-wide groups, not ``GROUP``-wide ones, so its
+    scale overhead is larger and the true ratio smaller."""
+    if trailing_dim is None:
+        return dtype_bytes * group / (group + 4.0)
+    g = effective_group(trailing_dim, group)
+    ratio = dtype_bytes * g / (g + 4.0)
+    return float(ratio) if np.ndim(ratio) == 0 else ratio

@@ -11,7 +11,7 @@ ResNet18 (the paper's model) and every assigned ArchConfig provide one.
 from __future__ import annotations
 
 import dataclasses
-from typing import List, Sequence
+from typing import List, Optional, Sequence
 
 import numpy as np
 
@@ -30,6 +30,9 @@ class SplitProfile:
     smashed_bytes_per_sample: List[float]  # at cut c (index c-1), forward
     head_flops: float = 0.0
     head_param_bytes: int = 0
+    # trailing dim of the smashed tensor at cut c (index c-1) — the axis
+    # int8 quantisation groups along; None = unknown (assume GROUP-divisible)
+    smashed_trailing_dim: Optional[List[int]] = None
 
     @property
     def n_units(self) -> int:
@@ -75,6 +78,8 @@ def resnet_profile() -> SplitProfile:
         smashed_bytes_per_sample=smashed,
         head_flops=2 * 512 * 10,
         head_param_bytes=(512 * 10 + 10) * BYTES_F32,
+        smashed_trailing_dim=[R.smashed_shape(c, 1)[-1]
+                              for c in range(1, R.N_UNITS + 1)],
     )
 
 
@@ -140,6 +145,7 @@ def arch_profile(cfg: ArchConfig, seq: int, param_bytes_per: int = 2
         smashed_bytes_per_sample=smashed,
         head_flops=float(2 * cfg.d_model * vp * seq),
         head_param_bytes=2 * vp * cfg.d_model * param_bytes_per,
+        smashed_trailing_dim=[cfg.d_model] * len(unit_flops),
     )
 
 

@@ -38,8 +38,8 @@ from jax import lax
 
 from repro.core import adaptive, aggregation, channel, compression, cost
 from repro.data.pipeline import (ClientDataset, StackedClients,
-                                 epoch_batch_indices, sample_batch_indices,
-                                 stack_clients)
+                                 epoch_batch_indices, fleet_batch_indices,
+                                 sample_batch_indices, stack_clients)
 from repro import optim
 
 Params = Any
@@ -1023,10 +1023,266 @@ class FederationSim:
             self.fleet_arr["compute_power_w"][part])
         comm_up, comm_down, t_comm = rc.comm_bytes_up, rc.comm_bytes_down, rc.t_comm
         if cfgc.compress_smashed:
-            ratio = compression.compression_ratio()
+            # account with the group size quantize_int8 actually used at each
+            # vehicle's cut (whole-row fallback when the trailing dim is not
+            # GROUP-divisible), not the nominal GROUP-sized ratio
+            td = self.profile.smashed_trailing_dim
+            if td is not None:
+                ratio = compression.compression_ratio(
+                    trailing_dim=np.asarray(td)[np.asarray(cuts)[part] - 1])
+            else:
+                ratio = compression.compression_ratio()
             comm_up, comm_down, t_comm = (comm_up / ratio, comm_down / ratio,
                                           t_comm / ratio)
         latency = rc.t_client_compute + rc.t_server_compute + t_comm
         return self._metrics(rnd, float(ls) / max(float(cnt), 1.0), cuts,
                              float((comm_up + comm_down).sum()),
                              float(latency.max()), float(rc.energy_j.sum()))
+
+
+# --------------------------------------------------------------------------
+# multi-RSU scenario orchestration (DESIGN.md §7)
+# --------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class ScenarioRoundMetrics:
+    round: int
+    loss: float
+    test_acc: float          # NaN on rounds without a cloud sync / eval
+    comm_bytes: float
+    sim_time_s: float        # straggler-bounded round latency
+    energy_j: float
+    n_scheduled: int         # vehicles that trained this round
+    n_skipped: int           # in coverage but residence-infeasible (cut=SKIP)
+    n_handover: int          # vehicles that re-associated since last round
+    rsu_loads: List[int]     # participants per RSU
+    cuts: List[int]          # fleet-wide cuts; 0 = sat the round out
+
+
+class ScenarioEngine:
+    """Multi-RSU federation orchestrator: one :class:`CohortEngine` cohort
+    per RSU per round over a pluggable mobility :class:`~repro.core.scenario.
+    Scenario`, with handover and hierarchical edge→cloud aggregation.
+
+    Per round (DESIGN.md §7):
+
+    1. Query the scenario for vectorized fleet state (positions, serving
+       RSU, rates, residence times).
+    2. Pick cuts — ``residence_aware`` by default: the largest-offload cut
+       whose analytic round latency fits the vehicle's remaining residence
+       time, SKIP if none fits.
+    3. Group scheduled vehicles by serving RSU and run each RSU's cohort
+       through the shared :class:`CohortEngine` against that RSU's *edge*
+       model.  Dynamic membership never retraces: compiled round programs
+       are keyed by bucket signature (cut, padded size), so join/leave/
+       handover only reshuffles which rows of the device-resident
+       :class:`StackedClients` tensors the round gathers.
+    4. Every ``cloud_sync_every`` rounds, merge the edge models at the cloud
+       tier — a sample-weighted FedAvg across RSUs
+       (:func:`aggregation.cloud_aggregate`), numerically the flat weighted
+       FedAvg of the same cohorts — and re-seed every RSU from the global.
+
+    Handover semantics: a vehicle's data shard and identity travel with it
+    (its rows in the stacked tensors are RSU-agnostic); server-side model
+    and optimizer state stay at the RSU.  The handover cost below charges
+    the vehicle-side sub-model re-download at the new cell.
+    """
+
+    def __init__(self, model: UnitModel, clients: Sequence[ClientDataset],
+                 test: Dict[str, jnp.ndarray], cfg: SimConfig, scenario,
+                 cloud_sync_every: int = 1):
+        assert len(clients) == scenario.n_vehicles, \
+            (len(clients), scenario.n_vehicles)
+        if cfg.adaptive_strategy not in ("residence", "paper",
+                                         "paper-literal"):
+            raise ValueError(
+                f"ScenarioEngine supports adaptive_strategy 'residence', "
+                f"'paper', or 'paper-literal', got "
+                f"{cfg.adaptive_strategy!r} (the single-RSU FederationSim "
+                f"strategies latency/energy/memory are not wired here)")
+        self.model = model
+        self.clients = list(clients)
+        self.test = test
+        self.cfg = cfg
+        self.scenario = scenario
+        self.n_rsus = len(scenario.rsu_positions)
+        self.fa = scenario.fleet_arrays
+        self.profile = model.profile()
+        self.lengths = np.array([len(c) for c in clients], dtype=np.int64)
+        self.cloud_sync_every = max(int(cloud_sync_every), 1)
+        self.engine = CohortEngine(model, cfg, self.clients)
+        self.reset()
+
+    def reset(self):
+        """Fresh parameters/history; compiled programs and staged data are
+        kept (benchmarks time warm re-runs with this)."""
+        units, head = self.model.init(jax.random.PRNGKey(self.cfg.seed))
+        self.units, self.head = list(units), head
+        self.edge = [(list(units), head) for _ in range(self.n_rsus)]
+        self.edge_samples = np.zeros(self.n_rsus)
+        self.prev_serving = np.full(len(self.clients), -1, np.int32)
+        self._sync_count = 0
+        self.history: List[ScenarioRoundMetrics] = []
+
+    # ---- staging ------------------------------------------------------
+    def _nb_ep(self) -> Tuple[int, int]:
+        """(n_batches, epochs) — uniform across the fleet: the scenario
+        engine runs every scheduled vehicle for the same number of local
+        steps (deadline feasibility is folded into cut selection)."""
+        c = self.cfg
+        if c.local_steps is not None:
+            return c.local_steps, 1
+        return max(int(self.lengths.max()) // c.batch_size, 1), c.local_epochs
+
+    def _steps(self) -> int:
+        nb, ep = self._nb_ep()
+        return nb * ep
+
+    def _pick_cuts(self, state) -> np.ndarray:
+        """Fleet-wide cuts from the fleet state (0 = SKIP).  Vectorized —
+        one cost-matrix broadcast, no per-vehicle loop."""
+        c = self.cfg
+        nb, ep = self._nb_ep()
+        strat = c.adaptive_strategy
+        if strat in ("paper", "paper-literal"):
+            cuts = np.asarray(adaptive.paper_threshold(
+                state.rates_bps, literal_eq3=(strat == "paper-literal")))
+        else:  # "residence" (validated in __init__)
+            cuts = np.asarray(adaptive.residence_aware(
+                self.profile, np.maximum(state.rates_bps, 1.0),
+                self.fa["compute_flops"], c.server_flops, nb, c.batch_size,
+                ep, state.residence_s))
+        sched = cuts > 0
+        cuts = np.where(sched,
+                        np.clip(cuts, 1, self.model.n_units - 1), 0)
+        return np.where(state.active, cuts, 0).astype(np.int64)
+
+    def _plan(self, members: np.ndarray, cuts: np.ndarray, rnd: int,
+              rsu: int) -> RoundPlan:
+        """Stage one RSU cohort: vectorized index draw for all members at
+        once, then cut-bucketing with pow2 padding (same compile-cache
+        keying as FederationSim's staging)."""
+        cfgc = self.cfg
+        steps = self._steps()
+        idx_all = fleet_batch_indices(self.lengths[members], steps,
+                                      cfgc.batch_size,
+                                      cfgc.seed + rnd * 977 + rsu * 104729)
+        mcuts = cuts[members]
+        mlen = self.lengths[members]
+        cuts_sig, rows_l, idx_l, mask_l, w_l = [], [], [], [], []
+        for cut in np.unique(mcuts):
+            sel = np.nonzero(mcuts == cut)[0]
+            n_pad = _pow2(len(sel))
+            rows = np.zeros(n_pad, np.int32)
+            rows[:len(sel)] = members[sel]
+            idx = np.zeros((steps, n_pad, cfgc.batch_size), np.int32)
+            idx[:, :len(sel)] = idx_all[:, sel]
+            mask = np.zeros((steps, n_pad), bool)
+            mask[:, :len(sel)] = True
+            w = np.zeros(n_pad, np.float64)
+            w[:len(sel)] = mlen[sel]
+            cuts_sig.append((int(cut), n_pad))
+            rows_l.append(rows)
+            idx_l.append(idx)
+            mask_l.append(mask)
+            w_l.append(w)
+        server_unit_w = ((mcuts[None, :] <= np.arange(self.model.n_units)
+                          [:, None]) * mlen[None, :]).sum(axis=1).astype(
+                              np.float64)
+        return RoundPlan(tuple(cuts_sig), steps, rows_l, idx_l, mask_l, w_l,
+                         server_unit_w)
+
+    # ---- the round ----------------------------------------------------
+    def run_round(self, rnd: int) -> ScenarioRoundMetrics:
+        cfgc = self.cfg
+        t = rnd * cfgc.round_interval_s
+        state = self.scenario.fleet_state(t, cfgc.seed * 1000 + rnd)
+        cuts = self._pick_cuts(state)
+        sched = cuts > 0
+        serving = state.serving_rsu
+        handover = sched & (self.prev_serving >= 0) & \
+            (self.prev_serving != serving)
+
+        ls_tot = cnt_tot = 0.0
+        rsu_loads = [0] * self.n_rsus
+        for r in np.unique(serving[sched]):
+            r = int(r)
+            members = np.nonzero(sched & (serving == r))[0]
+            plan = self._plan(members, cuts, rnd, r)
+            u, h = self.edge[r]
+            u2, h2, ls, cnt = self.engine.split_round(u, h, plan,
+                                                      cfgc.batch_size)
+            self.edge[r] = (u2, h2)
+            self.edge_samples[r] += float(self.lengths[members].sum())
+            ls_tot += float(ls)
+            cnt_tot += float(cnt)
+            rsu_loads[r] = len(members)
+
+        synced = (rnd + 1) % self.cloud_sync_every == 0
+        if synced:
+            served = np.nonzero(self.edge_samples > 0)[0]
+            if len(served):
+                trees = [{"units": list(self.edge[r][0]),
+                          "head": self.edge[r][1]} for r in served]
+                g = aggregation.cloud_aggregate(trees,
+                                                self.edge_samples[served])
+                self.units, self.head = list(g["units"]), g["head"]
+            self.edge = [(list(self.units), self.head)
+                         for _ in range(self.n_rsus)]
+            self.edge_samples[:] = 0.0
+        self.prev_serving = np.where(state.active, serving,
+                                     -1).astype(np.int32)
+
+        comm, lat, energy = self._accounting(state, cuts, sched, handover)
+        # evaluate every eval_every-th cloud sync (the global model only
+        # changes at syncs; counting syncs rather than rounds keeps eval
+        # alive for any (cloud_sync_every, eval_every) combination)
+        ev = cfgc.eval_every
+        if synced and ev and self._sync_count % ev == 0:
+            acc = evaluate(self.model, self.units, self.head, self.test)
+        else:
+            acc = float("nan")
+        if synced:
+            self._sync_count += 1
+        loss = ls_tot / max(cnt_tot, 1.0)
+        return ScenarioRoundMetrics(
+            rnd, loss, acc, comm, lat, energy,
+            n_scheduled=int(sched.sum()),
+            n_skipped=int((state.active & ~sched).sum()),
+            n_handover=int(handover.sum()),
+            rsu_loads=rsu_loads, cuts=[int(c) for c in cuts])
+
+    def run(self) -> List[ScenarioRoundMetrics]:
+        for rnd in range(self.cfg.rounds):
+            self.history.append(self.run_round(rnd))
+        return self.history
+
+    def _accounting(self, state, cuts, sched, handover):
+        """Analytic per-round comm/latency/energy over the scheduled set +
+        the handover model-migration bytes (vehicle-side sub-model
+        re-download at the new cell)."""
+        cfgc = self.cfg
+        act = np.nonzero(sched)[0]
+        bytes_cum = np.concatenate(
+            [[0.0], np.cumsum(self.profile.unit_param_bytes)])
+        ho_bytes = float(bytes_cum[cuts[handover]].sum())
+        if not len(act):
+            return ho_bytes, 0.0, 0.0
+        nb, ep = self._nb_ep()
+        rc = cost.sfl_round_cost_arrays(
+            self.profile, cuts[act], nb, cfgc.batch_size,
+            np.maximum(state.rates_bps[act], 1.0),
+            self.fa["compute_flops"][act], cfgc.server_flops, ep,
+            self.fa["tx_power_w"][act], self.fa["compute_power_w"][act])
+        comm_up, comm_down, t_comm = (rc.comm_bytes_up, rc.comm_bytes_down,
+                                      rc.t_comm)
+        if cfgc.compress_smashed:
+            td = self.profile.smashed_trailing_dim
+            ratio = (compression.compression_ratio(
+                trailing_dim=np.asarray(td)[cuts[act] - 1])
+                if td is not None else compression.compression_ratio())
+            comm_up, comm_down, t_comm = (comm_up / ratio, comm_down / ratio,
+                                          t_comm / ratio)
+        latency = rc.t_client_compute + rc.t_server_compute + t_comm
+        return (float((comm_up + comm_down).sum()) + ho_bytes,
+                float(latency.max()), float(rc.energy_j.sum()))

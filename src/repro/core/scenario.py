@@ -1,0 +1,407 @@
+"""Pluggable VEI mobility scenarios: multi-RSU fleet state per round.
+
+The seed repo hardcoded ONE RSU on one straight road (the drive-by trace in
+``core/channel.py``).  This module generalizes mobility into a
+:class:`Scenario` protocol that produces **vectorized per-round fleet state**
+— positions, velocities, serving RSU, uplink rates, and remaining residence
+time — for multiple RSUs, so the federation layer can model the paper's
+defining challenge: vehicles entering and leaving coverage mid-training
+(§II-C), handover between cells, and residence-time-aware scheduling
+(ASFL, arXiv:2405.18707).
+
+Layering: ``channel.py`` is the radio (Shannon rates from distance);
+this module is the kinematics + cell association on top of it.  Everything
+is a numpy vector op over the fleet — a 256-vehicle state query is a handful
+of array expressions, never a Python loop per vehicle.
+
+Concrete scenarios:
+
+* :func:`highway_corridor` — N RSUs strung along a multi-lane road; vehicles
+  wrap around the corridor (wrap = one departure + one fresh arrival, so
+  fleet membership is dynamic while arrays stay fixed-shape).
+* :func:`urban_grid` — Manhattan-style grid with pseudo-random turns at
+  intersections and an intersection dwell time; RSUs at every k-th
+  intersection.
+* :func:`trace_replay` — deterministic, array-driven trajectories (the test
+  scenario: handover instants are exactly known).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Protocol, Sequence, runtime_checkable
+
+import numpy as np
+
+from repro.core import channel
+
+RSU_HEIGHT_M = channel.RSU_HEIGHT_M
+
+# residence cap: a vehicle dwelling (v=0) inside coverage would otherwise
+# report an infinite deadline; every consumer treats >= this as "no deadline"
+RESIDENCE_CAP_S = 1e6
+
+
+@dataclasses.dataclass
+class FleetState:
+    """Vectorized per-round fleet snapshot.  Every field is an (n,) or (n,2)
+    array over the whole fleet; ``serving_rsu == -1`` marks a vehicle outside
+    every RSU's coverage (it skips the round)."""
+    t: float
+    positions: np.ndarray      # (n, 2) planar position, metres
+    velocities: np.ndarray     # (n, 2) metres/second
+    serving_rsu: np.ndarray    # (n,) int32 cell index, -1 = uncovered
+    rates_bps: np.ndarray      # (n,) uplink Shannon rate to the serving RSU
+    residence_s: np.ndarray    # (n,) remaining time inside the serving cell
+
+    @property
+    def active(self) -> np.ndarray:
+        return self.serving_rsu >= 0
+
+    @property
+    def n_vehicles(self) -> int:
+        return self.positions.shape[0]
+
+
+@runtime_checkable
+class Scenario(Protocol):
+    """A mobility scenario: static RSU deployment + a fleet-state query.
+
+    ``fleet_state(t, seed)`` must be a pure function of (t, seed) so the
+    simulator can replay rounds deterministically (benchmark warm re-runs,
+    parity tests)."""
+    name: str
+    n_vehicles: int
+    rsu_positions: np.ndarray          # (n_rsus, 2) planar RSU positions
+    fleet_arrays: Dict[str, np.ndarray]  # per-vehicle radio/compute attrs
+
+    def fleet_state(self, t: float, seed: int) -> FleetState: ...
+
+
+# --------------------------------------------------------------------------
+# shared vectorized geometry
+# --------------------------------------------------------------------------
+
+def nearest_rsu(positions: np.ndarray, rsu_positions: np.ndarray,
+                range_m: float):
+    """Cell association: nearest RSU within coverage.  Returns
+    (serving (n,) int32 with -1 = uncovered, planar distance (n,))."""
+    diff = positions[:, None, :] - rsu_positions[None, :, :]
+    d2 = np.einsum("nmd,nmd->nm", diff, diff)
+    serving = np.argmin(d2, axis=1)
+    dmin = np.sqrt(d2[np.arange(len(positions)), serving])
+    return np.where(dmin <= range_m, serving, -1).astype(np.int32), dmin
+
+
+def coverage_exit_time(positions: np.ndarray, velocities: np.ndarray,
+                       centers: np.ndarray, range_m: float) -> np.ndarray:
+    """Time until each vehicle, moving at constant velocity, exits the disc
+    of radius ``range_m`` around its (given) serving RSU — the residence
+    time that deadlines the round (capped at RESIDENCE_CAP_S for parked /
+    dwelling vehicles)."""
+    rel = positions - centers
+    a = np.einsum("nd,nd->n", velocities, velocities)
+    b = 2.0 * np.einsum("nd,nd->n", rel, velocities)
+    c = np.einsum("nd,nd->n", rel, rel) - range_m ** 2
+    disc = np.maximum(b * b - 4.0 * a * c, 0.0)
+    with np.errstate(divide="ignore", invalid="ignore"):
+        t_exit = (-b + np.sqrt(disc)) / (2.0 * a)
+    t_exit = np.where(a > 1e-12, t_exit, RESIDENCE_CAP_S)
+    return np.clip(t_exit, 0.0, RESIDENCE_CAP_S)
+
+
+def _rates_to_serving(ch: channel.ChannelConfig, planar_dist: np.ndarray,
+                      tx_power_w: np.ndarray, serving: np.ndarray,
+                      seed: int) -> np.ndarray:
+    """Uplink Shannon rates to the serving RSU (RSU height folded in);
+    uncovered vehicles get rate 0."""
+    d = np.sqrt(planar_dist ** 2 + RSU_HEIGHT_M ** 2)
+    rates = channel.rates_from_distance(ch, d, tx_power_w, seed)
+    return np.where(serving >= 0, rates, 0.0)
+
+
+def _resolve_fleet(n: int, seed: int, fleet) -> Dict[str, np.ndarray]:
+    if fleet is None:
+        fleet = channel.make_fleet(n, seed)
+    if not isinstance(fleet, dict):
+        fleet = channel.fleet_arrays(fleet)
+    return fleet
+
+
+# --------------------------------------------------------------------------
+# highway corridor
+# --------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class HighwayCorridor:
+    """N RSUs every ``rsu_spacing_m`` along a straight multi-lane road.
+
+    Vehicles drive at per-lane base speeds (plus per-vehicle jitter) and wrap
+    around the corridor: a wrap is one departure at the end of the road plus
+    one fresh arrival at the start, so the fleet membership seen by any one
+    RSU is genuinely dynamic while the arrays stay fixed-shape (the cohort
+    engine's compiled programs are keyed by bucket signature, not by which
+    vehicles fill the rows)."""
+    name: str = "highway_corridor"
+    n_vehicles: int = 8
+    n_rsus: int = 4
+    rsu_spacing_m: float = 700.0
+    n_lanes: int = 3
+    lane_speeds_mps: Sequence[float] = (24.0, 31.0, 38.0)
+    lane_width_m: float = 3.7
+    seed: int = 0
+    ch: channel.ChannelConfig = dataclasses.field(
+        default_factory=channel.ChannelConfig)
+    fleet: Optional[object] = None          # VehicleProfile list or arrays
+
+    def __post_init__(self):
+        rng = np.random.default_rng(self.seed)
+        self.fleet_arrays = _resolve_fleet(self.n_vehicles, self.seed,
+                                           self.fleet)
+        self.road_len_m = self.n_rsus * self.rsu_spacing_m
+        rsu_x = (np.arange(self.n_rsus) + 0.5) * self.rsu_spacing_m
+        self.rsu_positions = np.stack([rsu_x, np.zeros_like(rsu_x)], axis=-1)
+        self._lane = rng.integers(0, self.n_lanes, size=self.n_vehicles)
+        base = np.asarray(self.lane_speeds_mps)[self._lane]
+        self._speed = base * rng.uniform(0.9, 1.1, size=self.n_vehicles)
+        self._x0 = rng.uniform(0.0, self.road_len_m, size=self.n_vehicles)
+        self._y = (self._lane - (self.n_lanes - 1) / 2.0) * self.lane_width_m
+
+    def fleet_state(self, t: float, seed: int) -> FleetState:
+        x = (self._x0 + self._speed * t) % self.road_len_m
+        pos = np.stack([x, self._y], axis=-1)
+        vel = np.stack([self._speed, np.zeros_like(self._speed)], axis=-1)
+        serving, dist = nearest_rsu(pos, self.rsu_positions,
+                                    self.ch.rsu_range_m)
+        rates = _rates_to_serving(self.ch, dist,
+                                  self.fleet_arrays["tx_power_w"], serving,
+                                  seed)
+        centers = self.rsu_positions[np.maximum(serving, 0)]
+        # residence ends either at the cell border or at the corridor wrap
+        # (a wrap is a departure: the vehicle re-enters as a fresh arrival
+        # at the road start, leaving its serving cell instantly)
+        t_exit = coverage_exit_time(pos, vel, centers, self.ch.rsu_range_m)
+        t_wrap = (self.road_len_m - x) / np.maximum(self._speed, 1e-9)
+        res = np.where(serving >= 0, np.minimum(t_exit, t_wrap), 0.0)
+        return FleetState(t, pos, vel, serving, rates, res)
+
+
+# --------------------------------------------------------------------------
+# urban grid
+# --------------------------------------------------------------------------
+
+_DIRS = np.array([[1, 0], [0, 1], [-1, 0], [0, -1]], dtype=np.int64)  # ENWS
+
+
+@dataclasses.dataclass
+class UrbanGrid:
+    """Manhattan grid: ``grid_size`` x ``grid_size`` intersections,
+    ``block_m`` apart; vehicles traverse one block at a time, dwell
+    ``dwell_s`` at each intersection, and turn pseudo-randomly (straight /
+    left / right, U-turn forced at the boundary).  RSUs sit at every
+    ``rsu_every``-th intersection.
+
+    The trajectory is procedural — a pure function of (vehicle, segment
+    index, scenario seed) — so any ``fleet_state(t)`` query is answered by a
+    loop over *completed blocks* (bounded, shared by the fleet), with every
+    per-vehicle quantity a vector op."""
+    name: str = "urban_grid"
+    n_vehicles: int = 8
+    grid_size: int = 5
+    block_m: float = 250.0
+    dwell_s: float = 4.0
+    speed_mps: float = 12.0
+    rsu_every: int = 2
+    seed: int = 0
+    ch: channel.ChannelConfig = dataclasses.field(
+        default_factory=channel.ChannelConfig)
+    fleet: Optional[object] = None
+
+    def __post_init__(self):
+        rng = np.random.default_rng(self.seed)
+        self.fleet_arrays = _resolve_fleet(self.n_vehicles, self.seed,
+                                           self.fleet)
+        n = self.n_vehicles
+        self._node0 = rng.integers(0, self.grid_size, size=(n, 2))
+        self._h0 = rng.integers(0, 4, size=n)
+        self._speed = self.speed_mps * rng.uniform(0.85, 1.15, size=n)
+        ticks = np.arange(0, self.grid_size, self.rsu_every)
+        gx, gy = np.meshgrid(ticks, ticks, indexing="ij")
+        self.rsu_positions = (np.stack([gx.ravel(), gy.ravel()], axis=-1)
+                              * self.block_m).astype(np.float64)
+
+    def _kinematics(self, t: float):
+        """Vectorized block-walk: returns (pos (n,2) m, step_dir (n,2),
+        moving (n,) bool)."""
+        n = self.n_vehicles
+        per_block = self.block_m / self._speed + self.dwell_s
+        k = np.floor(t / per_block).astype(np.int64)      # completed blocks
+        frac = t - k * per_block
+        offset = np.minimum(frac * self._speed, self.block_m)
+        moving = frac * self._speed < self.block_m
+
+        node = self._node0.copy()
+        h = self._h0.copy()
+        cur_dir = np.zeros((n, 2), dtype=np.int64)
+        k_max = int(k.max(initial=0))
+        for j in range(k_max + 1):
+            if j > 0:
+                turn = np.random.default_rng(
+                    self.seed * 7919 + j).integers(-1, 2, size=n)
+                h = (h + turn) % 4
+            step = _DIRS[h]
+            out = ((node + step < 0) | (node + step >= self.grid_size)
+                   ).any(axis=-1)
+            h = np.where(out, (h + 2) % 4, h)
+            step = _DIRS[h]
+            at = j == k                      # this is the current segment
+            cur_dir = np.where(at[:, None], step, cur_dir)
+            done = j < k                     # block completed: advance node
+            node = np.where(done[:, None], node + step, node)
+        pos = node * self.block_m + cur_dir * offset[:, None]
+        return pos.astype(np.float64), cur_dir.astype(np.float64), moving
+
+    def fleet_state(self, t: float, seed: int) -> FleetState:
+        pos, cur_dir, moving = self._kinematics(t)
+        vel = cur_dir * (self._speed * moving)[:, None]
+        serving, dist = nearest_rsu(pos, self.rsu_positions,
+                                    self.ch.rsu_range_m)
+        rates = _rates_to_serving(self.ch, dist,
+                                  self.fleet_arrays["tx_power_w"], serving,
+                                  seed)
+        # residence uses the nominal (non-dwelling) velocity: a vehicle
+        # pausing at an intersection still has a finite deadline once it
+        # resumes along its heading
+        nominal = cur_dir * self._speed[:, None]
+        centers = self.rsu_positions[np.maximum(serving, 0)]
+        res = np.where(serving >= 0,
+                       coverage_exit_time(pos, nominal, centers,
+                                          self.ch.rsu_range_m), 0.0)
+        return FleetState(t, pos, vel, serving, rates, res)
+
+
+# --------------------------------------------------------------------------
+# trace replay
+# --------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class TraceReplay:
+    """Deterministic array-driven trajectories: ``positions[i]`` is the fleet
+    at ``times[i]``.  Association, residence, and (fading-free by default)
+    rates are precomputed per trace step in ``__post_init__``, so tests know
+    the exact round a handover happens."""
+    times: np.ndarray            # (T,) strictly increasing
+    positions: np.ndarray        # (T, n, 2)
+    rsu_positions: np.ndarray    # (n_rsus, 2)
+    name: str = "trace_replay"
+    ch: channel.ChannelConfig = dataclasses.field(default_factory=lambda:
+                                                  channel.ChannelConfig(
+                                                      fading_std_db=0.0))
+    fleet: Optional[object] = None
+    seed: int = 0
+
+    def __post_init__(self):
+        self.times = np.asarray(self.times, dtype=np.float64)
+        self.positions = np.asarray(self.positions, dtype=np.float64)
+        self.rsu_positions = np.asarray(self.rsu_positions, dtype=np.float64)
+        T, n, _ = self.positions.shape
+        assert self.times.shape == (T,)
+        self.n_vehicles = n
+        self.fleet_arrays = _resolve_fleet(n, self.seed, self.fleet)
+        serving = np.empty((T, n), dtype=np.int32)
+        dist = np.empty((T, n))
+        for i in range(T):
+            serving[i], dist[i] = nearest_rsu(self.positions[i],
+                                              self.rsu_positions,
+                                              self.ch.rsu_range_m)
+        self._serving, self._dist = serving, dist
+        # velocities: forward finite difference over the trace
+        vel = np.zeros_like(self.positions)
+        if T > 1:
+            dt = np.diff(self.times)[:, None, None]
+            vel[:-1] = np.diff(self.positions, axis=0) / np.maximum(dt, 1e-9)
+            vel[-1] = vel[-2]
+        self._vel = vel
+        # residence[i] = min(time until the serving cell next changes along
+        # the trace, geometric coverage-exit time at the current velocity) —
+        # the scan catches handovers between cells, the geometry resolves
+        # exits finer than the trace step
+        res = np.empty((T, n))
+        dt_end = (self.times[-1] - self.times[-2]) if T > 1 else 0.0
+        next_change = np.full(n, self.times[-1] + dt_end)
+        for i in range(T - 1, -1, -1):
+            if i < T - 1:
+                changed = serving[i + 1] != serving[i]
+                next_change = np.where(changed, self.times[i + 1],
+                                       next_change)
+            geo = coverage_exit_time(self.positions[i], vel[i],
+                                     self.rsu_positions[np.maximum(
+                                         serving[i], 0)],
+                                     self.ch.rsu_range_m)
+            res[i] = np.minimum(next_change - self.times[i], geo)
+        self._residence = np.clip(res, 0.0, RESIDENCE_CAP_S)
+
+    def _step(self, t: float) -> int:
+        return int(np.clip(np.searchsorted(self.times, t, side="right") - 1,
+                           0, len(self.times) - 1))
+
+    def fleet_state(self, t: float, seed: int) -> FleetState:
+        i = self._step(t)
+        serving = self._serving[i]
+        rates = _rates_to_serving(self.ch, self._dist[i],
+                                  self.fleet_arrays["tx_power_w"], serving,
+                                  seed)
+        return FleetState(float(self.times[i]), self.positions[i],
+                          self._vel[i], serving, rates,
+                          np.where(serving >= 0, self._residence[i], 0.0))
+
+
+def crossing_trace(n_vehicles: int, n_rsus: int = 2, t_end: float = 120.0,
+                   n_steps: int = 60, rsu_spacing_m: float = 600.0,
+                   speed_mps: float = 20.0, seed: int = 0,
+                   ch: Optional[channel.ChannelConfig] = None,
+                   fleet=None) -> TraceReplay:
+    """Deterministic linear trace: the fleet drives the corridor end to end,
+    crossing every cell boundary — the canonical handover fixture (and the
+    trace_replay entry in the scenario benchmark)."""
+    rng = np.random.default_rng(seed)
+    times = np.linspace(0.0, t_end, n_steps)
+    x0 = rng.uniform(-0.25 * rsu_spacing_m, 0.25 * rsu_spacing_m, n_vehicles)
+    speeds = speed_mps * rng.uniform(0.9, 1.1, n_vehicles)
+    x = x0[None, :] + speeds[None, :] * times[:, None]
+    y = np.zeros_like(x)
+    rsu_x = (np.arange(n_rsus) + 0.5) * rsu_spacing_m
+    rsus = np.stack([rsu_x, np.zeros_like(rsu_x)], axis=-1)
+    return TraceReplay(times, np.stack([x, y], axis=-1), rsus, seed=seed,
+                       fleet=fleet,
+                       ch=ch or channel.ChannelConfig(fading_std_db=0.0))
+
+
+# --------------------------------------------------------------------------
+# registry
+# --------------------------------------------------------------------------
+
+def highway_corridor(n_vehicles: int, seed: int = 0, **kw) -> HighwayCorridor:
+    return HighwayCorridor(n_vehicles=n_vehicles, seed=seed, **kw)
+
+
+def urban_grid(n_vehicles: int, seed: int = 0, **kw) -> UrbanGrid:
+    return UrbanGrid(n_vehicles=n_vehicles, seed=seed, **kw)
+
+
+def trace_replay(n_vehicles: int, seed: int = 0, **kw) -> TraceReplay:
+    return crossing_trace(n_vehicles, seed=seed, **kw)
+
+
+SCENARIOS = {
+    "highway_corridor": highway_corridor,
+    "urban_grid": urban_grid,
+    "trace_replay": trace_replay,
+}
+
+
+def make_scenario(name: str, n_vehicles: int, seed: int = 0, **kw) -> Scenario:
+    try:
+        return SCENARIOS[name](n_vehicles, seed=seed, **kw)
+    except KeyError:
+        raise ValueError(f"unknown scenario {name!r}; "
+                         f"available: {sorted(SCENARIOS)}") from None

@@ -19,6 +19,20 @@ def sample_batch_indices(n_items: int, batch_size: int, seed: int) -> np.ndarray
     return rng.choice(n_items, size=batch_size, replace=n_items < batch_size)
 
 
+def fleet_batch_indices(lengths, steps: int, batch_size: int,
+                        seed: int) -> np.ndarray:
+    """Whole-cohort batch staging in ONE rng call: (steps, n, batch) uniform
+    draws modulo each client's true shard length.  This is the scenario
+    engine's index stream — fleet membership changes between rounds only
+    reshuffle which rows of :class:`StackedClients` these indices gather
+    from, so no per-vehicle Python loop and no retrace.  (Always samples
+    with replacement; the per-client streams of :func:`sample_batch_indices`
+    are kept for seed-loop parity.)"""
+    lengths = np.asarray(lengths, dtype=np.int64)
+    u = np.random.default_rng(seed).random((steps, len(lengths), batch_size))
+    return (u * lengths[None, :, None]).astype(np.int32)
+
+
 def epoch_batch_indices(n_items: int, batch_size: int, seed: int) -> np.ndarray:
     """Full-batch permutation epoch (drop remainder) as an index matrix
     (n_full, batch) — the staged form of :meth:`ClientDataset.batches`."""

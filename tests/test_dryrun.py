@@ -35,6 +35,9 @@ def test_hlo_analyzer_counts_scan_flops_exactly():
 
 
 @pytest.mark.slow
+@pytest.mark.skipif(not hasattr(__import__("jax").sharding, "AxisType"),
+                    reason="the subprocess shim builds meshes with "
+                           "jax.sharding.AxisType (jax >= 0.5)")
 def test_dryrun_subprocess_small_mesh():
     """dryrun_one must lower+compile a reduced-mesh combo in a fresh
     interpreter (8 fake devices, 2x4 mesh) and report roofline inputs."""

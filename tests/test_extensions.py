@@ -87,6 +87,8 @@ def test_ssm_split_proj_variant_param_count_unchanged():
     assert cfg.param_count() == split.param_count()
 
 
+@pytest.mark.skipif(not hasattr(jax.sharding, "AxisType"),
+                    reason="jax.sharding.AxisType requires jax >= 0.5")
 def test_megatron_specs_shard_experts():
     """EP preference: expert weights shard the expert dim over `model`."""
     import os
@@ -103,3 +105,82 @@ def test_megatron_specs_shard_experts():
     spec = MX._megatron_spec(path, Leaf(), mesh16, fsdp=False)
     # model axis size 1 divides everything; expert dim (-3) must be chosen
     assert spec == jax.sharding.PartitionSpec(None, "model", None, None)
+
+
+def test_paper_threshold_literal_vs_text_ordering():
+    """DESIGN.md §2: the printed Eq. 3 maps the LOWEST rate band to cut 2
+    (largest smashed data); the text-consistent default maps the HIGHEST
+    rate band to cut 2 (more offload when the link is fast).  The two
+    orderings are exact mirrors over the cut table."""
+    from repro.core import adaptive
+    th = adaptive.DEFAULT_THRESHOLDS
+    # one rate per band: below R1, R1..R2, R2..R3, above R3
+    rates = [th[0] * 0.5, (th[0] + th[1]) / 2, (th[1] + th[2]) / 2,
+             th[2] * 2.0]
+    text = adaptive.paper_threshold(rates)
+    literal = adaptive.paper_threshold(rates, literal_eq3=True)
+    assert literal == list(adaptive.DEFAULT_CUTS)          # low rate -> cut 2
+    assert text == list(reversed(adaptive.DEFAULT_CUTS))   # high rate -> cut 2
+    assert text == literal[::-1]
+    # band edges are right-inclusive (np.digitize(right=True))
+    assert adaptive.paper_threshold([th[0]], literal_eq3=True) == [2]
+
+
+def test_mobility_dropout_participation_over_time():
+    """The engine's participation mask must follow coverage round by round:
+    a vehicle drives INTO range and joins; with everyone out of range the
+    fallback keeps vehicle 0 so the round still runs."""
+    clients, test = make_federated_data(1, n_train=128, n_test=64,
+                                        n_clients=3)
+    # v0 parked in range; v1 enters range at t=5 (x: -420 -> -395);
+    # v2 parked far outside for good
+    fleet = [channel.VehicleProfile(x0_m=-100.0, speed_mps=0.0),
+             channel.VehicleProfile(x0_m=-420.0, speed_mps=5.0),
+             channel.VehicleProfile(x0_m=-2000.0, speed_mps=0.0)]
+    cfg = SimConfig(scheme="asfl", rounds=2, local_steps=1, batch_size=8,
+                    lr=1e-3, mobility_dropout=True, eval_every=0)
+    sim = FederationSim(ResNetModel(), clients, test, cfg, fleet=fleet)
+    assert sim._participants(0) == [0]
+    assert sim._participants(1) == [0, 1]
+    hist = sim.run()
+    assert all(np.isfinite(m.loss) for m in hist)
+
+    # all-out-of-coverage fallback: vehicle 0 still participates
+    far = [channel.VehicleProfile(x0_m=-2000.0, speed_mps=0.0)
+           for _ in range(3)]
+    sim2 = FederationSim(ResNetModel(), clients, test, cfg, fleet=far)
+    assert sim2._participants(0) == [0]
+
+
+def test_compression_ratio_matches_actual_bytes():
+    """compression_ratio(trailing_dim=...) must equal the measured bytes of
+    quantize_int8's output (int8 payload + f32 scale per ACTUAL group),
+    including the whole-row fallback for non-divisible trailing dims."""
+    from repro.core import compression as C
+    for d in (64, 128, 200, 384, 512):
+        x = jnp.asarray(np.random.default_rng(d).normal(size=(16, d)),
+                        jnp.float32)
+        q, s = C.quantize_int8(x)
+        measured = x.size * 4 / (q.size * 1 + s.size * 4)
+        np.testing.assert_allclose(C.compression_ratio(trailing_dim=d),
+                                   measured, rtol=1e-12)
+    # the nominal ratio is wrong whenever the fallback kicks in: small dims
+    # pay MORE scale overhead (64-wide groups), non-divisible dims pay LESS
+    # (one whole-row scale) — both diverge from the GROUP-sized assumption
+    assert C.compression_ratio(trailing_dim=64) < C.compression_ratio()
+    assert C.compression_ratio(trailing_dim=200) > C.compression_ratio()
+    # vectorized over per-cut dims (the fedsim accounting path)
+    dims = np.array([64, 128, 200])
+    np.testing.assert_allclose(
+        C.compression_ratio(trailing_dim=dims),
+        [C.compression_ratio(trailing_dim=int(d)) for d in dims])
+
+
+def test_resnet_profile_has_smashed_trailing_dims():
+    from repro.core.cost import resnet_profile
+    from repro.models import resnet as R
+    prof = resnet_profile()
+    assert prof.smashed_trailing_dim is not None
+    assert len(prof.smashed_trailing_dim) == prof.n_units
+    assert prof.smashed_trailing_dim == [R.smashed_shape(c, 1)[-1]
+                                         for c in range(1, R.N_UNITS + 1)]

@@ -1,0 +1,311 @@
+"""Scenario layer: multi-RSU mobility, handover, hierarchical aggregation,
+and residence-aware cut selection (ISSUE 2 acceptance tests + invariants)."""
+import dataclasses
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import adaptive, aggregation, channel, cost
+from repro.core import scenario as S
+from repro.core.fedsim import ScenarioEngine, SimConfig
+from repro.data.pipeline import ClientDataset
+
+
+# ----------------------------------------------------------------- fixtures
+class TinyMLP:
+    """5-unit split MLP over 16-d vectors — a fast, scan-friendly UnitModel
+    for scenario-engine tests (the cohort engine is generic over models)."""
+    name = "tiny-mlp"
+    scan_friendly = True
+    n_units = 5
+
+    def __init__(self, dim=16, width=16, n_classes=4):
+        self.dim, self.width, self.n_classes = dim, width, n_classes
+
+    def init(self, key):
+        ks = jax.random.split(key, self.n_units + 1)
+        units, d_in = [], self.dim
+        for i in range(self.n_units):
+            units.append({"w": jax.random.normal(ks[i], (d_in, self.width))
+                          * math.sqrt(2.0 / d_in),
+                          "b": jnp.zeros((self.width,))})
+            d_in = self.width
+        head = {"w": jax.random.normal(ks[-1], (self.width, self.n_classes))
+                * math.sqrt(1.0 / self.width),
+                "b": jnp.zeros((self.n_classes,))}
+        return units, head
+
+    def apply_units(self, units, x, start):
+        for u in units:
+            x = jax.nn.relu(x @ u["w"] + u["b"])
+        return x
+
+    def head_loss(self, head, feats, labels):
+        logits = feats @ head["w"] + head["b"]
+        logz = jax.scipy.special.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, labels[:, None], axis=-1)[:, 0]
+        return jnp.mean(logz - gold), logits
+
+    def head_predict(self, head, feats):
+        return feats @ head["w"] + head["b"]
+
+    def profile(self):
+        w, d = self.width, self.dim
+        return cost.SplitProfile(
+            name=self.name,
+            unit_fwd_flops=[2.0 * d * w] + [2.0 * w * w] * (self.n_units - 1),
+            unit_param_bytes=[(d * w + w) * 4]
+            + [(w * w + w) * 4] * (self.n_units - 1),
+            smashed_bytes_per_sample=[w * 4.0] * self.n_units,
+            head_flops=2.0 * w * self.n_classes,
+            head_param_bytes=(w * self.n_classes + self.n_classes) * 4,
+            smashed_trailing_dim=[w] * self.n_units)
+
+
+def _vector_clients(n_clients, per_client=24, dim=16, n_classes=4, seed=0):
+    rng = np.random.default_rng(seed)
+    templates = rng.normal(size=(n_classes, dim)).astype(np.float32)
+    clients = []
+    for i in range(n_clients):
+        y = rng.integers(0, n_classes, size=per_client)
+        x = templates[y] + 0.4 * rng.normal(size=(per_client, dim))
+        clients.append(ClientDataset(x.astype(np.float32),
+                                     y.astype(np.int32), i))
+    yt = rng.integers(0, n_classes, size=64)
+    xt = templates[yt] + 0.4 * rng.normal(size=(64, dim))
+    test = {"images": jnp.asarray(xt.astype(np.float32)),
+            "labels": jnp.asarray(yt.astype(np.int32))}
+    return clients, test
+
+
+# ------------------------------------------------------- scenario invariants
+@pytest.mark.parametrize("name", sorted(S.SCENARIOS))
+def test_scenario_state_invariants(name):
+    sc = S.make_scenario(name, 12, seed=3)
+    assert len(sc.rsu_positions) >= 2           # genuinely multi-RSU
+    for t in (0.0, 7.5, 40.0):
+        st = sc.fleet_state(t, seed=11)
+        assert st.positions.shape == (12, 2)
+        assert st.velocities.shape == (12, 2)
+        assert st.serving_rsu.shape == (12,)
+        assert st.serving_rsu.max() < len(sc.rsu_positions)
+        # covered vehicles: positive rate, finite residence, serving in range
+        act = st.active
+        assert (st.rates_bps[act] > 0).all()
+        assert (st.residence_s[act] >= 0).all()
+        # uncovered vehicles are fully inert
+        assert (st.rates_bps[~act] == 0).all()
+        assert (st.residence_s[~act] == 0).all()
+        # pure function of (t, seed)
+        st2 = sc.fleet_state(t, seed=11)
+        np.testing.assert_array_equal(st.positions, st2.positions)
+        np.testing.assert_array_equal(st.rates_bps, st2.rates_bps)
+
+
+def test_highway_serving_cells_progress():
+    """A corridor vehicle is handed cell to cell in road order."""
+    sc = S.highway_corridor(1, seed=0, n_rsus=4)
+    seen = []
+    for t in np.linspace(0, 80, 81):
+        r = int(sc.fleet_state(float(t), 0).serving_rsu[0])
+        if r >= 0 and (not seen or seen[-1] != r):
+            seen.append(r)
+    assert len(seen) >= 2                       # crossed at least one border
+    # cells are visited in road order (modulo the corridor wrap)
+    assert all(b == (a + 1) % sc.n_rsus for a, b in zip(seen, seen[1:]))
+
+
+def test_urban_grid_stays_on_grid_and_dwells():
+    sc = S.urban_grid(16, seed=5, grid_size=4, block_m=100.0, dwell_s=3.0)
+    extent = (sc.grid_size - 1) * sc.block_m
+    moving_seen = dwelling_seen = False
+    for t in np.linspace(0, 120, 49):
+        st = sc.fleet_state(float(t), 0)
+        assert (st.positions >= -1e-6).all()
+        assert (st.positions <= extent + 1e-6).all()
+        speed = np.linalg.norm(st.velocities, axis=-1)
+        moving_seen |= bool((speed > 0).any())
+        dwelling_seen |= bool((speed == 0).any())
+    assert moving_seen and dwelling_seen
+
+
+def test_coverage_exit_time_analytic():
+    # vehicle at x=-100 moving +x at 10 m/s inside a 400 m cell centred at 0:
+    # exits at x=+400 -> 50 s
+    res = S.coverage_exit_time(np.array([[-100.0, 0.0]]),
+                               np.array([[10.0, 0.0]]),
+                               np.array([[0.0, 0.0]]), 400.0)
+    np.testing.assert_allclose(res, [50.0])
+    # parked vehicle never exits -> capped
+    res = S.coverage_exit_time(np.array([[0.0, 0.0]]),
+                               np.array([[0.0, 0.0]]),
+                               np.array([[0.0, 0.0]]), 400.0)
+    assert res[0] == S.RESIDENCE_CAP_S
+
+
+# ------------------------------------------- hierarchical aggregation (a)
+def test_hierarchical_equals_flat_fedavg():
+    """Edge->cloud two-tier FedAvg == flat weighted FedAvg for any grouping
+    when cloud weights are the per-edge sample sums."""
+    key = jax.random.PRNGKey(0)
+    trees = []
+    for i in range(7):
+        key, k1, k2 = jax.random.split(key, 3)
+        trees.append({"w": jax.random.normal(k1, (4, 3)),
+                      "b": jax.random.normal(k2, (3,))})
+    weights = np.array([3.0, 1.0, 4.0, 1.0, 5.0, 9.0, 2.0])
+    for groups in ([0, 0, 1, 1, 2, 2, 2], [2, 0, 1, 0, 2, 1, 0],
+                   [0, 0, 0, 0, 0, 0, 0]):
+        flat = aggregation.fedavg(trees, weights)
+        hier = aggregation.hierarchical_fedavg(trees, weights, groups)
+        jax.tree.map(lambda a, b: np.testing.assert_allclose(
+            np.asarray(a), np.asarray(b), rtol=1e-5, atol=1e-6), flat, hier)
+
+
+def test_edge_aggregate_weights_are_sample_sums():
+    trees = [{"x": jnp.ones(2) * i} for i in range(4)]
+    gids, etrees, ew = aggregation.edge_aggregate(
+        trees, [1.0, 2.0, 3.0, 4.0], [1, 0, 1, 0])
+    assert gids == [0, 1]
+    assert ew == [6.0, 4.0]
+    np.testing.assert_allclose(np.asarray(etrees[0]["x"]),
+                               (2.0 * 1 + 4.0 * 3) / 6.0 * np.ones(2))
+
+
+# --------------------------------------------- residence-aware cuts (c)
+def test_residence_aware_never_exceeds_residence():
+    rng = np.random.default_rng(0)
+    prof = cost.resnet_profile()
+    n = 64
+    rates = rng.uniform(2e6, 3e8, n)
+    flops = rng.uniform(5e9, 5e10, n)
+    residence = rng.uniform(0.05, 60.0, n)
+    cuts = adaptive.residence_aware(prof, rates, flops, 2e12, 4, 16, 1,
+                                    residence)
+    assert len(cuts) == n
+    chosen = [i for i, c in enumerate(cuts) if c != adaptive.SKIP]
+    assert chosen                                  # some vehicles feasible
+    assert len(chosen) < n                         # and some must skip
+    for i in chosen:
+        rc = cost.sfl_round_cost_arrays(prof, np.array([cuts[i]]), 4, 16,
+                                        np.array([rates[i]]),
+                                        np.array([flops[i]]), 2e12, 1)
+        assert float(rc.latency[0]) <= residence[i] + 1e-9
+    # skipped vehicles truly had NO feasible cut
+    skipped = [i for i, c in enumerate(cuts) if c == adaptive.SKIP]
+    for i in skipped[:8]:
+        rc = cost.sfl_round_cost_arrays(
+            prof, np.arange(1, prof.n_units), 4, 16, np.array([[rates[i]]]),
+            np.array([[flops[i]]]), 2e12, 1)
+        assert (rc.latency[0] > residence[i]).all()
+
+
+def test_residence_aware_prefers_largest_offload():
+    """With a generous deadline the smallest (most-offloaded) cut wins."""
+    prof = cost.resnet_profile()
+    cuts = adaptive.residence_aware(prof, [1e9], [1e11], 2e12, 2, 16, 1,
+                                    [1e5])
+    assert cuts == [1]
+
+
+# --------------------------------------------------- handover replay (b)
+def _two_cell_trace(rounds, interval):
+    """Vehicle 0 drives RSU0 -> RSU1; vehicle 1 parks inside RSU0."""
+    times = np.arange(rounds + 1, dtype=np.float64) * interval
+    n_steps = len(times)
+    x0 = np.linspace(300.0, 900.0, n_steps)      # crosses the 600 m border
+    x1 = np.full(n_steps, 250.0)
+    x = np.stack([x0, x1], axis=-1)
+    pos = np.stack([x, np.zeros_like(x)], axis=-1)
+    rsus = np.array([[300.0, 0.0], [900.0, 0.0]])
+    ch = channel.ChannelConfig(fading_std_db=0.0, rsu_range_m=320.0)
+    return S.TraceReplay(times, pos, rsus, ch=ch, seed=0)
+
+
+def test_trace_replay_handover_continues_training():
+    """A vehicle handing over between RSUs keeps training and its data shard
+    keeps contributing to the global model."""
+    rounds, interval = 4, 5.0
+    sc = _two_cell_trace(rounds, interval)
+    clients, test = _vector_clients(2)
+    cfg = SimConfig(scheme="asfl", adaptive_strategy="paper", rounds=rounds,
+                    local_steps=2, batch_size=8, lr=1e-2, optimizer="sgd",
+                    round_interval_s=interval, eval_every=1)
+    eng = ScenarioEngine(TinyMLP(), clients, test, cfg, sc,
+                         cloud_sync_every=1)
+
+    serving0 = [int(sc.fleet_state(r * interval, 0).serving_rsu[0])
+                for r in range(rounds)]
+    assert serving0[0] == 0 and serving0[-1] == 1    # the trace crosses
+
+    globals_before = jax.tree.map(lambda a: np.asarray(a).copy(),
+                                  {"units": eng.units, "head": eng.head})
+    hist = eng.run()
+    ho_round = next(r for r in range(1, rounds)
+                    if serving0[r] != serving0[r - 1])
+    assert hist[ho_round].n_handover >= 1
+    # vehicle 0 trained in every round, including after the handover
+    assert all(m.n_scheduled == 2 for m in hist)
+    # after handover, vehicle 0 is RSU1's ONLY client; RSU1's cohort ran
+    assert hist[ho_round].rsu_loads[1] == 1
+    # and its shard moved the global model (cloud sync every round)
+    l2 = aggregation.tree_l2(aggregation.tree_sub(
+        {"units": eng.units, "head": eng.head}, globals_before))
+    assert l2 > 0
+    assert all(np.isfinite(m.loss) for m in hist)
+    # training progressed across the handover, not around it
+    assert hist[-1].loss < hist[0].loss
+
+
+def test_scenario_engine_dynamic_membership_no_crash():
+    """Vehicles leaving coverage entirely (empty RSUs, varying cohort sizes)
+    must not break the engine or the compile cache."""
+    rounds, interval = 3, 5.0
+    times = np.arange(rounds + 1, dtype=np.float64) * interval
+    # vehicle 0 in cell 0 always; vehicle 1 leaves all coverage at t>=5
+    x = np.stack([np.full(len(times), 300.0),
+                  300.0 + np.array([0.0, 5000.0, 5000.0, 5000.0])], axis=-1)
+    pos = np.stack([x, np.zeros_like(x)], axis=-1)
+    rsus = np.array([[300.0, 0.0], [900.0, 0.0]])
+    sc = S.TraceReplay(times, pos, rsus,
+                       ch=channel.ChannelConfig(fading_std_db=0.0,
+                                                rsu_range_m=320.0))
+    clients, test = _vector_clients(2)
+    cfg = SimConfig(scheme="asfl", adaptive_strategy="paper", rounds=rounds,
+                    local_steps=1, batch_size=8, lr=1e-2, optimizer="sgd",
+                    round_interval_s=interval, eval_every=0)
+    eng = ScenarioEngine(TinyMLP(), clients, test, cfg, sc)
+    hist = eng.run()
+    assert hist[0].n_scheduled == 2
+    assert hist[1].n_scheduled == 1          # vehicle 1 left all coverage
+    assert all(np.isfinite(m.loss) for m in hist)
+
+
+def test_residence_aware_skip_path_in_engine():
+    """An in-coverage vehicle whose residence fits no cut sits the round out
+    (n_skipped) rather than training."""
+    rounds, interval = 1, 5.0
+    times = np.array([0.0, 5.0])
+    # both vehicles in coverage, but vehicle 1 sits exactly on its cell
+    # border moving outward: zero remaining residence, every cut infeasible
+    x = np.stack([[300.0, 300.0], [1220.0, 1900.0]], axis=-1)
+    pos = np.stack([x, np.zeros_like(x)], axis=-1)
+    rsus = np.array([[300.0, 0.0], [900.0, 0.0]])
+    sc = S.TraceReplay(times, pos, rsus,
+                       ch=channel.ChannelConfig(fading_std_db=0.0,
+                                                rsu_range_m=320.0))
+    st = sc.fleet_state(0.0, 0)
+    assert st.active.all()
+    assert st.residence_s[1] < 0.2           # about to leave its cell
+    clients, test = _vector_clients(2)
+    cfg = SimConfig(scheme="asfl", adaptive_strategy="residence",
+                    rounds=rounds, local_steps=2, batch_size=8, lr=1e-2,
+                    optimizer="sgd", round_interval_s=interval, eval_every=0)
+    eng = ScenarioEngine(TinyMLP(), clients, test, cfg, sc)
+    hist = eng.run()
+    assert hist[0].cuts[1] == adaptive.SKIP
+    assert hist[0].n_skipped >= 1
+    assert np.isfinite(hist[0].loss)
