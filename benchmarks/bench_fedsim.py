@@ -30,7 +30,7 @@ import json
 import math
 import os
 import time
-from typing import List
+from typing import List, Optional, Tuple
 
 import sys
 
@@ -216,21 +216,24 @@ class SeedLoopSim(FederationSim):
 
 
 # ----------------------------------------------------------------- protocol
-def _timed_run(sim) -> float:
+def _timed_run(sim) -> Tuple[float, float]:
     """Warmup run (compiles every round structure), reset, timed re-run.
-    Returns seconds per round."""
+    Returns (warmup seconds, seconds per round)."""
+    t0 = time.perf_counter()
     sim.run()
+    warmup = time.perf_counter() - t0
     sim.reset()
     t0 = time.perf_counter()
     hist = sim.run()
     dt = time.perf_counter() - t0
     assert all(np.isfinite(m.loss) for m in hist)
-    return dt / len(hist)
+    return warmup, dt / len(hist)
 
 
 def bench(sizes: List[int], schemes: List[str], model_kind: str,
           per_client: int, local_steps: int, batch: int, rounds: int,
-          seed_loop_max: int) -> dict:
+          seed_loop_max: int,
+          compilation_cache: Optional[str] = None) -> dict:
     results = []
     for n in sizes:
         if model_kind == "mlp":
@@ -244,15 +247,16 @@ def bench(sizes: List[int], schemes: List[str], model_kind: str,
         for scheme in schemes:
             cfg = SimConfig(scheme=scheme, rounds=rounds,
                             local_steps=local_steps, batch_size=batch,
-                            lr=1e-3, eval_every=0)
+                            lr=1e-3, eval_every=0,
+                            compilation_cache_dir=compilation_cache)
             eng = FederationSim(model_f(), clients, test, cfg)
-            t_eng = _timed_run(eng)
+            t_warm, t_eng = _timed_run(eng)
             row = {"scheme": scheme, "n_clients": n, "mode": eng.engine.mode,
-                   "engine_round_s": t_eng, "seed_round_s": None,
-                   "speedup": None}
+                   "engine_round_s": t_eng, "warmup_s": t_warm,
+                   "seed_round_s": None, "speedup": None}
             if n <= seed_loop_max and scheme in ("sfl", "asfl"):
                 ref = SeedLoopSim(model_f(), clients, test, cfg)
-                t_ref = _timed_run(ref)
+                _, t_ref = _timed_run(ref)
                 row["seed_round_s"] = t_ref
                 row["speedup"] = t_ref / t_eng
                 # both sides consumed identical batch streams & cuts
@@ -268,7 +272,14 @@ def bench(sizes: List[int], schemes: List[str], model_kind: str,
     return {
         "config": {"model": model_kind, "per_client": per_client,
                    "local_steps": local_steps, "batch": batch,
-                   "rounds": rounds, "backend": jax.default_backend()},
+                   "rounds": rounds, "backend": jax.default_backend(),
+                   "compilation_cache": compilation_cache},
+        "warmup_total_s": float(sum(r["warmup_s"] for r in results)),
+        # NOTE: cache-hit detection must happen BEFORE the runs populate the
+        # cache dir — main() fills this in; None means "caller to decide"
+        "compile_cache_hit": None,
+        "rounds_per_s": {f"{r['scheme']}@{r['n_clients']}":
+                         1.0 / r["engine_round_s"] for r in results},
         "results": results,
     }
 
@@ -284,13 +295,18 @@ def main():
     ap.add_argument("--rounds", type=int, default=2)
     ap.add_argument("--seed-loop-max", type=int, default=256,
                     help="largest fleet to also run the seed loop at")
+    ap.add_argument("--compilation-cache", default=None, metavar="DIR",
+                    help="persistent XLA compilation cache directory")
     args = ap.parse_args()
     sizes = [int(s) for s in args.sizes.split(",")]
     schemes = args.schemes.split(",")
 
+    from repro.configs.base import cache_dir_is_warm
+    cache_hit_at_start = cache_dir_is_warm(args.compilation_cache)
     out = bench(sizes, schemes, args.model, args.per_client,
                 args.local_steps, args.batch, args.rounds,
-                args.seed_loop_max)
+                args.seed_loop_max, args.compilation_cache)
+    out["compile_cache_hit"] = cache_hit_at_start
 
     key = [r for r in out["results"]
            if r["scheme"] == "asfl" and r["n_clients"] == 64 and r["speedup"]]

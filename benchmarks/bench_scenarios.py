@@ -1,14 +1,21 @@
 """Scenario-layer benchmark: rounds/s per mobility scenario at fleet scale.
 
-Runs the multi-RSU :class:`ScenarioEngine` (one compiled CohortEngine cohort
-per RSU per round, handover, hierarchical edge->cloud aggregation) over every
-registered scenario at fleet sizes {64, 256}.  The round hot path is the
-compiled cohort program — membership churn from mobility only reshuffles
-rows/buckets (pow2-padded signatures key the compile cache), so the timed
-re-run measures steady-state round throughput with warm caches.
+Runs the multi-RSU :class:`ScenarioEngine` — since ISSUE 3 a fused
+super-step engine (DESIGN.md §8): every round executes all RSUs inside one
+jitted program (on-device segment grouping, cut-as-data), ``--superstep K``
+fuses K rounds into one ``lax.scan`` dispatch with donated carries, and
+warmup is an AOT ``precompile()`` of every signature the run plan needs.
+``--compilation-cache DIR`` wires JAX's persistent compilation cache so a
+second invocation skips XLA entirely (the ``compile_cache_hit`` key records
+whether this run started warm).
 
   PYTHONPATH=src python benchmarks/bench_scenarios.py
   -> BENCH_scenarios.json (repo root) + benchmarks/out/BENCH_scenarios.json
+
+``--check-baseline BASELINE.json [--max-regress 0.30]`` compares this run's
+rounds/s against a committed baseline and exits non-zero on a >30%
+regression (the CI perf smoke); rows missing from the baseline are skipped
+gracefully.
 """
 from __future__ import annotations
 
@@ -25,6 +32,7 @@ import jax
 import numpy as np
 
 from bench_fedsim import MLPUnitModel, make_mlp_fleet_data
+from repro.configs.base import cache_dir_is_warm
 from repro.core import scenario
 from repro.core.fedsim import ScenarioEngine, SimConfig
 
@@ -32,55 +40,117 @@ ROOT = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
 OUT_DIR = os.path.join(os.path.dirname(__file__), "out")
 
 
-def bench_one(name: str, n: int, rounds: int, local_steps: int, batch: int,
-              strategy: str, sync: int) -> dict:
+def bench_one(name: str, n: int, args) -> dict:
     sc = scenario.make_scenario(name, n, seed=n)
     clients, test = make_mlp_fleet_data(n, 64, 48, seed=n)
-    cfg = SimConfig(scheme="asfl", adaptive_strategy=strategy, rounds=rounds,
-                    local_steps=local_steps, batch_size=batch, lr=1e-3,
-                    eval_every=0, round_interval_s=10.0)
+    cfg = SimConfig(scheme="asfl", adaptive_strategy=args.strategy,
+                    rounds=args.rounds, local_steps=args.local_steps,
+                    batch_size=args.batch, lr=1e-3, eval_every=0,
+                    round_interval_s=10.0, superstep=args.superstep,
+                    server_schedule=args.schedule,
+                    slot_capacity=args.slot_capacity,
+                    compilation_cache_dir=args.compilation_cache)
     eng = ScenarioEngine(MLPUnitModel(), clients, test, cfg, sc,
-                         cloud_sync_every=sync)
-    t_warm0 = time.perf_counter()
-    eng.run()                      # warmup: compiles every round structure
-    t_warm = time.perf_counter() - t_warm0
+                         cloud_sync_every=args.sync)
+    t0 = time.perf_counter()
+    eng.precompile()               # AOT: every signature the run will use
+    t_warm = time.perf_counter() - t0
+    eng.run()                      # staging warm-up (no compiles)
     eng.reset()
     t0 = time.perf_counter()
     hist = eng.run()
     dt = time.perf_counter() - t0
     assert all(np.isfinite(m.loss) for m in hist)
-    sched = [m.n_scheduled for m in hist]
+    assert eng.programs.compile_fallbacks == 0
     return {
         "scenario": name, "n_vehicles": n, "n_rsus": len(sc.rsu_positions),
-        "mode": eng.engine.mode, "rounds": rounds,
-        "round_s": dt / rounds, "rounds_per_s": rounds / dt,
+        "mode": eng.mode, "schedule": args.schedule,
+        "superstep": args.superstep, "rounds": args.rounds,
+        "round_s": dt / args.rounds, "rounds_per_s": args.rounds / dt,
         "warmup_s": t_warm,
-        "scheduled_per_round": sched,
+        "scheduled_per_round": [m.n_scheduled for m in hist],
         "handovers": int(sum(m.n_handover for m in hist)),
         "final_loss": float(hist[-1].loss),
     }
+
+
+def check_baseline(out: dict, baseline_path: str, max_regress: float) -> int:
+    """Exit status for the CI perf smoke: 1 if any matching row's rounds/s
+    dropped more than ``max_regress`` below the baseline."""
+    if not os.path.exists(baseline_path):
+        print(f"baseline {baseline_path} missing; skipping perf check")
+        return 0
+    with open(baseline_path) as f:
+        base = json.load(f)
+    # rounds/s is only comparable when the per-round work matches: skip
+    # (don't spuriously fail) if the bench config drifted from the
+    # committed baseline's — that means the baseline needs regenerating
+    keys = ("local_steps", "batch", "strategy", "cloud_sync_every",
+            "superstep", "schedule", "slot_capacity")
+    mismatch = {k: (base.get("config", {}).get(k), out["config"].get(k))
+                for k in keys
+                if base.get("config", {}).get(k) != out["config"].get(k)}
+    if mismatch:
+        print(f"baseline config mismatch {mismatch}; skipping perf check "
+              f"(regenerate {baseline_path})")
+        return 0
+    base_rows = {(r["scenario"], r["n_vehicles"]): r["rounds_per_s"]
+                 for r in base.get("results", [])}
+    failures = []
+    for row in out["results"]:
+        key = (row["scenario"], row["n_vehicles"])
+        if key not in base_rows:
+            print(f"no baseline row for {key}; skipping")
+            continue
+        floor = base_rows[key] * (1.0 - max_regress)
+        status = "OK" if row["rounds_per_s"] >= floor else "REGRESSION"
+        print(f"perf {key}: {row['rounds_per_s']:.2f} r/s vs baseline "
+              f"{base_rows[key]:.2f} (floor {floor:.2f}) {status}")
+        if row["rounds_per_s"] < floor:
+            failures.append(key)
+    if failures:
+        print(f"perf regression >{max_regress:.0%} in rows: {failures}")
+        return 1
+    return 0
 
 
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--sizes", default="64,256")
     ap.add_argument("--scenarios", default=",".join(sorted(scenario.SCENARIOS)))
-    ap.add_argument("--rounds", type=int, default=2)
+    ap.add_argument("--rounds", type=int, default=4)
     ap.add_argument("--local-steps", type=int, default=2)
     ap.add_argument("--batch", type=int, default=8)
     ap.add_argument("--strategy", default="paper",
                     help="cut strategy (paper | residence | ...)")
     ap.add_argument("--sync", type=int, default=1)
+    ap.add_argument("--superstep", type=int, default=8,
+                    help="rounds fused per dispatch (1 = per-round); the "
+                         "default benchmarks the engine's recommended "
+                         "fused operating point")
+    ap.add_argument("--schedule", default="sequential",
+                    choices=["sequential", "parallel"])
+    ap.add_argument("--slot-capacity", default="tight8",
+                    choices=["pow2", "tight8"])
+    ap.add_argument("--compilation-cache", default=None, metavar="DIR",
+                    help="persistent XLA compilation cache directory")
+    ap.add_argument("--check-baseline", default=None, metavar="JSON",
+                    help="compare rounds/s against a committed baseline")
+    ap.add_argument("--max-regress", type=float, default=0.30)
+    ap.add_argument("--no-write", action="store_true",
+                    help="don't overwrite BENCH_scenarios.json")
     args = ap.parse_args()
 
+    cache_hit = cache_dir_is_warm(args.compilation_cache)
     results = []
     for name in args.scenarios.split(","):
         for n in (int(s) for s in args.sizes.split(",")):
-            row = bench_one(name, n, args.rounds, args.local_steps,
-                            args.batch, args.strategy, args.sync)
+            row = bench_one(name, n, args)
             results.append(row)
             print(f"{name:17s} n={n:4d} rsus={row['n_rsus']} "
-                  f"mode={row['mode']:6s} round={row['round_s']*1e3:9.1f} ms "
+                  f"mode={row['mode']:12s} K={args.superstep} "
+                  f"warmup={row['warmup_s']:6.1f}s "
+                  f"round={row['round_s']*1e3:9.1f} ms "
                   f"({row['rounds_per_s']:.2f} rounds/s) "
                   f"handovers={row['handovers']}", flush=True)
 
@@ -88,15 +158,28 @@ def main():
         "config": {"local_steps": args.local_steps, "batch": args.batch,
                    "rounds": args.rounds, "strategy": args.strategy,
                    "cloud_sync_every": args.sync,
+                   "superstep": args.superstep, "schedule": args.schedule,
+                   "slot_capacity": args.slot_capacity,
+                   "compilation_cache": args.compilation_cache,
                    "backend": jax.default_backend()},
+        "warmup_total_s": float(sum(r["warmup_s"] for r in results)),
+        "compile_cache_hit": cache_hit,
+        "rounds_per_s": {f"{r['scenario']}@{r['n_vehicles']}":
+                         r["rounds_per_s"] for r in results},
         "results": results,
     }
-    os.makedirs(OUT_DIR, exist_ok=True)
-    for path in (os.path.join(ROOT, "BENCH_scenarios.json"),
-                 os.path.join(OUT_DIR, "BENCH_scenarios.json")):
-        with open(path, "w") as f:
-            json.dump(out, f, indent=1, default=float)
-    print(f"wrote {os.path.join(ROOT, 'BENCH_scenarios.json')}")
+    if not args.no_write:
+        os.makedirs(OUT_DIR, exist_ok=True)
+        for path in (os.path.join(ROOT, "BENCH_scenarios.json"),
+                     os.path.join(OUT_DIR, "BENCH_scenarios.json")):
+            with open(path, "w") as f:
+                json.dump(out, f, indent=1, default=float)
+        print(f"wrote {os.path.join(ROOT, 'BENCH_scenarios.json')} "
+              f"(warmup_total_s={out['warmup_total_s']:.1f}, "
+              f"cache_hit={cache_hit})")
+
+    if args.check_baseline:
+        sys.exit(check_baseline(out, args.check_baseline, args.max_regress))
 
 
 if __name__ == "__main__":

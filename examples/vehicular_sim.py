@@ -76,16 +76,28 @@ def main():
 def train(n_vehicles: int = 8, rounds: int = 2):
     """Two ASFL rounds over the fleet through the cohort engine: the whole
     round (all buckets, all local steps, the unit-wise FedAvg) runs as one
-    or a few compiled programs with per-vehicle memory-clamped cuts."""
+    or a few compiled programs with per-vehicle memory-clamped cuts.
+
+    Pass ``--compilation-cache DIR`` (after ``--train``) to point JAX's
+    persistent compilation cache at DIR: a second invocation deserializes
+    the compiled round programs instead of re-running XLA (README
+    quickstart / DESIGN.md §8)."""
     from repro.core.fedsim import FederationSim, ResNetModel, SimConfig
     from repro.data.pipeline import make_federated_data
 
+    cache = None
+    if "--compilation-cache" in sys.argv:
+        i = sys.argv.index("--compilation-cache") + 1
+        if i >= len(sys.argv) or sys.argv[i].startswith("--"):
+            sys.exit("--compilation-cache requires a directory argument")
+        cache = sys.argv[i]
     clients, test = make_federated_data(0, n_train=32 * n_vehicles,
                                         n_test=128, n_clients=n_vehicles)
     fleet = channel.make_fleet(n_vehicles, seed=7,
                                memory_budget_bytes=(5e5, 5e7))
     cfg = SimConfig(scheme="asfl", adaptive_strategy="memory", rounds=rounds,
-                    local_steps=2, batch_size=8, lr=1e-3)
+                    local_steps=2, batch_size=8, lr=1e-3,
+                    compilation_cache_dir=cache)
     sim = FederationSim(ResNetModel(), clients, test, cfg, fleet=fleet)
     print(f"\ntraining {n_vehicles} vehicles, scheme=asfl(memory), "
           f"engine mode={sim.engine.mode}")

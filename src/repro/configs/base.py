@@ -187,3 +187,56 @@ INPUT_SHAPES = {
     "decode_32k": ShapeConfig("decode_32k", 32768, 128, "decode"),
     "long_500k": ShapeConfig("long_500k", 524288, 1, "decode"),
 }
+
+
+# --------------------------------------------------------------------------
+# runtime / XLA configuration
+# --------------------------------------------------------------------------
+
+def enable_compilation_cache(cache_dir: str,
+                             min_compile_time_secs: float = 0.0) -> str:
+    """Point JAX's persistent compilation cache at ``cache_dir`` so repeat
+    runs of the same programs (fedsim round programs, fused super-steps,
+    kernels) deserialize compiled binaries instead of re-invoking XLA.
+
+    Wired through ``SimConfig.compilation_cache_dir``, the benchmarks'
+    ``--compilation-cache`` flag, and the examples.  ``min_compile_time_secs
+    = 0`` caches everything — the federation engines compile few, large
+    programs, exactly the shape the cache is built for.  Returns the
+    directory (created if missing) so callers can log it.
+
+    JAX's cache configuration is **process-global**: this latches the cache
+    on for every subsequent compile in the process, and calling it again
+    with a different directory repoints everything (last call wins)."""
+    import os
+
+    import jax
+
+    os.makedirs(cache_dir, exist_ok=True)
+    jax.config.update("jax_compilation_cache_dir", str(cache_dir))
+    jax.config.update("jax_persistent_cache_min_compile_time_secs",
+                      float(min_compile_time_secs))
+    try:  # cache small entries too (knob absent on some jax versions)
+        jax.config.update("jax_persistent_cache_min_entry_size_bytes", -1)
+    except Exception:
+        pass
+    try:
+        # the cache singleton latches its directory on first use: reset so
+        # a dir configured mid-process (engine __init__, bench flags) takes
+        # effect for everything compiled afterwards
+        from jax.experimental.compilation_cache import compilation_cache
+        compilation_cache.reset_cache()
+    except Exception:
+        pass
+    return str(cache_dir)
+
+
+def cache_dir_is_warm(cache_dir) -> bool:
+    """True if ``cache_dir`` already holds persistent-cache entries.  Call
+    BEFORE running anything that compiles — the run itself populates the
+    directory, so probing afterwards always reads warm (the benchmarks'
+    ``compile_cache_hit`` key uses this at startup)."""
+    import os
+
+    return bool(cache_dir and os.path.isdir(cache_dir)
+                and os.listdir(cache_dir))

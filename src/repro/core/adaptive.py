@@ -31,9 +31,10 @@ from __future__ import annotations
 
 from typing import Callable, List, Optional, Sequence, Tuple, Union
 
+import jax.numpy as jnp
 import numpy as np
 
-from repro.core.cost import SplitProfile, sfl_round_cost_arrays
+from repro.core.cost import BWD_FWD_RATIO, SplitProfile, sfl_round_cost_arrays
 
 DEFAULT_CUTS = (2, 4, 6, 8)
 # Threshold rates (bps), R1<=R2<=R3<=R4 as in Eq. 3.  The paper leaves the
@@ -119,6 +120,68 @@ def residence_aware(profile: SplitProfile, rates_bps: Sequence[float],
     first = np.argmax(feasible, axis=1)          # smallest feasible cut
     out = np.where(feasible.any(axis=1), cuts[first], SKIP)
     return [int(c) for c in out]
+
+
+# --------------------------------------------------------------------------
+# traced strategies (the fused super-step path, DESIGN.md §8): same decisions
+# as the numpy strategies above, computed on-device so K rounds of cut
+# selection run inside one compiled program with no host round-trip.
+# --------------------------------------------------------------------------
+
+def paper_threshold_traced(rates_bps,
+                           thresholds: Sequence[float] = DEFAULT_THRESHOLDS,
+                           cuts: Sequence[int] = DEFAULT_CUTS,
+                           literal_eq3: bool = False):
+    """jit-traceable :func:`paper_threshold`: (n,) traced rates -> (n,) int32
+    cuts.  Thresholds/cuts are static closure constants."""
+    rates = jnp.asarray(rates_bps, jnp.float32)
+    bins = jnp.asarray(thresholds[:3], jnp.float32)
+    band = jnp.sum(rates[:, None] > bins[None, :], axis=1)  # digitize(right)
+    cuts_arr = jnp.asarray(cuts, jnp.int32)
+    return cuts_arr[band] if literal_eq3 else cuts_arr[len(cuts) - 1 - band]
+
+
+def latency_matrix_traced(profile: SplitProfile, rates_bps, client_flops,
+                          server_flops: float, n_batches: int, batch: int,
+                          local_epochs: int, candidate_cuts):
+    """(n, k) analytic round latency per candidate cut — the traced core of
+    :func:`sfl_round_cost_arrays` (latency field only), used by the fused
+    residence-aware scheduler."""
+    cuts = np.asarray(list(candidate_cuts), dtype=np.int64)
+    fwd_cum = np.concatenate([[0.0], np.cumsum(profile.unit_fwd_flops)])
+    bytes_cum = np.concatenate([[0.0], np.cumsum(profile.unit_param_bytes)])
+    smashed = np.asarray(profile.smashed_bytes_per_sample)[cuts - 1] * batch
+    steps = n_batches * local_epochs
+    updown = 2.0 * (steps * smashed + bytes_cum[cuts])          # (k,) static
+    c_fwd = fwd_cum[cuts] * batch
+    s_fwd = (fwd_cum[-1] - fwd_cum[cuts] + profile.head_flops) * batch
+    rates = jnp.asarray(rates_bps, jnp.float32)[:, None]
+    flops = jnp.asarray(client_flops, jnp.float32)[:, None]
+    t_client = steps * (1 + BWD_FWD_RATIO) * jnp.asarray(
+        c_fwd, jnp.float32)[None, :] / flops
+    t_server = steps * (1 + BWD_FWD_RATIO) * np.asarray(
+        s_fwd
+        / server_flops, np.float32)[None, :]
+    t_comm = jnp.asarray(updown, jnp.float32)[None, :] \
+        / jnp.maximum(rates / 8.0, 1e-9)
+    return t_client + t_server + t_comm
+
+
+def residence_aware_traced(profile: SplitProfile, rates_bps, client_flops,
+                           server_flops: float, n_batches: int, batch: int,
+                           local_epochs: int, residence_s,
+                           candidate_cuts: Optional[Sequence[int]] = None):
+    """jit-traceable :func:`residence_aware`: (n,) traced rates/residence ->
+    (n,) int32 cuts with :data:`SKIP` where no candidate fits."""
+    cand = sorted(candidate_cuts or range(1, profile.n_units))
+    lat = latency_matrix_traced(profile, rates_bps, client_flops,
+                                server_flops, n_batches, batch, local_epochs,
+                                cand)
+    res = jnp.asarray(residence_s, jnp.float32)[:, None]
+    feasible = lat <= res
+    first = jnp.argmax(feasible, axis=1)
+    cand_arr = jnp.asarray(cand, jnp.int32)
+    return jnp.where(feasible.any(axis=1), cand_arr[first], SKIP)
 
 
 def max_cut_for_budget(profile: SplitProfile,

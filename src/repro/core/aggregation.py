@@ -81,6 +81,26 @@ def unitwise_fedavg(unit_replicas: List[List[Any]],
     return out
 
 
+def stacked_cloud_merge(edge_stack: Any, edge_weights: jnp.ndarray,
+                        fallback: Any) -> Any:
+    """Traced cloud tier over an RSU-stacked edge tree: every leaf of
+    ``edge_stack`` carries the per-RSU edge models on its leading axis and is
+    reduced with one weighted mean (:func:`cloud_aggregate` without the
+    Python list of trees, so it runs inside the fused super-step scan).
+    Zero-weight RSUs are excluded, matching the host path's ``served``
+    filter; when every weight is zero the ``fallback`` tree (the previous
+    global model) is returned unchanged."""
+    w = jnp.asarray(edge_weights, jnp.float32)
+    total = jnp.sum(w)
+    den = jnp.maximum(total, 1.0)
+
+    def f(stacked, fb):
+        num = jnp.tensordot(w, stacked.astype(jnp.float32), axes=(0, 0))
+        return jnp.where(total > 0.0, (num / den).astype(stacked.dtype), fb)
+
+    return jax.tree.map(f, edge_stack, fallback)
+
+
 def edge_aggregate(trees: Sequence[Any], weights: Sequence[float],
                    groups: Sequence[int]):
     """Edge tier of hierarchical FedAvg: one |D_n|-weighted FedAvg per RSU.

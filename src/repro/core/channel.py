@@ -16,6 +16,7 @@ from __future__ import annotations
 import dataclasses
 from typing import List, Sequence, Tuple
 
+import jax.numpy as jnp
 import numpy as np
 
 
@@ -70,6 +71,21 @@ def rates_from_distance(cfg: ChannelConfig, d_m, tx_power_w,
     else:
         fading = 0.0
     return _shannon_rate(cfg, d, tx_power_w, fading)
+
+
+def shannon_rate_traced(cfg: ChannelConfig, d, tx_power_w, fading_db=0.0):
+    """jit-traceable twin of :func:`_shannon_rate` (same formula in jnp), the
+    radio entry point of the fused super-step path: distances and fading may
+    be tracers, the ChannelConfig stays a static closure constant."""
+    d = jnp.maximum(jnp.asarray(d, jnp.float32), 1.0)
+    pl_db = (-cfg.ref_gain_db
+             + 10.0 * cfg.path_loss_exp * jnp.log10(d)
+             + fading_db)
+    p_rx_dbm = 10.0 * jnp.log10(jnp.asarray(tx_power_w, jnp.float32) * 1e3) \
+        - pl_db
+    noise_dbm = cfg.noise_dbm_hz + 10.0 * np.log10(cfg.bandwidth_hz)
+    snr = 10.0 ** ((p_rx_dbm - noise_dbm) / 10.0)
+    return cfg.bandwidth_hz * jnp.log2(1.0 + snr)
 
 
 def distance_at(v: VehicleProfile, t: float) -> float:

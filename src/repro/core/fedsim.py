@@ -36,10 +36,12 @@ import jax.numpy as jnp
 import numpy as np
 from jax import lax
 
+from repro.configs.base import enable_compilation_cache
 from repro.core import adaptive, aggregation, channel, compression, cost
+from repro.core.superstep import SuperStepPrograms
 from repro.data.pipeline import (ClientDataset, StackedClients,
-                                 epoch_batch_indices, fleet_batch_indices,
-                                 sample_batch_indices, stack_clients)
+                                 epoch_batch_indices, sample_batch_indices,
+                                 stack_clients)
 from repro import optim
 
 Params = Any
@@ -118,6 +120,29 @@ class SimConfig:
     # evaluate the global model every k rounds (0 = never; test_acc is NaN
     # for skipped rounds).  Evaluation itself is jitted.
     eval_every: int = 1
+    # ScenarioEngine server schedule (DESIGN.md §8): "sequential" keeps the
+    # source paper's §III-B semantics (the RSU updates its shared server
+    # model on every client batch, in cohort order); "parallel" is the
+    # companion ASFL paper's parallel server-side execution
+    # (arXiv:2405.18707) — one |D_n|-weighted mean-gradient server step per
+    # local step, with every matmul batched over the (RSU, vehicle) axes.
+    server_schedule: str = "sequential"
+    # per-RSU slot-capacity rounding for the fused programs: "pow2" (the
+    # bucket-signature scheme — most stable compile cache) or "tight8"
+    # (next multiple of 8 — up to ~40% fewer padded slots at fleet scale,
+    # a few more signatures under heavy cohort churn)
+    slot_capacity: str = "pow2"
+    # rounds fused per ScenarioEngine super-step (DESIGN.md §8): K rounds of
+    # mobility, scheduling, training, handover, and edge/cloud aggregation
+    # execute as ONE compiled lax.scan with donated carries; 1 = one
+    # dispatch per round (same program, scan length 1)
+    superstep: int = 1
+    # persistent XLA compilation cache directory (None = leave the process
+    # config untouched): second runs of the same programs skip compilation
+    # entirely.  NOTE: JAX's cache config is PROCESS-GLOBAL — setting it on
+    # any engine latches it on for every compile in the process, and the
+    # last configured directory wins (configs.base.enable_compilation_cache)
+    compilation_cache_dir: Optional[str] = None
 
 
 @dataclasses.dataclass
@@ -132,11 +157,7 @@ class RoundMetrics:
 
 
 def _make_opt(cfg: SimConfig):
-    if cfg.optimizer == "adam":
-        return optim.adam(cfg.lr)
-    if cfg.optimizer == "sgd":
-        return optim.sgd(cfg.lr)
-    return optim.momentum(cfg.lr)
+    return optim.from_name(cfg.optimizer, cfg.lr)
 
 
 # --------------------------------------------------------------------------
@@ -788,6 +809,8 @@ class FederationSim:
                  test: Dict[str, jnp.ndarray], cfg: SimConfig,
                  fleet: Optional[List[channel.VehicleProfile]] = None,
                  ch_cfg: Optional[channel.ChannelConfig] = None):
+        if cfg.compilation_cache_dir:
+            enable_compilation_cache(cfg.compilation_cache_dir)
         self.model = model
         self.clients = list(clients)
         self.test = test
@@ -1060,32 +1083,47 @@ class ScenarioRoundMetrics:
 
 
 class ScenarioEngine:
-    """Multi-RSU federation orchestrator: one :class:`CohortEngine` cohort
-    per RSU per round over a pluggable mobility :class:`~repro.core.scenario.
-    Scenario`, with handover and hierarchical edge→cloud aggregation.
+    """Multi-RSU federation orchestrator over a pluggable mobility
+    :class:`~repro.core.scenario.Scenario`, with handover and hierarchical
+    edge→cloud aggregation — executed as **fused super-steps**
+    (:mod:`repro.core.superstep`, DESIGN.md §8).
 
-    Per round (DESIGN.md §7):
+    Per round, inside the compiled program:
 
-    1. Query the scenario for vectorized fleet state (positions, serving
-       RSU, rates, residence times).
-    2. Pick cuts — ``residence_aware`` by default: the largest-offload cut
-       whose analytic round latency fits the vehicle's remaining residence
-       time, SKIP if none fits.
-    3. Group scheduled vehicles by serving RSU and run each RSU's cohort
-       through the shared :class:`CohortEngine` against that RSU's *edge*
-       model.  Dynamic membership never retraces: compiled round programs
-       are keyed by bucket signature (cut, padded size), so join/leave/
-       handover only reshuffles which rows of the device-resident
-       :class:`StackedClients` tensors the round gathers.
-    4. Every ``cloud_sync_every`` rounds, merge the edge models at the cloud
-       tier — a sample-weighted FedAvg across RSUs
-       (:func:`aggregation.cloud_aggregate`), numerically the flat weighted
-       FedAvg of the same cohorts — and re-seed every RSU from the global.
+    1. Fleet state — positions, serving RSU, Shannon rates, residence —
+       from the scenario's traced-step path (or staged per super-step for
+       scenarios without one, e.g. ``urban_grid``).
+    2. Cuts, fleet-wide and on-device: ``paper`` Eq. 3 banding or
+       ``residence``-aware deadline feasibility with SKIP.
+    3. On-device segment grouping (one sort of (serving, cut, vehicle)
+       keys) stacks every RSU's cohort on a leading RSU axis; all RSUs
+       train inside the same program with the cut as *data* (per-unit
+       client/server parameter masking), then unit-wise FedAvg at the edge.
+    4. Every ``cloud_sync_every`` rounds a sample-weighted cloud merge
+       across the RSU axis re-seeds every edge model from the global.
+
+    ``cfg.superstep = K`` fuses K such rounds into one ``lax.scan`` with the
+    carry (edge stack, sample counters, previous serving, global model)
+    donated between dispatches; K = 1 is the per-round dispatch path — the
+    *same* program at scan length 1, which is why fused and sequential
+    execution agree bit-for-bit (tests/test_superstep.py).  On CPU the
+    cut-as-data formulation makes the K=1 path ~2x slower per round than
+    PR 2's static-bucket engine; K >= 4 (with ``slot_capacity="tight8"``)
+    recovers to at-or-above its throughput — set ``superstep`` accordingly
+    when round rate matters (DESIGN.md §8 has the floor analysis).  Dynamic
+    membership never retraces: programs are keyed by the rounded per-RSU
+    slot capacity (``slot_capacity``: pow2, or tight8 = next multiple of
+    8), so join/leave/handover only reshuffles which rows of the
+    device-resident :class:`StackedClients` tensors each round gathers.
 
     Handover semantics: a vehicle's data shard and identity travel with it
     (its rows in the stacked tensors are RSU-agnostic); server-side model
-    and optimizer state stay at the RSU.  The handover cost below charges
-    the vehicle-side sub-model re-download at the new cell.
+    and optimizer state stay at the RSU.  The handover cost charges the
+    vehicle-side sub-model re-download at the new cell.
+
+    What stays in Python: metrics assembly, analytic comm/latency/energy
+    accounting, and evaluation — all fed from per-round scan outputs pulled
+    once per super-step.
     """
 
     def __init__(self, model: UnitModel, clients: Sequence[ClientDataset],
@@ -1100,6 +1138,11 @@ class ScenarioEngine:
                 f"'paper', or 'paper-literal', got "
                 f"{cfg.adaptive_strategy!r} (the single-RSU FederationSim "
                 f"strategies latency/energy/memory are not wired here)")
+        if cfg.slot_capacity not in ("pow2", "tight8"):
+            raise ValueError(f"slot_capacity must be 'pow2' or 'tight8', "
+                             f"got {cfg.slot_capacity!r}")
+        if cfg.compilation_cache_dir:
+            enable_compilation_cache(cfg.compilation_cache_dir)
         self.model = model
         self.clients = list(clients)
         self.test = test
@@ -1110,7 +1153,14 @@ class ScenarioEngine:
         self.profile = model.profile()
         self.lengths = np.array([len(c) for c in clients], dtype=np.int64)
         self.cloud_sync_every = max(int(cloud_sync_every), 1)
-        self.engine = CohortEngine(model, cfg, self.clients)
+        nb, ep = self._nb_ep()
+        self.programs = SuperStepPrograms(
+            model, cfg, stack_clients(self.clients), self.lengths, scenario,
+            self.n_rsus, self.cloud_sync_every, self.profile, nb, ep)
+        self.mode = ("fused-traced" if self.programs.traced_mobility
+                     else "fused-staged")
+        self._cohort_counts: Dict[int, int] = {}
+        self._state_cache: Dict[int, Any] = {}
         self.reset()
 
     def reset(self):
@@ -1118,9 +1168,11 @@ class ScenarioEngine:
         kept (benchmarks time warm re-runs with this)."""
         units, head = self.model.init(jax.random.PRNGKey(self.cfg.seed))
         self.units, self.head = list(units), head
-        self.edge = [(list(units), head) for _ in range(self.n_rsus)]
-        self.edge_samples = np.zeros(self.n_rsus)
-        self.prev_serving = np.full(len(self.clients), -1, np.int32)
+        # the carry holds its own buffers: the whole carry is DONATED to the
+        # next super-step, while self.units/self.head stay valid for
+        # callers between (and after) runs
+        self._carry = self.programs.make_carry(units, head,
+                                               len(self.clients))
         self._sync_count = 0
         self.history: List[ScenarioRoundMetrics] = []
 
@@ -1138,129 +1190,162 @@ class ScenarioEngine:
         nb, ep = self._nb_ep()
         return nb * ep
 
-    def _pick_cuts(self, state) -> np.ndarray:
-        """Fleet-wide cuts from the fleet state (0 = SKIP).  Vectorized —
-        one cost-matrix broadcast, no per-vehicle loop."""
-        c = self.cfg
-        nb, ep = self._nb_ep()
-        strat = c.adaptive_strategy
-        if strat in ("paper", "paper-literal"):
-            cuts = np.asarray(adaptive.paper_threshold(
-                state.rates_bps, literal_eq3=(strat == "paper-literal")))
-        else:  # "residence" (validated in __init__)
-            cuts = np.asarray(adaptive.residence_aware(
-                self.profile, np.maximum(state.rates_bps, 1.0),
-                self.fa["compute_flops"], c.server_flops, nb, c.batch_size,
-                ep, state.residence_s))
+    def _host_state(self, rnd: int):
+        """Cached host fleet state for round ``rnd`` (fleet_state is a pure
+        function of (t, seed), so capacity planning and staged-mobility
+        windows share one evaluation per round)."""
+        st = self._state_cache.get(rnd)
+        if st is None:
+            st = self.scenario.fleet_state(rnd * self.cfg.round_interval_s,
+                                           self.cfg.seed * 1000 + rnd)
+            self._state_cache[rnd] = st
+        return st
+
+    def _capacity(self, horizon: int) -> int:
+        """pow2 per-RSU slot capacity over rounds [0, horizon): the max
+        *covered*-vehicle count of any cell — coverage is deterministic
+        geometry, so this upper-bounds every scheduled cohort the traced
+        scheduler can form, and the pow2 bucketing keeps the compile-cache
+        signature stable under membership churn."""
+        for rnd in range(horizon):
+            if rnd not in self._cohort_counts:
+                s = self._host_state(rnd).serving_rsu
+                c = int(np.bincount(s[s >= 0],
+                                    minlength=self.n_rsus).max()) \
+                    if (s >= 0).any() else 0
+                self._cohort_counts[rnd] = c
+        mx = max([self._cohort_counts[r] for r in range(horizon)] + [1])
+        if self.cfg.slot_capacity == "tight8":
+            return ((mx + 7) // 8) * 8
+        return _pow2(mx)
+
+    def _window_xs(self, rnd0: int, k: int):
+        """Host staging of one super-step window: the round indices, plus —
+        only for scenarios without a traced-step path — the per-round fleet
+        state arrays, stacked over the window."""
+        xs = {"rnd": jnp.arange(rnd0, rnd0 + k, dtype=jnp.int32)}
+        if not self.programs.traced_mobility:
+            states = [self._host_state(rnd) for rnd in range(rnd0, rnd0 + k)]
+            xs["serving"] = jnp.asarray(
+                np.stack([s.serving_rsu for s in states]), jnp.int32)
+            xs["rates"] = jnp.asarray(
+                np.stack([s.rates_bps for s in states]), jnp.float32)
+            xs["residence"] = jnp.asarray(
+                np.stack([s.residence_s for s in states]), jnp.float32)
+        return xs
+
+    def _windows(self, rounds: int):
+        k = max(int(self.cfg.superstep or 1), 1)
+        rnd = 0
+        while rnd < rounds:
+            kk = min(k, rounds - rnd)
+            yield rnd, kk
+            rnd += kk
+
+    # ---- warmup -------------------------------------------------------
+    def precompile(self, rounds: Optional[int] = None) -> List[Any]:
+        """AOT-lower and compile (``.lower().compile()``) every super-step
+        signature the run plan for ``rounds`` (default ``cfg.rounds``) will
+        request, plus the evaluation program — so the run itself never
+        compiles (asserted via ``programs.compile_fallbacks`` in
+        tests/test_superstep.py).  With ``cfg.compilation_cache_dir`` set,
+        repeat processes deserialize these binaries instead of re-invoking
+        XLA.  Returns the compiled signatures."""
+        total = int(rounds if rounds is not None else self.cfg.rounds)
+        cap = self._capacity(max(total, 1))
+        sigs = []
+        for rnd0, kk in self._windows(total):
+            sig = self.programs.signature(kk, cap)
+            if sig in sigs:
+                continue
+            # derive the abstract xs from the real staging path so the
+            # precompiled pytree spec can never drift from what
+            # run_superstep passes (host states are cached, so this is
+            # cheap even for staged-mobility scenarios)
+            xs = jax.tree.map(
+                lambda a: jax.ShapeDtypeStruct(a.shape, a.dtype),
+                self._window_xs(rnd0, kk))
+            self.programs.precompile(sig, self._carry, xs)
+            sigs.append(sig)
+        ev = self.cfg.eval_every
+        if ev and any((r + 1) % self.cloud_sync_every == 0
+                      for r in range(total)):
+            # compile the eval program through its real call path
+            evaluate(self.model, self.units, self.head, self.test)
+        return sigs
+
+    # ---- the rounds ---------------------------------------------------
+    def run_superstep(self, rnd0: int, k: int) -> List[ScenarioRoundMetrics]:
+        """Execute rounds [rnd0, rnd0+k) as ONE compiled program and return
+        their metrics.  The previous carry is donated; per-round arrays come
+        back as scan outputs and are pulled to the host once."""
+        cap = self._capacity(max(self.cfg.rounds, rnd0 + k))
+        sig = self.programs.signature(k, cap)
+        fn = self.programs.get(sig)
+        carry, ys = fn(self._carry, self._window_xs(rnd0, k))
+        ys = jax.tree.map(np.asarray, ys)          # ONE host sync per window
+        if int(ys["counts"].max(initial=0)) > cap:
+            # raise BEFORE committing the window: the window silently
+            # dropped overflow vehicles, so its carry must not become
+            # engine state (the donated previous carry is gone — the engine
+            # needs reset() — but nothing masquerades as valid training)
+            raise RuntimeError(
+                f"per-RSU cohort exceeded slot capacity {cap}; traced vs "
+                f"host association disagree — raise the capacity margin "
+                f"and reset() the engine")
+        self._carry = carry
+        self.units, self.head = self.programs.global_model(carry)
+        out = []
+        eval_due, last_synced = False, None
+        for i in range(k):
+            out.append(self._round_metrics(rnd0 + i, i, ys))
+            if (rnd0 + i + 1) % self.cloud_sync_every == 0:
+                # evaluate every eval_every-th cloud sync (the global model
+                # only changes at syncs) — counted here on the host, since
+                # the fused window keeps no per-round model snapshots
+                ev = self.cfg.eval_every
+                if ev and self._sync_count % ev == 0:
+                    eval_due = True
+                self._sync_count += 1
+                last_synced = i
+        if eval_due and last_synced is not None:
+            # the current global IS the last synced round's model (later
+            # rounds trained edges but did not merge), so attaching the
+            # score there is exact; K=1 reproduces the per-round schedule
+            out[last_synced].test_acc = evaluate(
+                self.model, self.units, self.head, self.test)
+        return out
+
+    def _round_metrics(self, rnd: int, i: int, ys) -> ScenarioRoundMetrics:
+        cuts = ys["cuts"][i].astype(np.int64)
+        serving = ys["serving"][i]
         sched = cuts > 0
-        cuts = np.where(sched,
-                        np.clip(cuts, 1, self.model.n_units - 1), 0)
-        return np.where(state.active, cuts, 0).astype(np.int64)
-
-    def _plan(self, members: np.ndarray, cuts: np.ndarray, rnd: int,
-              rsu: int) -> RoundPlan:
-        """Stage one RSU cohort: vectorized index draw for all members at
-        once, then cut-bucketing with pow2 padding (same compile-cache
-        keying as FederationSim's staging)."""
-        cfgc = self.cfg
-        steps = self._steps()
-        idx_all = fleet_batch_indices(self.lengths[members], steps,
-                                      cfgc.batch_size,
-                                      cfgc.seed + rnd * 977 + rsu * 104729)
-        mcuts = cuts[members]
-        mlen = self.lengths[members]
-        cuts_sig, rows_l, idx_l, mask_l, w_l = [], [], [], [], []
-        for cut in np.unique(mcuts):
-            sel = np.nonzero(mcuts == cut)[0]
-            n_pad = _pow2(len(sel))
-            rows = np.zeros(n_pad, np.int32)
-            rows[:len(sel)] = members[sel]
-            idx = np.zeros((steps, n_pad, cfgc.batch_size), np.int32)
-            idx[:, :len(sel)] = idx_all[:, sel]
-            mask = np.zeros((steps, n_pad), bool)
-            mask[:, :len(sel)] = True
-            w = np.zeros(n_pad, np.float64)
-            w[:len(sel)] = mlen[sel]
-            cuts_sig.append((int(cut), n_pad))
-            rows_l.append(rows)
-            idx_l.append(idx)
-            mask_l.append(mask)
-            w_l.append(w)
-        server_unit_w = ((mcuts[None, :] <= np.arange(self.model.n_units)
-                          [:, None]) * mlen[None, :]).sum(axis=1).astype(
-                              np.float64)
-        return RoundPlan(tuple(cuts_sig), steps, rows_l, idx_l, mask_l, w_l,
-                         server_unit_w)
-
-    # ---- the round ----------------------------------------------------
-    def run_round(self, rnd: int) -> ScenarioRoundMetrics:
-        cfgc = self.cfg
-        t = rnd * cfgc.round_interval_s
-        state = self.scenario.fleet_state(t, cfgc.seed * 1000 + rnd)
-        cuts = self._pick_cuts(state)
-        sched = cuts > 0
-        serving = state.serving_rsu
-        handover = sched & (self.prev_serving >= 0) & \
-            (self.prev_serving != serving)
-
-        ls_tot = cnt_tot = 0.0
-        rsu_loads = [0] * self.n_rsus
-        for r in np.unique(serving[sched]):
-            r = int(r)
-            members = np.nonzero(sched & (serving == r))[0]
-            plan = self._plan(members, cuts, rnd, r)
-            u, h = self.edge[r]
-            u2, h2, ls, cnt = self.engine.split_round(u, h, plan,
-                                                      cfgc.batch_size)
-            self.edge[r] = (u2, h2)
-            self.edge_samples[r] += float(self.lengths[members].sum())
-            ls_tot += float(ls)
-            cnt_tot += float(cnt)
-            rsu_loads[r] = len(members)
-
-        synced = (rnd + 1) % self.cloud_sync_every == 0
-        if synced:
-            served = np.nonzero(self.edge_samples > 0)[0]
-            if len(served):
-                trees = [{"units": list(self.edge[r][0]),
-                          "head": self.edge[r][1]} for r in served]
-                g = aggregation.cloud_aggregate(trees,
-                                                self.edge_samples[served])
-                self.units, self.head = list(g["units"]), g["head"]
-            self.edge = [(list(self.units), self.head)
-                         for _ in range(self.n_rsus)]
-            self.edge_samples[:] = 0.0
-        self.prev_serving = np.where(state.active, serving,
-                                     -1).astype(np.int32)
-
-        comm, lat, energy = self._accounting(state, cuts, sched, handover)
-        # evaluate every eval_every-th cloud sync (the global model only
-        # changes at syncs; counting syncs rather than rounds keeps eval
-        # alive for any (cloud_sync_every, eval_every) combination)
-        ev = cfgc.eval_every
-        if synced and ev and self._sync_count % ev == 0:
-            acc = evaluate(self.model, self.units, self.head, self.test)
-        else:
-            acc = float("nan")
-        if synced:
-            self._sync_count += 1
-        loss = ls_tot / max(cnt_tot, 1.0)
+        active = serving >= 0
+        handover = np.asarray(ys["handover"][i], bool)
+        comm, lat, energy = self._accounting(ys["rates"][i], cuts, sched,
+                                             handover)
+        loss = float(ys["loss"][i]) / max(float(ys["cnt"][i]), 1.0)
         return ScenarioRoundMetrics(
-            rnd, loss, acc, comm, lat, energy,
+            rnd, loss, float("nan"), comm, lat, energy,
             n_scheduled=int(sched.sum()),
-            n_skipped=int((state.active & ~sched).sum()),
+            n_skipped=int((active & ~sched).sum()),
             n_handover=int(handover.sum()),
-            rsu_loads=rsu_loads, cuts=[int(c) for c in cuts])
+            rsu_loads=[int(c) for c in ys["counts"][i]],
+            cuts=[int(c) for c in cuts])
+
+    def run_round(self, rnd: int) -> ScenarioRoundMetrics:
+        return self.run_superstep(rnd, 1)[0]
 
     def run(self) -> List[ScenarioRoundMetrics]:
-        for rnd in range(self.cfg.rounds):
-            self.history.append(self.run_round(rnd))
+        for rnd0, kk in self._windows(self.cfg.rounds):
+            self.history.extend(self.run_superstep(rnd0, kk))
         return self.history
 
-    def _accounting(self, state, cuts, sched, handover):
+    def _accounting(self, rates, cuts, sched, handover):
         """Analytic per-round comm/latency/energy over the scheduled set +
         the handover model-migration bytes (vehicle-side sub-model
-        re-download at the new cell)."""
+        re-download at the new cell).  Pure numpy over arrays the super-step
+        emitted — part of the Python accounting tier by design."""
         cfgc = self.cfg
         act = np.nonzero(sched)[0]
         bytes_cum = np.concatenate(
@@ -1271,7 +1356,7 @@ class ScenarioEngine:
         nb, ep = self._nb_ep()
         rc = cost.sfl_round_cost_arrays(
             self.profile, cuts[act], nb, cfgc.batch_size,
-            np.maximum(state.rates_bps[act], 1.0),
+            np.maximum(np.asarray(rates, np.float64)[act], 1.0),
             self.fa["compute_flops"][act], cfgc.server_flops, ep,
             self.fa["tx_power_w"][act], self.fa["compute_power_w"][act])
         comm_up, comm_down, t_comm = (rc.comm_bytes_up, rc.comm_bytes_down,

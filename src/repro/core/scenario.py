@@ -30,6 +30,8 @@ from __future__ import annotations
 import dataclasses
 from typing import Dict, Optional, Protocol, Sequence, runtime_checkable
 
+import jax
+import jax.numpy as jnp
 import numpy as np
 
 from repro.core import channel
@@ -62,13 +64,29 @@ class FleetState:
         return self.positions.shape[0]
 
 
+# a pytree, so traced-step paths can hand FleetStates across jit boundaries
+jax.tree_util.register_pytree_node(
+    FleetState,
+    lambda s: ((s.t, s.positions, s.velocities, s.serving_rsu, s.rates_bps,
+                s.residence_s), None),
+    lambda _, c: FleetState(*c))
+
+
 @runtime_checkable
 class Scenario(Protocol):
     """A mobility scenario: static RSU deployment + a fleet-state query.
 
     ``fleet_state(t, seed)`` must be a pure function of (t, seed) so the
     simulator can replay rounds deterministically (benchmark warm re-runs,
-    parity tests)."""
+    parity tests).
+
+    Scenarios may additionally provide a **traced-step path**
+    ``traced_fleet_state(t, key)`` (t a traced scalar, key a jax PRNG key or
+    None) returning a :class:`FleetState` of jnp arrays.  The fused
+    super-step engine (DESIGN.md §8) calls it *inside* its round scan so K
+    rounds of mobility, association, and rate sampling never return to
+    Python; scenarios without it are staged per-window on the host instead
+    (see ``ScenarioEngine``)."""
     name: str
     n_vehicles: int
     rsu_positions: np.ndarray          # (n_rsus, 2) planar RSU positions
@@ -117,6 +135,41 @@ def _rates_to_serving(ch: channel.ChannelConfig, planar_dist: np.ndarray,
     d = np.sqrt(planar_dist ** 2 + RSU_HEIGHT_M ** 2)
     rates = channel.rates_from_distance(ch, d, tx_power_w, seed)
     return np.where(serving >= 0, rates, 0.0)
+
+
+def nearest_rsu_traced(positions, rsu_positions: np.ndarray, range_m: float):
+    """jit-traceable :func:`nearest_rsu`: positions may be a tracer, the RSU
+    deployment is a static constant."""
+    rsus = jnp.asarray(rsu_positions, jnp.float32)
+    diff = positions[:, None, :] - rsus[None, :, :]
+    d2 = jnp.einsum("nmd,nmd->nm", diff, diff)
+    serving = jnp.argmin(d2, axis=1).astype(jnp.int32)
+    dmin = jnp.sqrt(jnp.take_along_axis(d2, serving[:, None], axis=1)[:, 0])
+    return jnp.where(dmin <= range_m, serving, -1), dmin
+
+
+def coverage_exit_time_traced(positions, velocities, centers, range_m: float):
+    """jit-traceable :func:`coverage_exit_time` (same quadratic)."""
+    rel = positions - centers
+    a = jnp.einsum("nd,nd->n", velocities, velocities)
+    b = 2.0 * jnp.einsum("nd,nd->n", rel, velocities)
+    c = jnp.einsum("nd,nd->n", rel, rel) - range_m ** 2
+    disc = jnp.maximum(b * b - 4.0 * a * c, 0.0)
+    t_exit = (-b + jnp.sqrt(disc)) / jnp.maximum(2.0 * a, 1e-12)
+    t_exit = jnp.where(a > 1e-12, t_exit, RESIDENCE_CAP_S)
+    return jnp.clip(t_exit, 0.0, RESIDENCE_CAP_S)
+
+
+def _rates_to_serving_traced(ch: channel.ChannelConfig, planar_dist,
+                             tx_power_w, serving, key):
+    """Traced twin of :func:`_rates_to_serving`: one shadow-fading draw per
+    vehicle from ``key`` (None, or fading disabled, means no fading)."""
+    d = jnp.sqrt(planar_dist ** 2 + RSU_HEIGHT_M ** 2)
+    fading = 0.0
+    if key is not None and ch.fading_std_db > 0:
+        fading = ch.fading_std_db * jax.random.normal(key, planar_dist.shape)
+    rates = channel.shannon_rate_traced(ch, d, tx_power_w, fading)
+    return jnp.where(serving >= 0, rates, 0.0)
 
 
 def _resolve_fleet(n: int, seed: int, fleet) -> Dict[str, np.ndarray]:
@@ -182,6 +235,25 @@ class HighwayCorridor:
         t_exit = coverage_exit_time(pos, vel, centers, self.ch.rsu_range_m)
         t_wrap = (self.road_len_m - x) / np.maximum(self._speed, 1e-9)
         res = np.where(serving >= 0, np.minimum(t_exit, t_wrap), 0.0)
+        return FleetState(t, pos, vel, serving, rates, res)
+
+    def traced_fleet_state(self, t, key) -> FleetState:
+        """Traced-step path: the same kinematics/association/radio math in
+        jnp, so the fused super-step scan advances the corridor on-device."""
+        speed = jnp.asarray(self._speed, jnp.float32)
+        x = (jnp.asarray(self._x0, jnp.float32) + speed * t) % self.road_len_m
+        pos = jnp.stack([x, jnp.asarray(self._y, jnp.float32)], axis=-1)
+        vel = jnp.stack([speed, jnp.zeros_like(speed)], axis=-1)
+        serving, dist = nearest_rsu_traced(pos, self.rsu_positions,
+                                           self.ch.rsu_range_m)
+        tx = jnp.asarray(self.fleet_arrays["tx_power_w"], jnp.float32)
+        rates = _rates_to_serving_traced(self.ch, dist, tx, serving, key)
+        centers = jnp.asarray(self.rsu_positions, jnp.float32)[
+            jnp.maximum(serving, 0)]
+        t_exit = coverage_exit_time_traced(pos, vel, centers,
+                                           self.ch.rsu_range_m)
+        t_wrap = (self.road_len_m - x) / jnp.maximum(speed, 1e-9)
+        res = jnp.where(serving >= 0, jnp.minimum(t_exit, t_wrap), 0.0)
         return FleetState(t, pos, vel, serving, rates, res)
 
 
@@ -353,6 +425,25 @@ class TraceReplay:
         return FleetState(float(self.times[i]), self.positions[i],
                           self._vel[i], serving, rates,
                           np.where(serving >= 0, self._residence[i], 0.0))
+
+    def traced_fleet_state(self, t, key) -> FleetState:
+        """Traced-step path: the precomputed per-step association/distance/
+        residence tables become on-device constants indexed by the (traced)
+        trace step — exactly the host tables, so fused and per-round
+        dispatch paths see identical states (fading-free traces exactly)."""
+        times = jnp.asarray(self.times, jnp.float32)
+        i = jnp.clip(jnp.searchsorted(times, t, side="right") - 1, 0,
+                     len(self.times) - 1)
+        serving = jnp.asarray(self._serving)[i]
+        dist = jnp.asarray(self._dist, jnp.float32)[i]
+        tx = jnp.asarray(self.fleet_arrays["tx_power_w"], jnp.float32)
+        rates = _rates_to_serving_traced(self.ch, dist, tx, serving, key)
+        res = jnp.where(serving >= 0,
+                        jnp.asarray(self._residence, jnp.float32)[i], 0.0)
+        return FleetState(times[i], jnp.asarray(self.positions,
+                                                jnp.float32)[i],
+                          jnp.asarray(self._vel, jnp.float32)[i],
+                          serving, rates, res)
 
 
 def crossing_trace(n_vehicles: int, n_rsus: int = 2, t_end: float = 120.0,

@@ -1,0 +1,522 @@
+"""Fused multi-RSU super-steps (DESIGN.md §8).
+
+PR 2's :class:`~repro.core.fedsim.ScenarioEngine` ran one compiled
+CohortEngine cohort **per RSU per round** from a Python loop: an
+``np.unique(serving[sched])`` host sync, per-RSU boolean indexing and numpy
+staging, one jit dispatch plus a blocking ``float(loss)`` pull per RSU, and
+a host-side Python FedAvg at every cloud sync.  At 256 vehicles that Python
+orbit bounded round throughput, and warmup compiled one program per (bucket
+signature, RSU cohort structure) pair: ~53-58 s before the first round
+(BENCH_scenarios.json).
+
+This module restructures the hot path around four ideas:
+
+* **All RSUs execute inside one jitted program.**  Per-RSU cohorts are
+  stacked on a leading RSU axis and ``vmap``-ed; membership grouping is one
+  on-device segment sort of (serving, cut, vehicle) keys — replacing
+  ``np.unique`` + per-RSU boolean indexing while preserving the engine's
+  canonical server-update order (ascending cut, then vehicle index, per
+  RSU).  The pow2 per-RSU slot capacity plays the role of PR 1's pow2
+  bucket signatures: membership churn from mobility/handover only
+  reshuffles gather indices, never the compiled program.
+
+* **The cut layer is data, on a flat parameter plane.**  The whole
+  ``{units, head}`` pytree is ravelled once into a single (P,) vector with
+  a static ``unit_ids`` position→unit map
+  (``jax.flatten_util.ravel_pytree``).  A vehicle at cut c owns the
+  positions with ``unit_ids < c``; the RSU owns the rest.  Heterogeneous
+  cuts, gradient routing, masked optimizer updates, and the unit-wise
+  FedAvg become a few fused vector ops, so dynamic cut churn (residence-
+  aware SKIP, rate banding) never retraces anything.
+
+* **Two server schedules, one engine.**  ``sequential`` keeps the source
+  paper's §III-B semantics — the RSU updates its shared server-side model
+  on every client batch, in cohort order — as a ``lax.scan`` over slots
+  (client-replica optimizer updates are deferred out of that scan and
+  applied vmapped per local step, which is the identical math since each
+  replica is touched once per step).  ``parallel`` implements the
+  companion paper's parallel server-side execution (arXiv:2405.18707,
+  "Adaptive and Parallel Split Federated Learning in Vehicular Edge
+  Computing"): the RSU consumes the whole cohort's smashed batches at once
+  and takes one |D_n|-weighted mean-gradient step per local step.  The
+  parallel schedule has no sequential inner loop at all — every matmul in
+  the round batches across the (RSU, slot) axes, which is what lets fleet-
+  scale rounds run at the hardware's batched-matmul throughput instead of
+  the tiny-matmul scan throughput (~10x apart on CPU; see DESIGN.md §8).
+
+* **K rounds fuse into one super-step** via ``lax.scan`` over rounds:
+  mobility (scenario traced-step path), rate sampling, cut selection,
+  batch staging, training, handover tracking, edge aggregation, and the
+  periodic cloud merge all live in the scanned round body, with the carry
+  (edge-model stack, edge sample counters, previous serving cells, global
+  model) donated between super-steps.  The per-round dispatch path is the
+  K=1 special case of the same program, which is why K-fused and
+  K-sequential execution agree bit-for-bit (tests/test_superstep.py).
+
+Warmup collapses with it: :meth:`SuperStepPrograms.precompile` AOT-lowers
+(``.lower().compile()``) every signature a run plan will request, and the
+engine wires JAX's persistent compilation cache so warm starts skip XLA
+entirely.
+
+What stays in Python, by design: logging, round-metrics assembly, and the
+analytic comm/latency/energy accounting — all consume the per-round arrays
+the super-step emits as scan outputs, pulled to the host **once per
+super-step** instead of several times per round.
+
+Caveats: the flat plane requires a uniform parameter dtype (the current
+UnitModels are float32 throughout), and a full-model replica is
+materialized per slot — the price of making the cut a runtime value.
+Memory is ``O(n_rsus * capacity * P)`` for replicas plus optimizer
+moments.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+from jax.flatten_util import ravel_pytree
+
+from repro.core import adaptive, aggregation
+from repro.data.pipeline import StackedClients, fleet_batch_indices_traced
+from repro import optim
+
+SERVER_SCHEDULES = ("sequential", "parallel")
+
+
+def tree_copy(tree):
+    """Deep copy device buffers (public views of donated carries must not
+    alias buffers a later super-step will consume)."""
+    return jax.tree.map(lambda a: jnp.array(a, copy=True), tree)
+
+
+def _select(mask, new, old):
+    """tree_map(where): pick ``new`` where mask else ``old``; the mask
+    broadcasts from the left (scalar masks select whole trees)."""
+    mask = jnp.asarray(mask)
+
+    def f(a, b):
+        m = mask.reshape(mask.shape + (1,) * (a.ndim - mask.ndim))
+        return jnp.where(m, a, b)
+
+    return jax.tree.map(f, new, old)
+
+
+def _sel_list_state(new: Dict, old: Dict, keep_units, act):
+    """Per-unit select over an optimizer state whose array collections are
+    *lists* mirroring a client replica's unit list (bookkeeping leaves —
+    step counts — follow the per-replica ``act`` mask)."""
+    out = {}
+    for k, v in new.items():
+        if isinstance(v, list):
+            out[k] = [_select(keep_units[u], v[u], old[k][u])
+                      for u in range(len(v))]
+        else:
+            out[k] = _select(act, v, old[k])
+    return out
+
+
+def _sel_server_state(new: Dict, old: Dict, keep_units, act):
+    """Per-unit select over the server optimizer state (leaves mirror the
+    ``{"units": [...], "head": ...}`` tree)."""
+    out = {}
+    for k, v in new.items():
+        if isinstance(v, dict) and "units" in v:
+            out[k] = {"units": [_select(keep_units[u], v["units"][u],
+                                        old[k]["units"][u])
+                                for u in range(len(v["units"]))],
+                      "head": _select(act, v["head"], old[k]["head"])}
+        else:
+            out[k] = _select(act, v, old[k])
+    return out
+
+
+def _sel_flat_state(keep, act, new, old, params_shape):
+    """Select a flat-plane optimizer state: leaves shaped like the (flat)
+    parameters follow the per-position ``keep`` mask, bookkeeping leaves
+    (step counts) follow ``act``."""
+    def f(a, b):
+        if a.shape == tuple(params_shape):
+            return jnp.where(keep, a, b)
+        return jnp.where(act, a, b)
+
+    return jax.tree.map(f, new, old)
+
+
+@dataclasses.dataclass(frozen=True)
+class SuperStepSignature:
+    """Static compile-cache key of one fused program."""
+    k: int            # rounds fused into the scan
+    capacity: int     # pow2 per-RSU slot capacity
+    staged: bool      # True: mobility staged per-window on the host
+
+
+class SuperStepPrograms:
+    """Builds, caches, and AOT-precompiles fused super-step programs for one
+    (model, config, fleet, scenario) tuple.  ``ScenarioEngine`` owns one.
+
+    ``compile_fallbacks`` counts programs that had to be built outside
+    :meth:`precompile` — zero after a covering precompile means no silent
+    mid-run recompiles (asserted in tests/test_superstep.py)."""
+
+    def __init__(self, model, cfg, stacked: StackedClients,
+                 lengths: np.ndarray, scenario, n_rsus: int,
+                 cloud_sync_every: int, profile, nb: int, ep: int):
+        self.model = model
+        self.cfg = cfg
+        self.opt = optim.from_name(cfg.optimizer, cfg.lr)
+        self.schedule = getattr(cfg, "server_schedule", "sequential")
+        if self.schedule not in SERVER_SCHEDULES:
+            raise ValueError(f"server_schedule must be one of "
+                             f"{SERVER_SCHEDULES}, got {self.schedule!r}")
+        self.stacked = stacked
+        self.lengths = np.asarray(lengths, np.int64)
+        self.scenario = scenario
+        self.n_rsus = n_rsus
+        self.n_vehicles = int(len(lengths))
+        self.sync_every = cloud_sync_every
+        self.profile = profile
+        self.nb, self.ep = nb, ep
+        self.steps = nb * ep
+        self.fa = scenario.fleet_arrays
+        self._programs: Dict[SuperStepSignature, Callable] = {}
+        self.compile_fallbacks = 0
+        self.traced_mobility = hasattr(scenario, "traced_fleet_state")
+        # the flat parameter plane: one (P,) vector for {units, head}, plus
+        # the static position->unit map that makes the cut a runtime value
+        units, head = model.init(jax.random.PRNGKey(cfg.seed))
+        template = {"units": list(units), "head": head}
+        flat, self.unravel = ravel_pytree(template)
+        if flat.dtype != jnp.float32:
+            raise TypeError(
+                f"superstep engine requires uniform float32 params, got "
+                f"{flat.dtype} after ravel")
+        self.n_params = int(flat.size)
+        ids = {"units": [jax.tree.map(
+            lambda a, _u=u: np.full(np.shape(a), _u, np.int32), ut)
+            for u, ut in enumerate(units)],
+            "head": jax.tree.map(
+                lambda a: np.full(np.shape(a), model.n_units, np.int32),
+                head)}
+        self.unit_ids = ravel_pytree(ids)[0].astype(jnp.int32)
+
+    def flatten(self, units, head) -> jnp.ndarray:
+        return ravel_pytree({"units": list(units), "head": head})[0]
+
+    def make_carry(self, units, head, n_vehicles: int):
+        """Fresh super-step carry for the engine's schedule.  Every buffer
+        belongs to the carry alone (the whole carry is donated to each
+        dispatch); the sequential schedule keeps pytree edges, the parallel
+        schedule keeps the flat plane."""
+        R = self.n_rsus
+        if self.schedule == "sequential":
+            stackR = lambda t: jax.tree.map(
+                lambda a: jnp.broadcast_to(a, (R,) + a.shape), t)
+            edge = {"units": [stackR(u) for u in units],
+                    "head": stackR(head)}
+            glob = tree_copy({"units": list(units), "head": head})
+        else:
+            flat = self.flatten(units, head)
+            edge = jnp.broadcast_to(flat, (R, self.n_params))
+            glob = jnp.array(flat, copy=True)
+        return {"edge": edge,
+                "samples": jnp.zeros((R,), jnp.float32),
+                "prev": jnp.full((n_vehicles,), -1, jnp.int32),
+                "global": glob}
+
+    def global_model(self, carry):
+        """(units, head) view of the carry's global model, in fresh buffers
+        callers may hold across the next (donating) dispatch."""
+        if self.schedule == "sequential":
+            g = tree_copy(carry["global"])
+        else:
+            g = self.unravel(carry["global"])
+        return list(g["units"]), g["head"]
+
+    # ---- program construction ----------------------------------------
+    def _build(self, sig: SuperStepSignature):
+        model, cfg, opt = self.model, self.cfg, self.opt
+        U = model.n_units
+        R, C, n = self.n_rsus, sig.capacity, self.n_vehicles
+        P = self.n_params
+        steps, batch = self.steps, cfg.batch_size
+        interval = float(cfg.round_interval_s)
+        sync_every = self.sync_every
+        nb, ep = self.nb, self.ep
+        sc = self.scenario
+        unravel = self.unravel
+        unit_ids = self.unit_ids
+        images, labels = self.stacked.images, self.stacked.labels
+        lengths_dev = jnp.asarray(self.lengths, jnp.int32)
+        lengths_f = jnp.asarray(self.lengths, jnp.float32)
+        flops = jnp.asarray(self.fa["compute_flops"], jnp.float32)
+        base_key = jax.random.PRNGKey(cfg.seed)
+        fading_key = jax.random.PRNGKey(cfg.seed ^ 0x5EED5EED)
+        strategy = cfg.adaptive_strategy
+        slot_ids = jnp.arange(C, dtype=jnp.int32)
+
+        def pick_cuts(serving, rates, residence):
+            """(n,) int32 cuts, 0 = SKIP/uncovered (traced twin of the PR 2
+            host strategy dispatch)."""
+            if strategy in ("paper", "paper-literal"):
+                cuts = adaptive.paper_threshold_traced(
+                    rates, literal_eq3=(strategy == "paper-literal"))
+            else:  # "residence" (validated by ScenarioEngine.__init__)
+                cuts = adaptive.residence_aware_traced(
+                    self.profile, jnp.maximum(rates, 1.0), flops,
+                    cfg.server_flops, nb, batch, ep, residence)
+            sched = cuts > 0
+            cuts = jnp.where(sched, jnp.clip(cuts, 1, U - 1), 0)
+            return jnp.where(serving >= 0, cuts, 0).astype(jnp.int32)
+
+        def slot_table(serving, cuts):
+            """On-device segment grouping: one sort of (serving, cut,
+            vehicle) keys -> per-RSU member slots.  Replaces the host-side
+            ``np.unique`` + boolean indexing, preserving the ascending
+            (cut, vehicle) server-update order per RSU."""
+            sched = cuts > 0
+            seg = jnp.where(sched, serving, R).astype(jnp.int32)
+            key = seg * (U * n) + cuts * n + jnp.arange(n, dtype=jnp.int32)
+            order = jnp.argsort(key).astype(jnp.int32)
+            counts = jnp.sum(seg[None, :] == jnp.arange(R, dtype=jnp.int32)
+                             [:, None], axis=1).astype(jnp.int32)
+            starts = jnp.concatenate(
+                [jnp.zeros((1,), jnp.int32), jnp.cumsum(counts)[:-1]])
+            flat = jnp.clip(starts[:, None] + slot_ids[None, :], 0, n - 1)
+            members = order[flat]                        # (R, C)
+            mask = slot_ids[None, :] < counts[:, None]   # (R, C)
+            return members, mask, counts
+
+        def loss_fn(units, head, x, y):
+            feats = model.apply_units(units, x, 0)
+            loss, logits = model.head_loss(head, feats, y)
+            return loss, logits
+
+        # ---- sequential schedule (paper §III-B: the RSU consumes the
+        # cohort's smashed batches one at a time, in slot order) ---------
+        def seq_slot_body(carry, inp):
+            """One client batch at one slot: the full unit stack, with the
+            units before the slot's cut taken from its replica and the rest
+            from the RSU copy.  Only the RSU state mutates here; client
+            gradients stream out as scan outputs and are applied vmapped
+            after the slot scan (each replica is touched once per step, so
+            deferring its update out of the sequential body is identical
+            math at a fraction of the op count)."""
+            sv, so = carry
+            cu_j, m_j, cut_j, act, idx_j = inp
+            x = images[m_j][idx_j]
+            y = labels[m_j][idx_j]
+            eff = [_select(u < cut_j, cu_j[u], sv["units"][u])
+                   for u in range(U)]
+            (loss, _), (g_units, g_head) = jax.value_and_grad(
+                loss_fn, argnums=(0, 1), has_aux=True)(eff, sv["head"], x, y)
+            keep_s = [act & (u >= cut_j) for u in range(U)]
+            g_sv = {"units": [_select(u >= cut_j, g_units[u],
+                                      jax.tree.map(jnp.zeros_like,
+                                                   g_units[u]))
+                              for u in range(U)],
+                    "head": g_head}
+            upd, so2 = opt.update(g_sv, so, sv)
+            sv2 = optim.apply_updates(sv, upd)
+            sv3 = {"units": [_select(keep_s[u], sv2["units"][u],
+                                     sv["units"][u]) for u in range(U)],
+                   "head": _select(act, sv2["head"], sv["head"])}
+            so3 = _sel_server_state(so2, so, keep_s, act)
+            return (sv3, so3), (g_units, jnp.where(act, loss, 0.0))
+
+        def rsu_round_seq(edge_tree, members, mask, cut_slots, idx_slots):
+            """One RSU's whole round (replica init, every local step,
+            unit-wise FedAvg) with the sequential server schedule — vmapped
+            across the RSU axis by the round body.  Params stay in pytree
+            form here: the sequential slot scan is dominated by per-slot
+            tree math, and ravelling in/out of the flat plane per round
+            measurably loses to plain trees on CPU."""
+            sv = {"units": list(edge_tree["units"]),
+                  "head": edge_tree["head"]}
+            so = opt.init(sv)
+            cu = [jax.tree.map(
+                lambda a: jnp.broadcast_to(a, (C,) + a.shape), u)
+                for u in edge_tree["units"]]
+            co = jax.vmap(opt.init)(cu)
+            w_slots = lengths_f[members] * mask          # (C,)
+            keep_cu = [mask & (cut_slots > u) for u in range(U)]
+
+            def step_body(carry, idx_s):
+                sv, so, cu, co = carry
+                (sv, so), (g_cu, losses) = lax.scan(
+                    seq_slot_body, (sv, so),
+                    (cu, members, cut_slots, mask, idx_s),
+                    unroll=2 if C >= 64 else 1)
+                upd_c, co2 = jax.vmap(opt.update)(g_cu, co, cu)
+                cu2 = optim.apply_updates(cu, upd_c)
+                cu = [_select(keep_cu[u], cu2[u], cu[u]) for u in range(U)]
+                co = _sel_list_state(co2, co, keep_cu, jnp.asarray(mask))
+                return (sv, so, cu, co), (jnp.sum(losses),
+                                          jnp.sum(mask.astype(jnp.float32)))
+
+            (sv, so, cu, co), (ls, cs) = lax.scan(
+                step_body, (sv, so, cu, co), idx_slots,
+                unroll=min(steps, 2))
+            w_total = jnp.sum(w_slots)
+            den = jnp.maximum(w_total, 1.0)
+            merged = []
+            for u in range(U):
+                w_u = w_slots * (cut_slots > u)
+                swu = w_total - jnp.sum(w_u)
+                num = aggregation.stacked_weighted_sum(cu[u], w_u)
+                num = jax.tree.map(
+                    lambda nm, s: nm + swu * s.astype(jnp.float32),
+                    num, sv["units"][u])
+                merged.append(jax.tree.map(
+                    lambda nm, ref: jnp.where(
+                        w_total > 0.0, (nm / den).astype(ref.dtype), ref),
+                    num, edge_tree["units"][u]))
+            out = {"units": merged, "head": sv["head"]}
+            return out, jnp.sum(ls), jnp.sum(cs), w_total
+
+        # ---- parallel schedule (arXiv:2405.18707: the RSU executes the
+        # cohort's server-side passes in parallel and takes one weighted
+        # mean-gradient step per local step) ------------------------------
+        def par_slot_grad(cu_j, cut_j, m_j, idx_j, sv):
+            x = images[m_j][idx_j]
+            y = labels[m_j][idx_j]
+            eff = unravel(jnp.where(unit_ids < cut_j, cu_j, sv))
+            (loss, _), (g_units, g_head) = jax.value_and_grad(
+                loss_fn, argnums=(0, 1), has_aux=True)(
+                    eff["units"], eff["head"], x, y)
+            return ravel_pytree({"units": list(g_units),
+                                 "head": g_head})[0], loss
+
+        def rsu_round_par(edge_flat, members, mask, cut_slots, idx_slots):
+            """One RSU's whole round with the parallel server schedule:
+            every op batches over the slot axis — no sequential inner
+            loop."""
+            cu = jnp.broadcast_to(edge_flat, (C, P))
+            co = jax.vmap(opt.init)(cu)
+            sv, so = edge_flat, opt.init(edge_flat)
+            w_slots = lengths_f[members] * mask          # (C,)
+            w_total = jnp.sum(w_slots)
+            any_active = w_total > 0.0
+            # (C, P): positions each slot's replica owns while active
+            keep_c = mask[:, None] & (unit_ids[None, :] < cut_slots[:, None])
+            gw = (w_slots / jnp.maximum(w_total, 1.0))[:, None]
+
+            def step_body(carry, idx_s):
+                sv, so, cu, co = carry
+                g, losses = jax.vmap(
+                    par_slot_grad, in_axes=(0, 0, 0, 0, None))(
+                        cu, cut_slots, members, idx_s, sv)
+                # RSU: one |D_n|-weighted mean-gradient step over the
+                # cohort's server-side gradient shares
+                g_srv = jnp.sum(jnp.where(keep_c, 0.0, g) * gw, axis=0)
+                upd_s, so2 = opt.update(g_srv, so, sv)
+                sv = jnp.where(any_active, optim.apply_updates(sv, upd_s),
+                               sv)
+                so = _sel_flat_state(any_active, any_active, so2, so,
+                                     sv.shape)
+                # vehicles: per-replica updates, batched over the slot axis
+                upd_c, co2 = jax.vmap(opt.update)(g, co, cu)
+                cu = jnp.where(keep_c, optim.apply_updates(cu, upd_c), cu)
+                co = _sel_flat_state(keep_c, mask, co2, co, cu.shape)
+                return (sv, so, cu, co), (
+                    jnp.sum(jnp.where(mask, losses, 0.0)),
+                    jnp.sum(mask.astype(jnp.float32)))
+
+            (sv, so, cu, co), (ls, cs) = lax.scan(
+                step_body, (sv, so, cu, co), idx_slots,
+                unroll=min(steps, 4))
+            # unit-wise FedAvg on the flat plane: two fused reductions
+            wk = w_slots[:, None] * keep_c               # (C, P)
+            num = jnp.sum(wk * cu, axis=0)
+            w_srv = w_total - jnp.sum(wk, axis=0)
+            merged = (num + w_srv * sv) / jnp.maximum(w_total, 1.0)
+            merged = jnp.where(any_active, merged, edge_flat)
+            return merged, jnp.sum(ls), jnp.sum(cs), w_total
+
+        rsu_round = (rsu_round_seq if self.schedule == "sequential"
+                     else rsu_round_par)
+
+        def round_body(carry, x):
+            rnd = x["rnd"]
+            if sig.staged:
+                serving = x["serving"]
+                rates = x["rates"]
+                residence = x["residence"]
+            else:
+                t = rnd.astype(jnp.float32) * interval
+                fkey = jax.random.fold_in(fading_key, rnd)
+                st = sc.traced_fleet_state(t, fkey)
+                serving, rates, residence = (st.serving_rsu, st.rates_bps,
+                                             st.residence_s)
+            cuts = pick_cuts(serving, rates, residence)
+            members, mask, counts = slot_table(serving, cuts)
+            idx_all = fleet_batch_indices_traced(
+                jax.random.fold_in(base_key, rnd), lengths_dev, steps, batch)
+            idx_rsu = jnp.moveaxis(idx_all[:, members], 1, 0)  # (R,steps,C,B)
+            cut_slots = cuts[members]
+            edge, ls, cs, w_tot = jax.vmap(rsu_round)(
+                carry["edge"], members, mask, cut_slots, idx_rsu)
+            samples = carry["samples"] + w_tot
+            sched = cuts > 0
+            handover = sched & (carry["prev"] >= 0) \
+                & (carry["prev"] != serving)
+            prev = jnp.where(serving >= 0, serving, -1).astype(jnp.int32)
+            synced = (rnd + 1) % sync_every == 0
+            merged_global = aggregation.stacked_cloud_merge(
+                edge, samples, carry["global"])
+            carry2 = {
+                "edge": jax.tree.map(
+                    lambda stacked, g: jnp.where(
+                        synced, jnp.broadcast_to(g, stacked.shape), stacked),
+                    edge, merged_global),
+                "samples": jnp.where(synced, jnp.zeros_like(samples),
+                                     samples),
+                "prev": prev,
+                "global": jax.tree.map(
+                    lambda g, old: jnp.where(synced, g, old),
+                    merged_global, carry["global"]),
+            }
+            ys = {"loss": jnp.sum(ls), "cnt": jnp.sum(cs), "cuts": cuts,
+                  "serving": serving.astype(jnp.int32),
+                  "rates": rates.astype(jnp.float32),
+                  "handover": handover, "counts": counts}
+            return carry2, ys
+
+        def superstep(carry, xs):
+            return lax.scan(round_body, carry, xs)
+
+        return jax.jit(superstep, donate_argnums=(0,))
+
+    # ---- cache / AOT --------------------------------------------------
+    def signature(self, k: int, capacity: int) -> SuperStepSignature:
+        return SuperStepSignature(k, capacity, not self.traced_mobility)
+
+    def get(self, sig: SuperStepSignature):
+        """The program for ``sig``; builds one (a counted compile fallback)
+        if :meth:`precompile` did not cover it."""
+        fn = self._programs.get(sig)
+        if fn is None:
+            self.compile_fallbacks += 1
+            fn = self._build(sig)
+            self._programs[sig] = fn
+        return fn
+
+    def precompile(self, sig: SuperStepSignature, carry, xs) -> None:
+        """AOT-lower and compile the program for ``sig`` against the
+        abstract shapes of (carry, xs) — leaves may be arrays or
+        ``ShapeDtypeStruct``s."""
+        if sig in self._programs:
+            return
+
+        def sds(a):
+            if isinstance(a, jax.ShapeDtypeStruct):
+                return a
+            a = jnp.asarray(a)
+            return jax.ShapeDtypeStruct(a.shape, a.dtype)
+
+        compiled = self._build(sig).lower(jax.tree.map(sds, carry),
+                                          jax.tree.map(sds, xs)).compile()
+        self._programs[sig] = compiled

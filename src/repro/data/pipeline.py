@@ -33,6 +33,21 @@ def fleet_batch_indices(lengths, steps: int, batch_size: int,
     return (u * lengths[None, :, None]).astype(np.int32)
 
 
+def fleet_batch_indices_traced(key, lengths, steps: int,
+                               batch_size: int):
+    """jit-traceable twin of :func:`fleet_batch_indices` for the fused
+    super-step path: one threefry draw per round, (steps, n, batch) uniform
+    indices modulo each vehicle's true shard length, computed on-device so
+    K rounds of batch staging never return to Python.  (Different rng bits
+    than the numpy path — the fused engine derives ``key`` by folding the
+    round index into one base key, so the K-fused and per-round dispatch
+    paths of the same engine consume identical streams.)"""
+    lengths = jnp.asarray(lengths, jnp.int32)
+    u = jax.random.uniform(key, (steps, lengths.shape[0], batch_size))
+    return jnp.minimum((u * lengths[None, :, None]).astype(jnp.int32),
+                       lengths[None, :, None] - 1)
+
+
 def epoch_batch_indices(n_items: int, batch_size: int, seed: int) -> np.ndarray:
     """Full-batch permutation epoch (drop remainder) as an index matrix
     (n_full, batch) — the staged form of :meth:`ClientDataset.batches`."""

@@ -1,5 +1,5 @@
 from repro.optim.optimizers import (  # noqa: F401
-    Optimizer, sgd, momentum, adam, adamw, apply_updates, global_norm,
-    clip_by_global_norm)
+    Optimizer, from_name, sgd, momentum, adam, adamw, apply_updates,
+    global_norm, clip_by_global_norm)
 from repro.optim.schedules import (  # noqa: F401
     constant, cosine_decay, warmup_cosine, linear_warmup)

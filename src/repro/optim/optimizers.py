@@ -31,6 +31,21 @@ def _treecast(tree, dtype):
     return jax.tree.map(lambda a: jnp.asarray(a, dtype), tree)
 
 
+def from_name(name: str, lr: Schedule) -> Optimizer:
+    """Optimizer by config name — the single dispatch shared by the
+    federation engines (fedsim's per-client oracle, the cohort engine, and
+    the fused super-step engine), so a new optimizer wired here reaches all
+    of them at once."""
+    if name == "adam":
+        return adam(lr)
+    if name == "sgd":
+        return sgd(lr)
+    if name == "momentum":
+        return momentum(lr)
+    raise ValueError(f"unknown optimizer {name!r} "
+                     f"(expected adam | sgd | momentum)")
+
+
 def sgd(lr: Schedule) -> Optimizer:
     def init(params):
         return {"count": jnp.zeros((), jnp.int32)}
