@@ -1,23 +1,28 @@
 """Cohort-engine scaling benchmark: fleet sizes {4, 16, 64, 256}, sfl/asfl.
 
-Compares the vectorized :class:`CohortEngine` federation round against the
-seed per-client Python loop (one jit dispatch + one ``float(loss)`` host sync
-per client per batch, per-batch host staging, Python slice/merge optimizer
-surgery) at EQUAL rounds/local-steps/batches — both sides consume identical
-batch streams and make identical cut decisions, and evaluation is disabled on
-both, so the measured gap is pure round-execution overhead.
+Compares the vectorized :class:`CohortEngine` federation round — driven
+through the declarative front door, ``repro.api.run(ExperimentSpec(...))``
+— against the seed per-client Python loop (one jit dispatch + one
+``float(loss)`` host sync per client per batch, per-batch host staging,
+Python slice/merge optimizer surgery) at EQUAL rounds/local-steps/batches:
+both sides consume identical batch streams and make identical cut
+decisions, and evaluation is disabled on both, so the measured gap is pure
+round-execution overhead.
 
-The default model is a 9-unit split MLP: small enough that a local step is
-milliseconds, which is exactly the regime where the seed loop's per-dispatch
-overhead dominates at fleet scale (a vehicle-side perception model is small;
-the simulator's job is to scale the *federation*, not the FLOPs).  ``--model
-resnet`` runs the paper's ResNet18 instead — on CPU containers that is
-conv-compute-bound and mostly measures XLA's conv throughput, not the
-engine (see DESIGN.md §6).
+The default model is the registry's ``mlp9`` (models/mlp_unit.py): small
+enough that a local step is milliseconds, which is exactly the regime where
+the seed loop's per-dispatch overhead dominates at fleet scale (a
+vehicle-side perception model is small; the simulator's job is to scale the
+*federation*, not the FLOPs).  ``--model resnet`` runs the paper's ResNet18
+instead — on CPU containers that is conv-compute-bound and mostly measures
+XLA's conv throughput, not the engine (see DESIGN.md §6).
 
-Timing is post-warmup: each simulator runs once to compile every round
-structure, is reset (same seeds => same rate draws => same cuts => warm
-caches), and only the re-run is timed.
+Timing is post-warmup: ``api.run(spec, timeit=True)`` runs once to compile
+every round structure, resets (same seeds => same rate draws => same cuts
+=> warm caches), and times only the re-run.  The ``api_overhead_s`` key
+measures the front door itself: per-round API time minus a direct
+``FederationSim`` call at the same config (fleet 64) — proving the
+declarative layer adds no measurable per-round cost.
 
   PYTHONPATH=src python benchmarks/bench_fedsim.py
   -> BENCH_fedsim.json (repo root) + benchmarks/out/BENCH_fedsim.json
@@ -25,9 +30,7 @@ caches), and only the re-run is timed.
 from __future__ import annotations
 
 import argparse
-import dataclasses
 import json
-import math
 import os
 import time
 from typing import List, Optional, Tuple
@@ -36,89 +39,21 @@ import sys
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
+sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))
+
 import jax
-import jax.numpy as jnp
 import numpy as np
 
-from repro.core import aggregation, cost
-from repro.core.fedsim import (FederationSim, ResNetModel, SimConfig,
-                               _make_opt, make_sfl_batch_step)
-from repro.data.pipeline import ClientDataset
-from repro import optim
+from bench_timing import interleaved_overhead
+from repro import api
+from repro.core import aggregation
+from repro.core.fedsim import FederationSim, SimConfig, _make_opt, \
+    make_sfl_batch_step
+# re-exported for backward compatibility (promoted to the package in PR 4)
+from repro.models.mlp_unit import MLPUnitModel, make_mlp_fleet_data  # noqa: F401
 
 ROOT = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
 OUT_DIR = os.path.join(os.path.dirname(__file__), "out")
-
-
-# --------------------------------------------------------------- bench model
-class MLPUnitModel:
-    """9-unit split MLP over feature vectors — the dispatch-bound bench model
-    (mirrors the ResNet's 9 split points; every cut in {2,4,6,8} is valid)."""
-    name = "mlp-split"
-    scan_friendly = True
-
-    def __init__(self, dim: int = 48, width: int = 64, n_units: int = 9,
-                 n_classes: int = 10):
-        self.dim, self.width, self.n_units = dim, width, n_units
-        self.n_classes = n_classes
-
-    def init(self, key):
-        ks = jax.random.split(key, self.n_units + 1)
-        units = []
-        d_in = self.dim
-        for i in range(self.n_units):
-            units.append({
-                "w": jax.random.normal(ks[i], (d_in, self.width))
-                * math.sqrt(2.0 / d_in),
-                "b": jnp.zeros((self.width,)),
-            })
-            d_in = self.width
-        head = {"w": jax.random.normal(ks[-1], (self.width, self.n_classes))
-                * math.sqrt(1.0 / self.width),
-                "b": jnp.zeros((self.n_classes,))}
-        return units, head
-
-    def apply_units(self, units, x, start):
-        for u in units:
-            x = jax.nn.relu(x @ u["w"] + u["b"])
-        return x
-
-    def head_loss(self, head, feats, labels):
-        logits = feats @ head["w"] + head["b"]
-        logz = jax.scipy.special.logsumexp(logits, axis=-1)
-        gold = jnp.take_along_axis(logits, labels[:, None], axis=-1)[:, 0]
-        return jnp.mean(logz - gold), logits
-
-    def head_predict(self, head, feats):
-        return feats @ head["w"] + head["b"]
-
-    def profile(self):
-        w, d = self.width, self.dim
-        flops = [2.0 * d * w] + [2.0 * w * w] * (self.n_units - 1)
-        pbytes = [(d * w + w) * 4] + [(w * w + w) * 4] * (self.n_units - 1)
-        return cost.SplitProfile(
-            name=self.name, unit_fwd_flops=flops, unit_param_bytes=pbytes,
-            smashed_bytes_per_sample=[w * 4.0] * self.n_units,
-            head_flops=2.0 * w * self.n_classes,
-            head_param_bytes=(w * self.n_classes + self.n_classes) * 4,
-            smashed_trailing_dim=[w] * self.n_units)
-
-
-def make_mlp_fleet_data(n_clients: int, per_client: int, dim: int, seed: int):
-    """Class-structured feature vectors, one shard per vehicle."""
-    rng = np.random.default_rng(seed)
-    templates = rng.normal(size=(10, dim)).astype(np.float32)
-    clients = []
-    for i in range(n_clients):
-        y = rng.integers(0, 10, size=per_client)
-        x = templates[y] + 0.5 * rng.normal(size=(per_client, dim))
-        clients.append(ClientDataset(x.astype(np.float32),
-                                     y.astype(np.int32), i))
-    yt = rng.integers(0, 10, size=256)
-    xt = templates[yt] + 0.5 * rng.normal(size=(256, dim))
-    test = {"images": jnp.asarray(xt.astype(np.float32)),
-            "labels": jnp.asarray(yt.astype(np.int32))}
-    return clients, test
 
 
 # ------------------------------------------------- seed per-client loop sim
@@ -140,7 +75,6 @@ class SeedLoopSim(FederationSim):
         return self._sfl_steps[cut]
 
     def _parallel_split_round(self, rnd):
-        from repro.core.fedsim import RoundMetrics
         cfgc = self.cfg
         rates = self._round_rates(rnd)
         participants = set(self._participants(rnd))
@@ -216,53 +150,96 @@ class SeedLoopSim(FederationSim):
 
 
 # ----------------------------------------------------------------- protocol
-def _timed_run(sim) -> Tuple[float, float]:
-    """Warmup run (compiles every round structure), reset, timed re-run.
-    Returns (warmup seconds, seconds per round)."""
+def _timed_run(sim, repeats: int = 1) -> Tuple[float, float]:
+    """Direct-engine twin of ``api.run(..., timeit=repeats)``: warmup run
+    (compiles every round structure), then ``repeats`` timed re-runs (reset
+    between; min wins — strips scheduler noise).  Returns (warmup seconds,
+    seconds per round)."""
     t0 = time.perf_counter()
     sim.run()
     warmup = time.perf_counter() - t0
-    sim.reset()
-    t0 = time.perf_counter()
-    hist = sim.run()
-    dt = time.perf_counter() - t0
-    assert all(np.isfinite(m.loss) for m in hist)
-    return warmup, dt / len(hist)
+    best = None
+    for _ in range(repeats):
+        sim.reset()
+        t0 = time.perf_counter()
+        hist = sim.run()
+        dt = time.perf_counter() - t0
+        best = dt if best is None else min(best, dt)
+        assert all(np.isfinite(m.loss) for m in hist)
+    return warmup, best / len(hist)
+
+
+def measure_api_overhead(spec, direct, repeats: int = 3) -> dict:
+    """Per-round cost of the front door: an engine built by
+    ``api.build_engine(spec)`` and driven exactly as ``api.run`` drives it
+    (``run(on_round=None)``) vs ``direct``, a hand-constructed engine with
+    the same model/data/config (interleaved protocol: bench_timing)."""
+    api_eng = api.build_engine(spec)
+    out = interleaved_overhead(
+        (api_eng, lambda: api_eng.run(on_round=None)),
+        (direct, direct.run), repeats)
+    return {"fleet": spec.fleet.n_vehicles, **out}
+
+
+def _spec(model_name: str, scheme: str, n: int, per_client: int,
+          local_steps: int, batch: int, rounds: int,
+          compilation_cache: Optional[str]) -> api.ExperimentSpec:
+    return api.ExperimentSpec(
+        model=model_name,
+        train=api.TrainConfig(scheme=scheme, rounds=rounds,
+                              local_steps=local_steps, batch_size=batch,
+                              lr=1e-3, eval_every=0),
+        fleet=api.FleetConfig(
+            n_vehicles=n, per_vehicle_samples=per_client, test_samples=256,
+            data_seed=(n if model_name == "mlp9" else 0)),
+        runtime=api.RuntimeConfig(
+            compilation_cache_dir=compilation_cache))
 
 
 def bench(sizes: List[int], schemes: List[str], model_kind: str,
           per_client: int, local_steps: int, batch: int, rounds: int,
           seed_loop_max: int,
           compilation_cache: Optional[str] = None) -> dict:
+    model_name = "mlp9" if model_kind == "mlp" else "resnet18"
+    entry = api.model_entry(model_name)
+    overhead_fleet = 64 if 64 in sizes else max(sizes)
     results = []
+    api_overhead = None
     for n in sizes:
-        if model_kind == "mlp":
-            model_f = lambda: MLPUnitModel()
-            clients, test = make_mlp_fleet_data(n, per_client, 48, seed=n)
-        else:
-            from repro.data.pipeline import make_federated_data
-            model_f = lambda: ResNetModel()
-            clients, test = make_federated_data(0, n_train=per_client * n,
-                                                n_test=256, n_clients=n)
         for scheme in schemes:
-            cfg = SimConfig(scheme=scheme, rounds=rounds,
-                            local_steps=local_steps, batch_size=batch,
-                            lr=1e-3, eval_every=0,
-                            compilation_cache_dir=compilation_cache)
-            eng = FederationSim(model_f(), clients, test, cfg)
-            t_warm, t_eng = _timed_run(eng)
-            row = {"scheme": scheme, "n_clients": n, "mode": eng.engine.mode,
-                   "engine_round_s": t_eng, "warmup_s": t_warm,
+            spec = _spec(model_name, scheme, n, per_client, local_steps,
+                         batch, rounds, compilation_cache)
+            res = api.run(spec, timeit=True)
+            assert all(np.isfinite(m.loss) for m in res.history)
+            t_eng = res.timing["round_s"]
+            row = {"scheme": scheme, "n_clients": n,
+                   "mode": res.diagnostics["mode"],
+                   "engine_round_s": t_eng,
+                   "warmup_s": res.timing["warmup_s"],
                    "seed_round_s": None, "speedup": None}
-            if n <= seed_loop_max and scheme in ("sfl", "asfl"):
-                ref = SeedLoopSim(model_f(), clients, test, cfg)
-                _, t_ref = _timed_run(ref)
-                row["seed_round_s"] = t_ref
-                row["speedup"] = t_ref / t_eng
-                # both sides consumed identical batch streams & cuts
-                np.testing.assert_allclose(
-                    eng.history[-1].loss, ref.history[-1].loss,
-                    rtol=0.05, atol=0.05)
+            if scheme in ("sfl", "asfl") and (n <= seed_loop_max
+                                              or n == overhead_fleet):
+                clients, test = entry.make_data(
+                    n, per_client, spec.fleet.test_samples,
+                    spec.fleet.data_seed)
+                cfg = spec.to_sim_config()
+                if n <= seed_loop_max:
+                    ref = SeedLoopSim(entry.build(), clients, test, cfg)
+                    _, t_ref = _timed_run(ref)
+                    row["seed_round_s"] = t_ref
+                    row["speedup"] = t_ref / t_eng
+                    # both sides consumed identical batch streams & cuts
+                    np.testing.assert_allclose(
+                        res.history[-1].loss, ref.history[-1].loss,
+                        rtol=0.05, atol=0.05)
+                if scheme == "asfl" and n == overhead_fleet:
+                    o_rounds = max(rounds, 8)
+                    o_spec = _spec(model_name, scheme, n, per_client,
+                                   local_steps, batch, o_rounds,
+                                   compilation_cache)
+                    api_overhead = measure_api_overhead(
+                        o_spec, FederationSim(entry.build(), clients, test,
+                                              o_spec.to_sim_config()))
             results.append(row)
             print(f"{scheme:5s} n={n:4d} mode={row['mode']:6s} "
                   f"engine={t_eng*1e3:9.1f} ms/round"
@@ -273,13 +250,17 @@ def bench(sizes: List[int], schemes: List[str], model_kind: str,
         "config": {"model": model_kind, "per_client": per_client,
                    "local_steps": local_steps, "batch": batch,
                    "rounds": rounds, "backend": jax.default_backend(),
-                   "compilation_cache": compilation_cache},
+                   "compilation_cache": compilation_cache,
+                   "driver": "repro.api.run"},
         "warmup_total_s": float(sum(r["warmup_s"] for r in results)),
         # NOTE: cache-hit detection must happen BEFORE the runs populate the
         # cache dir — main() fills this in; None means "caller to decide"
         "compile_cache_hit": None,
         "rounds_per_s": {f"{r['scheme']}@{r['n_clients']}":
                          1.0 / r["engine_round_s"] for r in results},
+        "api_overhead_s": (api_overhead["api_overhead_s"]
+                           if api_overhead else None),
+        "api_overhead": api_overhead,
         "results": results,
     }
 
@@ -315,6 +296,12 @@ def main():
         out["asfl_64_speedup_ge_5x"] = key[0]["speedup"] >= 5.0
         print(f"\nasfl @ 64 vehicles: {key[0]['speedup']:.1f}x "
               f"(>=5x: {out['asfl_64_speedup_ge_5x']})")
+    if out["api_overhead"]:
+        o = out["api_overhead"]
+        print(f"api overhead @ fleet {o['fleet']}: "
+              f"{o['api_overhead_s']*1e3:+.2f} ms/round "
+              f"(api {o['api_round_s']*1e3:.1f} vs direct "
+              f"{o['direct_round_s']*1e3:.1f})")
 
     os.makedirs(OUT_DIR, exist_ok=True)
     for path in (os.path.join(ROOT, "BENCH_fedsim.json"),

@@ -1,13 +1,15 @@
 """Scenario-layer benchmark: rounds/s per mobility scenario at fleet scale.
 
-Runs the multi-RSU :class:`ScenarioEngine` — since ISSUE 3 a fused
-super-step engine (DESIGN.md §8): every round executes all RSUs inside one
-jitted program (on-device segment grouping, cut-as-data), ``--superstep K``
-fuses K rounds into one ``lax.scan`` dispatch with donated carries, and
-warmup is an AOT ``precompile()`` of every signature the run plan needs.
-``--compilation-cache DIR`` wires JAX's persistent compilation cache so a
-second invocation skips XLA entirely (the ``compile_cache_hit`` key records
-whether this run started warm).
+Runs the multi-RSU fused super-step engine (DESIGN.md §8) through the
+declarative front door: every row is one ``repro.api.run(ExperimentSpec)``
+call with ``timeit=True`` — AOT ``precompile()`` + a warmup run, a reset,
+then the timed compile-free re-run.  ``--superstep K`` fuses K rounds into
+one ``lax.scan`` dispatch with donated carries; ``--compilation-cache DIR``
+wires JAX's persistent compilation cache so a second invocation skips XLA
+entirely (the ``compile_cache_hit`` key records whether this run started
+warm).  The ``api_overhead_s`` key compares the API-routed per-round time
+against a direct ``ScenarioEngine`` call at fleet 64 — the front door adds
+no measurable per-round cost.
 
   PYTHONPATH=src python benchmarks/bench_scenarios.py
   -> BENCH_scenarios.json (repo root) + benchmarks/out/BENCH_scenarios.json
@@ -23,7 +25,6 @@ import argparse
 import json
 import os
 import sys
-import time
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))
@@ -31,47 +32,77 @@ sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))
 import jax
 import numpy as np
 
-from bench_fedsim import MLPUnitModel, make_mlp_fleet_data
+from bench_timing import interleaved_overhead
+from repro import api
 from repro.configs.base import cache_dir_is_warm
-from repro.core import scenario
-from repro.core.fedsim import ScenarioEngine, SimConfig
+from repro.core.fedsim import ScenarioEngine
 
 ROOT = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
 OUT_DIR = os.path.join(os.path.dirname(__file__), "out")
 
 
+def _spec(name: str, n: int, args) -> api.ExperimentSpec:
+    return api.ExperimentSpec(
+        model="mlp9",
+        train=api.TrainConfig(scheme="asfl", rounds=args.rounds,
+                              local_steps=args.local_steps,
+                              batch_size=args.batch, lr=1e-3, eval_every=0,
+                              server_schedule=args.schedule),
+        adaptive=api.AdaptiveConfig(strategy=args.strategy),
+        fleet=api.FleetConfig(n_vehicles=n, scenario=name,
+                              scenario_kwargs={"seed": n},
+                              cloud_sync_every=args.sync,
+                              round_interval_s=10.0,
+                              per_vehicle_samples=64, data_seed=n),
+        runtime=api.RuntimeConfig(superstep=args.superstep,
+                                  slot_capacity=args.slot_capacity,
+                                  precompile=True,
+                                  compilation_cache_dir=args.compilation_cache))
+
+
 def bench_one(name: str, n: int, args) -> dict:
-    sc = scenario.make_scenario(name, n, seed=n)
-    clients, test = make_mlp_fleet_data(n, 64, 48, seed=n)
-    cfg = SimConfig(scheme="asfl", adaptive_strategy=args.strategy,
-                    rounds=args.rounds, local_steps=args.local_steps,
-                    batch_size=args.batch, lr=1e-3, eval_every=0,
-                    round_interval_s=10.0, superstep=args.superstep,
-                    server_schedule=args.schedule,
-                    slot_capacity=args.slot_capacity,
-                    compilation_cache_dir=args.compilation_cache)
-    eng = ScenarioEngine(MLPUnitModel(), clients, test, cfg, sc,
-                         cloud_sync_every=args.sync)
-    t0 = time.perf_counter()
-    eng.precompile()               # AOT: every signature the run will use
-    t_warm = time.perf_counter() - t0
-    eng.run()                      # staging warm-up (no compiles)
-    eng.reset()
-    t0 = time.perf_counter()
-    hist = eng.run()
-    dt = time.perf_counter() - t0
-    assert all(np.isfinite(m.loss) for m in hist)
-    assert eng.programs.compile_fallbacks == 0
+    res = api.run(_spec(name, n, args), timeit=True)
+    assert all(np.isfinite(m.loss) for m in res.history)
+    assert res.diagnostics["compile_fallbacks"] == 0
     return {
-        "scenario": name, "n_vehicles": n, "n_rsus": len(sc.rsu_positions),
-        "mode": eng.mode, "schedule": args.schedule,
+        "scenario": name, "n_vehicles": n,
+        "n_rsus": res.diagnostics["n_rsus"],
+        "mode": res.diagnostics["mode"], "schedule": args.schedule,
         "superstep": args.superstep, "rounds": args.rounds,
-        "round_s": dt / args.rounds, "rounds_per_s": args.rounds / dt,
-        "warmup_s": t_warm,
-        "scheduled_per_round": [m.n_scheduled for m in hist],
-        "handovers": int(sum(m.n_handover for m in hist)),
-        "final_loss": float(hist[-1].loss),
+        "round_s": res.timing["round_s"],
+        "rounds_per_s": res.timing["rounds_per_s"],
+        "warmup_s": res.timing["warmup_s"],
+        "scheduled_per_round": [m.n_scheduled for m in res.history],
+        "handovers": int(sum(m.n_handover for m in res.history)),
+        "final_loss": float(res.history[-1].loss),
     }
+
+
+def measure_api_overhead(args, fleet: int = 64,
+                         scenario: str = "highway_corridor",
+                         repeats: int = 3) -> dict:
+    """Per-round cost of the front door: an engine built by
+    ``api.build_engine(spec)`` and driven exactly as ``api.run`` drives it
+    vs a hand-constructed ScenarioEngine with the same model, data,
+    scenario, and config.  Both AOT-precompile and warm up once, then
+    timed re-runs INTERLEAVE (min wins per side) so container scheduler
+    drift hits both sides equally instead of masquerading as overhead."""
+    spec = _spec(scenario, fleet, args)
+    api_eng = api.build_engine(spec)
+    entry = api.model_entry(spec.model)
+    f = spec.fleet
+    clients, test = entry.make_data(f.n_vehicles, f.per_vehicle_samples,
+                                    f.test_samples, f.data_seed)
+    sc = api.build_scenario(f.scenario, f.n_vehicles, **f.scenario_kwargs)
+    direct = ScenarioEngine(entry.build(), clients, test,
+                            spec.to_sim_config(), sc,
+                            cloud_sync_every=f.cloud_sync_every)
+    api_eng.precompile()
+    direct.precompile()
+    out = interleaved_overhead(
+        (api_eng, lambda: api_eng.run(on_round=None, on_cloud_merge=None)),
+        (direct, direct.run), repeats)
+    return {"fleet": fleet, "scenario": scenario, **out}
 
 
 def check_baseline(out: dict, baseline_path: str, max_regress: float) -> int:
@@ -117,7 +148,9 @@ def check_baseline(out: dict, baseline_path: str, max_regress: float) -> int:
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--sizes", default="64,256")
-    ap.add_argument("--scenarios", default=",".join(sorted(scenario.SCENARIOS)))
+    ap.add_argument("--scenarios",
+                    default=",".join(sorted(n for n, b in api.SCENARIOS.items()
+                                            if b is not None)))
     ap.add_argument("--rounds", type=int, default=4)
     ap.add_argument("--local-steps", type=int, default=2)
     ap.add_argument("--batch", type=int, default=8)
@@ -129,7 +162,7 @@ def main():
                          "default benchmarks the engine's recommended "
                          "fused operating point")
     ap.add_argument("--schedule", default="sequential",
-                    choices=["sequential", "parallel"])
+                    choices=sorted(api.SCHEDULES))
     ap.add_argument("--slot-capacity", default="tight8",
                     choices=["pow2", "tight8"])
     ap.add_argument("--compilation-cache", default=None, metavar="DIR",
@@ -137,6 +170,8 @@ def main():
     ap.add_argument("--check-baseline", default=None, metavar="JSON",
                     help="compare rounds/s against a committed baseline")
     ap.add_argument("--max-regress", type=float, default=0.30)
+    ap.add_argument("--skip-api-overhead", action="store_true",
+                    help="skip the api-vs-direct overhead measurement")
     ap.add_argument("--no-write", action="store_true",
                     help="don't overwrite BENCH_scenarios.json")
     args = ap.parse_args()
@@ -154,6 +189,16 @@ def main():
                   f"({row['rounds_per_s']:.2f} rounds/s) "
                   f"handovers={row['handovers']}", flush=True)
 
+    api_overhead = None
+    if not args.skip_api_overhead:
+        fleet = (64 if 64 in [int(s) for s in args.sizes.split(",")]
+                 else max(int(s) for s in args.sizes.split(",")))
+        api_overhead = measure_api_overhead(args, fleet=fleet)
+        print(f"api overhead @ fleet {fleet}: "
+              f"{api_overhead['api_overhead_s']*1e3:+.2f} ms/round "
+              f"(api {api_overhead['api_round_s']*1e3:.1f} vs direct "
+              f"{api_overhead['direct_round_s']*1e3:.1f})", flush=True)
+
     out = {
         "config": {"local_steps": args.local_steps, "batch": args.batch,
                    "rounds": args.rounds, "strategy": args.strategy,
@@ -161,11 +206,15 @@ def main():
                    "superstep": args.superstep, "schedule": args.schedule,
                    "slot_capacity": args.slot_capacity,
                    "compilation_cache": args.compilation_cache,
-                   "backend": jax.default_backend()},
+                   "backend": jax.default_backend(),
+                   "driver": "repro.api.run"},
         "warmup_total_s": float(sum(r["warmup_s"] for r in results)),
         "compile_cache_hit": cache_hit,
         "rounds_per_s": {f"{r['scenario']}@{r['n_vehicles']}":
                          r["rounds_per_s"] for r in results},
+        "api_overhead_s": (api_overhead["api_overhead_s"]
+                           if api_overhead else None),
+        "api_overhead": api_overhead,
         "results": results,
     }
     if not args.no_write:

@@ -36,9 +36,9 @@ sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))
 import jax
 import numpy as np
 
-from bench_fedsim import MLPUnitModel, make_mlp_fleet_data
 from repro.core import scenario
 from repro.core.fedsim import ScenarioEngine, SimConfig
+from repro.models.mlp_unit import MLPUnitModel, make_mlp_fleet_data
 
 ROOT = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
 OUT_DIR = os.path.join(os.path.dirname(__file__), "out")

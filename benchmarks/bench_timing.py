@@ -1,0 +1,40 @@
+"""Shared timing protocol for the ``api_overhead_s`` measurements.
+
+Both benchmark drivers compare an engine built by ``api.build_engine``
+(driven exactly as ``api.run`` drives it) against a hand-constructed engine
+with the same model/data/config.  The timed re-runs INTERLEAVE (api,
+direct, api, direct, ...; min wins per side) so container scheduler drift
+hits both sides equally instead of masquerading as front-door overhead.
+"""
+from __future__ import annotations
+
+import time
+from typing import Callable, Dict, Tuple
+
+
+def interleaved_overhead(api_pair: Tuple[object, Callable],
+                         direct_pair: Tuple[object, Callable],
+                         repeats: int = 3) -> Dict[str, float]:
+    """``(engine, drive)`` pairs for the api-built and direct engines.
+    Drives each once to warm (callers AOT-precompile beforehand where
+    applicable), then ``repeats`` interleaved timed re-runs with
+    ``engine.reset()`` between.  Returns per-round seconds for both sides
+    and their difference."""
+    sides = {"api": api_pair, "direct": direct_pair}
+    for _, drive in sides.values():
+        drive()                                # warmup (compiles / staging)
+    best: Dict[str, float] = {}
+    rounds = 1
+    for _ in range(repeats):
+        for name, (engine, drive) in sides.items():
+            engine.reset()
+            t0 = time.perf_counter()
+            hist = drive()
+            dt = time.perf_counter() - t0
+            rounds = len(hist)
+            best[name] = min(best.get(name, dt), dt)
+    api_s = best["api"] / rounds
+    direct_s = best["direct"] / rounds
+    return {"rounds": rounds, "timed_repeats": repeats,
+            "api_round_s": api_s, "direct_round_s": direct_s,
+            "api_overhead_s": api_s - direct_s}

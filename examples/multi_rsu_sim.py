@@ -1,34 +1,29 @@
-"""Multi-RSU scenario demo: mobility, handover, hierarchical aggregation.
+"""Multi-RSU scenario demo: mobility, handover, hierarchical aggregation —
+driven through the declarative front door, ``repro.api.run`` (DESIGN.md §9).
 
 A fleet drives a 4-RSU highway corridor (core/scenario.py).  Each round the
 scenario layer yields vectorized fleet state — positions, serving cell,
-Shannon rates, remaining residence time; the ScenarioEngine groups vehicles
-into one CohortEngine cohort per RSU, trains them against that RSU's edge
-model, and merges the edge models at a cloud tier every ``--sync`` rounds
-(hierarchical FedAvg == flat FedAvg under matching weights, DESIGN.md §7).
-Vehicles crossing cell borders hand over: their data shard and identity move
-with them; server-side state stays at the RSU.
+Shannon rates, remaining residence time; the fused super-step engine groups
+vehicles into one cohort per RSU inside a single compiled program, trains
+them against that RSU's edge model, and merges the edge models at a cloud
+tier every ``--sync`` rounds (hierarchical FedAvg == flat FedAvg under
+matching weights, DESIGN.md §7).  Vehicles crossing cell borders hand over:
+their data shard and identity move with them; server-side state stays at
+the RSU.  The per-round lines below stream from the ``on_round`` callback —
+fired after each fused K-round window, so streaming adds no host syncs to
+the compiled path.
 
   PYTHONPATH=src python examples/multi_rsu_sim.py                 # highway
   PYTHONPATH=src python examples/multi_rsu_sim.py --scenario urban_grid
   PYTHONPATH=src python examples/multi_rsu_sim.py --rounds 8 --sync 2
 """
 import argparse
-import os
-import sys
 import time
-
-_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
-sys.path.insert(0, os.path.join(_ROOT, "src"))
-sys.path.insert(0, os.path.join(_ROOT, "benchmarks"))
 
 import numpy as np
 
-# the 9-unit split MLP bench model stands in for a vehicle perception model
-# (the federation dynamics, not the FLOPs, are the point of this demo)
-from bench_fedsim import MLPUnitModel, make_mlp_fleet_data
-from repro.core import adaptive, cost, scenario
-from repro.core.fedsim import ScenarioEngine, SimConfig
+from repro import api
+from repro.core import adaptive, cost
 
 
 def show_residence_rule(sc, rounds, interval):
@@ -52,7 +47,8 @@ def show_residence_rule(sc, rounds, interval):
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--scenario", default="highway_corridor",
-                    choices=sorted(scenario.SCENARIOS))
+                    choices=sorted(n for n, b in api.SCENARIOS.items()
+                                   if b is not None))
     ap.add_argument("--vehicles", type=int, default=24)
     ap.add_argument("--rounds", type=int, default=6)
     ap.add_argument("--sync", type=int, default=2,
@@ -61,40 +57,53 @@ def main():
                     help="rounds fused into one compiled super-step "
                          "(DESIGN.md §8; 1 = one dispatch per round)")
     ap.add_argument("--schedule", default="sequential",
-                    choices=["sequential", "parallel"],
+                    choices=sorted(api.SCHEDULES),
                     help="RSU server schedule: paper §III-B sequential or "
                          "the parallel scheme of arXiv:2405.18707")
     ap.add_argument("--compilation-cache", default=None, metavar="DIR",
                     help="persistent XLA cache: re-runs skip compilation")
     args = ap.parse_args()
 
-    sc = scenario.make_scenario(args.scenario, args.vehicles, seed=7)
+    # the registry's mlp9 split model stands in for a vehicle perception
+    # model (the federation dynamics, not the FLOPs, are this demo's point)
+    spec = api.ExperimentSpec(
+        model="mlp9",
+        train=api.TrainConfig(scheme="asfl", rounds=args.rounds,
+                              local_steps=2, batch_size=8, lr=1e-3,
+                              server_schedule=args.schedule),
+        adaptive=api.AdaptiveConfig(strategy="paper"),
+        fleet=api.FleetConfig(n_vehicles=args.vehicles,
+                              scenario=args.scenario,
+                              scenario_kwargs={"seed": 7},
+                              cloud_sync_every=args.sync,
+                              round_interval_s=10.0,
+                              per_vehicle_samples=64),
+        runtime=api.RuntimeConfig(superstep=args.superstep,
+                                  precompile=True,
+                                  compilation_cache_dir=args.compilation_cache),
+    )
+    sc = api.build_scenario(args.scenario, args.vehicles,
+                            **spec.fleet.scenario_kwargs)
     print(f"scenario={args.scenario}: {args.vehicles} vehicles, "
-          f"{len(sc.rsu_positions)} RSUs")
+          f"{len(sc.rsu_positions)} RSUs; schedule={args.schedule}, "
+          f"K={args.superstep}, cloud sync every {args.sync} round(s)")
 
-    clients, test = make_mlp_fleet_data(args.vehicles, 64, 48, seed=0)
-    cfg = SimConfig(scheme="asfl", adaptive_strategy="paper",
-                    rounds=args.rounds, local_steps=2, batch_size=8,
-                    lr=1e-3, round_interval_s=10.0,
-                    superstep=args.superstep,
-                    server_schedule=args.schedule,
-                    compilation_cache_dir=args.compilation_cache)
-    eng = ScenarioEngine(MLPUnitModel(), clients, test, cfg, sc,
-                         cloud_sync_every=args.sync)
-    t0 = time.time()
-    eng.precompile()               # AOT: the run below never compiles
-    print(f"engine mode={eng.mode}, schedule={args.schedule}, "
-          f"K={args.superstep}, cloud sync every {args.sync} round(s); "
-          f"precompiled in {time.time()-t0:.1f}s\n")
-    t0 = time.time()
-    for m in eng.run():
+    def on_round(m):
         acc = f"{m.test_acc:.3f}" if np.isfinite(m.test_acc) else "  -  "
         print(f"round {m.round}: loss={m.loss:.3f} acc={acc} "
               f"sched={m.n_scheduled:3d} handover={m.n_handover:2d} "
               f"rsu_loads={m.rsu_loads} comm={m.comm_bytes/1e6:6.1f}MB")
-    print(f"({time.time()-t0:.1f}s wall, compile-free)")
 
-    show_residence_rule(sc, args.rounds, cfg.round_interval_s)
+    t0 = time.time()
+    result = api.run(spec, on_round=on_round,
+                     on_cloud_merge=lambda rnd, eng: print(
+                         f"  cloud merge after round {rnd}"))
+    print(f"({time.time()-t0:.1f}s wall; engine mode="
+          f"{result.diagnostics['mode']}, precompile+compile warmup "
+          f"{result.timing['warmup_s']:.1f}s, run "
+          f"{result.timing['run_s']:.1f}s compile-free)")
+
+    show_residence_rule(sc, args.rounds, spec.fleet.round_interval_s)
 
 
 if __name__ == "__main__":

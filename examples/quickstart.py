@@ -2,17 +2,14 @@
 
 ASFL (adaptive split federated learning) on a CIFAR-like task with 4
 vehicles, non-IID data (6-of-10 labels, power-law sizes), ResNet18, and the
-rate-adaptive cut-layer rule — the full Fig. 3 workflow in ~40 lines.
+rate-adaptive cut-layer rule — the full Fig. 3 workflow, driven through the
+declarative front door ``repro.api.run`` (DESIGN.md §9).
 
   PYTHONPATH=src python examples/quickstart.py [--rounds 3]
 """
 import argparse
-import sys
 
-sys.path.insert(0, "src")
-
-from repro.core.fedsim import FederationSim, ResNetModel, SimConfig
-from repro.data.pipeline import make_federated_data
+from repro import api
 
 
 def main():
@@ -26,20 +23,27 @@ def main():
     args = ap.parse_args()
 
     print("== ASFL quickstart: 4 vehicles, non-IID CIFAR-like, ResNet18 ==")
-    clients, test = make_federated_data(seed=0, n_train=2048, n_test=512,
-                                        n_clients=4, iid=False)
+    spec = api.ExperimentSpec(
+        model="resnet18",
+        train=api.TrainConfig(scheme=args.scheme, rounds=args.rounds,
+                              local_steps=args.local_steps, lr=1e-3,
+                              batch_size=16,
+                              compress_smashed=args.compress),
+        fleet=api.FleetConfig(n_vehicles=4, per_vehicle_samples=512,
+                              test_samples=512),
+    )
+    # peek at the non-IID shards the registry's data builder produces
+    f = spec.fleet
+    clients, _ = api.model_entry(spec.model).make_data(
+        f.n_vehicles, f.per_vehicle_samples, f.test_samples, f.data_seed)
     for c in clients:
         labs = sorted(set(c.labels.tolist()))
         print(f"  vehicle {c.client_id}: {len(c)} samples, labels {labs}")
 
-    cfg = SimConfig(scheme=args.scheme, rounds=args.rounds,
-                    local_steps=args.local_steps, lr=1e-3, batch_size=16,
-                    compress_smashed=args.compress)
-    sim = FederationSim(ResNetModel(), clients, test, cfg)
-    for m in sim.run():
-        print(f"round {m.round}: loss={m.loss:.3f} acc={m.test_acc:.3f} "
-              f"comm={m.comm_bytes/1e6:.0f}MB sim_time={m.sim_time_s:.1f}s "
-              f"cuts={m.cuts}")
+    api.run(spec, on_round=lambda m: print(
+        f"round {m.round}: loss={m.loss:.3f} acc={m.test_acc:.3f} "
+        f"comm={m.comm_bytes/1e6:.0f}MB sim_time={m.sim_time_s:.1f}s "
+        f"cuts={m.cuts}"))
     print("done — the adaptive cuts respond to each vehicle's channel rate;")
     print("see examples/vehicular_sim.py for the full mobility story.")
 

@@ -7,10 +7,7 @@ int8 smashed-data compression on the uplink and compares the logits drift.
 
   PYTHONPATH=src python examples/split_inference.py
 """
-import sys
 import time
-
-sys.path.insert(0, "src")
 
 import jax
 import jax.numpy as jnp

@@ -1,21 +1,22 @@
 """Vehicular mobility simulation: watch the adaptive cut-layer rule react as
 vehicles drive past the RSU (the paper's core 'adaptive' story).
 
-Eight vehicles approach, pass, and leave the RSU's coverage; at each round
-the channel model yields per-vehicle Shannon rates (one vectorized draw for
-the whole fleet), and the three cut strategies (paper Eq. 3, latency-optimal,
+Vehicles approach, pass, and leave the RSU's coverage; at each round the
+channel model yields per-vehicle Shannon rates (one vectorized draw for the
+whole fleet), and the three cut strategies (paper Eq. 3, latency-optimal,
 energy-aware) pick cut layers.  Also demonstrates the memory-constrained
 clamp (a vehicle-side budget the DBRX-scale architectures force — DESIGN.md
-§4), and finishes by training the fleet for two ASFL rounds through the
-cohort engine (DESIGN.md §6) with per-vehicle memory budgets.
+§4), and finishes by training the fleet for a few ASFL rounds through the
+declarative front door, ``repro.api.run`` (DESIGN.md §9), with per-vehicle
+memory budgets.
 
   PYTHONPATH=src python examples/vehicular_sim.py          # strategy trace
-  PYTHONPATH=src python examples/vehicular_sim.py --train  # + engine rounds
+  PYTHONPATH=src python examples/vehicular_sim.py --train  # + api.run rounds
+  PYTHONPATH=src python examples/vehicular_sim.py --train --vehicles 4 \\
+      --rounds 1                                           # tiny (CI smoke)
 """
-import sys
+import argparse
 import time
-
-sys.path.insert(0, "src")
 
 import numpy as np
 
@@ -23,9 +24,9 @@ from repro.core import adaptive, channel
 from repro.core.cost import resnet_profile, sfl_client_round_cost
 
 
-def main():
+def strategy_trace(n_vehicles: int):
     prof = resnet_profile()
-    fleet = channel.make_fleet(8, seed=7)
+    fleet = channel.make_fleet(n_vehicles, seed=7)
     ch = channel.ChannelConfig()
     flops = [v.compute_flops for v in fleet]
     n_batches, batch, sf = 32, 16, 2e12
@@ -49,7 +50,7 @@ def main():
     # round latency comparison at t=15
     rates = channel.sample_round_rates(ch, fleet, 15.0, seed=15)
     for name, cuts in [
-        ("fixed cut 4 (SFL)", [4] * 8),
+        ("fixed cut 4 (SFL)", [4] * n_vehicles),
         ("paper Eq.3 (ASFL)", adaptive.paper_threshold(rates)),
         ("latency-optimal  ", adaptive.latency_optimal(
             prof, rates, flops, sf, n_batches, batch,
@@ -66,49 +67,60 @@ def main():
                                        rates)
     print(f"with a {budget>>20} MiB vehicle budget the cuts clamp to {cuts}")
     # ... or per-vehicle (VehicleProfile.memory_budget_bytes)
-    het = channel.make_fleet(8, seed=7, memory_budget_bytes=(1e5, 8e6))
+    het = channel.make_fleet(n_vehicles, seed=7,
+                             memory_budget_bytes=(1e5, 8e6))
     cuts = adaptive.memory_constrained(
         prof, channel.fleet_arrays(het)["memory_budget_bytes"],
         adaptive.paper_threshold, rates)
     print(f"with per-vehicle budgets (0.1-8 MB) they clamp to    {cuts}")
 
 
-def train(n_vehicles: int = 8, rounds: int = 2):
-    """Two ASFL rounds over the fleet through the cohort engine: the whole
-    round (all buckets, all local steps, the unit-wise FedAvg) runs as one
-    or a few compiled programs with per-vehicle memory-clamped cuts.
+def train(n_vehicles: int, rounds: int, cache):
+    """ASFL rounds over the fleet through ``repro.api.run``: one declarative
+    :class:`ExperimentSpec` routes to the compiled cohort engine (DESIGN.md
+    §6/§9) with per-vehicle memory-clamped cuts; ``on_round`` streams each
+    round's metrics as it completes.
 
-    Pass ``--compilation-cache DIR`` (after ``--train``) to point JAX's
-    persistent compilation cache at DIR: a second invocation deserializes
-    the compiled round programs instead of re-running XLA (README
-    quickstart / DESIGN.md §8)."""
-    from repro.core.fedsim import FederationSim, ResNetModel, SimConfig
-    from repro.data.pipeline import make_federated_data
+    ``--compilation-cache DIR`` points JAX's persistent compilation cache at
+    DIR: a second invocation deserializes the compiled round programs
+    instead of re-running XLA (README quickstart / DESIGN.md §8)."""
+    from repro import api
 
-    cache = None
-    if "--compilation-cache" in sys.argv:
-        i = sys.argv.index("--compilation-cache") + 1
-        if i >= len(sys.argv) or sys.argv[i].startswith("--"):
-            sys.exit("--compilation-cache requires a directory argument")
-        cache = sys.argv[i]
-    clients, test = make_federated_data(0, n_train=32 * n_vehicles,
-                                        n_test=128, n_clients=n_vehicles)
-    fleet = channel.make_fleet(n_vehicles, seed=7,
-                               memory_budget_bytes=(5e5, 5e7))
-    cfg = SimConfig(scheme="asfl", adaptive_strategy="memory", rounds=rounds,
-                    local_steps=2, batch_size=8, lr=1e-3,
-                    compilation_cache_dir=cache)
-    sim = FederationSim(ResNetModel(), clients, test, cfg, fleet=fleet)
-    print(f"\ntraining {n_vehicles} vehicles, scheme=asfl(memory), "
-          f"engine mode={sim.engine.mode}")
+    spec = api.ExperimentSpec(
+        model="resnet18",
+        train=api.TrainConfig(scheme="asfl", rounds=rounds, local_steps=2,
+                              batch_size=8, lr=1e-3),
+        adaptive=api.AdaptiveConfig(strategy="memory"),
+        fleet=api.FleetConfig(n_vehicles=n_vehicles,
+                              per_vehicle_samples=32, test_samples=128,
+                              memory_budget_bytes=(5e5, 5e7)),
+        runtime=api.RuntimeConfig(compilation_cache_dir=cache),
+    )
+    print(f"\ntraining {n_vehicles} vehicles through api.run: "
+          f"model={spec.model}, scheme=asfl(memory), "
+          f"engine={spec.engine_kind}")
     t0 = time.time()
-    for m in sim.run():
-        print(f"round {m.round}: loss={m.loss:.3f} acc={m.test_acc:.3f} "
-              f"cuts={m.cuts}")
-    print(f"({time.time()-t0:.1f}s wall incl. compile)")
+    result = api.run(spec, on_round=lambda m: print(
+        f"round {m.round}: loss={m.loss:.3f} acc={m.test_acc:.3f} "
+        f"cuts={m.cuts}"))
+    print(f"({time.time()-t0:.1f}s wall incl. compile; engine mode="
+          f"{result.diagnostics['mode']}, "
+          f"total comm={result.totals['comm_bytes']/1e6:.1f} MB)")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--train", action="store_true",
+                    help="also run ASFL rounds through repro.api.run")
+    ap.add_argument("--vehicles", type=int, default=8)
+    ap.add_argument("--rounds", type=int, default=2)
+    ap.add_argument("--compilation-cache", default=None, metavar="DIR",
+                    help="persistent XLA cache: re-runs skip compilation")
+    args = ap.parse_args()
+    strategy_trace(args.vehicles)
+    if args.train:
+        train(args.vehicles, args.rounds, args.compilation_cache)
 
 
 if __name__ == "__main__":
     main()
-    if "--train" in sys.argv:
-        train()

@@ -1,0 +1,48 @@
+"""``repro.api`` — the declarative front door over the federation engines.
+
+One experiment is one :class:`ExperimentSpec` (nested config groups,
+registry-validated at construction); ``run(spec)`` routes it to the right
+engine and returns a :class:`RunResult`.  DESIGN.md §9 has the
+spec → router → engine picture and the registry extension recipe.
+
+    from repro import api
+
+    spec = api.ExperimentSpec(
+        model="mlp9",
+        train=api.TrainConfig(rounds=8, local_steps=2, batch_size=8,
+                              lr=1e-3),
+        adaptive=api.AdaptiveConfig(strategy="residence"),
+        fleet=api.FleetConfig(n_vehicles=64, scenario="highway_corridor",
+                              cloud_sync_every=2),
+        runtime=api.RuntimeConfig(superstep=4, slot_capacity="tight8"),
+    )
+    result = api.run(spec, on_round=lambda m: print(m.round, m.loss))
+    result.save("run.json")
+
+This surface is the public contract: ``__all__`` below is snapshot-tested
+(tests/test_api.py), so accidental breakage fails tier-1.
+"""
+from repro.api.registry import (  # noqa: F401
+    FEDERATION, MODELS, SCENARIO, SCENARIOS, SCHEDULES, SINGLE_RSU,
+    STRATEGIES, ModelEntry, ScheduleEntry, StrategyEntry, build_model,
+    build_scenario, make_lm_fleet_data, model_entry, register_model,
+    register_schedule, register_scenario, register_strategy)
+from repro.api.runner import RunResult, build_engine, run  # noqa: F401
+from repro.api.spec import (  # noqa: F401
+    SIM_CONFIG_FIELD_MAP, AdaptiveConfig, ExperimentSpec, FleetConfig,
+    RuntimeConfig, TrainConfig)
+
+__all__ = [
+    # spec
+    "ExperimentSpec", "TrainConfig", "AdaptiveConfig", "FleetConfig",
+    "RuntimeConfig", "SIM_CONFIG_FIELD_MAP",
+    # registries
+    "MODELS", "SCENARIOS", "STRATEGIES", "SCHEDULES",
+    "ModelEntry", "StrategyEntry", "ScheduleEntry",
+    "register_model", "register_scenario", "register_strategy",
+    "register_schedule", "model_entry", "build_model", "build_scenario",
+    "make_lm_fleet_data",
+    "FEDERATION", "SCENARIO", "SINGLE_RSU",
+    # runner
+    "run", "build_engine", "RunResult",
+]

@@ -1,0 +1,189 @@
+"""``run(spec)``: one front door over the federation engines.
+
+The router inspects :attr:`ExperimentSpec.engine_kind` and drives the right
+engine — :class:`~repro.core.fedsim.FederationSim` (single-RSU cohort
+rounds) or :class:`~repro.core.fedsim.ScenarioEngine` (multi-RSU fused
+super-steps, honoring ``runtime.superstep``/``precompile``/compilation
+cache) — then returns a :class:`RunResult`: the full round-metrics history,
+aggregate cost accounting, wall-clock timing, and ``save``/``load``.
+
+Streaming: ``on_round(metrics)`` fires for every completed round and
+``on_cloud_merge(rnd, engine)`` after every multi-RSU cloud sync.  On the
+fused path both fire after each K-round window from the window's single
+host pull, so callbacks never add host syncs to the compiled program
+(DESIGN.md §8/§9).
+
+``timeit=True`` runs the benchmark protocol: one warmup run (compiles every
+program), ``reset()``, then the timed re-run — ``timing["round_s"]`` is the
+steady-state per-round cost the benchmarks report (and compare against a
+direct engine call for the ``api_overhead_s`` key).
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import time
+from typing import Any, Callable, Dict, List, Optional, Union
+
+import numpy as np
+
+from repro.api import registry
+from repro.api.spec import ExperimentSpec
+from repro.core.fedsim import (FederationSim, RoundMetrics, ScenarioEngine,
+                               ScenarioRoundMetrics)
+
+__all__ = ["RunResult", "run", "build_engine"]
+
+
+def _json_default(o):
+    """Type-faithful JSON fallback: numpy ints stay ints (a loaded
+    RunResult's cuts/loads must compare like a live run's)."""
+    if isinstance(o, np.integer):
+        return int(o)
+    if isinstance(o, np.ndarray):
+        return o.tolist()
+    return float(o)
+
+
+@dataclasses.dataclass
+class RunResult:
+    """Everything one experiment produced.
+
+    ``history`` rows are :class:`RoundMetrics` (federation) or
+    :class:`ScenarioRoundMetrics` (scenario).  ``final_params`` is the
+    trained global model ``(units, head)`` — kept on device, not
+    serialized by :meth:`save`."""
+    spec: ExperimentSpec
+    engine_kind: str
+    history: List[Any]
+    totals: Dict[str, float]
+    timing: Dict[str, float]
+    diagnostics: Dict[str, Any]
+    final_params: Any = dataclasses.field(default=None, repr=False)
+
+    def to_dict(self) -> Dict[str, Any]:
+        return {
+            "spec": self.spec.to_dict(),
+            "engine_kind": self.engine_kind,
+            "history": [dataclasses.asdict(m) for m in self.history],
+            "totals": self.totals,
+            "timing": self.timing,
+            "diagnostics": self.diagnostics,
+        }
+
+    def save(self, path: str) -> str:
+        with open(path, "w") as f:
+            json.dump(self.to_dict(), f, indent=1, default=_json_default)
+        return path
+
+    @classmethod
+    def load(cls, path: str) -> "RunResult":
+        with open(path) as f:
+            d = json.load(f)
+        metrics_cls = (ScenarioRoundMetrics
+                       if d["engine_kind"] == registry.SCENARIO
+                       else RoundMetrics)
+        return cls(spec=ExperimentSpec.from_dict(d["spec"]),
+                   engine_kind=d["engine_kind"],
+                   history=[metrics_cls(**m) for m in d["history"]],
+                   totals=d["totals"], timing=d["timing"],
+                   diagnostics=d["diagnostics"])
+
+
+def build_engine(spec: ExperimentSpec):
+    """Instantiate the engine a spec routes to (model + fleet data + config
+    assembled from the registries).  ``run`` uses this; benchmarks and
+    parity tests may call it directly to hold an engine across re-runs."""
+    entry = registry.model_entry(spec.model)
+    model = entry.build(**spec.model_kwargs)
+    f = spec.fleet
+    clients, test = entry.make_data(f.n_vehicles, f.per_vehicle_samples,
+                                    f.test_samples, f.data_seed)
+    cfg = spec.to_sim_config()
+    if spec.engine_kind == registry.SCENARIO:
+        kw = dict(f.scenario_kwargs)
+        kw.setdefault("seed", spec.runtime.seed)
+        sc = registry.build_scenario(f.scenario, f.n_vehicles, **kw)
+        return ScenarioEngine(model, clients, test, cfg, sc,
+                              cloud_sync_every=f.cloud_sync_every)
+    fleet = None
+    if f.memory_budget_bytes is not None:
+        from repro.core import channel
+        fleet = channel.make_fleet(f.n_vehicles, cfg.seed,
+                                   memory_budget_bytes=f.memory_budget_bytes)
+    return FederationSim(model, clients, test, cfg, fleet=fleet)
+
+
+def _drive(engine, on_round, on_cloud_merge):
+    if isinstance(engine, ScenarioEngine):
+        return engine.run(on_round=on_round, on_cloud_merge=on_cloud_merge)
+    return engine.run(on_round=on_round)
+
+
+def _totals(history) -> Dict[str, float]:
+    accs = [m.test_acc for m in history if np.isfinite(m.test_acc)]
+    return {
+        "rounds": len(history),
+        "comm_bytes": float(sum(m.comm_bytes for m in history)),
+        "energy_j": float(sum(m.energy_j for m in history)),
+        "sim_time_s": float(sum(m.sim_time_s for m in history)),
+        "final_loss": float(history[-1].loss) if history else float("nan"),
+        "final_acc": float(accs[-1]) if accs else float("nan"),
+    }
+
+
+def run(spec: ExperimentSpec, *,
+        on_round: Optional[Callable[[Any], None]] = None,
+        on_cloud_merge: Optional[Callable[[int, Any], None]] = None,
+        timeit: Union[bool, int] = False) -> RunResult:
+    """Execute an :class:`ExperimentSpec` end to end and return a
+    :class:`RunResult`.
+
+    ``on_round``/``on_cloud_merge`` stream progress (see module docstring);
+    ``timeit`` truthy adds a warmup run plus ``int(timeit)`` timed
+    **callback-free** re-runs (reset between; min wins) before the final
+    callback-visible run, so ``round_s``/``rounds_per_s`` report
+    compile-free engine steady state regardless of callback cost — an int
+    > 1 strips scheduler noise on small containers."""
+    engine = build_engine(spec)
+    timing: Dict[str, float] = {}
+    warmup = 0.0
+    if isinstance(engine, ScenarioEngine) and spec.runtime.precompile:
+        t0 = time.perf_counter()
+        engine.precompile()
+        warmup += time.perf_counter() - t0
+    best = None
+    if timeit:
+        t0 = time.perf_counter()
+        _drive(engine, None, None)
+        warmup += time.perf_counter() - t0
+        # timed samples are always callback-free, so round_s reports pure
+        # engine steady state even when on_round does expensive work
+        for _ in range(max(int(timeit), 1)):
+            engine.reset()
+            t0 = time.perf_counter()
+            _drive(engine, None, None)
+            rep = time.perf_counter() - t0
+            best = rep if best is None else min(best, rep)
+        engine.reset()
+    t0 = time.perf_counter()
+    history = _drive(engine, on_round, on_cloud_merge)
+    run_s = time.perf_counter() - t0
+    fastest = best if best is not None else run_s
+    timing["warmup_s"] = warmup
+    timing["run_s"] = run_s
+    timing["round_s"] = fastest / max(len(history), 1)
+    timing["rounds_per_s"] = (max(len(history), 1) / fastest
+                              if fastest else 0.0)
+
+    diagnostics: Dict[str, Any] = {"model": spec.model}
+    if isinstance(engine, ScenarioEngine):
+        diagnostics.update(
+            mode=engine.mode, n_rsus=engine.n_rsus,
+            compile_fallbacks=engine.programs.compile_fallbacks)
+    else:
+        diagnostics.update(mode=engine.engine.mode, n_rsus=1)
+    return RunResult(spec=spec, engine_kind=spec.engine_kind,
+                     history=list(history), totals=_totals(history),
+                     timing=timing, diagnostics=diagnostics,
+                     final_params=(list(engine.units), engine.head))

@@ -1,0 +1,307 @@
+"""Declarative experiment specs: nested config groups over one flat engine
+config, validated against the registries at construction time.
+
+An :class:`ExperimentSpec` is pure data — strings, numbers, and four nested
+groups — that fully determines a federation experiment:
+
+* :class:`TrainConfig` — the learning loop: scheme, batches, epochs/steps,
+  optimizer, lr, rounds, eval cadence, smashed-data compression, and the
+  RSU server schedule.
+* :class:`AdaptiveConfig` — cut selection: the strategy (registry-validated
+  per engine) and the fixed cut for ``sl``/``sfl``.
+* :class:`FleetConfig` — who trains where: fleet size, the mobility
+  scenario (``"single_rsu"``/None routes to the single-RSU engine), cloud
+  sync cadence, data sizing, and the analytic-cost knobs.
+* :class:`RuntimeConfig` — XLA execution: seed, intra-bucket schedule,
+  super-step fusion K, slot capacity, AOT precompile, compilation cache.
+
+Validation happens in ``__post_init__``: unknown registry keys, field
+values outside the allowed sets, and combinations the selected engine
+cannot execute (e.g. ``strategy="latency"`` on the multi-RSU engine, whose
+cut selection runs on-device) all raise ``ValueError`` with the allowed
+values listed — at spec-build time, not rounds-deep inside engine dispatch.
+
+``to_json``/``from_json`` round-trip every spec; ``to_sim_config`` /
+``from_sim_config`` are the deprecation shim onto the flat
+:class:`~repro.core.fedsim.SimConfig` the engines still consume
+(field-for-field, asserted in tests/test_api.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+from typing import Any, Dict, Optional, Tuple, Union
+
+from repro.api import registry
+from repro.core.fedsim import SimConfig
+
+__all__ = [
+    "TrainConfig", "AdaptiveConfig", "FleetConfig", "RuntimeConfig",
+    "ExperimentSpec", "SIM_CONFIG_FIELD_MAP",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainConfig:
+    """The learning loop (paper defaults: batch 16, 5 local epochs,
+    lr 1e-4)."""
+    scheme: str = "asfl"              # cl | fl | sl | sfl | asfl
+    batch_size: int = 16
+    local_epochs: int = 5
+    local_steps: Optional[int] = None  # overrides epochs if set
+    lr: float = 1e-4
+    rounds: int = 10
+    optimizer: str = "adam"           # adam | sgd | momentum
+    eval_every: int = 1               # 0 = never
+    compress_smashed: bool = False
+    server_schedule: str = "sequential"  # sequential | parallel
+
+
+@dataclasses.dataclass(frozen=True)
+class AdaptiveConfig:
+    """Cut-layer selection — the 'adaptive' in ASFL."""
+    strategy: str = "paper"           # registry.STRATEGIES key
+    cut: int = 4                      # fixed cut for sl / sfl
+
+
+@dataclasses.dataclass(frozen=True)
+class FleetConfig:
+    """The fleet and where it drives.  ``scenario`` routes the experiment:
+    ``"single_rsu"`` (or None) -> FederationSim; a registry scenario name ->
+    the multi-RSU ScenarioEngine."""
+    n_vehicles: int = 4
+    scenario: Optional[str] = registry.SINGLE_RSU
+    scenario_kwargs: Dict[str, Any] = dataclasses.field(default_factory=dict)
+    cloud_sync_every: int = 1         # multi-RSU: cloud merge every k rounds
+    round_interval_s: float = 5.0     # wall-clock round spacing (mobility)
+    mobility_dropout: bool = False    # single-RSU §II-C interruption model
+    server_flops: float = 2e12        # RSU compute, analytic cost model
+    # fleet data sizing (every registry model's make_data consumes these)
+    per_vehicle_samples: int = 64
+    test_samples: int = 256
+    data_seed: int = 0
+    # single-RSU fleet memory budgets (adaptive strategy "memory"):
+    # None = unconstrained, scalar = fleet-wide, (lo, hi) = per-vehicle draw
+    memory_budget_bytes: Optional[Union[float, Tuple[float, float]]] = None
+
+
+@dataclasses.dataclass(frozen=True)
+class RuntimeConfig:
+    """XLA execution knobs (DESIGN.md §6/§8)."""
+    seed: int = 0
+    cohort_parallel: str = "auto"     # auto | vmap | scan | unroll
+    superstep: int = 1                # rounds fused per scenario dispatch
+    slot_capacity: str = "pow2"       # pow2 | tight8
+    precompile: bool = True           # scenario engine: AOT-compile the plan
+    compilation_cache_dir: Optional[str] = None
+
+
+# SimConfig field -> (spec group, group field): the deprecation shim's
+# field-for-field mapping, used by both converters below (and asserted
+# exhaustive over SimConfig's fields in tests/test_api.py)
+SIM_CONFIG_FIELD_MAP: Dict[str, Tuple[str, str]] = {
+    "scheme": ("train", "scheme"),
+    "batch_size": ("train", "batch_size"),
+    "local_epochs": ("train", "local_epochs"),
+    "local_steps": ("train", "local_steps"),
+    "lr": ("train", "lr"),
+    "rounds": ("train", "rounds"),
+    "optimizer": ("train", "optimizer"),
+    "eval_every": ("train", "eval_every"),
+    "compress_smashed": ("train", "compress_smashed"),
+    "server_schedule": ("train", "server_schedule"),
+    "adaptive_strategy": ("adaptive", "strategy"),
+    "cut": ("adaptive", "cut"),
+    "n_clients": ("fleet", "n_vehicles"),
+    "round_interval_s": ("fleet", "round_interval_s"),
+    "mobility_dropout": ("fleet", "mobility_dropout"),
+    "server_flops": ("fleet", "server_flops"),
+    "seed": ("runtime", "seed"),
+    "cohort_parallel": ("runtime", "cohort_parallel"),
+    "superstep": ("runtime", "superstep"),
+    "slot_capacity": ("runtime", "slot_capacity"),
+    "compilation_cache_dir": ("runtime", "compilation_cache_dir"),
+}
+
+_GROUP_TYPES = {"train": TrainConfig, "adaptive": AdaptiveConfig,
+                "fleet": FleetConfig, "runtime": RuntimeConfig}
+
+
+@dataclasses.dataclass(frozen=True)
+class ExperimentSpec:
+    """One experiment, declaratively: model x scenario x strategy x schedule
+    plus the nested config groups.  Construction validates everything the
+    registries know about; ``repro.api.run(spec)`` routes it to the right
+    engine."""
+    model: str = "resnet18"
+    train: TrainConfig = dataclasses.field(default_factory=TrainConfig)
+    adaptive: AdaptiveConfig = dataclasses.field(
+        default_factory=AdaptiveConfig)
+    fleet: FleetConfig = dataclasses.field(default_factory=FleetConfig)
+    runtime: RuntimeConfig = dataclasses.field(default_factory=RuntimeConfig)
+    model_kwargs: Dict[str, Any] = dataclasses.field(default_factory=dict)
+
+    # ---- engine routing ------------------------------------------------
+    @property
+    def engine_kind(self) -> str:
+        """Which engine ``run`` dispatches to: ``"federation"`` (single-RSU
+        FederationSim) or ``"scenario"`` (multi-RSU ScenarioEngine)."""
+        sc = self.fleet.scenario
+        return (registry.FEDERATION
+                if sc in (None, registry.SINGLE_RSU) else registry.SCENARIO)
+
+    # ---- validation ----------------------------------------------------
+    def __post_init__(self):
+        # field-level validity (allowed values listed) via the engine
+        # config's own construction-time checks
+        self.to_sim_config()
+        entry = registry.model_entry(self.model)
+
+        sc = self.fleet.scenario
+        if sc is not None and sc not in registry.SCENARIOS:
+            raise ValueError(
+                f"unknown scenario {sc!r}; registered: "
+                f"{registry.scenario_names()} (None == single_rsu)")
+        engine = self.engine_kind
+
+        strat = registry.STRATEGIES.get(self.adaptive.strategy)
+        if strat is None:
+            raise ValueError(
+                f"unknown adaptive strategy {self.adaptive.strategy!r}; "
+                f"registered: {' | '.join(sorted(registry.STRATEGIES))}")
+        # the strategy is consumed whenever cuts are adaptive (asfl on the
+        # single-RSU engine; always on the scenario engine)
+        consumed = engine == registry.SCENARIO or self.train.scheme == "asfl"
+        if consumed and engine not in strat.engines:
+            ok = sorted(n for n, s in registry.STRATEGIES.items()
+                        if engine in s.engines)
+            raise ValueError(
+                f"adaptive strategy {strat.name!r} is not executable by the "
+                f"{engine} engine (fleet.scenario={sc!r}); strategies this "
+                f"engine supports: {' | '.join(ok)}")
+
+        sched = registry.SCHEDULES.get(self.train.server_schedule)
+        if sched is None:
+            raise ValueError(
+                f"unknown server schedule {self.train.server_schedule!r}; "
+                f"registered: {' | '.join(sorted(registry.SCHEDULES))}")
+        if engine not in sched.engines:
+            ok = sorted(n for n, s in registry.SCHEDULES.items()
+                        if engine in s.engines)
+            raise ValueError(
+                f"server schedule {sched.name!r} is not executable by the "
+                f"{engine} engine (fleet.scenario={sc!r}); schedules this "
+                f"engine supports: {' | '.join(ok)} (the parallel schedule "
+                f"needs a multi-RSU scenario)")
+
+        if engine == registry.SCENARIO:
+            if self.train.scheme != "asfl":
+                raise ValueError(
+                    f"scheme {self.train.scheme!r} is not executable by the "
+                    f"multi-RSU scenario engine (fleet.scenario={sc!r}); it "
+                    f"runs the adaptive split flow only: scheme='asfl'. "
+                    f"Use fleet.scenario='single_rsu' for cl | fl | sl | "
+                    f"sfl")
+            if self.fleet.mobility_dropout:
+                raise ValueError(
+                    "fleet.mobility_dropout is the single-RSU interruption "
+                    "model; multi-RSU scenarios model coverage through the "
+                    "scenario itself (serving_rsu == -1)")
+            if self.fleet.memory_budget_bytes is not None:
+                raise ValueError(
+                    "fleet.memory_budget_bytes feeds the single-RSU "
+                    "'memory' strategy; the scenario engine's on-device "
+                    "strategies are: "
+                    f"{' | '.join(sorted(n for n, s in registry.STRATEGIES.items() if registry.SCENARIO in s.engines))}")
+        else:
+            if self.runtime.superstep > 1:
+                raise ValueError(
+                    f"runtime.superstep={self.runtime.superstep} fuses "
+                    f"multi-RSU rounds; the single-RSU engine dispatches "
+                    f"per round — set a fleet.scenario "
+                    f"({registry.scenario_names()}) or superstep=1")
+            if self.fleet.cloud_sync_every != 1:
+                raise ValueError(
+                    "fleet.cloud_sync_every is the multi-RSU edge->cloud "
+                    "cadence; the single-RSU engine aggregates at its one "
+                    "RSU every round (leave it at 1 or set a scenario)")
+
+        if self.train.scheme in ("sl", "sfl"):
+            if not (1 <= self.adaptive.cut <= entry.n_units - 1):
+                raise ValueError(
+                    f"adaptive.cut={self.adaptive.cut} is out of range for "
+                    f"model {self.model!r} ({entry.n_units} units): fixed "
+                    f"cuts must be in [1, {entry.n_units - 1}]")
+        if self.fleet.cloud_sync_every < 1:
+            raise ValueError(
+                f"fleet.cloud_sync_every={self.fleet.cloud_sync_every!r} "
+                f"must be an int >= 1")
+        for field in ("per_vehicle_samples", "test_samples"):
+            if getattr(self.fleet, field) < 1:
+                raise ValueError(
+                    f"fleet.{field}={getattr(self.fleet, field)!r} must be "
+                    f">= 1")
+        if self.fleet.per_vehicle_samples < self.train.batch_size \
+                and self.train.local_steps is None:
+            raise ValueError(
+                f"fleet.per_vehicle_samples={self.fleet.per_vehicle_samples}"
+                f" < train.batch_size={self.train.batch_size} with "
+                f"epoch-driven local steps; raise per_vehicle_samples or "
+                f"set train.local_steps")
+
+    # ---- the SimConfig deprecation shim ---------------------------------
+    def to_sim_config(self) -> SimConfig:
+        """The flat engine config (``repro.core.fedsim.SimConfig``) this
+        spec maps onto — the deprecation shim for pre-api callers; the
+        engines keep consuming SimConfig internally."""
+        kw = {}
+        for sim_field, (group, field) in SIM_CONFIG_FIELD_MAP.items():
+            kw[sim_field] = getattr(getattr(self, group), field)
+        return SimConfig(**kw)
+
+    @classmethod
+    def from_sim_config(cls, cfg: SimConfig, *, model: str = "resnet18",
+                        scenario: Optional[str] = registry.SINGLE_RSU,
+                        **extras) -> "ExperimentSpec":
+        """Lift a legacy flat ``SimConfig`` (plus the model/scenario that
+        used to be picked by constructing an engine class by hand) into a
+        spec, field-for-field.  ``extras`` override any nested field as
+        ``"group.field"`` keys (e.g. ``{"fleet.cloud_sync_every": 2}``)."""
+        groups: Dict[str, Dict[str, Any]] = {g: {} for g in _GROUP_TYPES}
+        for sim_field, (group, field) in SIM_CONFIG_FIELD_MAP.items():
+            groups[group][field] = getattr(cfg, sim_field)
+        groups["fleet"]["scenario"] = scenario
+        for key, value in extras.items():
+            group, _, field = key.partition(".")
+            if group not in groups or not field:
+                raise ValueError(
+                    f"override key {key!r} must look like 'group.field' "
+                    f"with group in {sorted(groups)}")
+            groups[group][field] = value
+        return cls(model=model,
+                   **{g: _GROUP_TYPES[g](**kw) for g, kw in groups.items()})
+
+    # ---- serialization ---------------------------------------------------
+    def to_dict(self) -> Dict[str, Any]:
+        return dataclasses.asdict(self)
+
+    def to_json(self, **dumps_kw) -> str:
+        return json.dumps(self.to_dict(), **dumps_kw)
+
+    @classmethod
+    def from_dict(cls, d: Dict[str, Any]) -> "ExperimentSpec":
+        kw = dict(d)
+        for group, typ in _GROUP_TYPES.items():
+            if group in kw and isinstance(kw[group], dict):
+                kw[group] = typ(**kw[group])
+        # JSON has no tuples: restore the (lo, hi) budget pair
+        fleet = kw.get("fleet")
+        if isinstance(fleet, FleetConfig) \
+                and isinstance(fleet.memory_budget_bytes, list):
+            kw["fleet"] = dataclasses.replace(
+                fleet, memory_budget_bytes=tuple(fleet.memory_budget_bytes))
+        return cls(**kw)
+
+    @classmethod
+    def from_json(cls, s: str) -> "ExperimentSpec":
+        return cls.from_dict(json.loads(s))

@@ -38,7 +38,7 @@ from jax import lax
 
 from repro.configs.base import enable_compilation_cache
 from repro.core import adaptive, aggregation, channel, compression, cost
-from repro.core.superstep import SuperStepPrograms
+from repro.core.superstep import SERVER_SCHEDULES, SuperStepPrograms
 from repro.data.pipeline import (ClientDataset, StackedClients,
                                  epoch_batch_indices, sample_batch_indices,
                                  stack_clients)
@@ -93,6 +93,24 @@ class ResNetModel:
         return cost.resnet_profile()
 
 
+# the valid values of every categorical SimConfig field — construction
+# rejects anything else (with the allowed values listed) instead of failing
+# deep inside engine dispatch.  The api layer (repro.api) re-validates the
+# *combinations* per engine at spec-build time.
+SCHEMES = ("cl", "fl", "sl", "sfl", "asfl")
+ADAPTIVE_STRATEGIES = ("paper", "paper-literal", "latency", "energy",
+                       "memory", "residence")
+SLOT_CAPACITIES = ("pow2", "tight8")
+COHORT_MODES = ("auto", "vmap", "scan", "unroll")
+OPTIMIZERS = ("adam", "sgd", "momentum")
+
+# which adaptive strategies each engine can execute (the fused scenario
+# engine runs cut selection on-device; only the traced strategies are wired)
+FEDERATION_STRATEGIES = ("paper", "paper-literal", "latency", "energy",
+                         "memory")
+SCENARIO_STRATEGIES = ("paper", "paper-literal", "residence")
+
+
 @dataclasses.dataclass
 class SimConfig:
     scheme: str = "asfl"          # cl | fl | sl | sfl | asfl
@@ -143,6 +161,31 @@ class SimConfig:
     # any engine latches it on for every compile in the process, and the
     # last configured directory wins (configs.base.enable_compilation_cache)
     compilation_cache_dir: Optional[str] = None
+
+    def __post_init__(self):
+        for field, allowed in (("scheme", SCHEMES),
+                               ("adaptive_strategy", ADAPTIVE_STRATEGIES),
+                               ("server_schedule", SERVER_SCHEDULES),
+                               ("slot_capacity", SLOT_CAPACITIES),
+                               ("cohort_parallel", COHORT_MODES),
+                               ("optimizer", OPTIMIZERS)):
+            value = getattr(self, field)
+            if value not in allowed:
+                raise ValueError(
+                    f"SimConfig.{field}={value!r} is not valid; allowed "
+                    f"values: {' | '.join(allowed)}")
+        for field, floor in (("n_clients", 1), ("batch_size", 1),
+                             ("local_epochs", 1), ("rounds", 1),
+                             ("superstep", 1), ("cut", 1), ("eval_every", 0)):
+            value = getattr(self, field)
+            if not isinstance(value, int) or value < floor:
+                raise ValueError(
+                    f"SimConfig.{field}={value!r} is not valid; expected an "
+                    f"int >= {floor}")
+        if self.local_steps is not None and self.local_steps < 1:
+            raise ValueError(
+                f"SimConfig.local_steps={self.local_steps!r} is not valid; "
+                f"expected None (use local_epochs) or an int >= 1")
 
 
 @dataclasses.dataclass
@@ -856,6 +899,11 @@ class FederationSim:
         if c.scheme == "sfl" or c.scheme == "sl":
             return [c.cut] * len(self.clients)
         strat = c.adaptive_strategy
+        if strat not in FEDERATION_STRATEGIES:
+            raise ValueError(
+                f"adaptive_strategy {strat!r} needs the multi-RSU "
+                f"ScenarioEngine; FederationSim supports: "
+                f"{' | '.join(FEDERATION_STRATEGIES)}")
         if strat == "paper":
             return adaptive.paper_threshold(rates)
         if strat == "paper-literal":
@@ -875,11 +923,17 @@ class FederationSim:
                                      c.local_epochs)
 
     # ---- schemes -----------------------------------------------------
-    def run(self) -> List[RoundMetrics]:
+    def run(self, on_round: Optional[Callable[[RoundMetrics], None]] = None
+            ) -> List[RoundMetrics]:
+        """Run ``cfg.rounds`` federation rounds.  ``on_round`` (the api
+        layer's streaming hook) is invoked with each round's metrics as it
+        completes."""
         for rnd in range(self.cfg.rounds):
             fn = getattr(self, f"_round_{self.cfg.scheme}")
             metrics = fn(rnd)
             self.history.append(metrics)
+            if on_round is not None:
+                on_round(metrics)
         return self.history
 
     def _metrics(self, rnd, loss, cuts, comm, time_s, energy) -> RoundMetrics:
@@ -1131,16 +1185,12 @@ class ScenarioEngine:
                  cloud_sync_every: int = 1):
         assert len(clients) == scenario.n_vehicles, \
             (len(clients), scenario.n_vehicles)
-        if cfg.adaptive_strategy not in ("residence", "paper",
-                                         "paper-literal"):
+        if cfg.adaptive_strategy not in SCENARIO_STRATEGIES:
             raise ValueError(
-                f"ScenarioEngine supports adaptive_strategy 'residence', "
-                f"'paper', or 'paper-literal', got "
+                f"ScenarioEngine supports adaptive_strategy "
+                f"{' | '.join(SCENARIO_STRATEGIES)}, got "
                 f"{cfg.adaptive_strategy!r} (the single-RSU FederationSim "
                 f"strategies latency/energy/memory are not wired here)")
-        if cfg.slot_capacity not in ("pow2", "tight8"):
-            raise ValueError(f"slot_capacity must be 'pow2' or 'tight8', "
-                             f"got {cfg.slot_capacity!r}")
         if cfg.compilation_cache_dir:
             enable_compilation_cache(cfg.compilation_cache_dir)
         self.model = model
@@ -1336,9 +1386,32 @@ class ScenarioEngine:
     def run_round(self, rnd: int) -> ScenarioRoundMetrics:
         return self.run_superstep(rnd, 1)[0]
 
-    def run(self) -> List[ScenarioRoundMetrics]:
+    def run(self,
+            on_round: Optional[Callable[[ScenarioRoundMetrics],
+                                        None]] = None,
+            on_cloud_merge: Optional[Callable[[int, "ScenarioEngine"],
+                                              None]] = None
+            ) -> List[ScenarioRoundMetrics]:
+        """Run ``cfg.rounds`` rounds as fused super-step windows.
+
+        Streaming hooks (the api layer's callbacks): ``on_round(metrics)``
+        fires for every completed round, ``on_cloud_merge(rnd, engine)``
+        after every cloud sync — both AFTER each fused window completes, fed
+        from the window's single host pull, so neither adds a host sync to
+        the fused path.  Consequence for ``superstep`` K > 1: the fused
+        window keeps no per-round model snapshots, so every
+        ``on_cloud_merge`` in a window observes ``engine.units/head`` as of
+        the window end (exactly the eval semantics above); run with K = 1
+        if a callback needs the global model at each individual sync."""
         for rnd0, kk in self._windows(self.cfg.rounds):
-            self.history.extend(self.run_superstep(rnd0, kk))
+            window = self.run_superstep(rnd0, kk)
+            self.history.extend(window)
+            for m in window:
+                if on_round is not None:
+                    on_round(m)
+                if (on_cloud_merge is not None
+                        and (m.round + 1) % self.cloud_sync_every == 0):
+                    on_cloud_merge(m.round, self)
         return self.history
 
     def _accounting(self, rates, cuts, sched, handover):

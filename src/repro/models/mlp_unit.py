@@ -1,0 +1,92 @@
+"""Split MLP UnitModel + synthetic fleet data (promoted from the benchmark).
+
+The 9-unit split MLP over feature vectors is the dispatch-bound federation
+model: small enough that a local step is milliseconds, which is exactly the
+regime where engine overhead (not FLOPs) dominates at fleet scale — a
+vehicle-side perception model is small; the simulator's job is to scale the
+*federation*.  It mirrors the paper ResNet18's 9 split points, so every cut
+in {2, 4, 6, 8} is valid.  Registered as ``"mlp9"`` in
+:mod:`repro.api.registry`; the benchmarks and the multi-RSU example import
+it from here.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import cost
+from repro.data.pipeline import ClientDataset
+
+
+class MLPUnitModel:
+    """9-unit split MLP over feature vectors (every cut in {2,4,6,8} valid)."""
+    name = "mlp-split"
+    scan_friendly = True
+
+    def __init__(self, dim: int = 48, width: int = 64, n_units: int = 9,
+                 n_classes: int = 10):
+        self.dim, self.width, self.n_units = dim, width, n_units
+        self.n_classes = n_classes
+
+    def init(self, key):
+        ks = jax.random.split(key, self.n_units + 1)
+        units = []
+        d_in = self.dim
+        for i in range(self.n_units):
+            units.append({
+                "w": jax.random.normal(ks[i], (d_in, self.width))
+                * math.sqrt(2.0 / d_in),
+                "b": jnp.zeros((self.width,)),
+            })
+            d_in = self.width
+        head = {"w": jax.random.normal(ks[-1], (self.width, self.n_classes))
+                * math.sqrt(1.0 / self.width),
+                "b": jnp.zeros((self.n_classes,))}
+        return units, head
+
+    def apply_units(self, units, x, start):
+        for u in units:
+            x = jax.nn.relu(x @ u["w"] + u["b"])
+        return x
+
+    def head_loss(self, head, feats, labels):
+        logits = feats @ head["w"] + head["b"]
+        logz = jax.scipy.special.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, labels[:, None], axis=-1)[:, 0]
+        return jnp.mean(logz - gold), logits
+
+    def head_predict(self, head, feats):
+        return feats @ head["w"] + head["b"]
+
+    def profile(self):
+        w, d = self.width, self.dim
+        flops = [2.0 * d * w] + [2.0 * w * w] * (self.n_units - 1)
+        pbytes = [(d * w + w) * 4] + [(w * w + w) * 4] * (self.n_units - 1)
+        return cost.SplitProfile(
+            name=self.name, unit_fwd_flops=flops, unit_param_bytes=pbytes,
+            smashed_bytes_per_sample=[w * 4.0] * self.n_units,
+            head_flops=2.0 * w * self.n_classes,
+            head_param_bytes=(w * self.n_classes + self.n_classes) * 4,
+            smashed_trailing_dim=[w] * self.n_units)
+
+
+def make_mlp_fleet_data(n_clients: int, per_client: int, dim: int = 48,
+                        seed: int = 0, n_test: int = 256,
+                        n_classes: int = 10):
+    """Class-structured feature vectors, one shard per vehicle."""
+    rng = np.random.default_rng(seed)
+    templates = rng.normal(size=(n_classes, dim)).astype(np.float32)
+    clients = []
+    for i in range(n_clients):
+        y = rng.integers(0, n_classes, size=per_client)
+        x = templates[y] + 0.5 * rng.normal(size=(per_client, dim))
+        clients.append(ClientDataset(x.astype(np.float32),
+                                     y.astype(np.int32), i))
+    yt = rng.integers(0, n_classes, size=n_test)
+    xt = templates[yt] + 0.5 * rng.normal(size=(n_test, dim))
+    test = {"images": jnp.asarray(xt.astype(np.float32)),
+            "labels": jnp.asarray(yt.astype(np.int32))}
+    return clients, test

@@ -1,0 +1,345 @@
+"""The declarative experiment layer (ISSUE 4): spec validation + JSON
+round-trips, the SimConfig deprecation shim (field-for-field), registry
+combination coverage (every model x scenario x strategy x schedule either
+runs or fails at spec-build with an actionable error), engine routing,
+streaming callbacks, RunResult save/load, and the API-vs-direct-engine
+bit-for-bit parity for fused super-steps (sgd)."""
+import dataclasses
+import itertools
+
+import jax
+import numpy as np
+import pytest
+
+from repro import api
+from repro.core.fedsim import ScenarioEngine, SimConfig
+
+# ---------------------------------------------------------------- fixtures
+
+TINY_TRAIN = dict(rounds=1, local_steps=1, batch_size=4, lr=1e-3,
+                  eval_every=0)
+
+
+def _spec(model="mlp9", scenario=api.SINGLE_RSU, strategy="paper",
+          schedule="sequential", n=2, scheme="asfl", **runtime):
+    return api.ExperimentSpec(
+        model=model,
+        train=api.TrainConfig(scheme=scheme, server_schedule=schedule,
+                              **TINY_TRAIN),
+        adaptive=api.AdaptiveConfig(strategy=strategy),
+        fleet=api.FleetConfig(n_vehicles=n, scenario=scenario,
+                              per_vehicle_samples=16, test_samples=16),
+        runtime=api.RuntimeConfig(**runtime))
+
+
+@pytest.fixture(scope="module")
+def scenario_run():
+    """One fused scenario run through the front door, with callbacks —
+    shared by the streaming/save-load/parity tests (compiles once)."""
+    spec = api.ExperimentSpec(
+        model="mlp9",
+        train=api.TrainConfig(scheme="asfl", rounds=4, local_steps=2,
+                              batch_size=4, lr=1e-2, optimizer="sgd",
+                              eval_every=0),
+        adaptive=api.AdaptiveConfig(strategy="paper"),
+        fleet=api.FleetConfig(n_vehicles=4, scenario="trace_replay",
+                              cloud_sync_every=2, per_vehicle_samples=16,
+                              test_samples=16),
+        runtime=api.RuntimeConfig(superstep=2, precompile=False))
+    rounds_seen, merges = [], []
+    res = api.run(spec, on_round=lambda m: rounds_seen.append(m.round),
+                  on_cloud_merge=lambda rnd, eng: merges.append(rnd))
+    return spec, res, rounds_seen, merges
+
+
+# ------------------------------------------------------- public API surface
+
+API_SURFACE = sorted([
+    "ExperimentSpec", "TrainConfig", "AdaptiveConfig", "FleetConfig",
+    "RuntimeConfig", "SIM_CONFIG_FIELD_MAP",
+    "MODELS", "SCENARIOS", "STRATEGIES", "SCHEDULES",
+    "ModelEntry", "StrategyEntry", "ScheduleEntry",
+    "register_model", "register_scenario", "register_strategy",
+    "register_schedule", "model_entry", "build_model", "build_scenario",
+    "make_lm_fleet_data",
+    "FEDERATION", "SCENARIO", "SINGLE_RSU",
+    "run", "build_engine", "RunResult",
+])
+
+
+def test_api_surface_snapshot():
+    """The public contract: additions must update this snapshot (and
+    DESIGN.md §9); accidental removals fail tier-1."""
+    assert sorted(api.__all__) == API_SURFACE
+    for name in api.__all__:
+        assert hasattr(api, name), name
+
+
+def test_builtin_registries_present():
+    assert {"resnet18", "mlp9", "smollm-360m"} <= set(api.MODELS)
+    # every TransformerUnitModel-eligible (text) arch config is registered
+    from repro.configs import ARCH_IDS, get_config
+    text = {a for a in ARCH_IDS if get_config(a).frontend == "none"}
+    assert text <= set(api.MODELS)
+    assert set(api.SCENARIOS) == {"single_rsu", "highway_corridor",
+                                  "urban_grid", "trace_replay"}
+    assert set(api.SCHEDULES) == {"sequential", "parallel"}
+    assert {"paper", "paper-literal", "latency", "energy", "memory",
+            "residence"} == set(api.STRATEGIES)
+
+
+# -------------------------------------------------------- JSON round-trips
+
+def _roundtrip(spec):
+    again = api.ExperimentSpec.from_json(spec.to_json())
+    assert again == spec
+    return again
+
+
+def test_spec_json_roundtrips_every_registry_entry():
+    for model in api.MODELS:
+        _roundtrip(_spec(model=model))
+    for scenario in api.SCENARIOS:
+        _roundtrip(_spec(scenario=scenario))
+    for name, strat in api.STRATEGIES.items():
+        eng = strat.engines[0]
+        _roundtrip(_spec(strategy=name,
+                         scenario=(api.SINGLE_RSU
+                                   if eng == api.FEDERATION
+                                   else "highway_corridor")))
+    for name, sched in api.SCHEDULES.items():
+        _roundtrip(_spec(schedule=name,
+                         scenario=(api.SINGLE_RSU
+                                   if api.FEDERATION in sched.engines
+                                   else "urban_grid")))
+
+
+def test_spec_json_roundtrips_non_defaults():
+    spec = api.ExperimentSpec(
+        model="resnet18",
+        train=api.TrainConfig(scheme="sfl", batch_size=4, local_epochs=2,
+                              lr=5e-3, rounds=3, optimizer="momentum",
+                              eval_every=0, compress_smashed=True),
+        adaptive=api.AdaptiveConfig(strategy="latency", cut=6),
+        fleet=api.FleetConfig(n_vehicles=8, per_vehicle_samples=32,
+                              mobility_dropout=True,
+                              memory_budget_bytes=(1e5, 8e6)),
+        runtime=api.RuntimeConfig(seed=3, cohort_parallel="scan",
+                                  compilation_cache_dir="/tmp/x"))
+    again = _roundtrip(spec)
+    # JSON has no tuples: the (lo, hi) budget pair must come back a tuple
+    assert again.fleet.memory_budget_bytes == (1e5, 8e6)
+
+
+# ------------------------------------------------- the SimConfig shim
+
+def test_sim_config_field_map_is_exhaustive():
+    """Every flat SimConfig field maps onto exactly one nested group field
+    (the deprecation shim is field-for-field, never lossy)."""
+    sim_fields = {f.name for f in dataclasses.fields(SimConfig)}
+    assert set(api.SIM_CONFIG_FIELD_MAP) == sim_fields
+    for group, field in api.SIM_CONFIG_FIELD_MAP.values():
+        group_type = type(getattr(api.ExperimentSpec(), group))
+        assert field in {f.name for f in dataclasses.fields(group_type)}, \
+            (group, field)
+
+
+def test_sim_config_shim_roundtrip():
+    cfg = SimConfig(scheme="asfl", cut=2, n_clients=16, batch_size=4,
+                    local_epochs=3, local_steps=7, lr=2e-3, rounds=5,
+                    seed=11, optimizer="sgd", adaptive_strategy="residence",
+                    compress_smashed=True, server_flops=1e12,
+                    round_interval_s=2.5, mobility_dropout=False,
+                    cohort_parallel="vmap", eval_every=2,
+                    server_schedule="parallel", slot_capacity="tight8",
+                    superstep=4, compilation_cache_dir="/tmp/c")
+    spec = api.ExperimentSpec.from_sim_config(cfg, model="mlp9",
+                                              scenario="highway_corridor")
+    assert spec.to_sim_config() == cfg
+    for sim_field, (group, field) in api.SIM_CONFIG_FIELD_MAP.items():
+        assert getattr(getattr(spec, group), field) == \
+            getattr(cfg, sim_field), sim_field
+
+
+def test_from_sim_config_extras_override():
+    spec = api.ExperimentSpec.from_sim_config(
+        SimConfig(rounds=2), model="mlp9", scenario="urban_grid",
+        **{"fleet.cloud_sync_every": 3, "runtime.precompile": False})
+    assert spec.fleet.cloud_sync_every == 3
+    assert not spec.runtime.precompile
+    with pytest.raises(ValueError, match="group.field"):
+        api.ExperimentSpec.from_sim_config(SimConfig(), **{"bogus": 1})
+
+
+# ------------------------------------------------ construction validation
+
+@pytest.mark.parametrize("field,value", [
+    ("scheme", "federated"), ("adaptive_strategy", "psychic"),
+    ("server_schedule", "roundrobin"), ("slot_capacity", "pow3"),
+    ("cohort_parallel", "threads"), ("optimizer", "lion")])
+def test_sim_config_rejects_invalid_values(field, value):
+    with pytest.raises(ValueError) as e:
+        SimConfig(**{field: value})
+    msg = str(e.value)
+    assert field in msg and "allowed values" in msg
+
+
+@pytest.mark.parametrize("field,value", [
+    ("rounds", 0), ("batch_size", 0), ("superstep", 0), ("n_clients", 0)])
+def test_sim_config_rejects_invalid_ints(field, value):
+    with pytest.raises(ValueError, match=field):
+        SimConfig(**{field: value})
+
+
+@pytest.mark.parametrize("build,needle", [
+    (lambda: _spec(model="vgg"), "registered models"),
+    (lambda: _spec(scenario="mars"), "registered:"),
+    (lambda: _spec(strategy="latency", scenario="highway_corridor"),
+     "scenario engine"),
+    (lambda: _spec(strategy="residence"), "federation engine"),
+    (lambda: _spec(schedule="parallel"), "multi-RSU scenario"),
+    (lambda: _spec(superstep=4), "superstep"),
+    (lambda: _spec(scheme="fl", scenario="urban_grid"), "asfl"),
+    (lambda: api.ExperimentSpec(train=api.TrainConfig(scheme="sfl"),
+                                adaptive=api.AdaptiveConfig(cut=42)),
+     "out of range"),
+])
+def test_spec_build_rejects_invalid_combos(build, needle):
+    with pytest.raises(ValueError, match=needle):
+        build()
+
+
+def test_every_registry_combination_builds_or_fails_actionably():
+    """The acceptance grid: every (model x scenario x strategy x schedule)
+    either constructs a runnable spec or raises ValueError at build time
+    whose message names the offending value AND what is allowed."""
+    built = failed = 0
+    for model, scenario, strategy, schedule in itertools.product(
+            api.MODELS, api.SCENARIOS, api.STRATEGIES, api.SCHEDULES):
+        try:
+            spec = _spec(model=model, scenario=scenario, strategy=strategy,
+                         schedule=schedule)
+            assert spec.engine_kind in (api.FEDERATION, api.SCENARIO)
+            built += 1
+        except ValueError as e:
+            msg = str(e)
+            # actionable: the message lists what this engine supports
+            assert "engine" in msg and ("supports" in msg or
+                                        "allowed" in msg), msg
+            failed += 1
+    # both populations exist, and the valid grid is the expected size:
+    # models x (1 single-RSU x 5 strategies + 3 scenarios x 3 strategies
+    #           x 2 schedules)
+    assert built == len(api.MODELS) * (5 + 3 * 3 * 2)
+    assert failed > 0
+
+
+# ------------------------------------------------------- running the grid
+
+FEDERATION_STRATS = sorted(n for n, s in api.STRATEGIES.items()
+                           if api.FEDERATION in s.engines)
+SCENARIO_STRATS = sorted(n for n, s in api.STRATEGIES.items()
+                         if api.SCENARIO in s.engines)
+
+
+@pytest.mark.parametrize("strategy", FEDERATION_STRATS)
+def test_single_rsu_grid_runs(strategy):
+    res = api.run(_spec(strategy=strategy))
+    assert len(res.history) == 1
+    assert np.isfinite(res.history[-1].loss)
+    assert res.engine_kind == api.FEDERATION
+    assert res.diagnostics["n_rsus"] == 1
+
+
+@pytest.mark.parametrize("schedule", sorted(api.SCHEDULES))
+@pytest.mark.parametrize("strategy", SCENARIO_STRATS)
+def test_scenario_grid_runs(strategy, schedule):
+    res = api.run(_spec(scenario="trace_replay", strategy=strategy,
+                        schedule=schedule, n=4, precompile=False))
+    assert len(res.history) == 1
+    assert np.isfinite(res.history[-1].loss)
+    assert res.engine_kind == api.SCENARIO
+    assert res.diagnostics["compile_fallbacks"] == 0 \
+        or not res.spec.runtime.precompile
+
+
+@pytest.mark.parametrize("scenario", ["highway_corridor", "urban_grid"])
+def test_other_scenarios_run(scenario):
+    res = api.run(_spec(scenario=scenario, n=4, precompile=False))
+    assert np.isfinite(res.history[-1].loss)
+
+
+@pytest.mark.slow
+def test_lm_arch_runs_through_both_engines():
+    """A TransformerUnitModel registry entry trains through the cohort
+    engine AND the fused multi-RSU engine (reduced config, tiny shards)."""
+    for scenario in (api.SINGLE_RSU, "trace_replay"):
+        res = api.run(_spec(model="smollm-360m", scenario=scenario, n=2,
+                            precompile=False))
+        assert np.isfinite(res.history[-1].loss)
+
+
+# -------------------------------------------------- streaming + RunResult
+
+def test_streaming_callbacks(scenario_run):
+    spec, res, rounds_seen, merges = scenario_run
+    assert rounds_seen == [0, 1, 2, 3]          # every round, in order
+    assert merges == [1, 3]                     # cloud_sync_every=2
+    assert res.totals["rounds"] == 4
+    assert res.timing["run_s"] > 0
+
+
+def test_run_result_totals_and_params(scenario_run):
+    _, res, _, _ = scenario_run
+    assert res.totals["comm_bytes"] > 0
+    assert np.isfinite(res.totals["final_loss"])
+    units, head = res.final_params
+    assert len(units) == api.model_entry("mlp9").n_units
+    assert all(np.isfinite(np.asarray(u["w"])).all() for u in units)
+
+
+def test_run_result_save_load(tmp_path, scenario_run):
+    spec, res, _, _ = scenario_run
+    path = res.save(str(tmp_path / "run.json"))
+    again = api.RunResult.load(path)
+    assert again.spec == spec
+    assert again.engine_kind == res.engine_kind
+    assert len(again.history) == len(res.history)
+    assert again.history[-1].rsu_loads == res.history[-1].rsu_loads
+    np.testing.assert_allclose(
+        [m.loss for m in again.history], [m.loss for m in res.history])
+    assert again.totals == pytest.approx(res.totals, nan_ok=True)
+
+
+# ------------------------------------- API == direct engine, bit for bit
+
+def test_api_superstep_matches_direct_engine_bitforbit(scenario_run):
+    """The front door adds routing, not math: a K-fused sgd run through
+    repro.api.run equals the direct ScenarioEngine (PR 3) bit for bit —
+    same model init, data shards, scenario, and fused programs."""
+    spec, res, _, _ = scenario_run
+    entry = api.model_entry(spec.model)
+    f = spec.fleet
+    clients, test = entry.make_data(f.n_vehicles, f.per_vehicle_samples,
+                                    f.test_samples, f.data_seed)
+    sc = api.build_scenario(f.scenario, f.n_vehicles,
+                            seed=spec.runtime.seed, **f.scenario_kwargs)
+    eng = ScenarioEngine(entry.build(), clients, test, spec.to_sim_config(),
+                         sc, cloud_sync_every=f.cloud_sync_every)
+    hist = eng.run()
+    np.testing.assert_array_equal([m.loss for m in hist],
+                                  [m.loss for m in res.history])
+    assert [m.cuts for m in hist] == [m.cuts for m in res.history]
+    api_units, api_head = res.final_params
+    jax.tree.map(
+        lambda a, b: np.testing.assert_array_equal(np.asarray(a),
+                                                   np.asarray(b)),
+        {"units": list(eng.units), "head": eng.head},
+        {"units": list(api_units), "head": api_head})
+
+
+def test_build_engine_routes(scenario_run):
+    spec, _, _, _ = scenario_run
+    assert isinstance(api.build_engine(spec), ScenarioEngine)
+    from repro.core.fedsim import FederationSim
+    assert isinstance(api.build_engine(_spec()), FederationSim)

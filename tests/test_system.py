@@ -1,32 +1,38 @@
-"""End-to-end behaviour tests: every federation scheme runs; the compiled
+"""End-to-end behaviour tests: every federation scheme runs (through the
+declarative front door, ``repro.api.run`` — DESIGN.md §9); the compiled
 datacenter SFL step trains; split inference decodes consistently."""
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from repro import api
 from repro.configs import get_config
 from repro.core import distributed as D
-from repro.core.fedsim import FederationSim, ResNetModel, SimConfig
-from repro.data.pipeline import make_federated_data
 from repro.launch import mesh as MX
 from repro.models import transformer as T
 
 
-@pytest.fixture(scope="module")
-def fed_data():
-    return make_federated_data(0, n_train=256, n_test=128, n_clients=4)
+def _resnet_spec(scheme, rounds=1, local_steps=2, strategy="paper", **kw):
+    """The paper case study, declaratively: 4 vehicles, ResNet18, CIFAR-like
+    non-IID shards (the same data make_federated_data(0, 256, 128, 4)
+    produced for the pre-api version of these tests)."""
+    return api.ExperimentSpec(
+        model="resnet18",
+        train=api.TrainConfig(scheme=scheme, rounds=rounds,
+                              local_steps=local_steps, lr=1e-3, batch_size=8,
+                              compress_smashed=kw.pop("compress_smashed",
+                                                      False)),
+        adaptive=api.AdaptiveConfig(strategy=strategy),
+        fleet=api.FleetConfig(n_vehicles=4, per_vehicle_samples=64,
+                              test_samples=128, **kw))
 
 
 @pytest.mark.parametrize("scheme", ["cl", "fl", "sl", "sfl", "asfl"])
-def test_all_schemes_run_one_round(fed_data, scheme):
-    clients, test = fed_data
-    cfg = SimConfig(scheme=scheme, rounds=1, local_steps=2, lr=1e-3,
-                    batch_size=8)
-    sim = FederationSim(ResNetModel(), clients, test, cfg)
-    hist = sim.run()
-    assert len(hist) == 1
-    m = hist[0]
+def test_all_schemes_run_one_round(scheme):
+    res = api.run(_resnet_spec(scheme))
+    assert len(res.history) == 1
+    m = res.history[0]
     assert np.isfinite(m.loss)
     assert 0.0 <= m.test_acc <= 1.0
     if scheme not in ("cl",):
@@ -34,43 +40,31 @@ def test_all_schemes_run_one_round(fed_data, scheme):
         assert m.sim_time_s > 0
 
 
-def test_asfl_adapts_cuts_to_rates(fed_data):
-    clients, test = fed_data
-    cfg = SimConfig(scheme="asfl", rounds=2, local_steps=1, batch_size=8)
-    sim = FederationSim(ResNetModel(), clients, test, cfg)
-    hist = sim.run()
-    for m in hist:
+def test_asfl_adapts_cuts_to_rates():
+    res = api.run(_resnet_spec("asfl", rounds=2, local_steps=1))
+    for m in res.history:
         assert all(c in (2, 4, 6, 8) for c in m.cuts)
 
 
-def test_memory_constrained_strategy_clamps_cuts(fed_data):
-    """adaptive_strategy='memory': per-vehicle memory budgets upper-bound
-    the vehicle-side sub-model (then the paper rule applies underneath)."""
-    from repro.core import adaptive, channel
+def test_memory_constrained_strategy_clamps_cuts():
+    """adaptive_strategy='memory': vehicle memory budgets upper-bound the
+    vehicle-side sub-model (then the paper rule applies underneath)."""
+    from repro.core import adaptive
     from repro.core.cost import resnet_profile
-    clients, test = fed_data
-    budgets = [1e4, 4e5, float("inf"), float("inf")]
-    fleet = channel.make_fleet(4, seed=0)
-    for v, b in zip(fleet, budgets):
-        v.memory_budget_bytes = b
-    cfg = SimConfig(scheme="asfl", adaptive_strategy="memory", rounds=1,
-                    local_steps=1, batch_size=8)
-    sim = FederationSim(ResNetModel(), clients, test, cfg, fleet=fleet)
-    hist = sim.run()
-    max_cuts = adaptive.max_cut_for_budget(resnet_profile(), budgets)
-    cuts = hist[0].cuts
-    assert all(c <= m for c, m in zip(cuts, max_cuts))
-    assert cuts[0] == 1                      # 10 KB: only the stem fits
-    assert np.isfinite(hist[0].loss)
+    budget = 4e5
+    res = api.run(_resnet_spec("asfl", local_steps=1, strategy="memory",
+                               memory_budget_bytes=budget))
+    max_cut = int(adaptive.max_cut_for_budget(resnet_profile(), budget)[0])
+    cuts = res.history[0].cuts
+    assert max_cut < 8                       # the budget actually binds
+    assert all(c <= max_cut for c in cuts)
+    assert np.isfinite(res.history[0].loss)
 
 
-def test_compressed_sfl_reduces_comm(fed_data):
-    clients, test = fed_data
-    base = SimConfig(scheme="sfl", rounds=1, local_steps=1, batch_size=8)
-    comp = SimConfig(scheme="sfl", rounds=1, local_steps=1, batch_size=8,
-                     compress_smashed=True)
-    h0 = FederationSim(ResNetModel(), clients, test, base).run()
-    h1 = FederationSim(ResNetModel(), clients, test, comp).run()
+def test_compressed_sfl_reduces_comm():
+    h0 = api.run(_resnet_spec("sfl", local_steps=1)).history
+    h1 = api.run(_resnet_spec("sfl", local_steps=1,
+                              compress_smashed=True)).history
     assert h1[0].comm_bytes < h0[0].comm_bytes
     assert np.isfinite(h1[0].loss)
 
