@@ -1,0 +1,49 @@
+"""Pre-jax-import handling of the benchmark ``--devices`` flag.
+
+``--devices N[,M,...]`` asks a benchmark for one row set per device count
+(the fleet-sharding scale axis, DESIGN.md §10).  jax locks the host device
+count at first backend init, so the flag must be peeked from ``sys.argv``
+and folded into ``XLA_FLAGS=--xla_force_host_platform_device_count=max``
+BEFORE any jax import — the same trick ``launch/dryrun.py`` uses.  One
+process then serves every requested count: a FleetMesh over n <= max
+devices just takes the first n.
+
+Honesty note: forcing the host device count splits the host's cores (and
+XLA's intra-op threadpools) across ALL rows of the run, including the
+``devices=1`` ones — so single-device rows from a ``--devices 1,8`` run
+read lower than a pure 1-device process would.  The per-device-count rows
+of one run are mutually comparable; the run's ``config.devices`` list and
+provenance argv record the split for cross-run comparisons.
+
+Import this module (and call :func:`parse_devices_early`) before jax.
+"""
+from __future__ import annotations
+
+import os
+import sys
+from typing import List
+
+
+def parse_devices_early(argv=None) -> List[int]:
+    """Device counts from ``--devices`` (default ``[1]``); forces the host
+    platform device count to their max when > 1.  Must run pre-jax-import."""
+    argv = list(sys.argv[1:] if argv is None else argv)
+    raw = None
+    for i, a in enumerate(argv):
+        if a == "--devices" and i + 1 < len(argv):
+            raw = argv[i + 1]
+        elif a.startswith("--devices="):
+            raw = a.split("=", 1)[1]
+    if not raw:
+        return [1]
+    counts = sorted({max(int(s), 1) for s in raw.split(",")})
+    top = counts[-1]
+    if top > 1:
+        assert "jax" not in sys.modules, \
+            "--devices must be parsed before jax is imported"
+        flags = os.environ.get("XLA_FLAGS", "")
+        if "xla_force_host_platform_device_count" not in flags:
+            os.environ["XLA_FLAGS"] = (
+                f"{flags} --xla_force_host_platform_device_count={top}"
+            ).strip()
+    return counts

@@ -30,7 +30,6 @@ declarative layer adds no measurable per-round cost.
 from __future__ import annotations
 
 import argparse
-import json
 import os
 import time
 from typing import List, Optional, Tuple
@@ -41,9 +40,16 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))
 
+from bench_devices import parse_devices_early
+
+# --devices N[,M,...] runs per-device-count rows; the host device count must
+# be forced BEFORE the first jax import (jax locks it on backend init)
+DEVICE_COUNTS = parse_devices_early()
+
 import jax
 import numpy as np
 
+from bench_io import device_row_key, write_bench
 from bench_timing import interleaved_overhead
 from repro import api
 from repro.core import aggregation
@@ -51,9 +57,6 @@ from repro.core.fedsim import FederationSim, SimConfig, _make_opt, \
     make_sfl_batch_step
 # re-exported for backward compatibility (promoted to the package in PR 4)
 from repro.models.mlp_unit import MLPUnitModel, make_mlp_fleet_data  # noqa: F401
-
-ROOT = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
-OUT_DIR = os.path.join(os.path.dirname(__file__), "out")
 
 
 # ------------------------------------------------- seed per-client loop sim
@@ -183,7 +186,8 @@ def measure_api_overhead(spec, direct, repeats: int = 3) -> dict:
 
 def _spec(model_name: str, scheme: str, n: int, per_client: int,
           local_steps: int, batch: int, rounds: int,
-          compilation_cache: Optional[str]) -> api.ExperimentSpec:
+          compilation_cache: Optional[str],
+          devices: int = 1) -> api.ExperimentSpec:
     return api.ExperimentSpec(
         model=model_name,
         train=api.TrainConfig(scheme=scheme, rounds=rounds,
@@ -193,71 +197,83 @@ def _spec(model_name: str, scheme: str, n: int, per_client: int,
             n_vehicles=n, per_vehicle_samples=per_client, test_samples=256,
             data_seed=(n if model_name == "mlp9" else 0)),
         runtime=api.RuntimeConfig(
-            compilation_cache_dir=compilation_cache))
+            compilation_cache_dir=compilation_cache, mesh_devices=devices))
+
+
+def _row_key(r) -> str:
+    return device_row_key(f"{r['scheme']}@{r['n_clients']}", r["devices"])
 
 
 def bench(sizes: List[int], schemes: List[str], model_kind: str,
           per_client: int, local_steps: int, batch: int, rounds: int,
           seed_loop_max: int,
-          compilation_cache: Optional[str] = None) -> dict:
+          compilation_cache: Optional[str] = None,
+          device_counts: Tuple[int, ...] = (1,)) -> dict:
     model_name = "mlp9" if model_kind == "mlp" else "resnet18"
     entry = api.model_entry(model_name)
     overhead_fleet = 64 if 64 in sizes else max(sizes)
     results = []
     api_overhead = None
-    for n in sizes:
-        for scheme in schemes:
-            spec = _spec(model_name, scheme, n, per_client, local_steps,
-                         batch, rounds, compilation_cache)
-            res = api.run(spec, timeit=True)
-            assert all(np.isfinite(m.loss) for m in res.history)
-            t_eng = res.timing["round_s"]
-            row = {"scheme": scheme, "n_clients": n,
-                   "mode": res.diagnostics["mode"],
-                   "engine_round_s": t_eng,
-                   "warmup_s": res.timing["warmup_s"],
-                   "seed_round_s": None, "speedup": None}
-            if scheme in ("sfl", "asfl") and (n <= seed_loop_max
-                                              or n == overhead_fleet):
-                clients, test = entry.make_data(
-                    n, per_client, spec.fleet.test_samples,
-                    spec.fleet.data_seed)
-                cfg = spec.to_sim_config()
-                if n <= seed_loop_max:
-                    ref = SeedLoopSim(entry.build(), clients, test, cfg)
-                    _, t_ref = _timed_run(ref)
-                    row["seed_round_s"] = t_ref
-                    row["speedup"] = t_ref / t_eng
-                    # both sides consumed identical batch streams & cuts
-                    np.testing.assert_allclose(
-                        res.history[-1].loss, ref.history[-1].loss,
-                        rtol=0.05, atol=0.05)
-                if scheme == "asfl" and n == overhead_fleet:
-                    o_rounds = max(rounds, 8)
-                    o_spec = _spec(model_name, scheme, n, per_client,
-                                   local_steps, batch, o_rounds,
-                                   compilation_cache)
-                    api_overhead = measure_api_overhead(
-                        o_spec, FederationSim(entry.build(), clients, test,
-                                              o_spec.to_sim_config()))
-            results.append(row)
-            print(f"{scheme:5s} n={n:4d} mode={row['mode']:6s} "
-                  f"engine={t_eng*1e3:9.1f} ms/round"
-                  + (f"  seed={row['seed_round_s']*1e3:9.1f} ms/round"
-                     f"  speedup={row['speedup']:.1f}x"
-                     if row["speedup"] else ""), flush=True)
+    for devices in device_counts:
+        for n in sizes:
+            for scheme in schemes:
+                spec = _spec(model_name, scheme, n, per_client, local_steps,
+                             batch, rounds, compilation_cache, devices)
+                res = api.run(spec, timeit=True)
+                assert all(np.isfinite(m.loss) for m in res.history)
+                t_eng = res.timing["round_s"]
+                row = {"scheme": scheme, "n_clients": n, "devices": devices,
+                       "mode": res.diagnostics["mode"],
+                       "engine_round_s": t_eng,
+                       "warmup_s": res.timing["warmup_s"],
+                       "seed_round_s": None, "speedup": None}
+                # the seed-loop reference and the api-overhead probe run on
+                # the single-device rows only (they measure engine overhead,
+                # not the mesh)
+                if devices == 1 and scheme in ("sfl", "asfl") \
+                        and (n <= seed_loop_max or n == overhead_fleet):
+                    clients, test = entry.make_data(
+                        n, per_client, spec.fleet.test_samples,
+                        spec.fleet.data_seed)
+                    cfg = spec.to_sim_config()
+                    if n <= seed_loop_max:
+                        ref = SeedLoopSim(entry.build(), clients, test, cfg)
+                        _, t_ref = _timed_run(ref)
+                        row["seed_round_s"] = t_ref
+                        row["speedup"] = t_ref / t_eng
+                        # both sides consumed identical batch streams & cuts
+                        np.testing.assert_allclose(
+                            res.history[-1].loss, ref.history[-1].loss,
+                            rtol=0.05, atol=0.05)
+                    if scheme == "asfl" and n == overhead_fleet:
+                        o_rounds = max(rounds, 8)
+                        o_spec = _spec(model_name, scheme, n, per_client,
+                                       local_steps, batch, o_rounds,
+                                       compilation_cache)
+                        api_overhead = measure_api_overhead(
+                            o_spec, FederationSim(entry.build(), clients,
+                                                  test,
+                                                  o_spec.to_sim_config()))
+                results.append(row)
+                print(f"{scheme:5s} n={n:4d} dev={devices} "
+                      f"mode={row['mode']:6s} "
+                      f"engine={t_eng*1e3:9.1f} ms/round"
+                      + (f"  seed={row['seed_round_s']*1e3:9.1f} ms/round"
+                         f"  speedup={row['speedup']:.1f}x"
+                         if row["speedup"] else ""), flush=True)
     return {
         "config": {"model": model_kind, "per_client": per_client,
                    "local_steps": local_steps, "batch": batch,
                    "rounds": rounds, "backend": jax.default_backend(),
+                   "devices": list(device_counts),
                    "compilation_cache": compilation_cache,
                    "driver": "repro.api.run"},
         "warmup_total_s": float(sum(r["warmup_s"] for r in results)),
         # NOTE: cache-hit detection must happen BEFORE the runs populate the
         # cache dir — main() fills this in; None means "caller to decide"
         "compile_cache_hit": None,
-        "rounds_per_s": {f"{r['scheme']}@{r['n_clients']}":
-                         1.0 / r["engine_round_s"] for r in results},
+        "rounds_per_s": {_row_key(r): 1.0 / r["engine_round_s"]
+                         for r in results},
         "api_overhead_s": (api_overhead["api_overhead_s"]
                            if api_overhead else None),
         "api_overhead": api_overhead,
@@ -278,6 +294,10 @@ def main():
                     help="largest fleet to also run the seed loop at")
     ap.add_argument("--compilation-cache", default=None, metavar="DIR",
                     help="persistent XLA compilation cache directory")
+    ap.add_argument("--devices", default="1", metavar="N[,M...]",
+                    help="device counts to bench (mesh_devices rows; on "
+                         "CPU the host device count is forced pre-import "
+                         "— parsed by bench_devices before jax loads)")
     args = ap.parse_args()
     sizes = [int(s) for s in args.sizes.split(",")]
     schemes = args.schemes.split(",")
@@ -286,7 +306,8 @@ def main():
     cache_hit_at_start = cache_dir_is_warm(args.compilation_cache)
     out = bench(sizes, schemes, args.model, args.per_client,
                 args.local_steps, args.batch, args.rounds,
-                args.seed_loop_max, args.compilation_cache)
+                args.seed_loop_max, args.compilation_cache,
+                device_counts=tuple(DEVICE_COUNTS))
     out["compile_cache_hit"] = cache_hit_at_start
 
     key = [r for r in out["results"]
@@ -303,12 +324,7 @@ def main():
               f"(api {o['api_round_s']*1e3:.1f} vs direct "
               f"{o['direct_round_s']*1e3:.1f})")
 
-    os.makedirs(OUT_DIR, exist_ok=True)
-    for path in (os.path.join(ROOT, "BENCH_fedsim.json"),
-                 os.path.join(OUT_DIR, "BENCH_fedsim.json")):
-        with open(path, "w") as f:
-            json.dump(out, f, indent=1, default=float)
-    print(f"wrote {os.path.join(ROOT, 'BENCH_fedsim.json')}")
+    write_bench("BENCH_fedsim", out, "benchmarks/bench_fedsim.py")
 
 
 if __name__ == "__main__":

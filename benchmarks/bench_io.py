@@ -1,0 +1,61 @@
+"""One canonical write path for every benchmark artifact.
+
+Before this module each driver open-coded its own ``json.dump`` loop, so
+root ``BENCH_*.json`` and ``benchmarks/out/*.json`` were written separately
+(and could drift), and nothing inside a JSON recorded which driver — with
+which flags — produced it (the ``fig5*.json`` files were fully orphaned).
+
+:func:`write_bench` writes the canonical copy under ``benchmarks/out/`` and
+byte-copies it to the repo root (the committed-baseline location the CI
+perf gate reads) when ``mirror_root=True``; every artifact gets a
+``provenance`` block: the driver path, its argv, and where the canonical /
+mirror copies live, so any JSON found in the tree is reproducible from its
+own contents.
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import sys
+from typing import Any, List, Optional
+
+OUT_DIR = os.path.join(os.path.dirname(os.path.abspath(__file__)), "out")
+ROOT = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
+
+
+def device_row_key(base: str, devices: int) -> str:
+    """The shared ``rounds_per_s`` key format for per-device-count rows
+    (baseline matching in bench_scenarios/bench_superstep keys off it, so
+    it must not drift between drivers)."""
+    return base if devices == 1 else f"{base}x{devices}dev"
+
+
+def write_bench(name: str, out: Any, driver: str, *,
+                mirror_root: bool = True,
+                argv: Optional[List[str]] = None) -> List[str]:
+    """Write ``benchmarks/out/<name>.json`` (canonical) and, for the
+    committed baselines, copy it to ``<repo root>/<name>.json``.  ``out``
+    gains a ``provenance`` block (non-dict payloads are wrapped as
+    ``{"rows": ...}`` first).  Returns the paths written."""
+    if not isinstance(out, dict):
+        out = {"rows": out}
+    else:
+        out = dict(out)
+    out["provenance"] = {
+        "driver": driver,
+        "argv": list(sys.argv[1:] if argv is None else argv),
+        "canonical": f"benchmarks/out/{name}.json",
+        "root_mirror": f"{name}.json" if mirror_root else None,
+    }
+    os.makedirs(OUT_DIR, exist_ok=True)
+    canonical = os.path.join(OUT_DIR, f"{name}.json")
+    with open(canonical, "w") as f:
+        json.dump(out, f, indent=1, default=float)
+    paths = [canonical]
+    if mirror_root:
+        mirror = os.path.join(ROOT, f"{name}.json")
+        shutil.copyfile(canonical, mirror)
+        paths.append(mirror)
+    print(f"wrote {' + '.join(paths)}")
+    return paths

@@ -29,19 +29,23 @@ import sys
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))
 
+from bench_devices import parse_devices_early
+
+# --devices N[,M,...]: per-device-count rows; the host device count must be
+# forced BEFORE the first jax import (jax locks it on backend init)
+DEVICE_COUNTS = parse_devices_early()
+
 import jax
 import numpy as np
 
+from bench_io import device_row_key, write_bench
 from bench_timing import interleaved_overhead
 from repro import api
 from repro.configs.base import cache_dir_is_warm
 from repro.core.fedsim import ScenarioEngine
 
-ROOT = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
-OUT_DIR = os.path.join(os.path.dirname(__file__), "out")
 
-
-def _spec(name: str, n: int, args) -> api.ExperimentSpec:
+def _spec(name: str, n: int, args, devices: int = 1) -> api.ExperimentSpec:
     return api.ExperimentSpec(
         model="mlp9",
         train=api.TrainConfig(scheme="asfl", rounds=args.rounds,
@@ -57,15 +61,16 @@ def _spec(name: str, n: int, args) -> api.ExperimentSpec:
         runtime=api.RuntimeConfig(superstep=args.superstep,
                                   slot_capacity=args.slot_capacity,
                                   precompile=True,
+                                  mesh_devices=devices,
                                   compilation_cache_dir=args.compilation_cache))
 
 
-def bench_one(name: str, n: int, args) -> dict:
-    res = api.run(_spec(name, n, args), timeit=True)
+def bench_one(name: str, n: int, args, devices: int = 1) -> dict:
+    res = api.run(_spec(name, n, args, devices), timeit=True)
     assert all(np.isfinite(m.loss) for m in res.history)
     assert res.diagnostics["compile_fallbacks"] == 0
     return {
-        "scenario": name, "n_vehicles": n,
+        "scenario": name, "n_vehicles": n, "devices": devices,
         "n_rsus": res.diagnostics["n_rsus"],
         "mode": res.diagnostics["mode"], "schedule": args.schedule,
         "superstep": args.superstep, "rounds": args.rounds,
@@ -125,11 +130,11 @@ def check_baseline(out: dict, baseline_path: str, max_regress: float) -> int:
         print(f"baseline config mismatch {mismatch}; skipping perf check "
               f"(regenerate {baseline_path})")
         return 0
-    base_rows = {(r["scenario"], r["n_vehicles"]): r["rounds_per_s"]
-                 for r in base.get("results", [])}
+    base_rows = {(r["scenario"], r["n_vehicles"], r.get("devices", 1)):
+                 r["rounds_per_s"] for r in base.get("results", [])}
     failures = []
     for row in out["results"]:
-        key = (row["scenario"], row["n_vehicles"])
+        key = (row["scenario"], row["n_vehicles"], row.get("devices", 1))
         if key not in base_rows:
             print(f"no baseline row for {key}; skipping")
             continue
@@ -167,6 +172,10 @@ def main():
                     choices=["pow2", "tight8"])
     ap.add_argument("--compilation-cache", default=None, metavar="DIR",
                     help="persistent XLA compilation cache directory")
+    ap.add_argument("--devices", default="1", metavar="N[,M...]",
+                    help="device counts to bench (RSU-axis mesh rows; on "
+                         "CPU the host device count is forced pre-import "
+                         "— parsed by bench_devices before jax loads)")
     ap.add_argument("--check-baseline", default=None, metavar="JSON",
                     help="compare rounds/s against a committed baseline")
     ap.add_argument("--max-regress", type=float, default=0.30)
@@ -178,16 +187,18 @@ def main():
 
     cache_hit = cache_dir_is_warm(args.compilation_cache)
     results = []
-    for name in args.scenarios.split(","):
-        for n in (int(s) for s in args.sizes.split(",")):
-            row = bench_one(name, n, args)
-            results.append(row)
-            print(f"{name:17s} n={n:4d} rsus={row['n_rsus']} "
-                  f"mode={row['mode']:12s} K={args.superstep} "
-                  f"warmup={row['warmup_s']:6.1f}s "
-                  f"round={row['round_s']*1e3:9.1f} ms "
-                  f"({row['rounds_per_s']:.2f} rounds/s) "
-                  f"handovers={row['handovers']}", flush=True)
+    for devices in DEVICE_COUNTS:
+        for name in args.scenarios.split(","):
+            for n in (int(s) for s in args.sizes.split(",")):
+                row = bench_one(name, n, args, devices)
+                results.append(row)
+                print(f"{name:17s} n={n:4d} dev={devices} "
+                      f"rsus={row['n_rsus']} "
+                      f"mode={row['mode']:12s} K={args.superstep} "
+                      f"warmup={row['warmup_s']:6.1f}s "
+                      f"round={row['round_s']*1e3:9.1f} ms "
+                      f"({row['rounds_per_s']:.2f} rounds/s) "
+                      f"handovers={row['handovers']}", flush=True)
 
     api_overhead = None
     if not args.skip_api_overhead:
@@ -199,32 +210,31 @@ def main():
               f"(api {api_overhead['api_round_s']*1e3:.1f} vs direct "
               f"{api_overhead['direct_round_s']*1e3:.1f})", flush=True)
 
+    def row_key(r):
+        return device_row_key(f"{r['scenario']}@{r['n_vehicles']}",
+                              r["devices"])
+
     out = {
         "config": {"local_steps": args.local_steps, "batch": args.batch,
                    "rounds": args.rounds, "strategy": args.strategy,
                    "cloud_sync_every": args.sync,
                    "superstep": args.superstep, "schedule": args.schedule,
                    "slot_capacity": args.slot_capacity,
+                   "devices": list(DEVICE_COUNTS),
                    "compilation_cache": args.compilation_cache,
                    "backend": jax.default_backend(),
                    "driver": "repro.api.run"},
         "warmup_total_s": float(sum(r["warmup_s"] for r in results)),
         "compile_cache_hit": cache_hit,
-        "rounds_per_s": {f"{r['scenario']}@{r['n_vehicles']}":
-                         r["rounds_per_s"] for r in results},
+        "rounds_per_s": {row_key(r): r["rounds_per_s"] for r in results},
         "api_overhead_s": (api_overhead["api_overhead_s"]
                            if api_overhead else None),
         "api_overhead": api_overhead,
         "results": results,
     }
     if not args.no_write:
-        os.makedirs(OUT_DIR, exist_ok=True)
-        for path in (os.path.join(ROOT, "BENCH_scenarios.json"),
-                     os.path.join(OUT_DIR, "BENCH_scenarios.json")):
-            with open(path, "w") as f:
-                json.dump(out, f, indent=1, default=float)
-        print(f"wrote {os.path.join(ROOT, 'BENCH_scenarios.json')} "
-              f"(warmup_total_s={out['warmup_total_s']:.1f}, "
+        write_bench("BENCH_scenarios", out, "benchmarks/bench_scenarios.py")
+        print(f"(warmup_total_s={out['warmup_total_s']:.1f}, "
               f"cache_hit={cache_hit})")
 
     if args.check_baseline:

@@ -36,12 +36,12 @@ sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))
 import jax
 import numpy as np
 
+from bench_io import write_bench
 from repro.core import scenario
 from repro.core.fedsim import ScenarioEngine, SimConfig
 from repro.models.mlp_unit import MLPUnitModel, make_mlp_fleet_data
 
 ROOT = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
-OUT_DIR = os.path.join(os.path.dirname(__file__), "out")
 SCENARIO = "highway_corridor"
 
 
@@ -120,7 +120,8 @@ def main():
         with open(args.baseline) as f:
             b = json.load(f)
         baseline = {(r["scenario"], r["n_vehicles"]): r
-                    for r in b.get("results", [])}
+                    for r in b.get("results", [])
+                    if r.get("devices", 1) == 1}    # single-device reference
         baseline_cfg = b.get("config", {})
 
     results = []
@@ -210,12 +211,7 @@ def main():
         "acceptance": acceptance,
         "results": results,
     }
-    os.makedirs(OUT_DIR, exist_ok=True)
-    for path in (os.path.join(ROOT, "BENCH_superstep.json"),
-                 os.path.join(OUT_DIR, "BENCH_superstep.json")):
-        with open(path, "w") as f:
-            json.dump(out, f, indent=1, default=float)
-    print(f"wrote {os.path.join(ROOT, 'BENCH_superstep.json')}")
+    write_bench("BENCH_superstep", out, "benchmarks/bench_superstep.py")
     if not args.compilation_cache:
         shutil.rmtree(cache_dir, ignore_errors=True)
 

@@ -16,10 +16,15 @@ from __future__ import annotations
 import argparse
 import json
 import os
+import sys
 import time
 from typing import Dict, List
 
 import numpy as np
+
+sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))
+
+from bench_io import write_bench
 
 OUT_DIR = os.path.join(os.path.dirname(__file__), "out")
 
@@ -34,9 +39,10 @@ def _emit(name: str, us_per_call: float, derived: str):
 
 
 def _save(name: str, obj):
-    os.makedirs(OUT_DIR, exist_ok=True)
-    with open(os.path.join(OUT_DIR, f"{name}.json"), "w") as f:
-        json.dump(obj, f, indent=1, default=float)
+    # canonical location only (benchmarks/out/) — the fig5*/roofline
+    # artifacts are not committed baselines, but they carry the same
+    # provenance block (driver + argv) as the BENCH_* files
+    write_bench(name, obj, "benchmarks/run.py", mirror_root=False)
 
 
 # ---------------------------------------------------------------- Fig. 5a

@@ -29,6 +29,7 @@ import numpy as np
 
 from repro.api import registry
 from repro.api.spec import ExperimentSpec
+from repro.core import fleet_sharding
 from repro.core.fedsim import (FederationSim, RoundMetrics, ScenarioEngine,
                                ScenarioRoundMetrics)
 
@@ -51,8 +52,8 @@ class RunResult:
 
     ``history`` rows are :class:`RoundMetrics` (federation) or
     :class:`ScenarioRoundMetrics` (scenario).  ``final_params`` is the
-    trained global model ``(units, head)`` — kept on device, not
-    serialized by :meth:`save`."""
+    trained global model ``(units, head)``, gathered to host numpy arrays
+    (mesh-independent); not serialized by :meth:`save`."""
     spec: ExperimentSpec
     engine_kind: str
     history: List[Any]
@@ -93,25 +94,32 @@ class RunResult:
 def build_engine(spec: ExperimentSpec):
     """Instantiate the engine a spec routes to (model + fleet data + config
     assembled from the registries).  ``run`` uses this; benchmarks and
-    parity tests may call it directly to hold an engine across re-runs."""
+    parity tests may call it directly to hold an engine across re-runs.
+
+    The device mesh is built HERE (``runtime.mesh_devices > 1`` —
+    core/fleet_sharding.py), so a machine with too few devices fails with
+    the ``--xla_force_host_platform_device_count`` recipe before any data
+    is staged."""
     entry = registry.model_entry(spec.model)
     model = entry.build(**spec.model_kwargs)
     f = spec.fleet
     clients, test = entry.make_data(f.n_vehicles, f.per_vehicle_samples,
                                     f.test_samples, f.data_seed)
     cfg = spec.to_sim_config()
+    mesh = fleet_sharding.from_config(cfg, spec.engine_kind)
     if spec.engine_kind == registry.SCENARIO:
         kw = dict(f.scenario_kwargs)
         kw.setdefault("seed", spec.runtime.seed)
         sc = registry.build_scenario(f.scenario, f.n_vehicles, **kw)
         return ScenarioEngine(model, clients, test, cfg, sc,
-                              cloud_sync_every=f.cloud_sync_every)
+                              cloud_sync_every=f.cloud_sync_every,
+                              mesh=mesh)
     fleet = None
     if f.memory_budget_bytes is not None:
         from repro.core import channel
         fleet = channel.make_fleet(f.n_vehicles, cfg.seed,
                                    memory_budget_bytes=f.memory_budget_bytes)
-    return FederationSim(model, clients, test, cfg, fleet=fleet)
+    return FederationSim(model, clients, test, cfg, fleet=fleet, mesh=mesh)
 
 
 def _drive(engine, on_round, on_cloud_merge):
@@ -181,9 +189,17 @@ def run(spec: ExperimentSpec, *,
         diagnostics.update(
             mode=engine.mode, n_rsus=engine.n_rsus,
             compile_fallbacks=engine.programs.compile_fallbacks)
+        mesh = engine.fleet_mesh
     else:
         diagnostics.update(mode=engine.engine.mode, n_rsus=1)
+        mesh = engine.engine.fleet_mesh
+    diagnostics.update(
+        mesh_devices=(mesh.n_devices if mesh is not None else 1),
+        fleet_axis=(mesh.axis if mesh is not None else None))
+    # final_params come home to host numpy: results must not pin (or be
+    # stranded on) mesh device buffers after the run
     return RunResult(spec=spec, engine_kind=spec.engine_kind,
                      history=list(history), totals=_totals(history),
                      timing=timing, diagnostics=diagnostics,
-                     final_params=(list(engine.units), engine.head))
+                     final_params=fleet_sharding.host_fetch(
+                         (list(engine.units), engine.head)))

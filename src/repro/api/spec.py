@@ -87,13 +87,22 @@ class FleetConfig:
 
 @dataclasses.dataclass(frozen=True)
 class RuntimeConfig:
-    """XLA execution knobs (DESIGN.md §6/§8)."""
+    """XLA execution knobs (DESIGN.md §6/§8/§10)."""
     seed: int = 0
     cohort_parallel: str = "auto"     # auto | vmap | scan | unroll
     superstep: int = 1                # rounds fused per scenario dispatch
     slot_capacity: str = "pow2"       # pow2 | tight8
     precompile: bool = True           # scenario engine: AOT-compile the plan
     compilation_cache_dir: Optional[str] = None
+    # device mesh over the fleet (core/fleet_sharding.py, DESIGN.md §10):
+    # > 1 runs the compiled programs under shard_map across that many
+    # devices (on CPU: XLA_FLAGS=--xla_force_host_platform_device_count=N
+    # before the first jax import); 1 is the unsharded single-device path
+    mesh_devices: int = 1
+    # auto | vehicle | rsu — which fleet dimension the mesh partitions
+    # (auto = the engine's natural axis: RSU for multi-RSU scenarios,
+    # vehicle for the single-RSU cohort engine)
+    fleet_axis: str = "auto"
 
 
 # SimConfig field -> (spec group, group field): the deprecation shim's
@@ -121,6 +130,8 @@ SIM_CONFIG_FIELD_MAP: Dict[str, Tuple[str, str]] = {
     "superstep": ("runtime", "superstep"),
     "slot_capacity": ("runtime", "slot_capacity"),
     "compilation_cache_dir": ("runtime", "compilation_cache_dir"),
+    "mesh_devices": ("runtime", "mesh_devices"),
+    "fleet_axis": ("runtime", "fleet_axis"),
 }
 
 _GROUP_TYPES = {"train": TrainConfig, "adaptive": AdaptiveConfig,
@@ -225,6 +236,37 @@ class ExperimentSpec:
                     "fleet.cloud_sync_every is the multi-RSU edge->cloud "
                     "cadence; the single-RSU engine aggregates at its one "
                     "RSU every round (leave it at 1 or set a scenario)")
+
+        rt = self.runtime
+        if rt.mesh_devices > 1:
+            # mesh/engine combinations that cannot execute — rejected here,
+            # at spec-build time, with the axis the engine does shard named
+            if engine == registry.SCENARIO:
+                if rt.fleet_axis == "vehicle":
+                    raise ValueError(
+                        f"runtime.fleet_axis='vehicle' cannot partition the "
+                        f"multi-RSU engine (fleet.scenario={sc!r}): it "
+                        f"shards the RSU axis — use fleet_axis='rsu' or "
+                        f"'auto'")
+            else:
+                if rt.fleet_axis == "rsu":
+                    raise ValueError(
+                        "runtime.fleet_axis='rsu' needs a multi-RSU "
+                        "scenario; the single-RSU engine shards the "
+                        "vehicle axis — use fleet_axis='vehicle' or "
+                        "'auto', or set a fleet.scenario")
+                if self.train.scheme in ("cl", "sl"):
+                    raise ValueError(
+                        f"scheme {self.train.scheme!r} is an inherently "
+                        f"sequential chain (one traveling model); "
+                        f"runtime.mesh_devices={rt.mesh_devices} has "
+                        f"nothing to shard — use fl | sfl | asfl or "
+                        f"mesh_devices=1")
+                if rt.cohort_parallel in ("scan", "unroll"):
+                    raise ValueError(
+                        f"runtime.cohort_parallel={rt.cohort_parallel!r} "
+                        f"serializes the replica axis the mesh shards; "
+                        f"with mesh_devices > 1 use 'vmap' (or 'auto')")
 
         if self.train.scheme in ("sl", "sfl"):
             if not (1 <= self.adaptive.cut <= entry.n_units - 1):

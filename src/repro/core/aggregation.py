@@ -101,6 +101,41 @@ def stacked_cloud_merge(edge_stack: Any, edge_weights: jnp.ndarray,
     return jax.tree.map(f, edge_stack, fallback)
 
 
+def sharded_weighted_sum(stacked_tree: Any, weights: jnp.ndarray,
+                         axis_name: str) -> Any:
+    """:func:`stacked_weighted_sum` across a device-sharded replica axis:
+    each shard reduces its local slots, then one ``psum`` over ``axis_name``
+    completes the FedAvg numerator — the weighted all-reduce form of Eq. 1/2
+    used by the sharded cohort engine (zero-weight padding slots stay
+    excluded shard-locally)."""
+    part = stacked_weighted_sum(stacked_tree, weights)
+    return jax.tree.map(lambda a: jax.lax.psum(a, axis_name), part)
+
+
+def sharded_fedavg(stacked_tree: Any, weights: jnp.ndarray,
+                   axis_name: str) -> Any:
+    """:func:`stacked_fedavg` across a device-sharded replica axis (psum'd
+    numerator and denominator)."""
+    w = jnp.asarray(weights, jnp.float32)
+    num = sharded_weighted_sum(stacked_tree, w, axis_name)
+    den = jax.lax.psum(jnp.sum(w), axis_name)
+    return jax.tree.map(
+        lambda n, ref: (n / den).astype(ref.dtype), num, stacked_tree)
+
+
+def gathered_stack(local_stack: Any, axis_name: str) -> Any:
+    """All-gather a device-sharded leading axis back into the full stack,
+    in mesh order.  This is the *order-preserving* form of a weighted
+    all-reduce: gather first, then reduce every shard's copy with the exact
+    reduction the single-device program uses — which keeps the sharded
+    edge→cloud merge bit-for-bit equal to the unsharded one (a plain
+    ``psum`` of per-shard partial sums would reassociate the floating-point
+    additions).  The gathered bytes are the natural cost of a cloud merge:
+    it is a model exchange."""
+    return jax.tree.map(
+        lambda a: jax.lax.all_gather(a, axis_name, tiled=True), local_stack)
+
+
 def edge_aggregate(trees: Sequence[Any], weights: Sequence[float],
                    groups: Sequence[int]):
     """Edge tier of hierarchical FedAvg: one |D_n|-weighted FedAvg per RSU.

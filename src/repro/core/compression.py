@@ -22,28 +22,56 @@ import numpy as np
 GROUP = 128  # quantisation group along the trailing axis
 
 
+def _group_shape(d: int, group: int) -> Tuple[int, int]:
+    """(group size, group count) for a trailing dim: g = min(group, d)
+    groups, the last one zero-padded when d is not a multiple of g."""
+    g = min(group, max(d, 1))
+    return g, -(-d // g)                       # ceil(d / g)
+
+
 def quantize_int8(x: jnp.ndarray, group: int = GROUP
                   ) -> Tuple[jnp.ndarray, jnp.ndarray]:
-    """Per-(trailing-)group symmetric int8.  Returns (q int8, scales f32).
-    Trailing dim must be divisible by `group` (pad upstream if not)."""
+    """Per-(trailing-)group symmetric int8.  Returns (q int8 (..., d),
+    scales f32 (..., ceil(d/g))).
+
+    A trailing dim that is not a multiple of the group size is padded with
+    zeros INTERNALLY to the next group boundary — the pad never changes any
+    group's amax/scale and is sliced off the returned q, so callers get
+    ``group``-granular quantisation for every d (previously the whole row
+    silently collapsed into one group — coarser scales with no warning)."""
     *lead, d = x.shape
-    g = min(group, d)
-    if d % g:
-        g = d
-    xg = x.reshape(*lead, d // g, g).astype(jnp.float32)
+    g, ng = _group_shape(d, group)
+    pad = ng * g - d
+    if pad:
+        x = jnp.concatenate(
+            [x, jnp.zeros((*lead, pad), x.dtype)], axis=-1)
+    xg = x.reshape(*lead, ng, g).astype(jnp.float32)
     amax = jnp.max(jnp.abs(xg), axis=-1, keepdims=True)
     scale = jnp.maximum(amax, 1e-8) / 127.0
     q = jnp.clip(jnp.round(xg / scale), -127, 127).astype(jnp.int8)
-    return q.reshape(*lead, d), scale[..., 0]
+    return q.reshape(*lead, ng * g)[..., :d], scale[..., 0]
 
 
-def dequantize_int8(q: jnp.ndarray, scale: jnp.ndarray, dtype=jnp.float32
-                    ) -> jnp.ndarray:
+def dequantize_int8(q: jnp.ndarray, scale: jnp.ndarray, dtype=jnp.float32,
+                    group: int = GROUP) -> jnp.ndarray:
+    """Inverse of :func:`quantize_int8` (pass the same ``group``).  The
+    group size is re-derived as min(group, d); when the scale count says
+    the producer used a different (exactly dividing) group, that wins —
+    so custom divisible groups round-trip without threading ``group``.
+    A custom group on a NON-divisible dim is the one ambiguous case (the
+    scale count alone cannot recover it): there you must pass the same
+    ``group`` you quantized with, or the groups are mis-sliced."""
     *lead, d = q.shape
     ng = scale.shape[-1]
-    g = d // ng
+    g, ng_default = _group_shape(d, group)
+    if ng != ng_default:
+        g = d // ng                            # custom exactly-dividing group
+    pad = ng * g - d
+    if pad:
+        q = jnp.concatenate(
+            [q, jnp.zeros((*lead, pad), q.dtype)], axis=-1)
     xg = q.reshape(*lead, ng, g).astype(jnp.float32) * scale[..., None]
-    return xg.reshape(*lead, d).astype(dtype)
+    return xg.reshape(*lead, ng * g)[..., :d].astype(dtype)
 
 
 @jax.custom_vjp
@@ -66,12 +94,11 @@ fake_quant.defvjp(_fq_fwd, _fq_bwd)
 
 def effective_group(trailing_dim, group: int = GROUP):
     """The group size :func:`quantize_int8` actually uses for a trailing dim
-    ``d``: min(group, d), falling back to one whole-row group when ``d`` is
-    not divisible.  Vectorized over arrays of trailing dims (per-cut smashed
-    channel counts)."""
+    ``d``: min(group, d) — non-divisible dims are padded internally to the
+    next group boundary, so the granularity never coarsens.  Vectorized over
+    arrays of trailing dims (per-cut smashed channel counts)."""
     d = np.asarray(trailing_dim)
-    g = np.minimum(group, d)
-    return np.where(d % np.maximum(g, 1) != 0, d, g)
+    return np.minimum(group, np.maximum(d, 1))
 
 
 def compression_ratio(dtype_bytes: int = 4, group: int = GROUP,
@@ -79,12 +106,15 @@ def compression_ratio(dtype_bytes: int = 4, group: int = GROUP,
                       ) -> Union[float, np.ndarray]:
     """Bytes(fp) / bytes(int8 + f32 scale per group).
 
-    Pass ``trailing_dim`` (scalar or per-cut array) to account with the group
-    size :func:`quantize_int8` actually used — e.g. a 64-channel smashed
-    tensor quantizes in 64-wide groups, not ``GROUP``-wide ones, so its
-    scale overhead is larger and the true ratio smaller."""
+    Pass ``trailing_dim`` (scalar or per-cut array) to account with the
+    groups :func:`quantize_int8` actually emits — ceil(d/g) scales with
+    g = min(group, d): a 64-channel smashed tensor quantizes in 64-wide
+    groups (more scale overhead than the nominal GROUP-wide assumption),
+    and a 200-channel one pays a second scale for its padded tail group."""
     if trailing_dim is None:
         return dtype_bytes * group / (group + 4.0)
-    g = effective_group(trailing_dim, group)
-    ratio = dtype_bytes * g / (g + 4.0)
+    d = np.asarray(trailing_dim)
+    g = effective_group(d, group)
+    ng = -(-d // g)                            # ceil: padded tail group
+    ratio = dtype_bytes * d / (d + 4.0 * ng)
     return float(ratio) if np.ndim(ratio) == 0 else ratio

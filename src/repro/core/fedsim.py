@@ -35,9 +35,13 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 from jax import lax
+from jax.experimental.shard_map import shard_map
+from jax.sharding import PartitionSpec as P
 
 from repro.configs.base import enable_compilation_cache
 from repro.core import adaptive, aggregation, channel, compression, cost
+from repro.core import fleet_sharding
+from repro.core.fleet_sharding import AXIS as MESH_AXIS, FLEET_AXES, FleetMesh
 from repro.core.superstep import SERVER_SCHEDULES, SuperStepPrograms
 from repro.data.pipeline import (ClientDataset, StackedClients,
                                  epoch_batch_indices, sample_batch_indices,
@@ -161,6 +165,15 @@ class SimConfig:
     # any engine latches it on for every compile in the process, and the
     # last configured directory wins (configs.base.enable_compilation_cache)
     compilation_cache_dir: Optional[str] = None
+    # device mesh over the fleet (core/fleet_sharding.py, DESIGN.md §10):
+    # mesh_devices > 1 runs the compiled round / super-step programs under
+    # shard_map across that many devices; 1 (the default) is the unsharded
+    # single-device path, bit-identical to the pre-mesh engines
+    mesh_devices: int = 1
+    # which fleet dimension the mesh partitions: "vehicle" (cohort-engine
+    # slot axis), "rsu" (super-step RSU axis), or "auto" (the engine's
+    # natural axis)
+    fleet_axis: str = "auto"
 
     def __post_init__(self):
         for field, allowed in (("scheme", SCHEMES),
@@ -168,6 +181,7 @@ class SimConfig:
                                ("server_schedule", SERVER_SCHEDULES),
                                ("slot_capacity", SLOT_CAPACITIES),
                                ("cohort_parallel", COHORT_MODES),
+                               ("fleet_axis", FLEET_AXES),
                                ("optimizer", OPTIMIZERS)):
             value = getattr(self, field)
             if value not in allowed:
@@ -176,7 +190,8 @@ class SimConfig:
                     f"values: {' | '.join(allowed)}")
         for field, floor in (("n_clients", 1), ("batch_size", 1),
                              ("local_epochs", 1), ("rounds", 1),
-                             ("superstep", 1), ("cut", 1), ("eval_every", 0)):
+                             ("superstep", 1), ("cut", 1), ("eval_every", 0),
+                             ("mesh_devices", 1)):
             value = getattr(self, field)
             if not isinstance(value, int) or value < floor:
                 raise ValueError(
@@ -371,17 +386,45 @@ class CohortEngine:
                    syncs inside the round.
 
     "auto" picks vmap on accelerators; on CPU, scan when the model declares
-    ``scan_friendly`` else unroll."""
+    ``scan_friendly`` else unroll.
+
+    With a vehicle-axis :class:`~repro.core.fleet_sharding.FleetMesh`
+    (``cfg.mesh_devices > 1``, or an explicit ``mesh=``), the split and FL
+    round programs run under ``shard_map``: bucket slots are padded to
+    device multiples and sharded, client-side compute and optimizer state
+    stay shard-local, the shared RSU state is replicated (it consumes the
+    all-gathered smashed batches in canonical slot order, preserving paper
+    §III-B sequential semantics), and the unit-wise FedAvg is a psum'd
+    weighted all-reduce (DESIGN.md §10).  The sharded cohort schedule IS
+    the vmap schedule — ``scan``/``unroll`` serialize the very axis the
+    mesh partitions and are rejected."""
 
     def __init__(self, model: UnitModel, cfg: SimConfig,
-                 clients: Sequence[ClientDataset]):
+                 clients: Sequence[ClientDataset],
+                 mesh: Optional[FleetMesh] = None):
         self.model = model
         self.cfg = cfg
         self.opt = _make_opt(cfg)
+        self.fleet_mesh = mesh if mesh is not None \
+            else fleet_sharding.from_config(cfg, "federation")
+        if self.fleet_mesh is not None and self.fleet_mesh.axis != "vehicle":
+            raise ValueError(
+                f"CohortEngine shards the vehicle axis; got a FleetMesh "
+                f"over {self.fleet_mesh.axis!r} (fleet_axis='vehicle' or "
+                f"'auto')")
         self.stacked: StackedClients = stack_clients(clients)
+        if self.fleet_mesh is not None:
+            self.stacked = self.fleet_mesh.place_stacked(self.stacked)
         self._programs: Dict[Any, Callable] = {}
         mode = cfg.cohort_parallel
-        if mode == "auto":
+        if self.fleet_mesh is not None:
+            if mode in ("scan", "unroll"):
+                raise ValueError(
+                    f"cohort_parallel={mode!r} serializes the replica axis "
+                    f"the mesh shards; with mesh_devices > 1 use 'vmap' "
+                    f"(or 'auto')")
+            mode = "vmap"
+        elif mode == "auto":
             if jax.default_backend() == "cpu":
                 mode = "scan" if getattr(model, "scan_friendly", False) \
                     else "unroll"
@@ -389,6 +432,13 @@ class CohortEngine:
                 mode = "vmap"
         assert mode in ("vmap", "scan", "unroll"), mode
         self.mode = mode
+
+    def slot_pad(self, n: int) -> int:
+        """Bucket slot-count padding: pow2 (the compile-cache signature
+        scheme) then up to a device multiple so every shard holds the same
+        number of slots.  Padded slots carry zero weight — inert."""
+        p = _pow2(n)
+        return self.fleet_mesh.pad(p) if self.fleet_mesh is not None else p
 
     # ---- the shared SFL message-flow math (one client batch) ---------
     def _sfl_client_batch(self, cut, sv, so, cu_i, co_i, x_i, y_i):
@@ -473,17 +523,12 @@ class CohortEngine:
         co = jax.tree.map(lambda *a: jnp.stack(a), *cos)
         return cu, co, sv, so, jnp.stack(losses)
 
-    def _bucket_vmap(self, cut, sv, so, cu, co, x, y, msk):
-        """Vectorized schedule: vehicle-side fwd/bwd vmapped across the
-        stacked replica axis; the shared RSU state still consumes the
-        smashed batches sequentially (paper §III-B semantics), via scan."""
+    def _server_scan_body(self, cut):
+        """The shared-RSU consume step of the vmap schedule: one smashed
+        batch against the shared server state, emitting the cut-layer
+        gradient (shared by the sharded and unsharded vmap schedules — the
+        sequence of ops must stay identical between them)."""
         model, opt, cfg = self.model, self.opt, self.cfg
-
-        def client_fwd(cu_all):
-            return jax.vmap(lambda c, xb: model.apply_units(c, xb, 0))(cu_all, x)
-
-        smashed, cvjp = jax.vjp(client_fwd, cu)
-        sm_in = compression.fake_quant(smashed) if cfg.compress_smashed else smashed
 
         def body(carry, inp):
             sv, so = carry
@@ -506,7 +551,54 @@ class CohortEngine:
             g_sm = jnp.where(act, g_sm, jnp.zeros_like(g_sm))
             return (sv, so), (g_sm, jnp.where(act, loss, 0.0))
 
-        (sv, so), (g_sm, losses) = lax.scan(body, (sv, so), (sm_in, y, msk))
+        return body
+
+    def _bucket_vmap(self, cut, sv, so, cu, co, x, y, msk):
+        """Vectorized schedule: vehicle-side fwd/bwd vmapped across the
+        stacked replica axis; the shared RSU state still consumes the
+        smashed batches sequentially (paper §III-B semantics), via scan."""
+        model, cfg = self.model, self.cfg
+
+        def client_fwd(cu_all):
+            return jax.vmap(lambda c, xb: model.apply_units(c, xb, 0))(cu_all, x)
+
+        smashed, cvjp = jax.vjp(client_fwd, cu)
+        sm_in = compression.fake_quant(smashed) if cfg.compress_smashed else smashed
+
+        (sv, so), (g_sm, losses) = lax.scan(self._server_scan_body(cut),
+                                            (sv, so), (sm_in, y, msk))
+        (g_cu,) = cvjp(g_sm)
+        upd, co2 = jax.vmap(self.opt.update)(g_cu, co, cu)
+        cu2 = optim.apply_updates(cu, upd)
+        cu = _select(msk, cu2, cu)
+        co = _select(msk, co2, co)
+        return cu, co, sv, so, losses
+
+    def _bucket_vmap_sharded(self, cut, sv, so, cu, co, x, y, msk):
+        """The vmap schedule inside a vehicle-axis ``shard_map`` shard:
+        client-side fwd/bwd and optimizer updates run on this shard's
+        slots only; the smashed batches (and labels/masks) are all-gathered
+        so every shard replays the IDENTICAL shared-RSU scan over the full
+        cohort in canonical slot order — the server state stays replicated
+        by construction, paper §III-B update order survives sharding, and
+        each shard slices back exactly its slots' cut-layer gradients.
+        Returns full-cohort losses (replicated)."""
+        model, cfg = self.model, self.cfg
+        n_loc = msk.shape[0]
+
+        def client_fwd(cu_all):
+            return jax.vmap(lambda c, xb: model.apply_units(c, xb, 0))(cu_all, x)
+
+        smashed, cvjp = jax.vjp(client_fwd, cu)
+        sm_in = compression.fake_quant(smashed) if cfg.compress_smashed else smashed
+        sm_all = lax.all_gather(sm_in, MESH_AXIS, tiled=True)
+        y_all = lax.all_gather(y, MESH_AXIS, tiled=True)
+        msk_all = lax.all_gather(msk, MESH_AXIS, tiled=True)
+
+        (sv, so), (g_sm_all, losses) = lax.scan(self._server_scan_body(cut),
+                                                (sv, so),
+                                                (sm_all, y_all, msk_all))
+        g_sm = fleet_sharding.local_slice(g_sm_all, n_loc)
         (g_cu,) = cvjp(g_sm)
         upd, co2 = jax.vmap(self.opt.update)(g_cu, co, cu)
         cu2 = optim.apply_updates(cu, upd)
@@ -515,6 +607,8 @@ class CohortEngine:
         return cu, co, sv, so, losses
 
     def _bucket_fn(self):
+        if self.fleet_mesh is not None:
+            return self._bucket_vmap_sharded
         return {"scan": self._bucket_scan, "vmap": self._bucket_vmap,
                 "unroll": self._bucket_unroll}[self.mode]
 
@@ -542,14 +636,23 @@ class CohortEngine:
             s_opt = _merge_state(s_opt, so, cut)
             new_bstates.append((cu, co))
             loss_sum = loss_sum + jnp.sum(losses)
-            cnt = cnt + jnp.sum(msk.astype(jnp.float32))
+            c = jnp.sum(msk.astype(jnp.float32))
+            if self.fleet_mesh is not None:
+                # sharded bucket fns return full-cohort losses (replicated)
+                # but the mask here is this shard's slice — complete it
+                c = lax.psum(c, MESH_AXIS)
+            cnt = cnt + c
         return (server, s_opt, new_bstates), loss_sum, cnt
 
     def _split_agg(self, cuts_sig, server, bstates, ws, server_unit_w):
         """Unit-wise FedAvg over the stacked axis: vehicle replicas of every
         unit before their cut + the RSU copy of units it served, reduced
-        on-device (aggregation.stacked_weighted_sum)."""
+        on-device (aggregation.stacked_weighted_sum).  Under a mesh the
+        replica axis is sharded, so the bucket reductions become psum'd
+        weighted all-reduces (aggregation.sharded_weighted_sum); the RSU
+        copy is replicated and contributes locally."""
         n_units = self.model.n_units
+        sharded = self.fleet_mesh is not None
         merged = []
         for u in range(n_units):
             swu = server_unit_w[u]
@@ -558,10 +661,15 @@ class CohortEngine:
             den = swu
             for bi, (cut, n_pad) in enumerate(cuts_sig):
                 if cut > u:
-                    part = aggregation.stacked_weighted_sum(
-                        bstates[bi][0][u], ws[bi])
+                    if sharded:
+                        part = aggregation.sharded_weighted_sum(
+                            bstates[bi][0][u], ws[bi], MESH_AXIS)
+                        den = den + lax.psum(jnp.sum(ws[bi]), MESH_AXIS)
+                    else:
+                        part = aggregation.stacked_weighted_sum(
+                            bstates[bi][0][u], ws[bi])
+                        den = den + jnp.sum(ws[bi])
                     num = jax.tree.map(jnp.add, num, part)
-                    den = den + jnp.sum(ws[bi])
             merged.append(jax.tree.map(
                 lambda nm, ref: (nm / den).astype(ref.dtype),
                 num, server["units"][u]))
@@ -587,30 +695,45 @@ class CohortEngine:
     # ---- compiled programs -------------------------------------------
     def _split_round_program(self, cuts_sig, steps: int, batch: int):
         """scan/vmap modes: the whole round (init, every local step, the
-        aggregation) is ONE jitted program; losses come back as two scalars."""
+        aggregation) is ONE jitted program; losses come back as two scalars.
+        Under a mesh the same program body runs inside ``shard_map`` with
+        every bucket's slot axis sharded (``cuts_sig`` carries the GLOBAL
+        padded sizes; each shard traces its 1/D slice)."""
         key = ("split", cuts_sig, steps, batch, self.mode)
         if key in self._programs:
             return self._programs[key]
+        fm = self.fleet_mesh
+        local_sig = cuts_sig if fm is None else tuple(
+            (cut, n_pad // fm.n_devices) for cut, n_pad in cuts_sig)
 
-        @jax.jit
         def round_fn(units, head, data_images, data_labels, rows, idxs,
                      masks, ws, server_unit_w):
             server, s_opt, bstates, bdata = self._split_init(
-                units, head, rows, cuts_sig, data_images, data_labels)
+                units, head, rows, local_sig, data_images, data_labels)
 
             def body(carry, xs):
-                carry, ls, cs = self._split_step_body(cuts_sig, carry, xs,
+                carry, ls, cs = self._split_step_body(local_sig, carry, xs,
                                                       bdata)
                 return carry, (ls, cs)
 
             (server, s_opt, bstates), (ls, cs) = lax.scan(
                 body, (server, s_opt, bstates), tuple(zip(idxs, masks)))
-            merged, head2 = self._split_agg(cuts_sig, server, bstates, ws,
+            merged, head2 = self._split_agg(local_sig, server, bstates, ws,
                                             server_unit_w)
             return merged, head2, jnp.sum(ls), jnp.sum(cs)
 
-        self._programs[key] = round_fn
-        return round_fn
+        if fm is None:
+            fn = jax.jit(round_fn)
+        else:
+            # params/data replicated; slot axes sharded; outputs replicated
+            slot = P(MESH_AXIS)
+            slab = P(None, MESH_AXIS)        # (steps, n_pad, ...) tensors
+            fn = jax.jit(shard_map(
+                round_fn, mesh=fm.mesh,
+                in_specs=(P(), P(), P(), P(), slot, slab, slab, slot, P()),
+                out_specs=(P(), P(), P(), P()), check_rep=False))
+        self._programs[key] = fn
+        return fn
 
     def _split_step_program(self, cuts_sig, batch: int):
         """unroll mode: one jitted program per local step (all buckets, all
@@ -670,32 +793,50 @@ class CohortEngine:
                            jnp.sum(msk.astype(jnp.float32)))
 
     def _fl_round_program(self, n_pad: int, steps: int, batch: int):
+        """FL is embarrassingly parallel across clients: under a mesh every
+        slot's local steps (model replica, optimizer state, batch gathers)
+        are shard-local end to end, and only the closing FedAvg (plus the
+        loss/count totals) all-reduce."""
         key = ("fl", n_pad, steps, batch, self.mode)
         if key in self._programs:
             return self._programs[key]
         opt = self.opt
+        fm = self.fleet_mesh
+        n_loc = n_pad if fm is None else n_pad // fm.n_devices
 
-        @jax.jit
         def round_fn(units, head, data_images, data_labels, rows, idx,
                      mask, w):
             tree = {"units": list(units), "head": head}
             st = jax.tree.map(
-                lambda a: jnp.broadcast_to(a, (n_pad,) + a.shape), tree)
+                lambda a: jnp.broadcast_to(a, (n_loc,) + a.shape), tree)
             ost = jax.vmap(opt.init)(st)
             bimgs, blabs = data_images[rows], data_labels[rows]
 
             def body(carry, xs):
                 idx_s, msk = xs
-                carry, out = self._fl_step_body(n_pad, carry, idx_s, msk,
+                carry, out = self._fl_step_body(n_loc, carry, idx_s, msk,
                                                 bimgs, blabs)
                 return carry, out
 
             (st, ost), (ls, cs) = lax.scan(body, (st, ost), (idx, mask))
-            avg = aggregation.stacked_fedavg(st, w)
-            return avg["units"], avg["head"], jnp.sum(ls), jnp.sum(cs)
+            if fm is None:
+                avg = aggregation.stacked_fedavg(st, w)
+                return avg["units"], avg["head"], jnp.sum(ls), jnp.sum(cs)
+            avg = aggregation.sharded_fedavg(st, w, MESH_AXIS)
+            return (avg["units"], avg["head"],
+                    lax.psum(jnp.sum(ls), MESH_AXIS),
+                    lax.psum(jnp.sum(cs), MESH_AXIS))
 
-        self._programs[key] = round_fn
-        return round_fn
+        if fm is None:
+            fn = jax.jit(round_fn)
+        else:
+            slot, slab = P(MESH_AXIS), P(None, MESH_AXIS)
+            fn = jax.jit(shard_map(
+                round_fn, mesh=fm.mesh,
+                in_specs=(P(), P(), P(), P(), slot, slab, slab, slot),
+                out_specs=(P(), P(), P(), P()), check_rep=False))
+        self._programs[key] = fn
+        return fn
 
     def _fl_step_program(self, n_pad: int, batch: int):
         key = ("flstep", n_pad, batch, self.mode)
@@ -811,6 +952,11 @@ class CohortEngine:
         return list(avg["units"]), avg["head"], ls, cnt
 
     def _chain_round(self, kind, cut, carry, rows, idx, batch):
+        if self.fleet_mesh is not None:
+            raise ValueError(
+                f"scheme {kind!r} is an inherently sequential chain (one "
+                f"traveling model); the vehicle-axis mesh has nothing to "
+                f"shard — run it with mesh_devices=1")
         rows = jnp.asarray(rows)
         idx = jnp.asarray(idx)
         if self.mode == "scan" or self.mode == "vmap":
@@ -851,7 +997,8 @@ class FederationSim:
     def __init__(self, model: UnitModel, clients: Sequence[ClientDataset],
                  test: Dict[str, jnp.ndarray], cfg: SimConfig,
                  fleet: Optional[List[channel.VehicleProfile]] = None,
-                 ch_cfg: Optional[channel.ChannelConfig] = None):
+                 ch_cfg: Optional[channel.ChannelConfig] = None,
+                 mesh: Optional[FleetMesh] = None):
         if cfg.compilation_cache_dir:
             enable_compilation_cache(cfg.compilation_cache_dir)
         self.model = model
@@ -862,7 +1009,12 @@ class FederationSim:
         self.fleet_arr = channel.fleet_arrays(self.fleet)
         self.ch = ch_cfg or channel.ChannelConfig()
         self.profile = model.profile()
-        self.engine = CohortEngine(model, cfg, self.clients)
+        self.engine = CohortEngine(model, cfg, self.clients, mesh=mesh)
+        if self.engine.fleet_mesh is not None and cfg.scheme in ("cl", "sl"):
+            raise ValueError(
+                f"scheme {cfg.scheme!r} is an inherently sequential chain; "
+                f"the vehicle-axis mesh shards parallel cohorts only "
+                f"(fl | sfl | asfl) — set mesh_devices=1")
         self.reset()
 
     def reset(self):
@@ -969,7 +1121,7 @@ class FederationSim:
         cfgc = self.cfg
         rates = self._round_rates(rnd)
         part = self._participants(rnd)
-        n_pad = _pow2(len(part))
+        n_pad = self.engine.slot_pad(len(part))
         steps_i = [self._local_steps(self.clients[ci]) for ci in part]
         steps = max(steps_i)
         rows = np.zeros(n_pad, np.int32)
@@ -1046,7 +1198,7 @@ class FederationSim:
         cuts_sig, rows_l, idx_l, mask_l, w_l = [], [], [], [], []
         for cut in sorted(buckets):
             members = sorted(buckets[cut])
-            n_pad = _pow2(len(members))
+            n_pad = self.engine.slot_pad(len(members))
             rows = np.zeros(n_pad, np.int32)
             rows[:len(members)] = members
             idx = np.zeros((steps, n_pad, cfgc.batch_size), np.int32)
@@ -1100,9 +1252,9 @@ class FederationSim:
             self.fleet_arr["compute_power_w"][part])
         comm_up, comm_down, t_comm = rc.comm_bytes_up, rc.comm_bytes_down, rc.t_comm
         if cfgc.compress_smashed:
-            # account with the group size quantize_int8 actually used at each
-            # vehicle's cut (whole-row fallback when the trailing dim is not
-            # GROUP-divisible), not the nominal GROUP-sized ratio
+            # account with the groups quantize_int8 actually emits at each
+            # vehicle's cut (incl. the padded tail group when the trailing
+            # dim is not GROUP-divisible), not the nominal GROUP-sized ratio
             td = self.profile.smashed_trailing_dim
             if td is not None:
                 ratio = compression.compression_ratio(
@@ -1182,7 +1334,8 @@ class ScenarioEngine:
 
     def __init__(self, model: UnitModel, clients: Sequence[ClientDataset],
                  test: Dict[str, jnp.ndarray], cfg: SimConfig, scenario,
-                 cloud_sync_every: int = 1):
+                 cloud_sync_every: int = 1,
+                 mesh: Optional[FleetMesh] = None):
         assert len(clients) == scenario.n_vehicles, \
             (len(clients), scenario.n_vehicles)
         if cfg.adaptive_strategy not in SCENARIO_STRATEGIES:
@@ -1203,10 +1356,17 @@ class ScenarioEngine:
         self.profile = model.profile()
         self.lengths = np.array([len(c) for c in clients], dtype=np.int64)
         self.cloud_sync_every = max(int(cloud_sync_every), 1)
+        self.fleet_mesh = mesh if mesh is not None \
+            else fleet_sharding.from_config(cfg, "scenario")
+        if self.fleet_mesh is not None and self.fleet_mesh.axis != "rsu":
+            raise ValueError(
+                f"ScenarioEngine shards the RSU axis; got a FleetMesh over "
+                f"{self.fleet_mesh.axis!r} (fleet_axis='rsu' or 'auto')")
         nb, ep = self._nb_ep()
         self.programs = SuperStepPrograms(
             model, cfg, stack_clients(self.clients), self.lengths, scenario,
-            self.n_rsus, self.cloud_sync_every, self.profile, nb, ep)
+            self.n_rsus, self.cloud_sync_every, self.profile, nb, ep,
+            mesh=self.fleet_mesh)
         self.mode = ("fused-traced" if self.programs.traced_mobility
                      else "fused-staged")
         self._cohort_counts: Dict[int, int] = {}
@@ -1380,7 +1540,9 @@ class ScenarioEngine:
             n_scheduled=int(sched.sum()),
             n_skipped=int((active & ~sched).sum()),
             n_handover=int(handover.sum()),
-            rsu_loads=[int(c) for c in ys["counts"][i]],
+            # the program may pad the RSU axis to a device multiple; padded
+            # cells never receive members — report the real cells only
+            rsu_loads=[int(c) for c in ys["counts"][i][:self.n_rsus]],
             cuts=[int(c) for c in cuts])
 
     def run_round(self, rnd: int) -> ScenarioRoundMetrics:

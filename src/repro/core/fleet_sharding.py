@@ -1,0 +1,170 @@
+"""Device-sharded fleets: one mesh axis over the federation's scale axes.
+
+The paper's ASFL scheme targets fleets far beyond what one accelerator can
+hold; this module is the partitioning layer that lets the compiled
+federation programs (the CohortEngine's round programs and the fused
+multi-RSU super-steps, DESIGN.md §6/§8) execute across a device mesh while
+staying *the same programs* — ``mesh_devices=1`` (the default) bypasses
+every collective and reproduces today's single-device executables exactly.
+
+One 1-D mesh, one axis name (:data:`AXIS`), two partitionings:
+
+* ``axis="vehicle"`` — the single-RSU cohort engine shards the stacked
+  client-replica (slot) axis of each cut bucket: per-vehicle forward/
+  backward passes and optimizer updates are shard-local, the shared RSU
+  server state is **replicated** (every shard consumes the all-gathered
+  smashed batches in the same canonical order, so paper §III-B sequential
+  semantics survive sharding), and the unit-wise FedAvg becomes a
+  ``psum``-weighted all-reduce (:func:`repro.core.aggregation.
+  sharded_weighted_sum`).
+* ``axis="rsu"`` — the scenario engine shards the RSU axis of the fused
+  super-step: each device trains ``n_rsus / n_devices`` whole RSU cohorts
+  (per-RSU rounds are independent between cloud syncs, so this axis is
+  embarrassingly parallel), and the edge→cloud merge all-gathers the edge
+  stack so the weighted reduction runs in the *identical order* on every
+  shard — which is what makes the sharded K-fused sgd path bit-for-bit
+  equal to the single-device one (tests/test_fleet_sharding.py).
+
+Padding rules (DESIGN.md §10): bucket slot counts are padded pow2-first,
+then up to the next multiple of the device count; the RSU axis is padded to
+a device multiple with phantom cells no vehicle can be served by.  Both
+paddings are inert — padded slots carry zero aggregation weight and padded
+RSUs never accumulate samples — asserted by the padding-inertness tests.
+
+Data placement: the master :class:`~repro.data.pipeline.StackedClients`
+tensors stay **replicated** on the mesh.  Handover moves a vehicle (and the
+slot that gathers its rows) between RSUs — and therefore between shards —
+every round, so the per-round gathers must be able to reach any vehicle's
+shard from any device; what is sharded is everything derived per round
+(replica stacks, optimizer moments, batch index slabs), which is where the
+O(fleet x params) memory actually lives.
+
+CPU note: ``--xla_force_host_platform_device_count=N`` (the same trick
+``launch/dryrun.py`` uses) splits the host into N XLA devices for testing
+and CI; on a 2-core container this demonstrates partitioning, not speed —
+the benchmarks record per-device-count rounds/s honestly.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.data.pipeline import StackedClients
+
+AXIS = "fleet"                      # the one mesh axis name
+FLEET_AXES = ("auto", "vehicle", "rsu")   # SimConfig.fleet_axis values
+
+
+@dataclasses.dataclass(frozen=True)
+class FleetMesh:
+    """A 1-D device mesh plus which fleet dimension it partitions.
+
+    ``axis`` is ``"vehicle"`` (cohort-engine slot axis) or ``"rsu"``
+    (super-step RSU axis); the mesh axis name is always :data:`AXIS`.
+    """
+    mesh: Mesh
+    axis: str
+
+    @property
+    def n_devices(self) -> int:
+        return self.mesh.size
+
+    # ---- padding ------------------------------------------------------
+    def pad(self, n: int) -> int:
+        """Smallest multiple of the device count >= max(n, 1)."""
+        d = self.n_devices
+        return ((max(int(n), 1) + d - 1) // d) * d
+
+    # ---- shardings ----------------------------------------------------
+    def leading_sharding(self) -> NamedSharding:
+        """Leading axis split over the mesh, everything else replicated."""
+        return NamedSharding(self.mesh, P(AXIS))
+
+    def replicated_sharding(self) -> NamedSharding:
+        return NamedSharding(self.mesh, P())
+
+    # ---- placement ----------------------------------------------------
+    def shard_leading(self, tree: Any) -> Any:
+        """device_put every leaf with its leading axis split over the mesh
+        (leaf leading dims must be device-count multiples — use
+        :meth:`pad` upstream)."""
+        s = self.leading_sharding()
+        return jax.tree.map(lambda a: jax.device_put(a, s), tree)
+
+    def replicate(self, tree: Any) -> Any:
+        """device_put every leaf fully replicated on the mesh."""
+        s = self.replicated_sharding()
+        return jax.tree.map(lambda a: jax.device_put(a, s), tree)
+
+    def place_stacked(self, stacked: StackedClients) -> StackedClients:
+        """The master client tensors, replicated on the mesh (see module
+        docstring for why they cannot shard by vehicle: handover makes the
+        per-round gather pattern cross-shard by design)."""
+        return StackedClients(
+            images=jax.device_put(stacked.images, self.replicated_sharding()),
+            labels=jax.device_put(stacked.labels, self.replicated_sharding()),
+            lengths=stacked.lengths)
+
+
+def resolve_axis(fleet_axis: str, engine_kind: str) -> str:
+    """``"auto"`` -> the engine's natural partitioning: RSU axis for the
+    multi-RSU scenario engine, vehicle axis for the single-RSU cohort
+    engine."""
+    if fleet_axis == "auto":
+        return "rsu" if engine_kind == "scenario" else "vehicle"
+    return fleet_axis
+
+
+def build_fleet_mesh(n_devices: int, axis: str,
+                     devices: Optional[list] = None) -> FleetMesh:
+    """A :class:`FleetMesh` over the first ``n_devices`` local devices.
+
+    Raises with the ``--xla_force_host_platform_device_count`` recipe when
+    the process has fewer devices than requested (on CPU the flag must be
+    set *before* jax initialises its backend — benchmarks set it from the
+    ``--devices`` flag before importing jax)."""
+    if axis not in ("vehicle", "rsu"):
+        raise ValueError(f"fleet mesh axis must be 'vehicle' or 'rsu', "
+                         f"got {axis!r}")
+    devs = list(devices if devices is not None else jax.devices())
+    if n_devices < 1:
+        raise ValueError(f"mesh_devices={n_devices!r} must be >= 1")
+    if n_devices > len(devs):
+        raise RuntimeError(
+            f"mesh_devices={n_devices} but only {len(devs)} device(s) are "
+            f"visible; on CPU set "
+            f"XLA_FLAGS=--xla_force_host_platform_device_count={n_devices} "
+            f"before the first jax import (launch/dryrun.py and the "
+            f"benchmark --devices flag do exactly this)")
+    mesh = Mesh(np.asarray(devs[:n_devices]), (AXIS,))
+    return FleetMesh(mesh, axis)
+
+
+def from_config(cfg, engine_kind: str) -> Optional[FleetMesh]:
+    """The mesh a :class:`~repro.core.fedsim.SimConfig` asks for — ``None``
+    when ``mesh_devices == 1`` (the default single-device path, which must
+    stay bit-identical to the pre-mesh engines and therefore never wraps
+    anything in ``shard_map``)."""
+    n = int(getattr(cfg, "mesh_devices", 1) or 1)
+    if n <= 1:
+        return None
+    return build_fleet_mesh(n, resolve_axis(cfg.fleet_axis, engine_kind))
+
+
+def host_fetch(tree: Any) -> Any:
+    """Pull a (possibly mesh-sharded) pytree to host numpy arrays — the
+    runner calls this on ``RunResult.final_params`` so results survive the
+    mesh (and serialize) regardless of where training ran."""
+    return jax.tree.map(np.asarray, tree)
+
+
+def local_slice(x: jnp.ndarray, n_local: int, axis: int = 0) -> jnp.ndarray:
+    """Inside ``shard_map``: this shard's contiguous block of a replicated
+    array whose logical leading axis is split ``n_local`` per device."""
+    start = jax.lax.axis_index(AXIS) * n_local
+    return jax.lax.dynamic_slice_in_dim(x, start, n_local, axis=axis)

@@ -72,15 +72,18 @@ moments.
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, Dict
+from typing import Callable, Dict, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 from jax import lax
+from jax.experimental.shard_map import shard_map
 from jax.flatten_util import ravel_pytree
+from jax.sharding import PartitionSpec as PSpec
 
-from repro.core import adaptive, aggregation
+from repro.core import adaptive, aggregation, fleet_sharding
+from repro.core.fleet_sharding import AXIS as MESH_AXIS, FleetMesh
 from repro.data.pipeline import StackedClients, fleet_batch_indices_traced
 from repro import optim
 
@@ -164,7 +167,8 @@ class SuperStepPrograms:
 
     def __init__(self, model, cfg, stacked: StackedClients,
                  lengths: np.ndarray, scenario, n_rsus: int,
-                 cloud_sync_every: int, profile, nb: int, ep: int):
+                 cloud_sync_every: int, profile, nb: int, ep: int,
+                 mesh: Optional[FleetMesh] = None):
         self.model = model
         self.cfg = cfg
         self.opt = optim.from_name(cfg.optimizer, cfg.lr)
@@ -172,7 +176,15 @@ class SuperStepPrograms:
         if self.schedule not in SERVER_SCHEDULES:
             raise ValueError(f"server_schedule must be one of "
                              f"{SERVER_SCHEDULES}, got {self.schedule!r}")
-        self.stacked = stacked
+        # RSU-axis mesh (core/fleet_sharding.py, DESIGN.md §10): the RSU
+        # axis is padded to a device multiple (phantom cells no vehicle is
+        # served by — inert, they never accumulate samples) and sharded;
+        # the master client tensors replicate (handover makes per-round
+        # gathers cross-shard by design); everything fleet-wide (mobility,
+        # cuts, the slot table, the global model) is computed replicated
+        self.mesh = mesh
+        self.n_rsus_padded = mesh.pad(n_rsus) if mesh is not None else n_rsus
+        self.stacked = stacked if mesh is None else mesh.place_stacked(stacked)
         self.lengths = np.asarray(lengths, np.int64)
         self.scenario = scenario
         self.n_rsus = n_rsus
@@ -210,8 +222,10 @@ class SuperStepPrograms:
         """Fresh super-step carry for the engine's schedule.  Every buffer
         belongs to the carry alone (the whole carry is donated to each
         dispatch); the sequential schedule keeps pytree edges, the parallel
-        schedule keeps the flat plane."""
-        R = self.n_rsus
+        schedule keeps the flat plane.  Under a mesh the edge stack is
+        placed sharded over the RSU axis and the rest replicated, matching
+        the ``shard_map`` specs so donation reuses the sharded buffers."""
+        R = self.n_rsus_padded
         if self.schedule == "sequential":
             stackR = lambda t: jax.tree.map(
                 lambda a: jnp.broadcast_to(a, (R,) + a.shape), t)
@@ -222,10 +236,15 @@ class SuperStepPrograms:
             flat = self.flatten(units, head)
             edge = jnp.broadcast_to(flat, (R, self.n_params))
             glob = jnp.array(flat, copy=True)
-        return {"edge": edge,
-                "samples": jnp.zeros((R,), jnp.float32),
-                "prev": jnp.full((n_vehicles,), -1, jnp.int32),
-                "global": glob}
+        carry = {"edge": edge,
+                 "samples": jnp.zeros((R,), jnp.float32),
+                 "prev": jnp.full((n_vehicles,), -1, jnp.int32),
+                 "global": glob}
+        if self.mesh is not None:
+            carry["edge"] = self.mesh.shard_leading(carry["edge"])
+            for k in ("samples", "prev", "global"):
+                carry[k] = self.mesh.replicate(carry[k])
+        return carry
 
     def global_model(self, carry):
         """(units, head) view of the carry's global model, in fresh buffers
@@ -240,7 +259,9 @@ class SuperStepPrograms:
     def _build(self, sig: SuperStepSignature):
         model, cfg, opt = self.model, self.cfg, self.opt
         U = model.n_units
-        R, C, n = self.n_rsus, sig.capacity, self.n_vehicles
+        R, C, n = self.n_rsus_padded, sig.capacity, self.n_vehicles
+        fm = self.mesh
+        R_loc = R if fm is None else R // fm.n_devices
         P = self.n_params
         steps, batch = self.steps, cfg.batch_size
         interval = float(cfg.round_interval_s)
@@ -455,10 +476,31 @@ class SuperStepPrograms:
             members, mask, counts = slot_table(serving, cuts)
             idx_all = fleet_batch_indices_traced(
                 jax.random.fold_in(base_key, rnd), lengths_dev, steps, batch)
-            idx_rsu = jnp.moveaxis(idx_all[:, members], 1, 0)  # (R,steps,C,B)
-            cut_slots = cuts[members]
+            if fm is not None:
+                # the slot table is fleet-wide and replicated; each shard
+                # trains its contiguous block of RSU rows
+                members_l = fleet_sharding.local_slice(members, R_loc)
+                mask_l = fleet_sharding.local_slice(mask, R_loc)
+            else:
+                members_l, mask_l = members, mask
+            idx_rsu = jnp.moveaxis(idx_all[:, members_l], 1, 0)
+            cut_slots = cuts[members_l]                # (R_loc, C)
             edge, ls, cs, w_tot = jax.vmap(rsu_round)(
-                carry["edge"], members, mask, cut_slots, idx_rsu)
+                carry["edge"], members_l, mask_l, cut_slots, idx_rsu)
+            if fm is not None:
+                # per-RSU results come home via all_gather so every total
+                # (loss/count sums, the sample counters, the cloud merge)
+                # reduces the full (R,) stack in the SAME order as the
+                # single-device program — gather-then-reduce is the order-
+                # preserving form of the weighted all-reduce, which is what
+                # keeps sharded sgd bit-for-bit (a psum of per-shard
+                # partials would reassociate the fp additions)
+                ls = lax.all_gather(ls, MESH_AXIS, tiled=True)
+                cs = lax.all_gather(cs, MESH_AXIS, tiled=True)
+                w_tot = lax.all_gather(w_tot, MESH_AXIS, tiled=True)
+                edge_stack = aggregation.gathered_stack(edge, MESH_AXIS)
+            else:
+                edge_stack = edge
             samples = carry["samples"] + w_tot
             sched = cuts > 0
             handover = sched & (carry["prev"] >= 0) \
@@ -466,7 +508,7 @@ class SuperStepPrograms:
             prev = jnp.where(serving >= 0, serving, -1).astype(jnp.int32)
             synced = (rnd + 1) % sync_every == 0
             merged_global = aggregation.stacked_cloud_merge(
-                edge, samples, carry["global"])
+                edge_stack, samples, carry["global"])
             carry2 = {
                 "edge": jax.tree.map(
                     lambda stacked, g: jnp.where(
@@ -488,6 +530,13 @@ class SuperStepPrograms:
         def superstep(carry, xs):
             return lax.scan(round_body, carry, xs)
 
+        if fm is not None:
+            carry_spec = {"edge": PSpec(MESH_AXIS), "samples": PSpec(),
+                          "prev": PSpec(), "global": PSpec()}
+            superstep = shard_map(superstep, mesh=fm.mesh,
+                                  in_specs=(carry_spec, PSpec()),
+                                  out_specs=(carry_spec, PSpec()),
+                                  check_rep=False)
         return jax.jit(superstep, donate_argnums=(0,))
 
     # ---- cache / AOT --------------------------------------------------
@@ -514,6 +563,12 @@ class SuperStepPrograms:
         def sds(a):
             if isinstance(a, jax.ShapeDtypeStruct):
                 return a
+            if self.mesh is not None and isinstance(a, jax.Array):
+                # AOT-compiled executables check input shardings: keep the
+                # carry's mesh placement in the abstract signature so the
+                # run's (sharded, donated) carry matches what was compiled
+                return jax.ShapeDtypeStruct(a.shape, a.dtype,
+                                            sharding=a.sharding)
             a = jnp.asarray(a)
             return jax.ShapeDtypeStruct(a.shape, a.dtype)
 

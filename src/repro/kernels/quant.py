@@ -35,14 +35,21 @@ def _dequant_kernel(q_ref, s_ref, x_ref):
 
 def quantize_int8(x: jnp.ndarray, group: int = GROUP, block_rows: int = 256,
                   interpret: bool = False):
-    """x (..., d) with d % group == 0 -> (q int8 (..., d), scales (..., d/group))."""
+    """x (..., d) -> (q int8 (..., d), scales (..., ceil(d/g))) with
+    g = min(group, d).  Matches core/compression.quantize_int8 (its oracle)
+    exactly, including the internal zero-pad of non-divisible trailing dims
+    to the next group boundary (the pad never raises a group's amax and is
+    sliced off the returned q)."""
     *lead, d = x.shape
-    if d % group:
-        group = d
+    g = min(group, max(d, 1))
+    pad_d = (-d) % g
+    if pad_d:
+        x = jnp.pad(x, [(0, 0)] * len(lead) + [(0, pad_d)])
+    dp = d + pad_d
     rows = 1
     for s in lead:
         rows *= s
-    x2 = x.reshape(rows, d // group, group).reshape(rows * (d // group), group)
+    x2 = x.reshape(rows, dp // g, g).reshape(rows * (dp // g), g)
     n = x2.shape[0]
     br = min(block_rows, n)
     pad = (-n) % br
@@ -52,8 +59,8 @@ def quantize_int8(x: jnp.ndarray, group: int = GROUP, block_rows: int = 256,
     q, s = pl.pallas_call(
         _quant_kernel,
         grid=grid,
-        in_specs=[pl.BlockSpec((br, group), lambda i: (i, 0))],
-        out_specs=[pl.BlockSpec((br, group), lambda i: (i, 0)),
+        in_specs=[pl.BlockSpec((br, g), lambda i: (i, 0))],
+        out_specs=[pl.BlockSpec((br, g), lambda i: (i, 0)),
                    pl.BlockSpec((br, 1), lambda i: (i, 0))],
         out_shape=[jax.ShapeDtypeStruct(x2.shape, jnp.int8),
                    jax.ShapeDtypeStruct((x2.shape[0], 1), jnp.float32)],
@@ -61,8 +68,8 @@ def quantize_int8(x: jnp.ndarray, group: int = GROUP, block_rows: int = 256,
     )(x2)
     if pad:
         q, s = q[:n], s[:n]
-    return (q.reshape(*lead, d),
-            s.reshape(*lead, d // group))
+    return (q.reshape(*lead, dp)[..., :d],
+            s.reshape(*lead, dp // g))
 
 
 def dequantize_int8(q: jnp.ndarray, scales: jnp.ndarray, group: int = GROUP,
@@ -70,11 +77,16 @@ def dequantize_int8(q: jnp.ndarray, scales: jnp.ndarray, group: int = GROUP,
                     interpret: bool = False) -> jnp.ndarray:
     *lead, d = q.shape
     ng = scales.shape[-1]
-    group = d // ng
+    g = min(group, max(d, 1))
+    if -(-d // g) != ng:
+        g = d // ng                    # custom exactly-dividing group
+    pad_d = ng * g - d
+    if pad_d:
+        q = jnp.pad(q, [(0, 0)] * len(lead) + [(0, pad_d)])
     rows = 1
     for s in lead:
         rows *= s
-    q2 = q.reshape(rows * ng, group)
+    q2 = q.reshape(rows * ng, g)
     s2 = scales.reshape(rows * ng, 1)
     n = q2.shape[0]
     br = min(block_rows, n)
@@ -86,12 +98,12 @@ def dequantize_int8(q: jnp.ndarray, scales: jnp.ndarray, group: int = GROUP,
     x = pl.pallas_call(
         _dequant_kernel,
         grid=grid,
-        in_specs=[pl.BlockSpec((br, group), lambda i: (i, 0)),
+        in_specs=[pl.BlockSpec((br, g), lambda i: (i, 0)),
                   pl.BlockSpec((br, 1), lambda i: (i, 0))],
-        out_specs=pl.BlockSpec((br, group), lambda i: (i, 0)),
+        out_specs=pl.BlockSpec((br, g), lambda i: (i, 0)),
         out_shape=jax.ShapeDtypeStruct(q2.shape, dtype),
         interpret=interpret,
     )(q2, s2)
     if pad:
         x = x[:n]
-    return x.reshape(*lead, d)
+    return x.reshape(*lead, ng * g)[..., :d]

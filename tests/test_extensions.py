@@ -155,7 +155,7 @@ def test_mobility_dropout_participation_over_time():
 def test_compression_ratio_matches_actual_bytes():
     """compression_ratio(trailing_dim=...) must equal the measured bytes of
     quantize_int8's output (int8 payload + f32 scale per ACTUAL group),
-    including the whole-row fallback for non-divisible trailing dims."""
+    including the internally padded tail group for non-divisible dims."""
     from repro.core import compression as C
     for d in (64, 128, 200, 384, 512):
         x = jnp.asarray(np.random.default_rng(d).normal(size=(16, d)),
@@ -164,16 +164,49 @@ def test_compression_ratio_matches_actual_bytes():
         measured = x.size * 4 / (q.size * 1 + s.size * 4)
         np.testing.assert_allclose(C.compression_ratio(trailing_dim=d),
                                    measured, rtol=1e-12)
-    # the nominal ratio is wrong whenever the fallback kicks in: small dims
-    # pay MORE scale overhead (64-wide groups), non-divisible dims pay LESS
-    # (one whole-row scale) — both diverge from the GROUP-sized assumption
+    # the nominal ratio is wrong off the GROUP grid: small dims pay more
+    # scale overhead (64-wide groups), non-divisible dims pay an extra
+    # scale for the padded tail group — both land BELOW the nominal ratio
     assert C.compression_ratio(trailing_dim=64) < C.compression_ratio()
-    assert C.compression_ratio(trailing_dim=200) > C.compression_ratio()
+    assert C.compression_ratio(trailing_dim=200) < C.compression_ratio()
     # vectorized over per-cut dims (the fedsim accounting path)
     dims = np.array([64, 128, 200])
     np.testing.assert_allclose(
         C.compression_ratio(trailing_dim=dims),
         [C.compression_ratio(trailing_dim=int(d)) for d in dims])
+
+
+def test_quantize_int8_divisible_and_padded_branches():
+    """quantize_int8 covers both trailing-dim branches: divisible (no pad)
+    and non-divisible (internal zero-pad to the next group boundary) —
+    GROUP-granular scales either way, pad sliced off, roundtrip within one
+    quantisation step of each group's scale, straight-through gradient."""
+    from repro.core import compression as C
+    rng = np.random.default_rng(7)
+    for d, exp_groups in ((256, 2), (200, 2), (130, 2), (16, 1), (5, 1)):
+        x = jnp.asarray(rng.normal(size=(4, d)), jnp.float32)
+        q, s = C.quantize_int8(x)
+        assert q.shape == x.shape and q.dtype == jnp.int8
+        assert s.shape == (4, exp_groups), (d, s.shape)
+        xd = C.dequantize_int8(q, s)
+        assert xd.shape == x.shape
+        # per-element error bounded by half a step of its OWN group's scale
+        g = C.effective_group(d)
+        reps = np.repeat(np.asarray(s), g, axis=-1)[:, :d]
+        assert np.all(np.abs(np.asarray(xd) - np.asarray(x))
+                      <= 0.5 * reps + 1e-7), d
+        # the padded tail never leaks: quantizing the zero-padded twin of x
+        # in one divisible call gives identical q/s on the real columns
+        if d % int(g):
+            dpad = int(-(-d // g) * g)
+            xp = jnp.zeros((4, dpad), jnp.float32).at[:, :d].set(x)
+            qp, sp = C.quantize_int8(xp)
+            np.testing.assert_array_equal(np.asarray(qp)[:, :d],
+                                          np.asarray(q))
+            np.testing.assert_array_equal(np.asarray(sp), np.asarray(s))
+        # straight-through estimator survives both branches
+        gx = jax.grad(lambda t: jnp.sum(C.fake_quant(t) * 2.0))(x)
+        np.testing.assert_array_equal(np.asarray(gx), 2.0)
 
 
 def test_resnet_profile_has_smashed_trailing_dims():

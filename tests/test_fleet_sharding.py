@@ -1,0 +1,276 @@
+"""Device-sharded fleets (ISSUE 5 acceptance tests, DESIGN.md §10).
+
+Two tiers:
+
+* Always-on (any device count): FleetMesh construction/padding rules, spec
+  validation of mesh combinations, and — the load-bearing ones — engines
+  driven through the FULL ``shard_map`` path on an explicit ONE-device mesh
+  asserted bit-identical to the default unsharded engines.  Every
+  collective (all_gather, psum) degenerates to identity on one device, so
+  these run in plain tier-1 and keep the sharded code from rotting.
+
+* 8-device (skipped unless ``XLA_FLAGS=--xla_force_host_platform_
+  device_count=8`` — the CI multi-device job sets it): K-fused sgd
+  bit-for-bit across the mesh with a handover AND a cloud merge inside the
+  fused window, adam within the engine-parity tolerance, cohort-engine
+  parity, and padding inertness for fleets/RSU counts that do not divide
+  the device count.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import fleet_sharding
+from repro.core.fedsim import FederationSim, ScenarioEngine, SimConfig
+from repro.core.fleet_sharding import FleetMesh, build_fleet_mesh
+
+from test_scenario import TinyMLP, _two_cell_trace, _vector_clients
+
+DEV = jax.device_count()
+ROUNDS, INTERVAL = 4, 5.0
+
+need8 = pytest.mark.skipif(
+    DEV < 8, reason="needs XLA_FLAGS=--xla_force_host_platform_device_count=8")
+
+
+def _cfg(**kw):
+    base = dict(scheme="asfl", adaptive_strategy="paper", rounds=ROUNDS,
+                local_steps=2, batch_size=8, lr=1e-2, optimizer="sgd",
+                round_interval_s=INTERVAL, eval_every=0, superstep=ROUNDS)
+    base.update(kw)
+    return SimConfig(**base)
+
+
+def _params(eng):
+    return jax.tree.map(np.asarray, {"units": eng.units, "head": eng.head})
+
+
+def _assert_histories_equal(h1, h2, exact=True):
+    assert [m.cuts for m in h1] == [m.cuts for m in h2]
+    if hasattr(h1[0], "rsu_loads"):
+        assert [m.rsu_loads for m in h1] == [m.rsu_loads for m in h2]
+        assert [m.n_handover for m in h1] == [m.n_handover for m in h2]
+    l1, l2 = [m.loss for m in h1], [m.loss for m in h2]
+    if exact:
+        np.testing.assert_array_equal(l1, l2)
+    else:
+        np.testing.assert_allclose(l1, l2, rtol=1e-5, atol=1e-5)
+
+
+def _scenario_engines(n_devices, **cfg_kw):
+    """(reference engine, mesh engine) over the canonical two-cell handover
+    trace with a cloud merge strictly inside the fused window."""
+    sc = _two_cell_trace(ROUNDS, INTERVAL)
+    clients, test = _vector_clients(2)
+    cfg = _cfg(**cfg_kw)
+    ref = ScenarioEngine(TinyMLP(), clients, test, cfg, sc,
+                         cloud_sync_every=2)
+    mesh = build_fleet_mesh(n_devices, "rsu")
+    eng = ScenarioEngine(TinyMLP(), clients, test, cfg, sc,
+                         cloud_sync_every=2, mesh=mesh)
+    return ref, eng
+
+
+# ----------------------------------------------------------- mesh plumbing
+def test_fleet_mesh_padding_rules():
+    mesh = build_fleet_mesh(1, "vehicle")
+    assert mesh.n_devices == 1
+    assert [mesh.pad(n) for n in (0, 1, 3, 8)] == [1, 1, 3, 8]
+    if DEV >= 2:
+        m2 = build_fleet_mesh(2, "rsu")
+        assert [m2.pad(n) for n in (1, 2, 3, 8)] == [2, 2, 4, 8]
+
+
+def test_fleet_mesh_build_errors():
+    with pytest.raises(ValueError, match="vehicle|rsu"):
+        build_fleet_mesh(1, "bogus")
+    with pytest.raises(RuntimeError,
+                       match="xla_force_host_platform_device_count"):
+        build_fleet_mesh(DEV + 1, "rsu")
+    with pytest.raises(ValueError, match=">= 1"):
+        build_fleet_mesh(0, "vehicle")
+
+
+def test_from_config_default_is_unsharded():
+    assert fleet_sharding.from_config(_cfg(), "scenario") is None
+    assert fleet_sharding.from_config(_cfg(), "federation") is None
+
+
+def test_engines_reject_wrong_axis_mesh():
+    sc = _two_cell_trace(ROUNDS, INTERVAL)
+    clients, test = _vector_clients(2)
+    with pytest.raises(ValueError, match="RSU axis"):
+        ScenarioEngine(TinyMLP(), clients, test, _cfg(), sc,
+                       mesh=build_fleet_mesh(1, "vehicle"))
+    with pytest.raises(ValueError, match="vehicle axis"):
+        FederationSim(TinyMLP(), clients, test,
+                      _cfg(superstep=1, cohort_parallel="vmap"),
+                      mesh=build_fleet_mesh(1, "rsu"))
+
+
+def test_spec_validates_mesh_combinations():
+    from repro import api
+    rt = lambda **kw: api.RuntimeConfig(mesh_devices=2, **kw)
+    # single-RSU engine: rsu axis / sequential chains / serial schedules
+    with pytest.raises(ValueError, match="vehicle axis"):
+        api.ExperimentSpec(runtime=rt(fleet_axis="rsu"))
+    with pytest.raises(ValueError, match="sequential chain"):
+        api.ExperimentSpec(train=api.TrainConfig(scheme="sl"), runtime=rt())
+    with pytest.raises(ValueError, match="cohort_parallel"):
+        api.ExperimentSpec(runtime=rt(cohort_parallel="scan"))
+    # multi-RSU engine: vehicle axis cannot partition it
+    with pytest.raises(ValueError, match="RSU axis"):
+        api.ExperimentSpec(
+            fleet=api.FleetConfig(n_vehicles=8, scenario="highway_corridor"),
+            runtime=rt(fleet_axis="vehicle"))
+    # valid combos build
+    api.ExperimentSpec(runtime=rt())
+    api.ExperimentSpec(
+        fleet=api.FleetConfig(n_vehicles=8, scenario="highway_corridor"),
+        runtime=rt(fleet_axis="rsu"))
+    # field-level validation still lives in SimConfig
+    with pytest.raises(ValueError, match="fleet_axis"):
+        SimConfig(fleet_axis="diagonal")
+    with pytest.raises(ValueError, match="mesh_devices"):
+        SimConfig(mesh_devices=0)
+
+
+# ----------------------- one-device mesh == default engine, bit for bit
+# (the full shard_map/all_gather/psum path with every collective degenerate
+# — keeps the sharded code exercised by plain single-device tier-1 runs)
+
+def test_one_device_mesh_superstep_bitforbit():
+    ref, eng = _scenario_engines(1)
+    assert eng.programs.mesh is not None
+    h1, h2 = ref.run(), eng.run()
+    assert sum(m.n_handover for m in h1) >= 1
+    _assert_histories_equal(h1, h2)
+    jax.tree.map(np.testing.assert_array_equal, _params(ref), _params(eng))
+
+
+def test_one_device_mesh_cohort_matches_default():
+    """The sharded cohort path on one device: losses are bit-identical
+    (every collective is an identity), params agree to ~1 ulp — inserting
+    the (identity) psum into the FedAvg moves an XLA fusion boundary, so
+    the merge divide rounds once differently; anything beyond that is a
+    real bug."""
+    clients, test = _vector_clients(5)      # odd fleet: padded slots in play
+    cfg = _cfg(superstep=1, cohort_parallel="vmap", n_clients=5)
+    ref = FederationSim(TinyMLP(), clients, test, cfg)
+    eng = FederationSim(TinyMLP(), clients, test, cfg,
+                        mesh=build_fleet_mesh(1, "vehicle"))
+    assert eng.engine.fleet_mesh is not None
+    h1, h2 = ref.run(), eng.run()
+    _assert_histories_equal(h1, h2)
+    jax.tree.map(lambda a, b: np.testing.assert_allclose(
+        a, b, rtol=1e-6, atol=1e-7), _params(ref), _params(eng))
+
+
+# ------------------------------------------------ 8-device parity suite
+@need8
+@pytest.mark.parametrize("schedule", ["sequential", "parallel"])
+def test_superstep_sharded_sgd_bitforbit(schedule):
+    """K-fused sgd across an 8-device RSU mesh == the single-device engine
+    bit for bit; the fused window contains vehicle 0's handover AND a cloud
+    merge (cloud_sync_every=2 inside a K=4 window).  The 2-RSU trace pads
+    to 8 phantom cells — padding inertness on the RSU axis included."""
+    ref, eng = _scenario_engines(8, server_schedule=schedule)
+    assert eng.programs.n_rsus_padded == 8
+    h1, h2 = ref.run(), eng.run()
+    assert sum(m.n_handover for m in h1) >= 1
+    _assert_histories_equal(h1, h2)
+    jax.tree.map(np.testing.assert_array_equal, _params(ref), _params(eng))
+
+
+@need8
+def test_superstep_sharded_adam_within_parity_tolerance():
+    ref, eng = _scenario_engines(8, optimizer="adam")
+    h1, h2 = ref.run(), eng.run()
+    _assert_histories_equal(h1, h2, exact=False)
+    jax.tree.map(lambda a, b: np.testing.assert_allclose(
+        a, b, atol=1e-5, rtol=1e-5), _params(ref), _params(eng))
+
+
+@need8
+def test_superstep_sharded_precompile_covers():
+    """AOT precompile covers the sharded signatures: a full run builds
+    nothing mid-flight (fallback counter stays zero) and the donated
+    sharded carry survives windowing."""
+    sc = _two_cell_trace(ROUNDS, INTERVAL)
+    clients, test = _vector_clients(2)
+    eng = ScenarioEngine(TinyMLP(), clients, test, _cfg(superstep=3), sc,
+                         cloud_sync_every=2, mesh=build_fleet_mesh(8, "rsu"))
+    sigs = eng.precompile()
+    assert len(sigs) == 2                      # K=3 and the K=1 tail
+    hist = eng.run()
+    assert eng.programs.compile_fallbacks == 0
+    assert len(hist) == ROUNDS
+
+
+@need8
+@pytest.mark.parametrize("optimizer", ["sgd", "adam"])
+def test_cohort_sharded_parity_nondivisible_fleet(optimizer):
+    """Vehicle-axis sharding of the cohort engine: a 6-vehicle fleet pads
+    its cut buckets to device multiples (padding inertness for
+    non-divisible fleets) and matches the single-device vmap engine within
+    the engine-parity fp tolerance (the FedAvg psum reassociates float
+    additions, so sgd is near- but not bit-exact — DESIGN.md §10)."""
+    clients, test = _vector_clients(6)
+    cfg = _cfg(superstep=1, cohort_parallel="vmap", n_clients=6,
+               optimizer=optimizer)
+    ref = FederationSim(TinyMLP(), clients, test, cfg)
+    eng = FederationSim(TinyMLP(), clients, test,
+                        dataclasses.replace(cfg, mesh_devices=8))
+    assert eng.engine.slot_pad(6) == 8
+    h1, h2 = ref.run(), eng.run()
+    _assert_histories_equal(h1, h2, exact=False)
+    jax.tree.map(lambda a, b: np.testing.assert_allclose(
+        a, b, atol=1e-5, rtol=1e-5), _params(ref), _params(eng))
+
+
+@need8
+def test_fl_sharded_parity():
+    clients, test = _vector_clients(6)
+    cfg = _cfg(scheme="fl", superstep=1, cohort_parallel="vmap", n_clients=6)
+    ref = FederationSim(TinyMLP(), clients, test, cfg)
+    eng = FederationSim(TinyMLP(), clients, test,
+                        dataclasses.replace(cfg, mesh_devices=8))
+    h1, h2 = ref.run(), eng.run()
+    np.testing.assert_allclose([m.loss for m in h1], [m.loss for m in h2],
+                               rtol=1e-5, atol=1e-5)
+    jax.tree.map(lambda a, b: np.testing.assert_allclose(
+        a, b, atol=1e-5, rtol=1e-5), _params(ref), _params(eng))
+
+
+@need8
+def test_api_run_on_mesh_gathers_final_params():
+    """The front door builds the mesh from RuntimeConfig and returns
+    host-numpy final params regardless of where training ran."""
+    from repro import api
+    spec = api.ExperimentSpec(
+        model="mlp9",
+        train=api.TrainConfig(scheme="asfl", rounds=2, local_steps=1,
+                              batch_size=8, lr=1e-3, eval_every=0,
+                              optimizer="sgd"),
+        fleet=api.FleetConfig(n_vehicles=8, scenario="trace_replay",
+                              per_vehicle_samples=16),
+        runtime=api.RuntimeConfig(superstep=2, mesh_devices=8))
+    res = api.run(spec)
+    assert res.diagnostics["mesh_devices"] == 8
+    assert res.diagnostics["fleet_axis"] == "rsu"
+    units, head = res.final_params
+    assert all(isinstance(leaf, np.ndarray)
+               for leaf in jax.tree.leaves((units, head)))
+    ref = api.run(dataclasses.replace(
+        spec, runtime=dataclasses.replace(spec.runtime, mesh_devices=1)))
+    # the trained model is bit-identical; the scalar loss METRIC may move
+    # one ulp (XLA fuses the per-round loss sum differently at different
+    # vmap widths — a reporting reduction, not training state)
+    np.testing.assert_allclose([m.loss for m in ref.history],
+                               [m.loss for m in res.history],
+                               rtol=1e-6, atol=0)
+    jax.tree.map(np.testing.assert_array_equal,
+                 res.final_params, ref.final_params)
