@@ -51,7 +51,8 @@ def _spec(name: str, n: int, args, devices: int = 1) -> api.ExperimentSpec:
         train=api.TrainConfig(scheme="asfl", rounds=args.rounds,
                               local_steps=args.local_steps,
                               batch_size=args.batch, lr=1e-3, eval_every=0,
-                              server_schedule=args.schedule),
+                              server_schedule=args.schedule,
+                              wire=args.wire, wire_k=args.wire_k),
         adaptive=api.AdaptiveConfig(strategy=args.strategy),
         fleet=api.FleetConfig(n_vehicles=n, scenario=name,
                               scenario_kwargs={"seed": n},
@@ -122,7 +123,7 @@ def check_baseline(out: dict, baseline_path: str, max_regress: float) -> int:
     # (don't spuriously fail) if the bench config drifted from the
     # committed baseline's — that means the baseline needs regenerating
     keys = ("local_steps", "batch", "strategy", "cloud_sync_every",
-            "superstep", "schedule", "slot_capacity")
+            "superstep", "schedule", "slot_capacity", "wire")
     mismatch = {k: (base.get("config", {}).get(k), out["config"].get(k))
                 for k in keys
                 if base.get("config", {}).get(k) != out["config"].get(k)}
@@ -170,6 +171,10 @@ def main():
                     choices=sorted(api.SCHEDULES))
     ap.add_argument("--slot-capacity", default="tight8",
                     choices=["pow2", "tight8"])
+    ap.add_argument("--wire", default="none", choices=sorted(api.WIRES),
+                    help="cut-boundary wire scheme (kernels/wire.py)")
+    ap.add_argument("--wire-k", type=float, default=0.25,
+                    help="topk_int8 keep fraction per group")
     ap.add_argument("--compilation-cache", default=None, metavar="DIR",
                     help="persistent XLA compilation cache directory")
     ap.add_argument("--devices", default="1", metavar="N[,M...]",
@@ -220,6 +225,7 @@ def main():
                    "cloud_sync_every": args.sync,
                    "superstep": args.superstep, "schedule": args.schedule,
                    "slot_capacity": args.slot_capacity,
+                   "wire": args.wire, "wire_k": args.wire_k,
                    "devices": list(DEVICE_COUNTS),
                    "compilation_cache": args.compilation_cache,
                    "backend": jax.default_backend(),

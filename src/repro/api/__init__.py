@@ -24,9 +24,10 @@ This surface is the public contract: ``__all__`` below is snapshot-tested
 """
 from repro.api.registry import (  # noqa: F401
     FEDERATION, MODELS, SCENARIO, SCENARIOS, SCHEDULES, SINGLE_RSU,
-    STRATEGIES, ModelEntry, ScheduleEntry, StrategyEntry, build_model,
-    build_scenario, make_lm_fleet_data, model_entry, register_model,
-    register_schedule, register_scenario, register_strategy)
+    STRATEGIES, WIRES, ModelEntry, ScheduleEntry, StrategyEntry, WireEntry,
+    build_model, build_scenario, make_lm_fleet_data, model_entry,
+    register_model, register_schedule, register_scenario, register_strategy,
+    register_wire)
 from repro.api.runner import RunResult, build_engine, run  # noqa: F401
 from repro.api.spec import (  # noqa: F401
     SIM_CONFIG_FIELD_MAP, AdaptiveConfig, ExperimentSpec, FleetConfig,
@@ -37,11 +38,11 @@ __all__ = [
     "ExperimentSpec", "TrainConfig", "AdaptiveConfig", "FleetConfig",
     "RuntimeConfig", "SIM_CONFIG_FIELD_MAP",
     # registries
-    "MODELS", "SCENARIOS", "STRATEGIES", "SCHEDULES",
-    "ModelEntry", "StrategyEntry", "ScheduleEntry",
+    "MODELS", "SCENARIOS", "STRATEGIES", "SCHEDULES", "WIRES",
+    "ModelEntry", "StrategyEntry", "ScheduleEntry", "WireEntry",
     "register_model", "register_scenario", "register_strategy",
-    "register_schedule", "model_entry", "build_model", "build_scenario",
-    "make_lm_fleet_data",
+    "register_schedule", "register_wire", "model_entry", "build_model",
+    "build_scenario", "make_lm_fleet_data",
     "FEDERATION", "SCENARIO", "SINGLE_RSU",
     # runner
     "run", "build_engine", "RunResult",

@@ -33,7 +33,7 @@ from typing import Any, Callable, Dict, Optional, Tuple
 
 from repro.core import scenario as _scenario
 from repro.core.fedsim import (FEDERATION_STRATEGIES, SCENARIO_STRATEGIES,
-                               SERVER_SCHEDULES)
+                               SERVER_SCHEDULES, WIRE_SCHEMES)
 
 # engine kinds an entry can be executed by
 FEDERATION = "federation"   # single-RSU FederationSim / CohortEngine
@@ -225,6 +225,28 @@ def register_schedule(entry: ScheduleEntry) -> ScheduleEntry:
     return entry
 
 
+@dataclasses.dataclass(frozen=True)
+class WireEntry:
+    """A cut-boundary wire scheme (DESIGN.md §11): how smashed activations
+    (up) and cut-layer gradients (down) cross the vehicle<->RSU link, and
+    what the cost model charges for them."""
+    name: str
+    engines: Tuple[str, ...]
+    description: str = ""
+
+
+WIRES: Dict[str, WireEntry] = {}
+
+
+def register_wire(entry: WireEntry) -> WireEntry:
+    WIRES[entry.name] = entry
+    return entry
+
+
+def wire_names() -> str:
+    return " | ".join(sorted(WIRES))
+
+
 def _register_builtin_strategies():
     descr = {
         "paper": "Eq. 3 rate banding (text-consistent ordering)",
@@ -251,6 +273,20 @@ def _register_builtin_strategies():
         "arXiv:2405.18707: one |D_n|-weighted mean-gradient server step "
         "per local step, batched over the whole cohort"))
     assert set(SCHEDULES) == set(SERVER_SCHEDULES)
+
+    register_wire(WireEntry(
+        "none", (FEDERATION, SCENARIO),
+        "dense fp32 smashed tensors, uncompressed both directions"))
+    register_wire(WireEntry(
+        "int8", (FEDERATION, SCENARIO),
+        "per-128-group symmetric int8 quant of activations and cut-layer "
+        "gradients (~4x fewer bytes; kernels/quant.py)"))
+    register_wire(WireEntry(
+        "topk_int8", (FEDERATION, SCENARIO),
+        "per-group top-k sparsify + int8 pack with per-vehicle error "
+        "feedback in the superstep engine (>=4x on top of quant; "
+        "kernels/wire.py)"))
+    assert set(WIRES) == set(WIRE_SCHEMES)
 
 
 _register_builtin_models()

@@ -184,7 +184,8 @@ def run(spec: ExperimentSpec, *,
     timing["rounds_per_s"] = (max(len(history), 1) / fastest
                               if fastest else 0.0)
 
-    diagnostics: Dict[str, Any] = {"model": spec.model}
+    diagnostics: Dict[str, Any] = {"model": spec.model,
+                                   "wire": spec.train.wire}
     if isinstance(engine, ScenarioEngine):
         diagnostics.update(
             mode=engine.mode, n_rsus=engine.n_rsus,

@@ -53,8 +53,11 @@ class TrainConfig:
     rounds: int = 10
     optimizer: str = "adam"           # adam | sgd | momentum
     eval_every: int = 1               # 0 = never
-    compress_smashed: bool = False
+    compress_smashed: bool = False    # legacy alias for wire="int8"
     server_schedule: str = "sequential"  # sequential | parallel
+    # cut-boundary wire scheme (registry.WIRES): none | int8 | topk_int8
+    wire: str = "none"
+    wire_k: float = 0.25              # topk_int8 keep-fraction per group
 
 
 @dataclasses.dataclass(frozen=True)
@@ -119,6 +122,8 @@ SIM_CONFIG_FIELD_MAP: Dict[str, Tuple[str, str]] = {
     "eval_every": ("train", "eval_every"),
     "compress_smashed": ("train", "compress_smashed"),
     "server_schedule": ("train", "server_schedule"),
+    "wire": ("train", "wire"),
+    "wire_k": ("train", "wire_k"),
     "adaptive_strategy": ("adaptive", "strategy"),
     "cut": ("adaptive", "cut"),
     "n_clients": ("fleet", "n_vehicles"),
@@ -204,6 +209,19 @@ class ExperimentSpec:
                 f"{engine} engine (fleet.scenario={sc!r}); schedules this "
                 f"engine supports: {' | '.join(ok)} (the parallel schedule "
                 f"needs a multi-RSU scenario)")
+
+        wire = registry.WIRES.get(self.train.wire)
+        if wire is None:
+            raise ValueError(
+                f"unknown wire scheme {self.train.wire!r}; registered: "
+                f"{' | '.join(registry.wire_names())}")
+        if engine not in wire.engines:
+            ok = sorted(n for n, w in registry.WIRES.items()
+                        if engine in w.engines)
+            raise ValueError(
+                f"wire scheme {wire.name!r} is not executable by the "
+                f"{engine} engine (fleet.scenario={sc!r}); wires this "
+                f"engine supports: {' | '.join(ok)}")
 
         if engine == registry.SCENARIO:
             if self.train.scheme != "asfl":

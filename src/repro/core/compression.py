@@ -13,6 +13,7 @@ with identical semantics (this module is its oracle).
 """
 from __future__ import annotations
 
+import functools
 from typing import Optional, Tuple, Union
 
 import jax
@@ -20,6 +21,18 @@ import jax.numpy as jnp
 import numpy as np
 
 GROUP = 128  # quantisation group along the trailing axis
+
+# scale = amax * (1/127), written as a multiply: XLA's algebraic simplifier
+# rewrites division-by-constant into this form under jit but not in eager
+# dispatch — using the multiply everywhere keeps eager, jit and Pallas
+# interpret mode bit-identical (the kernel parity tests assert exact equality)
+INV127 = 1.0 / 127.0
+
+# wire schemes at the cut boundary (DESIGN.md §11): "none" ships dense fp32,
+# "int8" the per-group quant above, "topk_int8" adds per-group top-k
+# sparsification with error feedback and a packed int32 wire buffer
+WIRE_SCHEMES = ("none", "int8", "topk_int8")
+WIRE_K = 0.25  # default keep-fraction per group for topk_int8
 
 
 def _group_shape(d: int, group: int) -> Tuple[int, int]:
@@ -47,7 +60,7 @@ def quantize_int8(x: jnp.ndarray, group: int = GROUP
             [x, jnp.zeros((*lead, pad), x.dtype)], axis=-1)
     xg = x.reshape(*lead, ng, g).astype(jnp.float32)
     amax = jnp.max(jnp.abs(xg), axis=-1, keepdims=True)
-    scale = jnp.maximum(amax, 1e-8) / 127.0
+    scale = jnp.maximum(amax, 1e-8) * INV127
     q = jnp.clip(jnp.round(xg / scale), -127, 127).astype(jnp.int8)
     return q.reshape(*lead, ng * g)[..., :d], scale[..., 0]
 
@@ -117,4 +130,299 @@ def compression_ratio(dtype_bytes: int = 4, group: int = GROUP,
     g = effective_group(d, group)
     ng = -(-d // g)                            # ceil: padded tail group
     ratio = dtype_bytes * d / (d + 4.0 * ng)
+    return float(ratio) if np.ndim(ratio) == 0 else ratio
+
+
+# --------------------------------------------------------------------------
+# topk_int8 wire format (DESIGN.md §11)
+# --------------------------------------------------------------------------
+# Per quantisation group of g values, exactly k = clip(round(k_frac*g), 1, g)
+# survivors (largest |x|, ties to the lower index) are int8-quantised with the
+# group's amax/127 scale and packed into ceil(g/32) + 1 + ceil(k/4) int32
+# words:
+#
+#   [ bitmap: ceil(g/32) words | scale: 1 word (f32 bitcast) |
+#     values: ceil(k/4) words, 4 int8 lanes each, survivor order ]
+#
+# The exactly-k rule keeps every shape static (no data-dependent packing), so
+# the format composes with jit / scan / shard_map with zero retraces.  These
+# jnp functions are the oracles for the fused Pallas kernels in
+# repro.kernels.wire (bit-exact in interpret mode).
+
+def wire_layout(d: int, k_frac: float = WIRE_K, group: int = GROUP
+                ) -> Tuple[int, int, int, int]:
+    """(g, ng, k, words_per_group) for trailing dim ``d``.  k_frac <= 0
+    degenerates to k=1 (at least one survivor per group keeps the format
+    non-empty); k_frac >= 1 keeps the whole group (quant-only)."""
+    g, ng = _group_shape(d, group)
+    k = int(min(max(int(round(float(k_frac) * g)), 1), g))
+    wpg = -(-g // 32) + 1 + -(-k // 4)
+    return g, ng, k, wpg
+
+
+def _topk_mask(absx: jnp.ndarray, k: int) -> jnp.ndarray:
+    """Per-group top-k mask over the trailing axis.  Rank by pairwise
+    comparison with ties broken toward the lower index — a total order, so
+    exactly k elements win and the oracle/kernel agree bit-for-bit (no
+    reliance on a sort primitive's tie behavior)."""
+    g = absx.shape[-1]
+    ii = jax.lax.broadcasted_iota(jnp.int32, (g, g), 0)   # candidate
+    jj = jax.lax.broadcasted_iota(jnp.int32, (g, g), 1)   # competitor
+    beats = ((absx[..., None, :] > absx[..., :, None])
+             | ((absx[..., None, :] == absx[..., :, None]) & (jj < ii)))
+    rank = jnp.sum(beats.astype(jnp.int32), axis=-1)
+    return rank < k
+
+
+def _grouped(x: jnp.ndarray, group: int):
+    """Zero-pad the trailing dim to the group boundary and reshape to
+    (..., ng, g); returns (xg, g, ng, d)."""
+    *lead, d = x.shape
+    g, ng = _group_shape(d, group)
+    pad = ng * g - d
+    if pad:
+        x = jnp.concatenate([x, jnp.zeros((*lead, pad), x.dtype)], axis=-1)
+    return x.reshape(*lead, ng, g), g, ng, d
+
+
+def sparsify_topk_int8(x: jnp.ndarray, k_frac: float = WIRE_K,
+                       group: int = GROUP):
+    """Top-k sparsify + int8 quantise.  Returns (q int8 (..., d) with zeros
+    off-mask, scales f32 (..., ng), mask bool (..., d)).  The scale is the
+    full group's amax/127 — identical to :func:`quantize_int8`, since the
+    group maximum always survives top-k."""
+    xg, g, ng, d = _grouped(x, group)
+    k = wire_layout(d, k_frac, group)[2]
+    xg = xg.astype(jnp.float32)
+    absx = jnp.abs(xg)
+    amax = jnp.max(absx, axis=-1, keepdims=True)
+    scale = jnp.maximum(amax, 1e-8) * INV127
+    mask = _topk_mask(absx, k)
+    q = jnp.where(mask, jnp.clip(jnp.round(xg / scale), -127, 127), 0)
+    lead = x.shape[:-1]
+    return (q.astype(jnp.int8).reshape(*lead, ng * g)[..., :d],
+            scale[..., 0],
+            mask.reshape(*lead, ng * g)[..., :d])
+
+
+def _pack_groups(q: jnp.ndarray, scale: jnp.ndarray, mask: jnp.ndarray,
+                 k: int) -> jnp.ndarray:
+    """(..., ng, g) int32 q / (..., ng) scale / (..., ng, g) mask ->
+    (..., ng, wpg) int32 words.  Disjoint-bit adds are exact ORs."""
+    *lead, ng, g = q.shape
+    bw, vw = -(-g // 32), -(-k // 4)
+    m32 = mask.astype(jnp.int32)
+    # bitmap: bit (i % 32) of word (i // 32) = mask[i]
+    pad_b = bw * 32 - g
+    mb = jnp.concatenate(
+        [m32, jnp.zeros((*lead, ng, pad_b), jnp.int32)], axis=-1
+    ) if pad_b else m32
+    shifts = jax.lax.broadcasted_iota(jnp.int32, (bw, 32), 1)
+    bitmap = jnp.sum(jnp.left_shift(mb.reshape(*lead, ng, bw, 32), shifts),
+                     axis=-1)
+    # survivor compaction via one-hot matmul: exact (one survivor per slot)
+    pos = jnp.cumsum(m32, axis=-1) - 1                       # (..., ng, g)
+    slot = jax.lax.broadcasted_iota(jnp.int32, (g, k), 1)
+    onehot = ((pos[..., None] == slot) & mask[..., None]).astype(jnp.int32)
+    vals = jnp.sum(q[..., None] * onehot, axis=-2)           # (..., ng, k)
+    pad_v = vw * 4 - k
+    vb = jnp.concatenate(
+        [vals, jnp.zeros((*lead, ng, pad_v), jnp.int32)], axis=-1
+    ) if pad_v else vals
+    lanes = jax.lax.broadcasted_iota(jnp.int32, (vw, 4), 1)
+    words = jnp.sum(jnp.left_shift(
+        jnp.bitwise_and(vb.reshape(*lead, ng, vw, 4), 0xFF), 8 * lanes),
+        axis=-1)
+    sword = jax.lax.bitcast_convert_type(scale.astype(jnp.float32),
+                                         jnp.int32)[..., None]
+    return jnp.concatenate([bitmap, sword, words], axis=-1)
+
+
+def _unpack_groups(buf: jnp.ndarray, g: int, k: int):
+    """(..., ng, wpg) int32 -> (q int32 (..., ng, g), scale (..., ng),
+    mask bool (..., ng, g)).  Exact inverse of :func:`_pack_groups`."""
+    *lead, ng, _ = buf.shape
+    bw, vw = -(-g // 32), -(-k // 4)
+    bitmap = buf[..., :bw]
+    scale = jax.lax.bitcast_convert_type(buf[..., bw], jnp.float32)
+    words = buf[..., bw + 1:]
+    shifts = jax.lax.broadcasted_iota(jnp.int32, (bw, 32), 1)
+    mask = jnp.bitwise_and(
+        jnp.right_shift(bitmap[..., None], shifts), 1
+    ).reshape(*lead, ng, bw * 32)[..., :g].astype(bool)
+    lanes = jax.lax.broadcasted_iota(jnp.int32, (vw, 4), 1)
+    bytes_ = jnp.bitwise_and(
+        jnp.right_shift(words[..., None], 8 * lanes), 0xFF)
+    vals = bytes_.reshape(*lead, ng, vw * 4)[..., :k]
+    vals = vals - 256 * (vals > 127)                         # sign-extend
+    # scatter survivors back: transpose of the pack-side one-hot
+    pos = jnp.cumsum(mask.astype(jnp.int32), axis=-1) - 1
+    slot = jax.lax.broadcasted_iota(jnp.int32, (g, k), 1)
+    onehot = ((pos[..., None] == slot) & mask[..., None]).astype(jnp.int32)
+    q = jnp.sum(vals[..., None, :] * onehot, axis=-1)        # (..., ng, g)
+    return q, scale, mask
+
+
+def sparsify_quant_pack_ref(x: jnp.ndarray, k_frac: float = WIRE_K,
+                            group: int = GROUP) -> jnp.ndarray:
+    """Fused-oracle: x (..., d) -> packed wire buffer int32 (..., ng*wpg).
+    Oracle for ``repro.kernels.wire.sparsify_quant_pack`` (bit-exact)."""
+    xg, g, ng, d = _grouped(x, group)
+    k, wpg = wire_layout(d, k_frac, group)[2:]
+    xg = xg.astype(jnp.float32)
+    absx = jnp.abs(xg)
+    amax = jnp.max(absx, axis=-1, keepdims=True)
+    scale = jnp.maximum(amax, 1e-8) * INV127
+    mask = _topk_mask(absx, k)
+    q = jnp.where(mask, jnp.clip(jnp.round(xg / scale), -127, 127),
+                  0).astype(jnp.int32)
+    buf = _pack_groups(q, scale[..., 0], mask, k)
+    return buf.reshape(*x.shape[:-1], ng * wpg)
+
+
+def unpack_wire(buf: jnp.ndarray, d: int, k_frac: float = WIRE_K,
+                group: int = GROUP):
+    """Packed buffer (..., ng*wpg) -> (q int8 (..., d), scales (..., ng),
+    mask bool (..., d)).  Round-trip identity with
+    :func:`sparsify_quant_pack_ref` / :func:`sparsify_topk_int8`."""
+    g, ng, k, wpg = wire_layout(d, k_frac, group)
+    *lead, _ = buf.shape
+    q, scale, mask = _unpack_groups(buf.reshape(*lead, ng, wpg), g, k)
+    return (q.astype(jnp.int8).reshape(*lead, ng * g)[..., :d],
+            scale,
+            mask.reshape(*lead, ng * g)[..., :d])
+
+
+def wire_dequant_ref(buf: jnp.ndarray, d: int, k_frac: float = WIRE_K,
+                     group: int = GROUP, dtype=jnp.float32) -> jnp.ndarray:
+    """Packed buffer -> dense (..., d): unpack + dequantise."""
+    q, scale, _ = unpack_wire(buf, d, k_frac, group)
+    return dequantize_int8(q, scale, dtype, group)
+
+
+def wire_dequant_matmul_ref(buf: jnp.ndarray, w: jnp.ndarray,
+                            k_frac: float = WIRE_K, group: int = GROUP
+                            ) -> jnp.ndarray:
+    """Packed buffer (rows, ng*wpg) @ w (d, n) -> (rows, n) f32 without ever
+    materialising the dense smashed tensor at full width: accumulate one
+    g-wide slab per group, mirroring the Pallas kernel's loop order so the
+    f32 accumulation is bit-exact against it."""
+    d, n = w.shape
+    g, ng, k, wpg = wire_layout(d, k_frac, group)
+    rows = buf.shape[0]
+    q, scale, _ = _unpack_groups(buf.reshape(rows, ng, wpg), g, k)
+    pad = ng * g - d
+    wp = jnp.concatenate([w, jnp.zeros((pad, n), w.dtype)]) if pad else w
+    wg = wp.reshape(ng, g, n).astype(jnp.float32)
+    acc = jnp.zeros((rows, n), jnp.float32)
+    for j in range(ng):                        # static ng: unrolled, ordered
+        dense = q[:, j].astype(jnp.float32) * scale[:, j, None]
+        acc = acc + jnp.dot(dense, wg[j])
+    return acc
+
+
+def wire_topk_dense(x: jnp.ndarray, k_frac: float = WIRE_K,
+                    group: int = GROUP) -> jnp.ndarray:
+    """Dense equivalent of one wire trip: sparsify -> quantise -> dequantise.
+    What the receiver reconstructs from the packed buffer."""
+    q, s, _ = sparsify_topk_int8(x, k_frac, group)
+    return dequantize_int8(q, s, x.dtype, group)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(1, 2))
+def wire_fake(x: jnp.ndarray, k_frac: float = WIRE_K,
+              group: int = GROUP) -> jnp.ndarray:
+    """Straight-through top-k+int8 (stateless: no error feedback).  The
+    cohort engine's wire site — the superstep engine uses
+    :func:`wire_boundary`, which carries residuals."""
+    return wire_topk_dense(x, k_frac, group)
+
+
+def _wf_fwd(x, k_frac, group):
+    return wire_fake(x, k_frac, group), None
+
+
+def _wf_bwd(k_frac, group, _, g):
+    # symmetric downlink: the cut-layer gradient rides the same wire
+    return (wire_topk_dense(g, k_frac, group),)
+
+
+wire_fake.defvjp(_wf_fwd, _wf_bwd)
+
+
+@jax.custom_vjp
+def quant_boundary(x: jnp.ndarray) -> jnp.ndarray:
+    """wire="int8" cut boundary: quantise-dequantise forward, and the
+    incoming cut-layer gradient is quantised too (the symmetric downlink
+    path) — one site expressing both directions of the int8 wire."""
+    q, s = quantize_int8(x)
+    return dequantize_int8(q, s, x.dtype)
+
+
+def _qb_fwd(x):
+    return quant_boundary(x), None
+
+
+def _qb_bwd(_, g):
+    q, s = quantize_int8(g)
+    return (dequantize_int8(q, s, g.dtype),)
+
+
+quant_boundary.defvjp(_qb_fwd, _qb_bwd)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2, 3))
+def wire_boundary(x: jnp.ndarray, res: jnp.ndarray, k_frac: float = WIRE_K,
+                  group: int = GROUP):
+    """Error-feedback wire boundary (topk_int8): compress x + res, return
+    (received value, new residual).  The residual is the part the wire
+    dropped; the caller persists it per vehicle and feeds it back on that
+    vehicle's next step, so the compression error telescopes instead of
+    accumulating (EF-SGD).  Backward: the cut-layer gradient rides the same
+    stateless compressed path; the residual gets no cotangent."""
+    xc = x + res.astype(x.dtype)
+    y = wire_topk_dense(xc, k_frac, group)
+    return y, (xc - y).astype(res.dtype)
+
+
+def _wb_fwd(x, res, k_frac, group):
+    return wire_boundary(x, res, k_frac, group), None
+
+
+def _wb_bwd(k_frac, group, _, cts):
+    g_y, g_res = cts
+    return (wire_topk_dense(g_y, k_frac, group), jnp.zeros_like(g_res))
+
+
+wire_boundary.defvjp(_wb_fwd, _wb_bwd)
+
+
+# ------------------------------------------------------- byte accounting
+
+def wire_row_bytes(trailing_dim, k_frac: float = WIRE_K, group: int = GROUP):
+    """Packed topk_int8 bytes for one row of trailing dim d (vectorized over
+    arrays of per-cut dims): 4 bytes per int32 word, ng*wpg words."""
+    d = np.asarray(trailing_dim)
+    g = effective_group(d, group)
+    ng = -(-d // g)
+    k = np.clip(np.round(k_frac * g).astype(np.int64), 1, g)
+    wpg = -(-g // 32) + 1 + -(-k // 4)
+    out = 4.0 * ng * wpg
+    return float(out) if np.ndim(out) == 0 else out
+
+
+def wire_compression_ratio(wire: str = "topk_int8", dtype_bytes: int = 4,
+                           group: int = GROUP, trailing_dim=None,
+                           k_frac: float = WIRE_K):
+    """Dense-fp bytes / wire bytes for a scheme — the factor the cost model
+    divides smashed traffic by (both directions; see cost.py)."""
+    if wire not in WIRE_SCHEMES:
+        raise ValueError(f"unknown wire scheme {wire!r}; one of "
+                         f"{WIRE_SCHEMES}")
+    if wire == "none":
+        return 1.0
+    if wire == "int8":
+        return compression_ratio(dtype_bytes, group, trailing_dim)
+    d = np.asarray(group if trailing_dim is None else trailing_dim)
+    ratio = dtype_bytes * d / wire_row_bytes(d, k_frac, group)
     return float(ratio) if np.ndim(ratio) == 0 else ratio

@@ -22,6 +22,48 @@ BYTES_F32 = 4
 BWD_FWD_RATIO = 2.0  # backward pass ~ 2x forward FLOPs
 
 
+def wire_smashed_ratio(profile: "SplitProfile", cuts, wire: str = "none",
+                       wire_k: Optional[float] = None, group: int = 128):
+    """Dense-fp32 / on-wire bytes for the smashed tensors at each cut.
+
+    ``wire="int8"`` is per-group quant (int8 values + f32 scale per group);
+    ``"topk_int8"`` is the packed sparse format (bitmap + scale + int8
+    survivors — compression.wire_row_bytes charges every word).  The ratio
+    applies to BOTH directions: activations up AND cut-layer gradients down
+    ride the same wire (previously the downlink was charged dense fp32 even
+    with gradient quantisation on — the effective-bytes helper below routes
+    both through this one factor)."""
+    from repro.core import compression
+    if wire == "none":
+        return 1.0
+    td = profile.smashed_trailing_dim
+    trailing = (None if td is None
+                else np.asarray(td)[np.asarray(cuts, dtype=np.int64) - 1])
+    if wire_k is None:
+        wire_k = compression.WIRE_K
+    return compression.wire_compression_ratio(wire, BYTES_F32, group,
+                                              trailing, wire_k)
+
+
+def effective_comm_bytes(profile: "SplitProfile", cuts, steps, batch: int,
+                         wire: str = "none", wire_k: Optional[float] = None,
+                         include_model_transfer: bool = True):
+    """(up, down) bytes for one round: smashed traffic charged at actual
+    on-wire size in both directions, model transfer (aggregation up + fresh
+    copy down) always dense fp32 — the wire compresses activations and
+    gradients, never parameters."""
+    cuts = np.asarray(cuts, dtype=np.int64)
+    smashed = (np.asarray(profile.smashed_bytes_per_sample)[cuts - 1] * batch
+               / wire_smashed_ratio(profile, cuts, wire, wire_k))
+    up = np.asarray(steps) * smashed
+    down = np.asarray(steps) * smashed
+    if include_model_transfer:
+        bytes_cum = np.concatenate([[0], np.cumsum(profile.unit_param_bytes)])
+        up = up + bytes_cum[cuts]
+        down = down + bytes_cum[cuts]
+    return up, down
+
+
 @dataclasses.dataclass
 class SplitProfile:
     name: str
@@ -175,17 +217,18 @@ def sfl_client_round_cost(profile: SplitProfile, cut: int, n_batches: int,
                           batch: int, rate_bps: float, client_flops: float,
                           server_flops: float, local_epochs: int = 1,
                           tx_power_w: float = 0.5, compute_power_w: float = 15.0,
-                          include_model_transfer: bool = True) -> RoundCost:
+                          include_model_transfer: bool = True,
+                          wire: str = "none",
+                          wire_k: Optional[float] = None) -> RoundCost:
     """One SFL round for ONE client: K local epochs of (client fwd -> smashed
     up -> server fwd/bwd -> grad down -> client bwd), then client-model
-    upload for aggregation (and download of the fresh copy)."""
+    upload for aggregation (and download of the fresh copy).  ``wire``
+    charges smashed traffic (activations up, cut-layer gradients down) at
+    its actual on-wire bytes."""
     steps = n_batches * local_epochs
-    smashed = profile.smashed_bytes(cut, batch)
-    up = steps * smashed
-    down = steps * smashed  # cut-layer gradients, same size
-    if include_model_transfer:
-        up += profile.client_param_bytes(cut)
-        down += profile.client_param_bytes(cut)
+    up, down = effective_comm_bytes(profile, cut, steps, batch, wire, wire_k,
+                                    include_model_transfer)
+    up, down = float(up), float(down)
     c_fwd = profile.client_fwd_flops(cut) * batch
     s_fwd = profile.server_fwd_flops(cut) * batch
     t_client = steps * c_fwd * (1 + BWD_FWD_RATIO) / client_flops
@@ -220,24 +263,22 @@ def sfl_round_cost_arrays(profile: SplitProfile, cuts, n_batches, batch: int,
                           rates_bps, client_flops, server_flops: float,
                           local_epochs: int = 1, tx_power_w=0.5,
                           compute_power_w=15.0,
-                          include_model_transfer: bool = True
+                          include_model_transfer: bool = True,
+                          wire: str = "none", wire_k: Optional[float] = None
                           ) -> RoundCostArrays:
     """Vectorized :func:`sfl_client_round_cost`.  ``cuts``, ``n_batches``,
     ``rates_bps``, ``client_flops``, ``tx_power_w``, ``compute_power_w`` may
     be scalars or arrays; everything broadcasts (e.g. rates (n,1) against
-    candidate cuts (k,) yields an (n,k) cost matrix for cut selection)."""
+    candidate cuts (k,) yields an (n,k) cost matrix for cut selection).
+    Smashed traffic is charged at on-wire bytes in BOTH directions via
+    :func:`effective_comm_bytes`; latency and radio energy follow from the
+    compressed byte counts (the engines no longer rescale post-hoc)."""
     cuts = np.asarray(cuts, dtype=np.int64)
     fwd_cum = np.concatenate([[0.0], np.cumsum(profile.unit_fwd_flops)])
-    bytes_cum = np.concatenate([[0], np.cumsum(profile.unit_param_bytes)])
-    smashed_per = np.asarray(profile.smashed_bytes_per_sample)
 
     steps = np.asarray(n_batches) * local_epochs
-    smashed = smashed_per[cuts - 1] * batch
-    up = steps * smashed
-    down = steps * smashed
-    if include_model_transfer:
-        up = up + bytes_cum[cuts]
-        down = down + bytes_cum[cuts]
+    up, down = effective_comm_bytes(profile, cuts, steps, batch, wire,
+                                    wire_k, include_model_transfer)
     c_fwd = fwd_cum[cuts] * batch
     s_fwd = (fwd_cum[-1] - fwd_cum[cuts] + profile.head_flops) * batch
     t_client = steps * c_fwd * (1 + BWD_FWD_RATIO) / np.asarray(client_flops)

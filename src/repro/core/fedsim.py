@@ -107,6 +107,7 @@ ADAPTIVE_STRATEGIES = ("paper", "paper-literal", "latency", "energy",
 SLOT_CAPACITIES = ("pow2", "tight8")
 COHORT_MODES = ("auto", "vmap", "scan", "unroll")
 OPTIMIZERS = ("adam", "sgd", "momentum")
+WIRE_SCHEMES = compression.WIRE_SCHEMES  # none | int8 | topk_int8
 
 # which adaptive strategies each engine can execute (the fused scenario
 # engine runs cut selection on-device; only the traced strategies are wired)
@@ -130,6 +131,14 @@ class SimConfig:
     # paper | paper-literal | latency | energy | memory
     adaptive_strategy: str = "paper"
     compress_smashed: bool = False
+    # wire scheme at the cut boundary (DESIGN.md §11): "none" ships dense
+    # fp32 smashed tensors; "int8" per-group quantisation (both directions);
+    # "topk_int8" top-k sparsify + int8 pack with per-vehicle error-feedback
+    # residuals in the superstep engine (stateless in the cohort engine).
+    # compress_smashed=True is the legacy spelling of wire="int8".
+    wire: str = "none"
+    # keep-fraction per quantisation group for wire="topk_int8"
+    wire_k: float = compression.WIRE_K
     server_flops: float = 2e12    # RSU (GPU-class)
     round_interval_s: float = 5.0
     # mobility: vehicles outside RSU coverage at round start skip the round
@@ -182,7 +191,8 @@ class SimConfig:
                                ("slot_capacity", SLOT_CAPACITIES),
                                ("cohort_parallel", COHORT_MODES),
                                ("fleet_axis", FLEET_AXES),
-                               ("optimizer", OPTIMIZERS)):
+                               ("optimizer", OPTIMIZERS),
+                               ("wire", WIRE_SCHEMES)):
             value = getattr(self, field)
             if value not in allowed:
                 raise ValueError(
@@ -201,6 +211,23 @@ class SimConfig:
             raise ValueError(
                 f"SimConfig.local_steps={self.local_steps!r} is not valid; "
                 f"expected None (use local_epochs) or an int >= 1")
+        if not 0.0 < self.wire_k <= 1.0:
+            raise ValueError(
+                f"SimConfig.wire_k={self.wire_k!r} is not valid; expected "
+                f"a keep-fraction in (0, 1]")
+        if self.compress_smashed and self.wire not in ("none", "int8"):
+            raise ValueError(
+                f"SimConfig.compress_smashed=True conflicts with "
+                f"wire={self.wire!r}: compress_smashed is the legacy "
+                f"spelling of wire='int8' — set wire alone")
+
+    def wire_scheme(self) -> str:
+        """The effective cut-boundary wire: compress_smashed=True is kept as
+        a working alias for wire="int8" (pre-wire configs still run, with
+        identical numerics and now-honest byte accounting)."""
+        if self.wire == "none" and self.compress_smashed:
+            return "int8"
+        return self.wire
 
 
 @dataclasses.dataclass
@@ -216,6 +243,21 @@ class RoundMetrics:
 
 def _make_opt(cfg: SimConfig):
     return optim.from_name(cfg.optimizer, cfg.lr)
+
+
+def _wire_transform(cfg: SimConfig, x):
+    """The cohort-engine wire site: what a smashed activation (or cut-layer
+    gradient) looks like after one trip over the configured wire.  The
+    cohort engine is stateless per batch, so topk_int8 runs WITHOUT error
+    feedback here; the superstep engine carries the per-vehicle residual
+    plane (core/superstep.py).  wire="none" is the identity — no ops are
+    added, so pre-wire jaxprs are unchanged."""
+    wire = cfg.wire_scheme()
+    if wire == "int8":
+        return compression.fake_quant(x)
+    if wire == "topk_int8":
+        return compression.wire_fake(x, cfg.wire_k)
+    return x
 
 
 # --------------------------------------------------------------------------
@@ -237,7 +279,7 @@ def make_sfl_batch_step(model: UnitModel, cfg: SimConfig, cut: int):
             return model.apply_units(cu, x, 0)
 
         smashed, client_vjp = jax.vjp(client_fwd, client_units)
-        sm_in = compression.fake_quant(smashed) if cfg.compress_smashed else smashed
+        sm_in = _wire_transform(cfg, smashed)
 
         def server_loss(sv, sm):
             feats = model.apply_units(sv["units"], sm, cut)
@@ -248,8 +290,7 @@ def make_sfl_batch_step(model: UnitModel, cfg: SimConfig, cut: int):
         (loss, logits), grads = jax.value_and_grad(
             server_loss, argnums=(0, 1), has_aux=True)(sv_tree, sm_in)
         g_server, g_smashed = grads
-        if cfg.compress_smashed:                    # downlink gradient, too
-            g_smashed = compression.fake_quant(g_smashed)
+        g_smashed = _wire_transform(cfg, g_smashed)  # downlink wire, too
         (g_client,) = client_vjp(g_smashed)
 
         upd_c, c_opt = opt.update(g_client, c_opt, client_units)
@@ -451,7 +492,7 @@ class CohortEngine:
             return model.apply_units(c, x_i, 0)
 
         smashed, cvjp = jax.vjp(client_fwd, cu_i)
-        sm_in = compression.fake_quant(smashed) if cfg.compress_smashed else smashed
+        sm_in = _wire_transform(cfg, smashed)
 
         def server_loss(svt, sm):
             feats = model.apply_units(svt["units"], sm, cut)
@@ -461,8 +502,7 @@ class CohortEngine:
         (loss, _), grads = jax.value_and_grad(
             server_loss, argnums=(0, 1), has_aux=True)(sv, sm_in)
         g_sv, g_sm = grads
-        if cfg.compress_smashed:
-            g_sm = compression.fake_quant(g_sm)
+        g_sm = _wire_transform(cfg, g_sm)
         (g_cu,) = cvjp(g_sm)
         upd_c, co2 = opt.update(g_cu, co_i, cu_i)
         cu2 = optim.apply_updates(cu_i, upd_c)
@@ -542,8 +582,7 @@ class CohortEngine:
             (loss, _), grads = jax.value_and_grad(
                 server_loss, argnums=(0, 1), has_aux=True)(sv, sm)
             g_sv, g_sm = grads
-            if cfg.compress_smashed:
-                g_sm = compression.fake_quant(g_sm)
+            g_sm = _wire_transform(cfg, g_sm)
             upd_s, so2 = opt.update(g_sv, so, sv)
             sv2 = optim.apply_updates(sv, upd_s)
             sv = _select(act, sv2, sv)
@@ -563,7 +602,7 @@ class CohortEngine:
             return jax.vmap(lambda c, xb: model.apply_units(c, xb, 0))(cu_all, x)
 
         smashed, cvjp = jax.vjp(client_fwd, cu)
-        sm_in = compression.fake_quant(smashed) if cfg.compress_smashed else smashed
+        sm_in = _wire_transform(cfg, smashed)
 
         (sv, so), (g_sm, losses) = lax.scan(self._server_scan_body(cut),
                                             (sv, so), (sm_in, y, msk))
@@ -590,7 +629,7 @@ class CohortEngine:
             return jax.vmap(lambda c, xb: model.apply_units(c, xb, 0))(cu_all, x)
 
         smashed, cvjp = jax.vjp(client_fwd, cu)
-        sm_in = compression.fake_quant(smashed) if cfg.compress_smashed else smashed
+        sm_in = _wire_transform(cfg, smashed)
         sm_all = lax.all_gather(sm_in, MESH_AXIS, tiled=True)
         y_all = lax.all_gather(y, MESH_AXIS, tiled=True)
         msk_all = lax.all_gather(msk, MESH_AXIS, tiled=True)
@@ -1249,23 +1288,16 @@ class FederationSim:
             cfgc.batch_size, rates[part],
             self.fleet_arr["compute_flops"][part], cfgc.server_flops,
             cfgc.local_epochs, self.fleet_arr["tx_power_w"][part],
-            self.fleet_arr["compute_power_w"][part])
-        comm_up, comm_down, t_comm = rc.comm_bytes_up, rc.comm_bytes_down, rc.t_comm
-        if cfgc.compress_smashed:
-            # account with the groups quantize_int8 actually emits at each
-            # vehicle's cut (incl. the padded tail group when the trailing
-            # dim is not GROUP-divisible), not the nominal GROUP-sized ratio
-            td = self.profile.smashed_trailing_dim
-            if td is not None:
-                ratio = compression.compression_ratio(
-                    trailing_dim=np.asarray(td)[np.asarray(cuts)[part] - 1])
-            else:
-                ratio = compression.compression_ratio()
-            comm_up, comm_down, t_comm = (comm_up / ratio, comm_down / ratio,
-                                          t_comm / ratio)
-        latency = rc.t_client_compute + rc.t_server_compute + t_comm
+            self.fleet_arr["compute_power_w"][part],
+            wire=cfgc.wire_scheme(), wire_k=cfgc.wire_k)
+        # cost.effective_comm_bytes charges the wire inside the model: the
+        # smashed bytes (both directions) shrink by the per-cut packed-byte
+        # ratio while model-transfer bytes stay dense, and latency/energy
+        # follow the compressed counts (previously a post-hoc division here
+        # wrongly discounted the model bytes and left energy uncompressed)
+        latency = rc.latency
         return self._metrics(rnd, float(ls) / max(float(cnt), 1.0), cuts,
-                             float((comm_up + comm_down).sum()),
+                             float(rc.comm_bytes.sum()),
                              float(latency.max()), float(rc.energy_j.sum()))
 
 
@@ -1593,16 +1625,9 @@ class ScenarioEngine:
             self.profile, cuts[act], nb, cfgc.batch_size,
             np.maximum(np.asarray(rates, np.float64)[act], 1.0),
             self.fa["compute_flops"][act], cfgc.server_flops, ep,
-            self.fa["tx_power_w"][act], self.fa["compute_power_w"][act])
-        comm_up, comm_down, t_comm = (rc.comm_bytes_up, rc.comm_bytes_down,
-                                      rc.t_comm)
-        if cfgc.compress_smashed:
-            td = self.profile.smashed_trailing_dim
-            ratio = (compression.compression_ratio(
-                trailing_dim=np.asarray(td)[cuts[act] - 1])
-                if td is not None else compression.compression_ratio())
-            comm_up, comm_down, t_comm = (comm_up / ratio, comm_down / ratio,
-                                          t_comm / ratio)
-        latency = rc.t_client_compute + rc.t_server_compute + t_comm
-        return (float((comm_up + comm_down).sum()) + ho_bytes,
-                float(latency.max()), float(rc.energy_j.sum()))
+            self.fa["tx_power_w"][act], self.fa["compute_power_w"][act],
+            wire=cfgc.wire_scheme(), wire_k=cfgc.wire_k)
+        # wire bytes charged inside the cost model (smashed both directions;
+        # model transfer and handover migration stay dense) — see cost.py
+        return (float(rc.comm_bytes.sum()) + ho_bytes,
+                float(rc.latency.max()), float(rc.energy_j.sum()))

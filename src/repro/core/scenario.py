@@ -24,6 +24,13 @@ Concrete scenarios:
   intersection.
 * :func:`trace_replay` — deterministic, array-driven trajectories (the test
   scenario: handover instants are exactly known).
+
+Handover moves a vehicle's RSU association only; everything keyed by
+vehicle — data shards, schedule membership, and the wire error-feedback
+residual plane (``wire_res`` in the super-step carry, DESIGN.md §11) —
+is fleet-indexed and therefore migrates with the vehicle for free.  A
+residual is invalidated by a *cut change* (its tensor changes meaning),
+never by a handover alone.
 """
 from __future__ import annotations
 

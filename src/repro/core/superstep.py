@@ -68,6 +68,22 @@ UnitModels are float32 throughout), and a full-model replica is
 materialized per slot — the price of making the cut a runtime value.
 Memory is ``O(n_rsus * capacity * P)`` for replicas plus optimizer
 moments.
+
+Wire schemes (DESIGN.md §11): ``cfg.wire`` inserts a compression boundary
+at the runtime cut inside the fused forward — ``"int8"`` is the stateless
+fake-quant round trip, ``"topk_int8"`` adds per-vehicle error-feedback
+residuals carried as two extra slot-table planes (``wire_res``,
+``wire_cut``) in the donated scan carry.  Residuals follow the vehicle
+(the planes are fleet-indexed and replicated under a mesh), so they
+migrate on handover exactly like the data shards; a residual is zeroed
+only when the vehicle's cut changes, because the buffer's layout is the
+smashed-tensor shape at that cut.  Because the cut is a runtime value,
+every unit boundary computes its compressed candidate and a ``where``
+selects the one at the cut — under the RSU/slot vmaps a ``lax.cond``
+would execute both branches anyway, so the select form is the honest
+spelling of that cost (see DESIGN.md §11 for the CPU-interpret numbers).
+``wire="none"`` stays byte-identical to the pre-wire engine: every hook
+below is gated at Python level, so the traced program is unchanged.
 """
 from __future__ import annotations
 
@@ -82,7 +98,7 @@ from jax.experimental.shard_map import shard_map
 from jax.flatten_util import ravel_pytree
 from jax.sharding import PartitionSpec as PSpec
 
-from repro.core import adaptive, aggregation, fleet_sharding
+from repro.core import adaptive, aggregation, compression, fleet_sharding
 from repro.core.fleet_sharding import AXIS as MESH_AXIS, FleetMesh
 from repro.data.pipeline import StackedClients, fleet_batch_indices_traced
 from repro import optim
@@ -214,6 +230,31 @@ class SuperStepPrograms:
                 lambda a: np.full(np.shape(a), model.n_units, np.int32),
                 head)}
         self.unit_ids = ravel_pytree(ids)[0].astype(jnp.int32)
+        # wire boundary geometry: the smashed-tensor shape at every cut
+        # (1..U-1), from one eval_shape of the per-unit forward.  The EF
+        # residual plane holds the LARGEST boundary flattened — one slot
+        # per vehicle, reinterpreted in the shape of its current cut
+        self.wire = getattr(cfg, "wire", "none")
+        self.wire_k = float(getattr(cfg, "wire_k", compression.WIRE_K))
+        self.ef = self.wire == "topk_int8"
+        if self.wire != "none":
+            x_sds = jax.ShapeDtypeStruct(
+                (cfg.batch_size,) + tuple(self.stacked.images.shape[2:]),
+                self.stacked.images.dtype)
+
+            def _stack_shapes(x):
+                h, outs = x, []
+                for u in range(model.n_units - 1):
+                    h = model.apply_units([units[u]], h, u)
+                    outs.append(h)
+                return outs
+
+            sds = jax.eval_shape(_stack_shapes, x_sds)
+            self.boundary_shapes = [tuple(s.shape) for s in sds]
+            self.res_size = max(int(np.prod(s))
+                                for s in self.boundary_shapes)
+        else:
+            self.boundary_shapes, self.res_size = None, 0
 
     def flatten(self, units, head) -> jnp.ndarray:
         return ravel_pytree({"units": list(units), "head": head})[0]
@@ -240,10 +281,18 @@ class SuperStepPrograms:
                  "samples": jnp.zeros((R,), jnp.float32),
                  "prev": jnp.full((n_vehicles,), -1, jnp.int32),
                  "global": glob}
+        if self.ef:
+            # error-feedback planes (wire="topk_int8"): per-vehicle
+            # residual buffer + the cut it was accumulated at (-1 = never
+            # trained; a cut change invalidates the buffer's layout)
+            carry["wire_res"] = jnp.zeros((n_vehicles, self.res_size),
+                                          jnp.float32)
+            carry["wire_cut"] = jnp.full((n_vehicles,), -1, jnp.int32)
         if self.mesh is not None:
             carry["edge"] = self.mesh.shard_leading(carry["edge"])
-            for k in ("samples", "prev", "global"):
-                carry[k] = self.mesh.replicate(carry[k])
+            for k in carry:
+                if k != "edge":
+                    carry[k] = self.mesh.replicate(carry[k])
         return carry
 
     def global_model(self, carry):
@@ -278,6 +327,8 @@ class SuperStepPrograms:
         fading_key = jax.random.PRNGKey(cfg.seed ^ 0x5EED5EED)
         strategy = cfg.adaptive_strategy
         slot_ids = jnp.arange(C, dtype=jnp.int32)
+        wire, ef, wire_k = self.wire, self.ef, self.wire_k
+        bshapes, res_size = self.boundary_shapes, self.res_size
 
         def pick_cuts(serving, rates, residence):
             """(n,) int32 cuts, 0 = SKIP/uncovered (traced twin of the PR 2
@@ -316,6 +367,35 @@ class SuperStepPrograms:
             loss, logits = model.head_loss(head, feats, y)
             return loss, logits
 
+        def wire_loss(units, head, x, y, cut_j, res_j):
+            """Forward with the wire boundary at the runtime cut ``cut_j``.
+
+            The cut is data, so every unit boundary computes its compressed
+            candidate and a ``where`` keeps the one at the cut (under the
+            RSU/slot vmaps a cond would run both branches anyway).  For
+            ``topk_int8`` the slot's residual buffer ``res_j`` is
+            reinterpreted in the active boundary's smashed shape, added
+            before top-k (error feedback), and the un-sent remainder comes
+            back as the aux output; gradients cross the boundary through
+            the scheme's custom_vjp (the compressed downlink)."""
+            h, r = x, res_j
+            for u in range(U - 1):
+                h = model.apply_units([units[u]], h, u)
+                is_b = cut_j == (u + 1)
+                if ef:
+                    sz = int(np.prod(bshapes[u]))
+                    yb, r2 = compression.wire_boundary(
+                        h, res_j[:sz].reshape(bshapes[u]), wire_k)
+                    r = jnp.where(is_b,
+                                  jnp.pad(r2.reshape(-1),
+                                          (0, res_size - sz)), r)
+                else:
+                    yb = compression.quant_boundary(h)
+                h = jnp.where(is_b, yb, h)
+            feats = model.apply_units([units[U - 1]], h, U - 1)
+            loss, _ = model.head_loss(head, feats, y)
+            return loss, (r if ef else jnp.zeros((0,), jnp.float32))
+
         # ---- sequential schedule (paper §III-B: the RSU consumes the
         # cohort's smashed batches one at a time, in slot order) ---------
         def seq_slot_body(carry, inp):
@@ -327,13 +407,23 @@ class SuperStepPrograms:
             deferring its update out of the sequential body is identical
             math at a fraction of the op count)."""
             sv, so = carry
-            cu_j, m_j, cut_j, act, idx_j = inp
+            if ef:
+                cu_j, m_j, cut_j, act, idx_j, res_j = inp
+            else:
+                cu_j, m_j, cut_j, act, idx_j = inp
             x = images[m_j][idx_j]
             y = labels[m_j][idx_j]
             eff = [_select(u < cut_j, cu_j[u], sv["units"][u])
                    for u in range(U)]
-            (loss, _), (g_units, g_head) = jax.value_and_grad(
-                loss_fn, argnums=(0, 1), has_aux=True)(eff, sv["head"], x, y)
+            if wire == "none":
+                (loss, _), (g_units, g_head) = jax.value_and_grad(
+                    loss_fn, argnums=(0, 1), has_aux=True)(
+                        eff, sv["head"], x, y)
+            else:
+                (loss, res_new), (g_units, g_head) = jax.value_and_grad(
+                    wire_loss, argnums=(0, 1), has_aux=True)(
+                        eff, sv["head"], x, y, cut_j,
+                        res_j if ef else None)
             keep_s = [act & (u >= cut_j) for u in range(U)]
             g_sv = {"units": [_select(u >= cut_j, g_units[u],
                                       jax.tree.map(jnp.zeros_like,
@@ -346,9 +436,13 @@ class SuperStepPrograms:
                                      sv["units"][u]) for u in range(U)],
                    "head": _select(act, sv2["head"], sv["head"])}
             so3 = _sel_server_state(so2, so, keep_s, act)
-            return (sv3, so3), (g_units, jnp.where(act, loss, 0.0))
+            ys = (g_units, jnp.where(act, loss, 0.0))
+            if ef:
+                ys = ys + (jnp.where(act, res_new, res_j),)
+            return (sv3, so3), ys
 
-        def rsu_round_seq(edge_tree, members, mask, cut_slots, idx_slots):
+        def rsu_round_seq(edge_tree, members, mask, cut_slots, idx_slots,
+                          res_slots=None):
             """One RSU's whole round (replica init, every local step,
             unit-wise FedAvg) with the sequential server schedule — vmapped
             across the RSU axis by the round body.  Params stay in pytree
@@ -366,20 +460,30 @@ class SuperStepPrograms:
             keep_cu = [mask & (cut_slots > u) for u in range(U)]
 
             def step_body(carry, idx_s):
-                sv, so, cu, co = carry
-                (sv, so), (g_cu, losses) = lax.scan(
-                    seq_slot_body, (sv, so),
-                    (cu, members, cut_slots, mask, idx_s),
+                if ef:
+                    sv, so, cu, co, res = carry
+                    xs = (cu, members, cut_slots, mask, idx_s, res)
+                else:
+                    sv, so, cu, co = carry
+                    xs = (cu, members, cut_slots, mask, idx_s)
+                (sv, so), ys = lax.scan(
+                    seq_slot_body, (sv, so), xs,
                     unroll=2 if C >= 64 else 1)
+                if ef:
+                    g_cu, losses, res = ys
+                else:
+                    g_cu, losses = ys
                 upd_c, co2 = jax.vmap(opt.update)(g_cu, co, cu)
                 cu2 = optim.apply_updates(cu, upd_c)
                 cu = [_select(keep_cu[u], cu2[u], cu[u]) for u in range(U)]
                 co = _sel_list_state(co2, co, keep_cu, jnp.asarray(mask))
-                return (sv, so, cu, co), (jnp.sum(losses),
-                                          jnp.sum(mask.astype(jnp.float32)))
+                out = (sv, so, cu, co, res) if ef else (sv, so, cu, co)
+                return out, (jnp.sum(losses),
+                             jnp.sum(mask.astype(jnp.float32)))
 
-            (sv, so, cu, co), (ls, cs) = lax.scan(
-                step_body, (sv, so, cu, co), idx_slots,
+            init = (sv, so, cu, co, res_slots) if ef else (sv, so, cu, co)
+            (sv, so, cu, co, *res_t), (ls, cs) = lax.scan(
+                step_body, init, idx_slots,
                 unroll=min(steps, 2))
             w_total = jnp.sum(w_slots)
             den = jnp.maximum(w_total, 1.0)
@@ -396,22 +500,32 @@ class SuperStepPrograms:
                         w_total > 0.0, (nm / den).astype(ref.dtype), ref),
                     num, edge_tree["units"][u]))
             out = {"units": merged, "head": sv["head"]}
+            if ef:
+                return out, jnp.sum(ls), jnp.sum(cs), w_total, res_t[0]
             return out, jnp.sum(ls), jnp.sum(cs), w_total
 
         # ---- parallel schedule (arXiv:2405.18707: the RSU executes the
         # cohort's server-side passes in parallel and takes one weighted
         # mean-gradient step per local step) ------------------------------
-        def par_slot_grad(cu_j, cut_j, m_j, idx_j, sv):
+        def par_slot_grad(cu_j, cut_j, m_j, idx_j, sv, res_j=None):
             x = images[m_j][idx_j]
             y = labels[m_j][idx_j]
             eff = unravel(jnp.where(unit_ids < cut_j, cu_j, sv))
-            (loss, _), (g_units, g_head) = jax.value_and_grad(
-                loss_fn, argnums=(0, 1), has_aux=True)(
-                    eff["units"], eff["head"], x, y)
-            return ravel_pytree({"units": list(g_units),
-                                 "head": g_head})[0], loss
+            if wire == "none":
+                (loss, _), (g_units, g_head) = jax.value_and_grad(
+                    loss_fn, argnums=(0, 1), has_aux=True)(
+                        eff["units"], eff["head"], x, y)
+            else:
+                (loss, res_new), (g_units, g_head) = jax.value_and_grad(
+                    wire_loss, argnums=(0, 1), has_aux=True)(
+                        eff["units"], eff["head"], x, y, cut_j, res_j)
+            g = ravel_pytree({"units": list(g_units), "head": g_head})[0]
+            if ef:
+                return g, loss, res_new
+            return g, loss
 
-        def rsu_round_par(edge_flat, members, mask, cut_slots, idx_slots):
+        def rsu_round_par(edge_flat, members, mask, cut_slots, idx_slots,
+                          res_slots=None):
             """One RSU's whole round with the parallel server schedule:
             every op batches over the slot axis — no sequential inner
             loop."""
@@ -426,10 +540,17 @@ class SuperStepPrograms:
             gw = (w_slots / jnp.maximum(w_total, 1.0))[:, None]
 
             def step_body(carry, idx_s):
-                sv, so, cu, co = carry
-                g, losses = jax.vmap(
-                    par_slot_grad, in_axes=(0, 0, 0, 0, None))(
-                        cu, cut_slots, members, idx_s, sv)
+                if ef:
+                    sv, so, cu, co, res = carry
+                    g, losses, res_new = jax.vmap(
+                        par_slot_grad, in_axes=(0, 0, 0, 0, None, 0))(
+                            cu, cut_slots, members, idx_s, sv, res)
+                    res = jnp.where(mask[:, None], res_new, res)
+                else:
+                    sv, so, cu, co = carry
+                    g, losses = jax.vmap(
+                        par_slot_grad, in_axes=(0, 0, 0, 0, None))(
+                            cu, cut_slots, members, idx_s, sv)
                 # RSU: one |D_n|-weighted mean-gradient step over the
                 # cohort's server-side gradient shares
                 g_srv = jnp.sum(jnp.where(keep_c, 0.0, g) * gw, axis=0)
@@ -442,12 +563,14 @@ class SuperStepPrograms:
                 upd_c, co2 = jax.vmap(opt.update)(g, co, cu)
                 cu = jnp.where(keep_c, optim.apply_updates(cu, upd_c), cu)
                 co = _sel_flat_state(keep_c, mask, co2, co, cu.shape)
-                return (sv, so, cu, co), (
+                out = (sv, so, cu, co, res) if ef else (sv, so, cu, co)
+                return out, (
                     jnp.sum(jnp.where(mask, losses, 0.0)),
                     jnp.sum(mask.astype(jnp.float32)))
 
-            (sv, so, cu, co), (ls, cs) = lax.scan(
-                step_body, (sv, so, cu, co), idx_slots,
+            init = (sv, so, cu, co, res_slots) if ef else (sv, so, cu, co)
+            (sv, so, cu, co, *res_t), (ls, cs) = lax.scan(
+                step_body, init, idx_slots,
                 unroll=min(steps, 4))
             # unit-wise FedAvg on the flat plane: two fused reductions
             wk = w_slots[:, None] * keep_c               # (C, P)
@@ -455,6 +578,8 @@ class SuperStepPrograms:
             w_srv = w_total - jnp.sum(wk, axis=0)
             merged = (num + w_srv * sv) / jnp.maximum(w_total, 1.0)
             merged = jnp.where(any_active, merged, edge_flat)
+            if ef:
+                return merged, jnp.sum(ls), jnp.sum(cs), w_total, res_t[0]
             return merged, jnp.sum(ls), jnp.sum(cs), w_total
 
         rsu_round = (rsu_round_seq if self.schedule == "sequential"
@@ -485,8 +610,22 @@ class SuperStepPrograms:
                 members_l, mask_l = members, mask
             idx_rsu = jnp.moveaxis(idx_all[:, members_l], 1, 0)
             cut_slots = cuts[members_l]                # (R_loc, C)
-            edge, ls, cs, w_tot = jax.vmap(rsu_round)(
-                carry["edge"], members_l, mask_l, cut_slots, idx_rsu)
+            sched = cuts > 0
+            if ef:
+                # residuals follow the vehicle (the plane is fleet-indexed
+                # and replicated): zero where this round's cut differs from
+                # the one the buffer was accumulated at, then gather each
+                # shard's slot view
+                stale = sched & (cuts != carry["wire_cut"])
+                res_base = jnp.where(stale[:, None], 0.0,
+                                     carry["wire_res"])
+                res_slots = res_base[members_l]        # (R_loc, C, res)
+                edge, ls, cs, w_tot, res_out = jax.vmap(rsu_round)(
+                    carry["edge"], members_l, mask_l, cut_slots, idx_rsu,
+                    res_slots)
+            else:
+                edge, ls, cs, w_tot = jax.vmap(rsu_round)(
+                    carry["edge"], members_l, mask_l, cut_slots, idx_rsu)
             if fm is not None:
                 # per-RSU results come home via all_gather so every total
                 # (loss/count sums, the sample counters, the cloud merge)
@@ -502,7 +641,23 @@ class SuperStepPrograms:
             else:
                 edge_stack = edge
             samples = carry["samples"] + w_tot
-            sched = cuts > 0
+            if ef:
+                # masked scatter-ADD of the residual deltas back onto the
+                # fleet plane: padded slots carry a zero delta (their
+                # member index is a clipped duplicate), active slots are
+                # unique per round (a vehicle is served by one RSU), and
+                # under a mesh the psum of per-shard deltas reassembles
+                # the replicated plane — other shards contribute zeros
+                delta = jnp.where(mask_l[..., None], res_out - res_slots,
+                                  0.0)
+                upd = jnp.zeros_like(res_base).at[
+                    members_l.reshape(-1)].add(
+                        delta.reshape(-1, delta.shape[-1]))
+                if fm is not None:
+                    upd = lax.psum(upd, MESH_AXIS)
+                wire_res2 = res_base + upd
+                wire_cut2 = jnp.where(sched, cuts,
+                                      carry["wire_cut"]).astype(jnp.int32)
             handover = sched & (carry["prev"] >= 0) \
                 & (carry["prev"] != serving)
             prev = jnp.where(serving >= 0, serving, -1).astype(jnp.int32)
@@ -521,6 +676,9 @@ class SuperStepPrograms:
                     lambda g, old: jnp.where(synced, g, old),
                     merged_global, carry["global"]),
             }
+            if ef:
+                carry2["wire_res"] = wire_res2
+                carry2["wire_cut"] = wire_cut2
             ys = {"loss": jnp.sum(ls), "cnt": jnp.sum(cs), "cuts": cuts,
                   "serving": serving.astype(jnp.int32),
                   "rates": rates.astype(jnp.float32),
@@ -533,6 +691,9 @@ class SuperStepPrograms:
         if fm is not None:
             carry_spec = {"edge": PSpec(MESH_AXIS), "samples": PSpec(),
                           "prev": PSpec(), "global": PSpec()}
+            if ef:
+                carry_spec["wire_res"] = PSpec()
+                carry_spec["wire_cut"] = PSpec()
             superstep = shard_map(superstep, mesh=fm.mesh,
                                   in_specs=(carry_spec, PSpec()),
                                   out_specs=(carry_spec, PSpec()),

@@ -17,12 +17,13 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 GROUP = 128
+INV127 = 1.0 / 127.0  # multiply form: bit-identical under eager/jit/interpret
 
 
 def _quant_kernel(x_ref, q_ref, s_ref):
     x = x_ref[...].astype(jnp.float32)               # (rows, group)
     amax = jnp.max(jnp.abs(x), axis=-1, keepdims=True)
-    scale = jnp.maximum(amax, 1e-8) / 127.0
+    scale = jnp.maximum(amax, 1e-8) * INV127
     q = jnp.clip(jnp.round(x / scale), -127, 127)
     q_ref[...] = q.astype(jnp.int8)
     s_ref[...] = scale

@@ -1,0 +1,200 @@
+"""Fused wire pipeline for smashed data (Pallas): top-k sparsify + int8
+group-quantise + pack in ONE kernel, and dequant fused into the consuming
+matmul (DESIGN.md §11).
+
+Wire format per quantisation group (g values, exactly k survivors):
+
+    [ bitmap: ceil(g/32) int32 words | scale: 1 word (f32 bitcast) |
+      values: ceil(k/4) int32 words, 4 int8 lanes each, survivor order ]
+
+``core/compression.py`` holds the jnp oracles; every kernel here is
+bit-exact against them in interpret mode (asserted in tier-1 CI on CPU).
+Tiles are (block_rows, group) like kernels/quant.py: the group dim matches
+the quantisation group so a tile packs its own groups with no cross-tile
+traffic — the dense fp32 tensor never leaves the tile.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core.compression import (GROUP, INV127, WIRE_K,
+                                    wire_layout)
+
+
+def _pack_tile(x, k, bw, vw):
+    """(br, g) f32 -> (br, bw+1+vw) int32 packed words.  Pure jnp so the
+    same code serves the pack kernel and the fused-consumption kernels."""
+    br, g = x.shape
+    absx = jnp.abs(x)
+    amax = jnp.max(absx, axis=-1, keepdims=True)
+    scale = jnp.maximum(amax, 1e-8) * INV127
+    ii = jax.lax.broadcasted_iota(jnp.int32, (g, g), 0)   # candidate
+    jj = jax.lax.broadcasted_iota(jnp.int32, (g, g), 1)   # competitor
+    beats = ((absx[:, None, :] > absx[:, :, None])
+             | ((absx[:, None, :] == absx[:, :, None]) & (jj < ii)))
+    mask = jnp.sum(beats.astype(jnp.int32), axis=-1) < k  # rank < k
+    q = jnp.where(mask, jnp.clip(jnp.round(x / scale), -127, 127),
+                  0).astype(jnp.int32)
+    m32 = mask.astype(jnp.int32)
+    pad_b = bw * 32 - g
+    mb = jnp.concatenate([m32, jnp.zeros((br, pad_b), jnp.int32)],
+                         axis=-1) if pad_b else m32
+    shifts = jax.lax.broadcasted_iota(jnp.int32, (bw, 32), 1)
+    bitmap = jnp.sum(jnp.left_shift(mb.reshape(br, bw, 32), shifts), axis=-1)
+    pos = jnp.cumsum(m32, axis=-1) - 1
+    slot = jax.lax.broadcasted_iota(jnp.int32, (g, k), 1)
+    onehot = ((pos[..., None] == slot) & mask[..., None]).astype(jnp.int32)
+    vals = jnp.sum(q[..., None] * onehot, axis=-2)         # (br, k)
+    pad_v = vw * 4 - k
+    vb = jnp.concatenate([vals, jnp.zeros((br, pad_v), jnp.int32)],
+                         axis=-1) if pad_v else vals
+    lanes = jax.lax.broadcasted_iota(jnp.int32, (vw, 4), 1)
+    words = jnp.sum(jnp.left_shift(
+        jnp.bitwise_and(vb.reshape(br, vw, 4), 0xFF), 8 * lanes), axis=-1)
+    sword = jax.lax.bitcast_convert_type(scale, jnp.int32)  # (br, 1)
+    return jnp.concatenate([bitmap, sword, words], axis=-1)
+
+
+def _unpack_tile(buf, g, k, bw, vw):
+    """(br, bw+1+vw) int32 -> (q int32 (br, g), scale f32 (br,))."""
+    br = buf.shape[0]
+    bitmap = buf[:, :bw]
+    scale = jax.lax.bitcast_convert_type(buf[:, bw], jnp.float32)
+    words = buf[:, bw + 1:]
+    shifts = jax.lax.broadcasted_iota(jnp.int32, (bw, 32), 1)
+    mask = jnp.bitwise_and(jnp.right_shift(bitmap[..., None], shifts), 1
+                           ).reshape(br, bw * 32)[:, :g].astype(bool)
+    lanes = jax.lax.broadcasted_iota(jnp.int32, (vw, 4), 1)
+    bytes_ = jnp.bitwise_and(jnp.right_shift(words[..., None], 8 * lanes),
+                             0xFF)
+    vals = bytes_.reshape(br, vw * 4)[:, :k]
+    vals = vals - 256 * (vals > 127)                       # sign-extend int8
+    pos = jnp.cumsum(mask.astype(jnp.int32), axis=-1) - 1
+    slot = jax.lax.broadcasted_iota(jnp.int32, (g, k), 1)
+    onehot = ((pos[..., None] == slot) & mask[..., None]).astype(jnp.int32)
+    q = jnp.sum(vals[:, None, :] * onehot, axis=-1)        # (br, g)
+    return q, scale
+
+
+def _pack_kernel(x_ref, o_ref, *, k, bw, vw):
+    o_ref[...] = _pack_tile(x_ref[...].astype(jnp.float32), k, bw, vw)
+
+
+def _unpack_dequant_kernel(b_ref, x_ref, *, g, k, bw, vw):
+    q, scale = _unpack_tile(b_ref[...], g, k, bw, vw)
+    x_ref[...] = (q.astype(jnp.float32) * scale[:, None]).astype(x_ref.dtype)
+
+
+def _unpack_matmul_kernel(b_ref, w_ref, o_ref, *, g, k, bw, vw, ng, wpg):
+    buf = b_ref[...]                                       # (br, ng*wpg)
+    w = w_ref[...].astype(jnp.float32)                     # (ng*g, n)
+    acc = jnp.zeros((buf.shape[0], w.shape[-1]), jnp.float32)
+    for j in range(ng):                                    # static: unrolled
+        q, scale = _unpack_tile(buf[:, j * wpg:(j + 1) * wpg], g, k, bw, vw)
+        dense = q.astype(jnp.float32) * scale[:, None]
+        acc = acc + jnp.dot(dense, w[j * g:(j + 1) * g])
+    o_ref[...] = acc
+
+
+def _rows(lead):
+    rows = 1
+    for s in lead:
+        rows *= s
+    return rows
+
+
+def sparsify_quant_pack(x: jnp.ndarray, k_frac: float = WIRE_K,
+                        group: int = GROUP, block_rows: int = 256,
+                        interpret: bool = False) -> jnp.ndarray:
+    """x (..., d) -> packed int32 wire buffer (..., ng*wpg), one fused pass:
+    top-k select, int8 quantise, bitmap/scale/value pack.  Bit-exact oracle:
+    ``core.compression.sparsify_quant_pack_ref``."""
+    *lead, d = x.shape
+    g, ng, k, wpg = wire_layout(d, k_frac, group)
+    bw, vw = -(-g // 32), -(-k // 4)
+    pad_d = ng * g - d
+    if pad_d:
+        x = jnp.pad(x, [(0, 0)] * len(lead) + [(0, pad_d)])
+    x2 = x.reshape(_rows(lead) * ng, g)
+    n = x2.shape[0]
+    br = min(block_rows, n)
+    pad = (-n) % br
+    if pad:
+        x2 = jnp.pad(x2, ((0, pad), (0, 0)))
+    buf = pl.pallas_call(
+        functools.partial(_pack_kernel, k=k, bw=bw, vw=vw),
+        grid=(x2.shape[0] // br,),
+        in_specs=[pl.BlockSpec((br, g), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((br, wpg), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((x2.shape[0], wpg), jnp.int32),
+        interpret=interpret,
+    )(x2)
+    if pad:
+        buf = buf[:n]
+    return buf.reshape(*lead, ng * wpg)
+
+
+def unpack_dequant(buf: jnp.ndarray, d: int, k_frac: float = WIRE_K,
+                   group: int = GROUP, dtype=jnp.float32,
+                   block_rows: int = 256, interpret: bool = False
+                   ) -> jnp.ndarray:
+    """Packed buffer (..., ng*wpg) -> dense (..., d).  The symmetric
+    downlink consumer (cut-layer gradients).  Oracle:
+    ``core.compression.wire_dequant_ref``."""
+    *lead, _ = buf.shape
+    g, ng, k, wpg = wire_layout(d, k_frac, group)
+    bw, vw = -(-g // 32), -(-k // 4)
+    b2 = buf.reshape(_rows(lead) * ng, wpg)
+    n = b2.shape[0]
+    br = min(block_rows, n)
+    pad = (-n) % br
+    if pad:
+        b2 = jnp.pad(b2, ((0, pad), (0, 0)))
+    x = pl.pallas_call(
+        functools.partial(_unpack_dequant_kernel, g=g, k=k, bw=bw, vw=vw),
+        grid=(b2.shape[0] // br,),
+        in_specs=[pl.BlockSpec((br, wpg), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((br, g), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((b2.shape[0], g), dtype),
+        interpret=interpret,
+    )(b2)
+    if pad:
+        x = x[:n]
+    return x.reshape(*lead, ng * g)[..., :d]
+
+
+def unpack_dequant_matmul(buf: jnp.ndarray, w: jnp.ndarray,
+                          k_frac: float = WIRE_K, group: int = GROUP,
+                          block_rows: int = 128, interpret: bool = False
+                          ) -> jnp.ndarray:
+    """buf (rows, ng*wpg) @ w (d, n) -> (rows, n) f32 with dequant fused
+    into the matmul epilogue: each row tile unpacks one g-wide slab at a
+    time and accumulates, so the dense fp32 smashed tensor is never
+    materialised server-side.  Oracle (same accumulation order):
+    ``core.compression.wire_dequant_matmul_ref``."""
+    rows, _ = buf.shape
+    d, n = w.shape
+    g, ng, k, wpg = wire_layout(d, k_frac, group)
+    bw, vw = -(-g // 32), -(-k // 4)
+    pad_d = ng * g - d
+    wp = jnp.pad(w, ((0, pad_d), (0, 0))) if pad_d else w
+    br = min(block_rows, rows)
+    pad = (-rows) % br
+    b2 = jnp.pad(buf, ((0, pad), (0, 0))) if pad else buf
+    out = pl.pallas_call(
+        functools.partial(_unpack_matmul_kernel, g=g, k=k, bw=bw, vw=vw,
+                          ng=ng, wpg=wpg),
+        grid=(b2.shape[0] // br,),
+        in_specs=[pl.BlockSpec((br, ng * wpg), lambda i: (i, 0)),
+                  pl.BlockSpec((ng * g, n), lambda i: (0, 0))],
+        out_specs=pl.BlockSpec((br, n), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((b2.shape[0], n), jnp.float32),
+        interpret=interpret,
+    )(b2, wp)
+    if pad:
+        out = out[:rows]
+    return out

@@ -57,11 +57,11 @@ def scenario_run():
 API_SURFACE = sorted([
     "ExperimentSpec", "TrainConfig", "AdaptiveConfig", "FleetConfig",
     "RuntimeConfig", "SIM_CONFIG_FIELD_MAP",
-    "MODELS", "SCENARIOS", "STRATEGIES", "SCHEDULES",
-    "ModelEntry", "StrategyEntry", "ScheduleEntry",
+    "MODELS", "SCENARIOS", "STRATEGIES", "SCHEDULES", "WIRES",
+    "ModelEntry", "StrategyEntry", "ScheduleEntry", "WireEntry",
     "register_model", "register_scenario", "register_strategy",
-    "register_schedule", "model_entry", "build_model", "build_scenario",
-    "make_lm_fleet_data",
+    "register_schedule", "register_wire", "model_entry", "build_model",
+    "build_scenario", "make_lm_fleet_data",
     "FEDERATION", "SCENARIO", "SINGLE_RSU",
     "run", "build_engine", "RunResult",
 ])
@@ -86,6 +86,7 @@ def test_builtin_registries_present():
     assert set(api.SCHEDULES) == {"sequential", "parallel"}
     assert {"paper", "paper-literal", "latency", "energy", "memory",
             "residence"} == set(api.STRATEGIES)
+    assert set(api.WIRES) == {"none", "int8", "topk_int8"}
 
 
 # -------------------------------------------------------- JSON round-trips

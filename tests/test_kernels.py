@@ -9,6 +9,8 @@ from repro.kernels.flash_attention import flash_attention
 from repro.kernels.quant import dequantize_int8, quantize_int8
 from repro.kernels.rmsnorm import rmsnorm as rmsnorm_k
 from repro.kernels.ssd import ssd_chunk_scan
+from repro.kernels.wire import (sparsify_quant_pack, unpack_dequant,
+                                unpack_dequant_matmul)
 from repro.core import compression as COMP
 
 KEY = jax.random.PRNGKey(0)
@@ -138,6 +140,57 @@ def test_model_ssd_reference_vs_naive():
                                rtol=2e-4, atol=2e-4)
     np.testing.assert_allclose(np.asarray(fm), np.asarray(fn),
                                rtol=2e-4, atol=2e-4)
+
+
+# -------------------------------------------------------------------- wire
+@pytest.mark.parametrize("shape", [(4, 256), (2, 64, 128), (3, 5, 384),
+                                   (4, 200), (8, 48)])
+@pytest.mark.parametrize("k_frac", [0.1, 0.25, 1.0])
+def test_wire_pack_kernel_bit_exact(shape, k_frac):
+    """The fused sparsify+quant+pack kernel emits the SAME int32 words as
+    the jnp oracle — bitmap, bitcast scale, and value lanes all included
+    (exact equality, not allclose)."""
+    x = jax.random.normal(KEY, shape) * 5
+    buf_k = sparsify_quant_pack(x, k_frac, interpret=True)
+    buf_r = COMP.sparsify_quant_pack_ref(x, k_frac)
+    np.testing.assert_array_equal(np.asarray(buf_k), np.asarray(buf_r))
+
+
+@pytest.mark.parametrize("shape,d", [((4, 256), 256), ((2, 64, 128), 128),
+                                     ((4, 200), 200), ((8, 48), 48)])
+def test_wire_unpack_dequant_kernel_bit_exact(shape, d):
+    x = jax.random.normal(KEY, shape) * 5
+    buf = COMP.sparsify_quant_pack_ref(x)
+    xk = unpack_dequant(buf, d, interpret=True)
+    xr = COMP.wire_dequant_ref(buf, d)
+    np.testing.assert_array_equal(np.asarray(xk), np.asarray(xr))
+
+
+@pytest.mark.parametrize("d,n", [(256, 64), (200, 32), (48, 16)])
+def test_wire_unpack_matmul_kernel_bit_exact(d, n):
+    """Dequant fused into the consuming matmul: the kernel accumulates
+    group-by-group in the same order as the oracle, so the fp32 results
+    are bit-identical — the dense smashed tensor never materialises."""
+    ks = jax.random.split(KEY, 2)
+    x = jax.random.normal(ks[0], (16, d)) * 5
+    w = jax.random.normal(ks[1], (d, n))
+    buf = COMP.sparsify_quant_pack_ref(x)
+    ok = unpack_dequant_matmul(buf, w, interpret=True)
+    orf = COMP.wire_dequant_matmul_ref(buf, w)
+    np.testing.assert_array_equal(np.asarray(ok), np.asarray(orf))
+
+
+def test_wire_k1_pack_equals_full_quant():
+    """k_frac=1.0 keeps every value: the survivors ARE the int8 quantised
+    tensor, and the packed scales bit-match ``quantize_int8``'s (the whole
+    quant family shares the INV127 multiply form)."""
+    x = jax.random.normal(KEY, (4, 256)) * 3
+    q_ref, s_ref = COMP.quantize_int8(x)
+    q, s, mask = COMP.unpack_wire(COMP.sparsify_quant_pack_ref(x, 1.0), 256,
+                                  1.0)
+    assert np.asarray(mask).all()
+    np.testing.assert_array_equal(np.asarray(q), np.asarray(q_ref))
+    np.testing.assert_array_equal(np.asarray(s), np.asarray(s_ref))
 
 
 # ---------------------------------------------------------------- ops layer

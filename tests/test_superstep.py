@@ -270,6 +270,81 @@ def test_fleet_batch_indices_traced_bounds():
     assert (idx < lengths[None, :, None]).all()
 
 
+# ------------------------------------------------------- wire boundaries
+@pytest.mark.parametrize("schedule", ["sequential", "parallel"])
+@pytest.mark.parametrize("wire", ["int8", "topk_int8"])
+def test_superstep_wire_fused_matches_sequential(schedule, wire):
+    """K-fused == K per-round dispatches stays bit-for-bit with a wire
+    boundary in the forward — including the error-feedback carry planes
+    for topk_int8 (same program body, sgd)."""
+    e1, eK = _engines(_cfg(server_schedule=schedule, wire=wire))
+    h1, hK = e1.run(), eK.run()
+    jax.tree.map(np.testing.assert_array_equal, _params(e1), _params(eK))
+    np.testing.assert_array_equal([m.loss for m in h1],
+                                  [m.loss for m in hK])
+    assert all(np.isfinite(m.loss) for m in h1)
+
+
+def test_wire_precompile_covers_across_cut_churn():
+    """With wire="topk_int8" the EF planes are part of the carry signature:
+    precompile must still cover the whole run (zero fallbacks, zero
+    backend compiles) across the trace's handover/cut churn."""
+    sc = _two_cell_trace(ROUNDS, INTERVAL)
+    clients, test = _vector_clients(2)
+    cfg = _cfg(superstep=2, wire="topk_int8")
+    eng = ScenarioEngine(TinyMLP(), clients, test, cfg, sc,
+                         cloud_sync_every=2)
+    eng.precompile()
+    events = []
+    jax.monitoring.register_event_duration_secs_listener(
+        lambda name, *a, **kw: events.append(name))
+    baseline = len([e for e in events if "compile" in e])
+    hist = eng.run()
+    assert eng.programs.compile_fallbacks == 0
+    assert not [e for e in events[baseline:] if "compile" in e]
+    assert len(hist) == ROUNDS
+
+
+def test_wire_residual_plane_persists_and_tracks_cuts():
+    """The EF residual is a real carry plane: nonzero after training,
+    sized to the largest boundary, and wire_cut records the cut each
+    vehicle's buffer was accumulated at (it migrates with the vehicle on
+    handover — the plane is fleet-indexed, not RSU-indexed)."""
+    sc = _two_cell_trace(ROUNDS, INTERVAL)
+    clients, test = _vector_clients(2)
+    cfg = _cfg(wire="topk_int8")
+    eng = ScenarioEngine(TinyMLP(), clients, test, cfg, sc,
+                         cloud_sync_every=2)
+    w = TinyMLP().width
+    assert eng.programs.res_size == cfg.batch_size * w
+    hist = eng.run()
+    res = np.asarray(eng._carry["wire_res"])
+    wcut = np.asarray(eng._carry["wire_cut"])
+    assert res.shape == (2, eng.programs.res_size)
+    # both vehicles trained (incl. vehicle 0 after its handover), so both
+    # rows hold live residuals and their last cut
+    assert (np.abs(res).sum(axis=1) > 0).all()
+    assert (wcut == np.asarray(hist[-1].cuts)).all()
+    # reset() rebuilds zeroed planes
+    eng.reset()
+    assert not np.asarray(eng._carry["wire_res"]).any()
+    assert (np.asarray(eng._carry["wire_cut"]) == -1).all()
+
+
+def test_wire_reduces_scenario_comm():
+    """The accounting charges packed wire bytes: topk_int8 rounds move
+    strictly fewer bytes than the dense fp32 baseline, which moves fewer
+    than nothing changes elsewhere (identical schedule/cuts)."""
+    hists = {}
+    for wire in ("none", "topk_int8"):
+        e1, _ = _engines(_cfg(wire=wire))
+        hists[wire] = e1.run()
+    assert [m.cuts for m in hists["none"]] == \
+        [m.cuts for m in hists["topk_int8"]]
+    for mn, mt in zip(hists["none"], hists["topk_int8"]):
+        assert mt.comm_bytes < mn.comm_bytes
+
+
 def test_staged_mobility_scenarios_run_fused():
     """urban_grid has no traced-step path: the engine stages its fleet
     state per window and still fuses K rounds into one program."""

@@ -1,0 +1,203 @@
+"""Wire compression pipeline (DESIGN.md §11): oracle semantics of the
+packed format, error-feedback boundary gradients, byte-honest cost
+accounting, and the engine-level compression/accuracy contract."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import compression as C
+from repro.core import cost
+from repro.core.fedsim import FederationSim, SimConfig
+
+KEY = jax.random.PRNGKey(0)
+
+
+# -------------------------------------------------------------- wire format
+def test_wire_layout_geometry():
+    # d=64: one group of 64 -> bitmap 2 words, 1 scale, k=16 -> 4 value
+    # words: 7 words = 28 B vs 256 B dense = 9.14x
+    g, ng, k, wpg = C.wire_layout(64, 0.25)
+    assert (g, ng, k, wpg) == (64, 1, 16, 7)
+    # d=128: k=32 -> 4+1+8 = 13 words per group
+    g, ng, k, wpg = C.wire_layout(128, 0.25)
+    assert (g, ng, k, wpg) == (128, 1, 32, 13)
+    # k clamps to [1, g]
+    assert C.wire_layout(128, 0.0)[2] == 1
+    assert C.wire_layout(128, 1.0)[2] == 128
+
+
+def test_wire_exactly_k_survivors_with_ties():
+    """The pairwise-rank top-k breaks ties by index, so EXACTLY k values
+    survive even on constant inputs — shapes stay static."""
+    x = jnp.ones((3, 128))
+    q, s, mask = C.sparsify_topk_int8(x, 0.25)
+    assert (np.asarray(mask).sum(-1) == 32).all()
+    # ties resolve to the lowest indices
+    assert np.asarray(mask)[:, :32].all()
+
+
+def test_wire_topk_keeps_largest_magnitudes():
+    x = jnp.asarray(np.random.default_rng(0).normal(size=(4, 128)),
+                    jnp.float32)
+    q, s, mask = C.sparsify_topk_int8(x, 0.25)
+    ax = np.abs(np.asarray(x))
+    m = np.asarray(mask)
+    for r in range(4):
+        kept = np.sort(ax[r][m[r]])
+        dropped = np.sort(ax[r][~m[r]])
+        assert kept.min() >= dropped.max() - 1e-7
+
+
+def test_wire_row_bytes_and_ratio():
+    # 7 int32 words = 28 B for a 64-wide row
+    assert C.wire_row_bytes(64) == 28.0
+    assert C.wire_compression_ratio("topk_int8", trailing_dim=64) \
+        == pytest.approx(256.0 / 28.0)
+    assert C.wire_compression_ratio("none") == 1.0
+    assert C.wire_compression_ratio("int8") == C.compression_ratio()
+    with pytest.raises(ValueError):
+        C.wire_compression_ratio("gzip")
+    # the >=4x acceptance floor holds for every profile trailing dim used
+    # by the tier-1 parity models (mlp9 width 64, TinyMLP width 16)
+    for d in (16, 64, 128):
+        assert C.wire_compression_ratio("topk_int8", trailing_dim=d) >= 4.0
+
+
+def test_wire_dequant_matches_sparse_values():
+    """Unpacked dequant reproduces dequantize_int8 restricted to the
+    survivor mask, zeros elsewhere."""
+    x = jax.random.normal(KEY, (4, 200)) * 3
+    buf = C.sparsify_quant_pack_ref(x)
+    dense = C.wire_dequant_ref(buf, 200)
+    q, s, mask = C.sparsify_topk_int8(x)
+    ref = np.asarray(C.dequantize_int8(q, s)) * np.asarray(mask)
+    np.testing.assert_array_equal(np.asarray(dense), ref)
+
+
+# -------------------------------------------------------- boundary autodiff
+def test_wire_boundary_error_feedback_semantics():
+    """fwd: y = compress(x + res), new_res = (x + res) - y — what was not
+    sent is exactly what is remembered."""
+    x = jax.random.normal(KEY, (8, 64))
+    res = jax.random.normal(jax.random.PRNGKey(1), (8, 64)) * 0.1
+    y, res2 = C.wire_boundary(x, res)
+    np.testing.assert_allclose(np.asarray(y + res2), np.asarray(x + res),
+                               rtol=1e-6, atol=1e-6)
+    np.testing.assert_array_equal(np.asarray(y),
+                                  np.asarray(C.wire_topk_dense(x + res)))
+
+
+def test_wire_boundary_gradient_is_compressed_downlink():
+    """The bwd rule routes the cut-layer gradient through the SAME topk
+    compressor (symmetric wire) and gives the residual a zero cotangent."""
+    x = jax.random.normal(KEY, (4, 128))
+    res = jnp.zeros_like(x)
+
+    def f(x, res):
+        y, _ = C.wire_boundary(x, res)
+        return jnp.sum(y * jnp.arange(128, dtype=jnp.float32))
+
+    gx, gres = jax.grad(f, argnums=(0, 1))(x, res)
+    up = jnp.broadcast_to(jnp.arange(128, dtype=jnp.float32), (4, 128))
+    np.testing.assert_array_equal(np.asarray(gx),
+                                  np.asarray(C.wire_topk_dense(up)))
+    assert not np.asarray(gres).any()
+
+
+def test_quant_boundary_gradient_quantised():
+    x = jax.random.normal(KEY, (4, 128))
+
+    def f(x):
+        return jnp.sum(C.quant_boundary(x) ** 2)
+
+    g = jax.grad(f)(x)
+    assert np.isfinite(np.asarray(g)).all()
+    # bwd is fake-quantised: values land on the int8 grid of 2x
+    q, s = C.quantize_int8(2.0 * x)
+    np.testing.assert_allclose(np.asarray(g),
+                               np.asarray(C.dequantize_int8(q, s)),
+                               rtol=1e-6, atol=1e-6)
+
+
+# ------------------------------------------------------------ cost honesty
+def test_cost_charges_wire_bytes_both_directions():
+    """Satellite fix: the downlink (cut-layer gradients) is charged at the
+    same on-wire bytes as the uplink — never dense fp32 while the uplink is
+    compressed."""
+    prof = cost.resnet_profile()
+    dense_up, dense_down = cost.effective_comm_bytes(
+        prof, 4, steps=4, batch=16, include_model_transfer=False)
+    assert dense_up == dense_down == prof.smashed_bytes(4, 16) * 4
+    for wire in ("int8", "topk_int8"):
+        up, down = cost.effective_comm_bytes(
+            prof, 4, steps=4, batch=16, wire=wire,
+            include_model_transfer=False)
+        ratio = cost.wire_smashed_ratio(prof, 4, wire)
+        assert up == down == pytest.approx(dense_up / ratio)
+        assert ratio > 1.0
+    # topk_int8 at the default keep fraction beats plain int8
+    assert cost.wire_smashed_ratio(prof, 4, "topk_int8") \
+        > cost.wire_smashed_ratio(prof, 4, "int8")
+
+
+def test_cost_model_transfer_stays_dense():
+    """Only the smashed traffic rides the wire: parameter upload/download
+    is charged dense regardless of scheme."""
+    prof = cost.resnet_profile()
+    rc_none = cost.sfl_client_round_cost(prof, 4, 4, 16, 1e7, 1e10, 1e12)
+    rc_topk = cost.sfl_client_round_cost(prof, 4, 4, 16, 1e7, 1e10, 1e12,
+                                         wire="topk_int8")
+    model_bytes = 2 * prof.client_param_bytes(4)
+    smashed_none = rc_none.comm_bytes - model_bytes
+    smashed_topk = rc_topk.comm_bytes - model_bytes
+    ratio = cost.wire_smashed_ratio(prof, 4, "topk_int8")
+    assert smashed_topk == pytest.approx(smashed_none / ratio)
+    # latency/energy follow the compressed byte counts
+    assert rc_topk.latency < rc_none.latency
+    assert rc_topk.energy_j < rc_none.energy_j
+
+
+def test_cost_arrays_wire_matches_scalar_path():
+    prof = cost.resnet_profile()
+    cuts = np.array([2, 4, 6])
+    rc = cost.sfl_round_cost_arrays(prof, cuts, 4, 16,
+                                    np.full(3, 1e7), np.full(3, 1e10), 1e12,
+                                    wire="topk_int8")
+    for i, c in enumerate(cuts):
+        one = cost.sfl_client_round_cost(prof, int(c), 4, 16, 1e7, 1e10,
+                                         1e12, wire="topk_int8")
+        assert rc.comm_bytes[i] == pytest.approx(one.comm_bytes)
+        assert rc.latency[i] == pytest.approx(one.latency)
+
+
+def test_legacy_compress_smashed_aliases_int8():
+    cfg = SimConfig(rounds=1, compress_smashed=True)
+    assert cfg.wire_scheme() == "int8"
+    assert SimConfig(rounds=1).wire_scheme() == "none"
+    assert SimConfig(rounds=1, wire="topk_int8").wire_scheme() == "topk_int8"
+    with pytest.raises(ValueError):
+        SimConfig(rounds=1, compress_smashed=True, wire="topk_int8")
+    with pytest.raises(ValueError):
+        SimConfig(rounds=1, wire="gzip")
+    with pytest.raises(ValueError):
+        SimConfig(rounds=1, wire_k=0.0)
+
+
+# -------------------------------------------------- engine-level contract
+def _sim(wire, **kw):
+    from repro.models.mlp_unit import MLPUnitModel, make_mlp_fleet_data
+    model = MLPUnitModel()
+    clients, test = make_mlp_fleet_data(4, 32, seed=0, n_test=64)
+    cfg = SimConfig(rounds=3, local_steps=2, batch_size=8, lr=5e-3,
+                    adaptive_strategy="paper", eval_every=0, wire=wire, **kw)
+    return FederationSim(model, clients, test, cfg)
+
+
+def test_federation_sim_wire_reduces_comm_and_trains():
+    hist = {w: _sim(w).run() for w in ("none", "topk_int8")}
+    for w, h in hist.items():
+        assert all(np.isfinite(m.loss) for m in h)
+    assert hist["topk_int8"][-1].comm_bytes < hist["none"][-1].comm_bytes
