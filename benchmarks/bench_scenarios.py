@@ -22,6 +22,7 @@ gracefully.
 from __future__ import annotations
 
 import argparse
+import gc
 import json
 import os
 import sys
@@ -61,23 +62,31 @@ def _spec(name: str, n: int, args, devices: int = 1) -> api.ExperimentSpec:
                               per_vehicle_samples=64, data_seed=n),
         runtime=api.RuntimeConfig(superstep=args.superstep,
                                   slot_capacity=args.slot_capacity,
+                                  superstep_layout=args.layout,
                                   precompile=True,
                                   mesh_devices=devices,
                                   compilation_cache_dir=args.compilation_cache))
 
 
 def bench_one(name: str, n: int, args, devices: int = 1) -> dict:
-    res = api.run(_spec(name, n, args, devices), timeit=True)
+    res = api.run(_spec(name, n, args, devices), timeit=args.timeit)
     assert all(np.isfinite(m.loss) for m in res.history)
     assert res.diagnostics["compile_fallbacks"] == 0
+    occ = res.diagnostics["occupancy"]
     return {
         "scenario": name, "n_vehicles": n, "devices": devices,
         "n_rsus": res.diagnostics["n_rsus"],
         "mode": res.diagnostics["mode"], "schedule": args.schedule,
         "superstep": args.superstep, "rounds": args.rounds,
+        "superstep_layout": res.diagnostics["superstep_layout"],
         "round_s": res.timing["round_s"],
         "rounds_per_s": res.timing["rounds_per_s"],
         "warmup_s": res.timing["warmup_s"],
+        # occupancy accounting (DESIGN.md §12): how much of the executed
+        # slot table / parameter plane was real work
+        "padded_slot_frac": occ["padded_slot_frac"],
+        "owned_plane_frac": occ["owned_plane_frac"],
+        "effective_flops_utilization": occ["effective_flops_utilization"],
         "scheduled_per_round": [m.n_scheduled for m in res.history],
         "handovers": int(sum(m.n_handover for m in res.history)),
         "final_loss": float(res.history[-1].loss),
@@ -123,7 +132,8 @@ def check_baseline(out: dict, baseline_path: str, max_regress: float) -> int:
     # (don't spuriously fail) if the bench config drifted from the
     # committed baseline's — that means the baseline needs regenerating
     keys = ("local_steps", "batch", "strategy", "cloud_sync_every",
-            "superstep", "schedule", "slot_capacity", "wire")
+            "superstep", "schedule", "slot_capacity", "wire",
+            "superstep_layout")
     mismatch = {k: (base.get("config", {}).get(k), out["config"].get(k))
                 for k in keys
                 if base.get("config", {}).get(k) != out["config"].get(k)}
@@ -171,6 +181,10 @@ def main():
                     choices=sorted(api.SCHEDULES))
     ap.add_argument("--slot-capacity", default="tight8",
                     choices=["pow2", "tight8"])
+    ap.add_argument("--layout", default="ragged",
+                    choices=["ragged", "dense"],
+                    help="super-step slot layout (DESIGN.md §12): ragged "
+                         "compacts occupied slots + cut-prefix planes")
     ap.add_argument("--wire", default="none", choices=sorted(api.WIRES),
                     help="cut-boundary wire scheme (kernels/wire.py)")
     ap.add_argument("--wire-k", type=float, default=0.25,
@@ -181,6 +195,9 @@ def main():
                     help="device counts to bench (RSU-axis mesh rows; on "
                          "CPU the host device count is forced pre-import "
                          "— parsed by bench_devices before jax loads)")
+    ap.add_argument("--timeit", type=int, default=3,
+                    help="timed compile-free re-runs per row (min wins); "
+                         ">1 strips scheduler noise on small containers")
     ap.add_argument("--check-baseline", default=None, metavar="JSON",
                     help="compare rounds/s against a committed baseline")
     ap.add_argument("--max-regress", type=float, default=0.30)
@@ -195,6 +212,10 @@ def main():
     for devices in DEVICE_COUNTS:
         for name in args.scenarios.split(","):
             for n in (int(s) for s in args.sizes.split(",")):
+                # drop the previous row's engine, staged data, and compiled
+                # programs before timing: later rows must not inherit the
+                # sweep's accumulated memory pressure (2-core containers)
+                gc.collect()
                 row = bench_one(name, n, args, devices)
                 results.append(row)
                 print(f"{name:17s} n={n:4d} dev={devices} "
@@ -225,6 +246,8 @@ def main():
                    "cloud_sync_every": args.sync,
                    "superstep": args.superstep, "schedule": args.schedule,
                    "slot_capacity": args.slot_capacity,
+                   "superstep_layout": args.layout,
+                   "timeit": args.timeit,
                    "wire": args.wire, "wire_k": args.wire_k,
                    "devices": list(DEVICE_COUNTS),
                    "compilation_cache": args.compilation_cache,

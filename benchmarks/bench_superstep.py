@@ -45,45 +45,54 @@ ROOT = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
 SCENARIO = "highway_corridor"
 
 
-def _engine(n, args, superstep, schedule, slot_capacity, cache_dir):
-    sc = scenario.make_scenario(SCENARIO, n, seed=n)
+def _engine(n, args, superstep, schedule, slot_capacity, cache_dir,
+            name=SCENARIO):
+    sc = scenario.make_scenario(name, n, seed=n)
     clients, test = make_mlp_fleet_data(n, 64, 48, seed=n)
     cfg = SimConfig(scheme="asfl", adaptive_strategy="paper",
                     rounds=args.rounds, local_steps=args.local_steps,
                     batch_size=args.batch, lr=1e-3, eval_every=0,
                     round_interval_s=10.0, superstep=superstep,
                     server_schedule=schedule, slot_capacity=slot_capacity,
+                    superstep_layout=args.layout,
                     compilation_cache_dir=cache_dir)
     return ScenarioEngine(MLPUnitModel(), clients, test, cfg, sc,
                           cloud_sync_every=1)
 
 
 def bench_variant(n, args, superstep, schedule, slot_capacity,
-                  cache_dir) -> dict:
+                  cache_dir, name=SCENARIO) -> dict:
     """Cold precompile, warm-cache precompile (fresh engine, same disk
     cache), then a timed steady-state run with zero compile fallbacks."""
     # time precompile() alone (not engine construction / data staging) so
     # the warmup numbers are commensurable with bench_scenarios' warmup_s
-    eng = _engine(n, args, superstep, schedule, slot_capacity, cache_dir)
+    eng = _engine(n, args, superstep, schedule, slot_capacity, cache_dir,
+                  name)
     t0 = time.perf_counter()
     eng.precompile()
     warmup_cold = time.perf_counter() - t0
     # a fresh engine AOT-compiles the same programs; with the persistent
     # cache populated, .lower().compile() deserializes instead of compiling
-    eng = _engine(n, args, superstep, schedule, slot_capacity, cache_dir)
+    eng = _engine(n, args, superstep, schedule, slot_capacity, cache_dir,
+                  name)
     t0 = time.perf_counter()
     eng.precompile()
     warmup_warm = time.perf_counter() - t0
     eng.run()                               # staging warm-up (no compiles)
-    eng.reset()
-    t0 = time.perf_counter()
-    hist = eng.run()
-    dt = time.perf_counter() - t0
+    dt = None
+    for _ in range(max(args.timeit, 1)):    # min of N strips CPU noise
+        eng.reset()
+        t0 = time.perf_counter()
+        hist = eng.run()
+        rep = time.perf_counter() - t0
+        dt = rep if dt is None else min(dt, rep)
     assert all(np.isfinite(m.loss) for m in hist)
     assert eng.programs.compile_fallbacks == 0
+    occ = eng.occupancy_stats()
     return {
-        "scenario": SCENARIO, "n_vehicles": n, "superstep": superstep,
+        "scenario": name, "n_vehicles": n, "superstep": superstep,
         "schedule": schedule, "slot_capacity": slot_capacity,
+        "superstep_layout": occ["layout"],
         "rounds": args.rounds,
         "round_s": dt / args.rounds,
         "rounds_per_s": args.rounds / dt,
@@ -91,6 +100,10 @@ def bench_variant(n, args, superstep, schedule, slot_capacity,
         "warmup_warm_cache_s": warmup_warm,
         "effective_rounds_per_s_cold": args.rounds / (warmup_cold + dt),
         "effective_rounds_per_s_warm": args.rounds / (warmup_warm + dt),
+        # occupancy accounting (DESIGN.md §12)
+        "padded_slot_frac": occ["padded_slot_frac"],
+        "owned_plane_frac": occ["owned_plane_frac"],
+        "effective_flops_utilization": occ["effective_flops_utilization"],
         "handovers": int(sum(m.n_handover for m in hist)),
         "final_loss": float(hist[-1].loss),
     }
@@ -106,6 +119,12 @@ def main():
     ap.add_argument("--schedules", default="sequential,parallel")
     ap.add_argument("--slot-capacity", default="tight8",
                     choices=["pow2", "tight8"])
+    ap.add_argument("--layout", default="ragged",
+                    choices=["ragged", "dense"],
+                    help="super-step slot layout (DESIGN.md §12): ragged "
+                         "compacts occupied slots + cut-prefix planes")
+    ap.add_argument("--timeit", type=int, default=3,
+                    help="timed steady-state runs per row (min wins)")
     ap.add_argument("--compilation-cache", default=None, metavar="DIR",
                     help="persistent cache dir (default: fresh temp dir)")
     ap.add_argument("--baseline", default=os.path.join(
@@ -131,9 +150,15 @@ def main():
         for sched in args.schedules.split(","):
             rows.append(bench_variant(n, args, args.superstep, sched,
                                       args.slot_capacity, cache_dir))
-        base = baseline.get((SCENARIO, n))
+        # the skewed-load stress row (one crowded cell, sparse tail): where
+        # occupancy compaction pays most — a dense table pads every RSU to
+        # the crowded cell's cohort
+        rows.append(bench_variant(n, args, args.superstep, "parallel",
+                                  args.slot_capacity, cache_dir,
+                                  name="highway_zipf"))
         dispatch = rows[0]                     # the K=1 per-round reference
         for row in rows:
+            base = baseline.get((row["scenario"], n))
             row["speedup_vs_per_round_dispatch"] = \
                 row["rounds_per_s"] / dispatch["rounds_per_s"]
             if base:
@@ -148,7 +173,7 @@ def main():
                     / (base["rounds"] / (base["warmup_s"]
                                          + base["rounds"] * base["round_s"])))
             results.append(row)
-            print(f"{SCENARIO} n={n:4d} K={row['superstep']} "
+            print(f"{row['scenario']} n={n:4d} K={row['superstep']} "
                   f"{row['schedule']:10s}: {row['rounds_per_s']:6.2f} r/s "
                   f"({row['speedup_vs_per_round_dispatch']:.2f}x vs K=1)  "
                   f"warmup cold {row['warmup_cold_s']:5.1f}s / warm "
@@ -201,13 +226,23 @@ def main():
                     "value": best_ef["effective_speedup_vs_baseline"],
                     "schedule": best_ef["schedule"], "target": 3.0},
             })
+    def row_key(r):
+        return (f"{r['scenario']}@{r['n_vehicles']}/K{r['superstep']}/"
+                f"{r['schedule']}")
+
     out = {
         "config": {"local_steps": args.local_steps, "batch": args.batch,
                    "rounds": args.rounds, "superstep": args.superstep,
                    "slot_capacity": args.slot_capacity,
+                   "superstep_layout": args.layout,
+                   "timeit": args.timeit,
                    "strategy": "paper", "cloud_sync_every": 1,
                    "baseline_file": os.path.basename(args.baseline),
                    "backend": jax.default_backend()},
+        # top-level summary keys, schema-aligned with BENCH_scenarios.json
+        # (tooling reads the same two keys off either file)
+        "warmup_total_s": float(sum(r["warmup_cold_s"] for r in results)),
+        "rounds_per_s": {row_key(r): r["rounds_per_s"] for r in results},
         "acceptance": acceptance,
         "results": results,
     }

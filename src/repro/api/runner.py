@@ -189,7 +189,9 @@ def run(spec: ExperimentSpec, *,
     if isinstance(engine, ScenarioEngine):
         diagnostics.update(
             mode=engine.mode, n_rsus=engine.n_rsus,
-            compile_fallbacks=engine.programs.compile_fallbacks)
+            compile_fallbacks=engine.programs.compile_fallbacks,
+            superstep_layout=engine.programs.layout,
+            occupancy=engine.occupancy_stats())
         mesh = engine.fleet_mesh
     else:
         diagnostics.update(mode=engine.engine.mode, n_rsus=1)

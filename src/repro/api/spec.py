@@ -95,6 +95,10 @@ class RuntimeConfig:
     cohort_parallel: str = "auto"     # auto | vmap | scan | unroll
     superstep: int = 1                # rounds fused per scenario dispatch
     slot_capacity: str = "pow2"       # pow2 | tight8
+    # super-step layout (DESIGN.md §12): "ragged" = cut-prefix client
+    # planes + occupancy-compacted slot scheduling (the default);
+    # "dense" = full-plane masked replicas over per-RSU padded tables
+    superstep_layout: str = "ragged"
     precompile: bool = True           # scenario engine: AOT-compile the plan
     compilation_cache_dir: Optional[str] = None
     # device mesh over the fleet (core/fleet_sharding.py, DESIGN.md §10):
@@ -134,6 +138,7 @@ SIM_CONFIG_FIELD_MAP: Dict[str, Tuple[str, str]] = {
     "cohort_parallel": ("runtime", "cohort_parallel"),
     "superstep": ("runtime", "superstep"),
     "slot_capacity": ("runtime", "slot_capacity"),
+    "superstep_layout": ("runtime", "superstep_layout"),
     "compilation_cache_dir": ("runtime", "compilation_cache_dir"),
     "mesh_devices": ("runtime", "mesh_devices"),
     "fleet_axis": ("runtime", "fleet_axis"),

@@ -184,6 +184,23 @@ def residence_aware_traced(profile: SplitProfile, rates_bps, client_flops,
     return jnp.where(feasible.any(axis=1), cand_arr[first], SKIP)
 
 
+def strategy_max_cut(strategy: str, n_units: int,
+                     candidate_cuts: Optional[Sequence[int]] = None) -> int:
+    """Static upper bound on the cut any traced scenario strategy can emit —
+    the prefix-plane sizing bound of the ragged super-step layout
+    (DESIGN.md §12).  ``paper``/``paper-literal`` pick from
+    :data:`DEFAULT_CUTS` (the traced scheduler clips to U-1); every other
+    strategy searches ``candidate_cuts`` (default ``range(1, n_units)``).
+    This must remain a true upper bound of the matching ``*_traced``
+    strategy: the ragged engine sizes client planes to this prefix, and the
+    parity tests assert every emitted cut stays under it."""
+    top = max(n_units - 1, 1)
+    if strategy in ("paper", "paper-literal"):
+        return min(max(DEFAULT_CUTS), top)
+    cand = sorted(candidate_cuts or range(1, n_units))
+    return min(max(cand), top) if cand else top
+
+
 def max_cut_for_budget(profile: SplitProfile,
                        budget_bytes: Union[float, Sequence[float]]
                        ) -> np.ndarray:

@@ -42,7 +42,8 @@ from repro.configs.base import enable_compilation_cache
 from repro.core import adaptive, aggregation, channel, compression, cost
 from repro.core import fleet_sharding
 from repro.core.fleet_sharding import AXIS as MESH_AXIS, FLEET_AXES, FleetMesh
-from repro.core.superstep import SERVER_SCHEDULES, SuperStepPrograms
+from repro.core.superstep import (SERVER_SCHEDULES, SUPERSTEP_LAYOUTS,
+                                  SuperStepPrograms)
 from repro.data.pipeline import (ClientDataset, StackedClients,
                                  epoch_batch_indices, sample_batch_indices,
                                  stack_clients)
@@ -163,6 +164,13 @@ class SimConfig:
     # (next multiple of 8 — up to ~40% fewer padded slots at fleet scale,
     # a few more signatures under heavy cohort churn)
     slot_capacity: str = "pow2"
+    # super-step execution layout (DESIGN.md §12): "ragged" sizes per-slot
+    # client planes / optimizer moments / EF wire residuals to the
+    # strategy's static max-cut prefix and (parallel schedule) compacts the
+    # slot axis to occupied slots with segment-sum per-RSU aggregation;
+    # "dense" keeps full-plane masked replicas over per-RSU padded tables.
+    # Bit-for-bit identical for sgd on both schedules (tests/test_ragged.py)
+    superstep_layout: str = "ragged"
     # rounds fused per ScenarioEngine super-step (DESIGN.md §8): K rounds of
     # mobility, scheduling, training, handover, and edge/cloud aggregation
     # execute as ONE compiled lax.scan with donated carries; 1 = one
@@ -189,6 +197,7 @@ class SimConfig:
                                ("adaptive_strategy", ADAPTIVE_STRATEGIES),
                                ("server_schedule", SERVER_SCHEDULES),
                                ("slot_capacity", SLOT_CAPACITIES),
+                               ("superstep_layout", SUPERSTEP_LAYOUTS),
                                ("cohort_parallel", COHORT_MODES),
                                ("fleet_axis", FLEET_AXES),
                                ("optimizer", OPTIMIZERS),
@@ -1402,6 +1411,7 @@ class ScenarioEngine:
         self.mode = ("fused-traced" if self.programs.traced_mobility
                      else "fused-staged")
         self._cohort_counts: Dict[int, int] = {}
+        self._covered_totals: Dict[int, int] = {}
         self._state_cache: Dict[int, Any] = {}
         self.reset()
 
@@ -1461,6 +1471,57 @@ class ScenarioEngine:
             return ((mx + 7) // 8) * 8
         return _pow2(mx)
 
+    def _total_slots(self, horizon: int) -> int:
+        """Capacity of the ragged layout's compacted global slot axis over
+        rounds [0, horizon): the max TOTAL covered count of any round,
+        rounded like ``slot_capacity`` for compile-cache stability and
+        padded to a device multiple under a mesh
+        (:meth:`~repro.core.fleet_sharding.FleetMesh.balanced_slots`).
+        0 when the engine's layout/schedule has no compacted axis."""
+        if not (self.cfg.server_schedule == "parallel"
+                and self.programs.layout == "ragged"):
+            return 0
+        for rnd in range(horizon):
+            if rnd not in self._covered_totals:
+                s = self._host_state(rnd).serving_rsu
+                self._covered_totals[rnd] = int((s >= 0).sum())
+        mx = max([self._covered_totals[r] for r in range(horizon)] + [1])
+        slots = ((mx + 7) // 8) * 8 \
+            if self.cfg.slot_capacity == "tight8" else _pow2(mx)
+        if self.fleet_mesh is not None:
+            slots = self.fleet_mesh.balanced_slots(slots)
+        return slots
+
+    def occupancy_stats(self) -> Dict[str, Any]:
+        """Occupancy accounting for bench rows (DESIGN.md §12): how much of
+        the compiled layout's slot and plane budget the run actually used.
+        ``executed_slots`` is per-round slot-compute the program runs
+        (padded grid for dense/sequential, compacted capacity for
+        ragged+parallel); ``mean_occupied_slots`` averages the scheduled
+        counts over the recorded history; ``owned_plane_frac`` is the
+        client-plane prefix fraction (1.0 dense); the effective-FLOPs
+        utilization is the occupied share of executed slot fwd/bwd work."""
+        pg = self.programs
+        horizon = max(int(self.cfg.rounds), 1)
+        cap = self._capacity(horizon)
+        if self.cfg.server_schedule == "parallel" and pg.layout == "ragged":
+            executed = self._total_slots(horizon)
+        else:
+            executed = pg.n_rsus_padded * cap
+        occ = [float(m.n_scheduled) for m in self.history]
+        mean_occ = float(np.mean(occ)) if occ else 0.0
+        util = (mean_occ / executed) if executed else 0.0
+        return {
+            "layout": pg.layout,
+            "slot_capacity": int(cap),
+            "executed_slots": int(executed),
+            "mean_occupied_slots": mean_occ,
+            "padded_slot_frac": float(1.0 - util),
+            "owned_plane_frac": float(pg.plane_width
+                                      / max(pg.n_params, 1)),
+            "effective_flops_utilization": float(util),
+        }
+
     def _window_xs(self, rnd0: int, k: int):
         """Host staging of one super-step window: the round indices, plus —
         only for scenarios without a traced-step path — the per-round fleet
@@ -1495,9 +1556,10 @@ class ScenarioEngine:
         XLA.  Returns the compiled signatures."""
         total = int(rounds if rounds is not None else self.cfg.rounds)
         cap = self._capacity(max(total, 1))
+        slots = self._total_slots(max(total, 1))
         sigs = []
         for rnd0, kk in self._windows(total):
-            sig = self.programs.signature(kk, cap)
+            sig = self.programs.signature(kk, cap, slots)
             if sig in sigs:
                 continue
             # derive the abstract xs from the real staging path so the
@@ -1521,8 +1583,9 @@ class ScenarioEngine:
         """Execute rounds [rnd0, rnd0+k) as ONE compiled program and return
         their metrics.  The previous carry is donated; per-round arrays come
         back as scan outputs and are pulled to the host once."""
-        cap = self._capacity(max(self.cfg.rounds, rnd0 + k))
-        sig = self.programs.signature(k, cap)
+        horizon = max(self.cfg.rounds, rnd0 + k)
+        cap = self._capacity(horizon)
+        sig = self.programs.signature(k, cap, self._total_slots(horizon))
         fn = self.programs.get(sig)
         carry, ys = fn(self._carry, self._window_xs(rnd0, k))
         ys = jax.tree.map(np.asarray, ys)          # ONE host sync per window
@@ -1535,6 +1598,16 @@ class ScenarioEngine:
                 f"per-RSU cohort exceeded slot capacity {cap}; traced vs "
                 f"host association disagree — raise the capacity margin "
                 f"and reset() the engine")
+        if sig.slots and int(ys["counts"].sum(axis=-1).max(initial=0)) \
+                > sig.slots:
+            # the ragged layout's compacted axis silently truncates the
+            # sorted slot order past its capacity — same contract as the
+            # per-RSU check above
+            raise RuntimeError(
+                f"fleet-wide occupied slots exceeded the compacted "
+                f"capacity {sig.slots}; traced vs host association "
+                f"disagree — raise the capacity margin and reset() the "
+                f"engine")
         self._carry = carry
         self.units, self.head = self.programs.global_model(carry)
         out = []

@@ -25,6 +25,19 @@ One 1-D mesh, one axis name (:data:`AXIS`), two partitionings:
   shard — which is what makes the sharded K-fused sgd path bit-for-bit
   equal to the single-device one (tests/test_fleet_sharding.py).
 
+Ragged slot sharding (DESIGN.md §12): with ``superstep_layout="ragged"``
+and the parallel server schedule, the super-step's unit of work is no
+longer an RSU row but a slot of the globally compacted occupied-slot axis.
+The same ``axis="rsu"`` mesh then splits THAT axis into equal contiguous
+blocks (:meth:`FleetMesh.balanced_slots` pads the compacted capacity to a
+device multiple): every device carries the same number of *occupied* slots
+regardless of how skewed the per-RSU load is, which removes the 256-fleet
+sharding inversions where one device trained a crowded cell's whole padded
+table while its neighbors trained phantoms.  The per-RSU segment-sums
+become psum'd partials and the edge stack replicates — tolerance-level
+(not bit-for-bit) parity with the single-device program, asserted in
+tests/test_fleet_sharding.py.
+
 Padding rules (DESIGN.md §10): bucket slot counts are padded pow2-first,
 then up to the next multiple of the device count; the RSU axis is padded to
 a device multiple with phantom cells no vehicle can be served by.  Both
@@ -79,6 +92,15 @@ class FleetMesh:
         """Smallest multiple of the device count >= max(n, 1)."""
         d = self.n_devices
         return ((max(int(n), 1) + d - 1) // d) * d
+
+    def balanced_slots(self, n_slots: int) -> int:
+        """Occupancy-balanced capacity of the ragged super-step's compacted
+        slot axis (module docstring; DESIGN.md §12): the axis counts
+        OCCUPIED slots fleet-wide, so padding it to a device multiple and
+        splitting contiguously gives every device an equal share of real
+        work even under fully skewed per-RSU load — unlike padded per-RSU
+        tables, whose shards inherit the load imbalance."""
+        return self.pad(n_slots)
 
     # ---- shardings ----------------------------------------------------
     def leading_sharding(self) -> NamedSharding:

@@ -200,7 +200,15 @@ class HighwayCorridor:
     one fresh arrival at the start, so the fleet membership seen by any one
     RSU is genuinely dynamic while the arrays stay fixed-shape (the cohort
     engine's compiled programs are keyed by bucket signature, not by which
-    vehicles fill the rows)."""
+    vehicles fill the rows).
+
+    ``load_skew="zipf"`` biases the *initial* positions toward the low-index
+    cells (a vehicle starts in segment s with probability ~ 1/(s+1)), the
+    classic rush-hour profile: one crowded cell, a long sparse tail.  It is
+    the stress fixture for the occupancy-compacted ragged super-step layout
+    (DESIGN.md §12) — a dense per-RSU slot table pads every cell to the
+    crowded cell's cohort, a compacted one only pays for occupied slots.
+    Kinematics are unchanged, so the skew decays as the fleet wraps."""
     name: str = "highway_corridor"
     n_vehicles: int = 8
     n_rsus: int = 4
@@ -209,6 +217,7 @@ class HighwayCorridor:
     lane_speeds_mps: Sequence[float] = (24.0, 31.0, 38.0)
     lane_width_m: float = 3.7
     seed: int = 0
+    load_skew: Optional[str] = None         # None (uniform) | "zipf"
     ch: channel.ChannelConfig = dataclasses.field(
         default_factory=channel.ChannelConfig)
     fleet: Optional[object] = None          # VehicleProfile list or arrays
@@ -223,7 +232,18 @@ class HighwayCorridor:
         self._lane = rng.integers(0, self.n_lanes, size=self.n_vehicles)
         base = np.asarray(self.lane_speeds_mps)[self._lane]
         self._speed = base * rng.uniform(0.9, 1.1, size=self.n_vehicles)
-        self._x0 = rng.uniform(0.0, self.road_len_m, size=self.n_vehicles)
+        if self.load_skew is None:
+            self._x0 = rng.uniform(0.0, self.road_len_m,
+                                   size=self.n_vehicles)
+        elif self.load_skew == "zipf":
+            w = 1.0 / (np.arange(self.n_rsus) + 1.0)
+            seg = rng.choice(self.n_rsus, size=self.n_vehicles,
+                             p=w / w.sum())
+            self._x0 = ((seg + rng.uniform(0.0, 1.0, size=self.n_vehicles))
+                        * self.rsu_spacing_m)
+        else:
+            raise ValueError(f"unknown load_skew {self.load_skew!r}; "
+                             f"expected None or 'zipf'")
         self._y = (self._lane - (self.n_lanes - 1) / 2.0) * self.lane_width_m
 
     def fleet_state(self, t: float, seed: int) -> FleetState:
@@ -490,8 +510,17 @@ def trace_replay(n_vehicles: int, seed: int = 0, **kw) -> TraceReplay:
     return crossing_trace(n_vehicles, seed=seed, **kw)
 
 
+def highway_zipf(n_vehicles: int, seed: int = 0, **kw) -> HighwayCorridor:
+    """Highway corridor with Zipf-skewed initial cell load (one crowded
+    cell, a sparse tail) — the ragged-layout stress scenario."""
+    kw.setdefault("load_skew", "zipf")
+    kw.setdefault("name", "highway_zipf")
+    return HighwayCorridor(n_vehicles=n_vehicles, seed=seed, **kw)
+
+
 SCENARIOS = {
     "highway_corridor": highway_corridor,
+    "highway_zipf": highway_zipf,
     "urban_grid": urban_grid,
     "trace_replay": trace_replay,
 }

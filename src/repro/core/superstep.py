@@ -63,11 +63,33 @@ analytic comm/latency/energy accounting — all consume the per-round arrays
 the super-step emits as scan outputs, pulled to the host **once per
 super-step** instead of several times per round.
 
+**Ragged layout** (DESIGN.md §12, the default): the dense formulation
+above pays as if every vehicle held the whole model — full (P,) replicas
+plus moments per slot, all client math masked by ``keep``, and pow2/tight8
+capacity padding burning full-plane FLOPs on phantom slots.  Because the
+plane serializes the head first and then units in ascending order, every
+position a vehicle can own at any cut ``c <= c_max`` lives in ONE static
+contiguous window of the plane (:func:`owned_window`), where ``c_max`` is
+the strategy's static cut bound (:func:`repro.core.adaptive.
+strategy_max_cut`) pow2-bucketed into the program signature
+(:func:`cut_prefix_bucket` — cut churn stays retrace-free).  With
+``superstep_layout="ragged"`` client replicas, client moments, and EF wire
+residuals shrink to that prefix window; the sequential schedule truncates
+its per-unit replica lists to the bucket; and the parallel schedule
+replaces the per-RSU (R, C) padded slot table with a globally compacted
+(segment-id, slot) layout from the same on-device sort — client fwd/bwd
+vmaps over *occupied* slots only and per-RSU aggregation becomes
+segment-sums (scatter-adds into an R+1-row table whose overflow row drops
+phantom work).  Segment scatter-adds are left-folds, so a padded slot
+contributes an exact ±0 in any position: compacted and dense execution
+stay bit-for-bit for sgd on both schedules (tests/test_ragged.py).
+``superstep_layout="dense"`` keeps the full-plane masked path.
+
 Caveats: the flat plane requires a uniform parameter dtype (the current
-UnitModels are float32 throughout), and a full-model replica is
-materialized per slot — the price of making the cut a runtime value.
-Memory is ``O(n_rsus * capacity * P)`` for replicas plus optimizer
-moments.
+UnitModels are float32 throughout), and a replica is materialized per slot
+— the price of making the cut a runtime value.  Memory is
+``O(n_rsus * capacity * P)`` for the dense layout, and
+``O(occupied_slots * P_prefix)`` for the ragged one.
 
 Wire schemes (DESIGN.md §11): ``cfg.wire`` inserts a compression boundary
 at the runtime cut inside the fused forward — ``"int8"`` is the stateless
@@ -104,6 +126,38 @@ from repro.data.pipeline import StackedClients, fleet_batch_indices_traced
 from repro import optim
 
 SERVER_SCHEDULES = ("sequential", "parallel")
+SUPERSTEP_LAYOUTS = ("ragged", "dense")
+
+
+def cut_prefix_bucket(c_max: int, n_units: int) -> int:
+    """pow2-bucket the strategy's static max cut into the program-signature
+    dimension that sizes prefix planes: the smallest power of two >= c_max,
+    clipped to U-1 (no vehicle can own the last unit).  Bucketing keeps the
+    signature — and therefore the compile cache — stable when a strategy's
+    candidate set changes without crossing a power of two."""
+    c = max(int(c_max), 1)
+    b = 1
+    while b < c:
+        b *= 2
+    return min(b, max(int(n_units) - 1, 1))
+
+
+def owned_window(unit_ids: np.ndarray, bucket: int):
+    """(offset, width) of the contiguous flat-plane window holding every
+    position with ``unit_ids < bucket`` — all positions a vehicle can own
+    at any cut <= bucket.  Contiguity is a property of the ravel order
+    (``ravel_pytree`` sorts dict keys: "head" serializes before "units",
+    units ascend), asserted here rather than assumed."""
+    ids = np.asarray(unit_ids)
+    owned = np.nonzero(ids < int(bucket))[0]
+    if owned.size == 0:
+        return 0, 0
+    off, width = int(owned[0]), int(owned.size)
+    if not np.array_equal(owned, np.arange(off, off + width)):
+        raise AssertionError(
+            "owned plane positions are not contiguous; the ragged layout "
+            "requires the ravel order to keep units < bucket adjacent")
+    return off, width
 
 
 def tree_copy(tree):
@@ -171,6 +225,12 @@ class SuperStepSignature:
     k: int            # rounds fused into the scan
     capacity: int     # pow2 per-RSU slot capacity
     staged: bool      # True: mobility staged per-window on the host
+    # compacted global slot capacity (ragged layout + parallel schedule:
+    # bucketed max TOTAL covered count; 0 = dense per-RSU padded tables)
+    slots: int = 0
+    # pow2-bucketed static max cut sizing the prefix planes (0 = dense
+    # layout, full plane)
+    max_cut: int = 0
 
 
 class SuperStepPrograms:
@@ -230,10 +290,32 @@ class SuperStepPrograms:
                 lambda a: np.full(np.shape(a), model.n_units, np.int32),
                 head)}
         self.unit_ids = ravel_pytree(ids)[0].astype(jnp.int32)
+        self.unit_ids_np = np.asarray(self.unit_ids)
+        # ragged layout (DESIGN.md §12): client planes/moments/EF residuals
+        # are sized to the static max-cut prefix — the pow2 bucket of the
+        # strategy's cut bound — which is one contiguous window of the
+        # plane (head serializes first, then units ascending)
+        self.layout = getattr(cfg, "superstep_layout", "ragged")
+        if self.layout not in SUPERSTEP_LAYOUTS:
+            raise ValueError(f"superstep_layout must be one of "
+                             f"{SUPERSTEP_LAYOUTS}, got {self.layout!r}")
+        if self.layout == "ragged":
+            c_max = adaptive.strategy_max_cut(cfg.adaptive_strategy,
+                                              model.n_units)
+            self.max_cut_bucket = cut_prefix_bucket(c_max, model.n_units)
+            self.plane_offset, self.plane_width = owned_window(
+                self.unit_ids_np, self.max_cut_bucket)
+            self.client_units = self.max_cut_bucket
+        else:
+            self.max_cut_bucket = 0
+            self.plane_offset, self.plane_width = 0, self.n_params
+            self.client_units = model.n_units
         # wire boundary geometry: the smashed-tensor shape at every cut
         # (1..U-1), from one eval_shape of the per-unit forward.  The EF
         # residual plane holds the LARGEST boundary flattened — one slot
-        # per vehicle, reinterpreted in the shape of its current cut
+        # per vehicle, reinterpreted in the shape of its current cut.
+        # Ragged layout: cuts never exceed the bucket, so only boundaries
+        # below it ever carry a residual — the plane shrinks accordingly
         self.wire = getattr(cfg, "wire", "none")
         self.wire_k = float(getattr(cfg, "wire_k", compression.WIRE_K))
         self.ef = self.wire == "topk_int8"
@@ -251,10 +333,15 @@ class SuperStepPrograms:
 
             sds = jax.eval_shape(_stack_shapes, x_sds)
             self.boundary_shapes = [tuple(s.shape) for s in sds]
+            self.wire_units = (min(model.n_units - 1, self.max_cut_bucket)
+                               if self.layout == "ragged"
+                               else model.n_units - 1)
             self.res_size = max(int(np.prod(s))
-                                for s in self.boundary_shapes)
+                                for s in self.boundary_shapes
+                                [:self.wire_units])
         else:
             self.boundary_shapes, self.res_size = None, 0
+            self.wire_units = 0
 
     def flatten(self, units, head) -> jnp.ndarray:
         return ravel_pytree({"units": list(units), "head": head})[0]
@@ -289,10 +376,17 @@ class SuperStepPrograms:
                                           jnp.float32)
             carry["wire_cut"] = jnp.full((n_vehicles,), -1, jnp.int32)
         if self.mesh is not None:
-            carry["edge"] = self.mesh.shard_leading(carry["edge"])
-            for k in carry:
-                if k != "edge":
-                    carry[k] = self.mesh.replicate(carry[k])
+            if self.schedule == "parallel" and self.layout == "ragged":
+                # ragged + parallel shards the compacted SLOT axis, not the
+                # RSU axis: every device owns a block of occupied slots of
+                # arbitrary RSUs, so the edge stack must be replicated (the
+                # per-RSU segment-sums come home via psum)
+                carry = {k: self.mesh.replicate(v) for k, v in carry.items()}
+            else:
+                carry["edge"] = self.mesh.shard_leading(carry["edge"])
+                for k in carry:
+                    if k != "edge":
+                        carry[k] = self.mesh.replicate(carry[k])
         return carry
 
     def global_model(self, carry):
@@ -329,6 +423,29 @@ class SuperStepPrograms:
         slot_ids = jnp.arange(C, dtype=jnp.int32)
         wire, ef, wire_k = self.wire, self.ef, self.wire_k
         bshapes, res_size = self.boundary_shapes, self.res_size
+        wire_units = self.wire_units
+        # ragged layout statics (DESIGN.md §12): the owned-prefix window of
+        # the plane, the per-replica unit count (sequential), and the flat
+        # slot-axis geometry (parallel).  Dense: window = whole plane,
+        # CU = U, and the flat axis is the flattened (R, C) table
+        layout = self.layout
+        ragged_par = self.schedule == "parallel" and layout == "ragged"
+        O, W = self.plane_offset, self.plane_width
+        CU = self.client_units
+        unit_ids_w = unit_ids[O:O + W]
+        S = sig.slots if ragged_par else R * C
+        if self.schedule == "parallel":
+            if fm is None:
+                S_loc, R_srv, psum_out = S, R, False
+            elif layout == "dense":
+                # RSU-aligned slot blocks: device d's slots are exactly its
+                # R_loc RSU rows, so segment-sums stay shard-local and the
+                # PR 5 bit-for-bit all-gather combine applies unchanged
+                S_loc, R_srv, psum_out = R_loc * C, R_loc, False
+            else:
+                # compacted slots shard by occupancy: blocks of occupied
+                # slots, RSUs interleaved — per-RSU sums are psum'd partials
+                S_loc, R_srv, psum_out = S // fm.n_devices, R, True
 
         def pick_cuts(serving, rates, residence):
             """(n,) int32 cuts, 0 = SKIP/uncovered (traced twin of the PR 2
@@ -344,23 +461,55 @@ class SuperStepPrograms:
             cuts = jnp.where(sched, jnp.clip(cuts, 1, U - 1), 0)
             return jnp.where(serving >= 0, cuts, 0).astype(jnp.int32)
 
-        def slot_table(serving, cuts):
+        def slot_sort(serving, cuts):
             """On-device segment grouping: one sort of (serving, cut,
-            vehicle) keys -> per-RSU member slots.  Replaces the host-side
-            ``np.unique`` + boolean indexing, preserving the ascending
-            (cut, vehicle) server-update order per RSU."""
+            vehicle) keys.  Replaces the host-side ``np.unique`` + boolean
+            indexing, preserving the ascending (cut, vehicle) server-update
+            order per RSU.  Unscheduled vehicles get segment R (past every
+            real RSU), so they sort to the tail."""
             sched = cuts > 0
             seg = jnp.where(sched, serving, R).astype(jnp.int32)
             key = seg * (U * n) + cuts * n + jnp.arange(n, dtype=jnp.int32)
             order = jnp.argsort(key).astype(jnp.int32)
             counts = jnp.sum(seg[None, :] == jnp.arange(R, dtype=jnp.int32)
                              [:, None], axis=1).astype(jnp.int32)
+            return order, seg, counts
+
+        def slot_table_seq(order, counts):
+            """Per-RSU (R, C) member slots for the sequential schedule."""
             starts = jnp.concatenate(
                 [jnp.zeros((1,), jnp.int32), jnp.cumsum(counts)[:-1]])
             flat = jnp.clip(starts[:, None] + slot_ids[None, :], 0, n - 1)
             members = order[flat]                        # (R, C)
             mask = slot_ids[None, :] < counts[:, None]   # (R, C)
-            return members, mask, counts
+            return members, mask
+
+        def slot_table_flat(order, seg, counts):
+            """Flat (S,) slot table for the parallel schedule: ``members``
+            (vehicle per slot) and ``slot_seg`` (serving RSU per slot, R =
+            phantom/parked — scatter contributions to row R are dropped).
+
+            Ragged: slots are the sorted order's prefix — globally
+            compacted, RSU-major, zero phantom slots between cohorts.
+            Dense: the flattened (R, C) padded table, so the occupied slots
+            appear in the IDENTICAL global order as the ragged table and
+            the two layouts differ only by exact-zero phantom
+            contributions (the bit-for-bit parity argument)."""
+            if ragged_par:
+                seg_sorted = seg[order]
+                if S <= n:
+                    return order[:S], seg_sorted[:S]
+                pad = S - n
+                members = jnp.concatenate(
+                    [order, jnp.zeros((pad,), jnp.int32)])
+                slot_seg = jnp.concatenate(
+                    [seg_sorted, jnp.full((pad,), R, jnp.int32)])
+                return members, slot_seg
+            members2d, mask2d = slot_table_seq(order, counts)
+            rows = jnp.repeat(jnp.arange(R, dtype=jnp.int32), C)
+            slot_seg = jnp.where(mask2d.reshape(-1), rows,
+                                 R).astype(jnp.int32)
+            return members2d.reshape(-1), slot_seg
 
         def loss_fn(units, head, x, y):
             feats = model.apply_units(units, x, 0)
@@ -381,6 +530,11 @@ class SuperStepPrograms:
             h, r = x, res_j
             for u in range(U - 1):
                 h = model.apply_units([units[u]], h, u)
+                if u >= wire_units:
+                    # ragged layout: cuts never exceed the bucket, so
+                    # boundaries at or past it can never be selected —
+                    # skipping their candidates changes no selected value
+                    continue
                 is_b = cut_j == (u + 1)
                 if ef:
                     sz = int(np.prod(bshapes[u]))
@@ -413,8 +567,14 @@ class SuperStepPrograms:
                 cu_j, m_j, cut_j, act, idx_j = inp
             x = images[m_j][idx_j]
             y = labels[m_j][idx_j]
+            # units at or past the max-cut bucket have no client replica in
+            # the ragged layout (CU < U): no cut can reach them, so the
+            # server copy is the effective parameter unconditionally — the
+            # same value the dense select produces (its replica is never
+            # updated there), hence bit-for-bit across layouts
             eff = [_select(u < cut_j, cu_j[u], sv["units"][u])
-                   for u in range(U)]
+                   for u in range(CU)] \
+                + [sv["units"][u] for u in range(CU, U)]
             if wire == "none":
                 (loss, _), (g_units, g_head) = jax.value_and_grad(
                     loss_fn, argnums=(0, 1), has_aux=True)(
@@ -436,7 +596,7 @@ class SuperStepPrograms:
                                      sv["units"][u]) for u in range(U)],
                    "head": _select(act, sv2["head"], sv["head"])}
             so3 = _sel_server_state(so2, so, keep_s, act)
-            ys = (g_units, jnp.where(act, loss, 0.0))
+            ys = (list(g_units[:CU]), jnp.where(act, loss, 0.0))
             if ef:
                 ys = ys + (jnp.where(act, res_new, res_j),)
             return (sv3, so3), ys
@@ -452,12 +612,15 @@ class SuperStepPrograms:
             sv = {"units": list(edge_tree["units"]),
                   "head": edge_tree["head"]}
             so = opt.init(sv)
+            # ragged layout: replicas exist only for the CU units a cut can
+            # reach — the per-slot memory and deferred-update math shrink
+            # to the owned prefix
             cu = [jax.tree.map(
                 lambda a: jnp.broadcast_to(a, (C,) + a.shape), u)
-                for u in edge_tree["units"]]
+                for u in edge_tree["units"][:CU]]
             co = jax.vmap(opt.init)(cu)
             w_slots = lengths_f[members] * mask          # (C,)
-            keep_cu = [mask & (cut_slots > u) for u in range(U)]
+            keep_cu = [mask & (cut_slots > u) for u in range(CU)]
 
             def step_body(carry, idx_s):
                 if ef:
@@ -475,7 +638,8 @@ class SuperStepPrograms:
                     g_cu, losses = ys
                 upd_c, co2 = jax.vmap(opt.update)(g_cu, co, cu)
                 cu2 = optim.apply_updates(cu, upd_c)
-                cu = [_select(keep_cu[u], cu2[u], cu[u]) for u in range(U)]
+                cu = [_select(keep_cu[u], cu2[u], cu[u])
+                      for u in range(CU)]
                 co = _sel_list_state(co2, co, keep_cu, jnp.asarray(mask))
                 out = (sv, so, cu, co, res) if ef else (sv, so, cu, co)
                 return out, (jnp.sum(losses),
@@ -489,6 +653,19 @@ class SuperStepPrograms:
             den = jnp.maximum(w_total, 1.0)
             merged = []
             for u in range(U):
+                if u >= CU:
+                    # no replica exists past the bucket: every slot's
+                    # weight lands on the server copy, so the unit-wise
+                    # FedAvg collapses to (w_total * sv) / den — the value
+                    # the dense path computes through its all-zero client
+                    # weights
+                    merged.append(jax.tree.map(
+                        lambda s, ref: jnp.where(
+                            w_total > 0.0,
+                            ((w_total * s.astype(jnp.float32))
+                             / den).astype(ref.dtype), ref),
+                        sv["units"][u], edge_tree["units"][u]))
+                    continue
                 w_u = w_slots * (cut_slots > u)
                 swu = w_total - jnp.sum(w_u)
                 num = aggregation.stacked_weighted_sum(cu[u], w_u)
@@ -504,13 +681,21 @@ class SuperStepPrograms:
                 return out, jnp.sum(ls), jnp.sum(cs), w_total, res_t[0]
             return out, jnp.sum(ls), jnp.sum(cs), w_total
 
-        # ---- parallel schedule (arXiv:2405.18707: the RSU executes the
-        # cohort's server-side passes in parallel and takes one weighted
+        # ---- parallel schedule (arXiv:2405.18707: the RSUs execute the
+        # cohorts' server-side passes in parallel and take one weighted
         # mean-gradient step per local step) ------------------------------
-        def par_slot_grad(cu_j, cut_j, m_j, idx_j, sv, res_j=None):
+        def par_slot_grad(cu_j, cut_j, m_j, idx_j, sv_j, res_j=None):
             x = images[m_j][idx_j]
             y = labels[m_j][idx_j]
-            eff = unravel(jnp.where(unit_ids < cut_j, cu_j, sv))
+            # the effective plane: the slot's prefix replica where owned,
+            # the serving RSU's plane elsewhere.  Dense layout: O = 0 and
+            # W = P, so this is the old full-plane select verbatim
+            own = jnp.where(unit_ids_w < cut_j, cu_j, sv_j[O:O + W])
+            if O > 0 or O + W < P:
+                plane = jnp.concatenate([sv_j[:O], own, sv_j[O + W:]])
+            else:
+                plane = own
+            eff = unravel(plane)
             if wire == "none":
                 (loss, _), (g_units, g_head) = jax.value_and_grad(
                     loss_fn, argnums=(0, 1), has_aux=True)(
@@ -524,66 +709,98 @@ class SuperStepPrograms:
                 return g, loss, res_new
             return g, loss
 
-        def rsu_round_par(edge_flat, members, mask, cut_slots, idx_slots,
-                          res_slots=None):
-            """One RSU's whole round with the parallel server schedule:
-            every op batches over the slot axis — no sequential inner
-            loop."""
-            cu = jnp.broadcast_to(edge_flat, (C, P))
+        def fleet_round_par(edge_stack_in, cuts, members_l, slot_seg_l,
+                            idx_slots_l, res_slots_l=None):
+            """The whole fleet's round over ONE flat slot axis: vmapped
+            client fwd/bwd over this shard's ``S_loc`` slots, per-RSU
+            aggregation as segment-sums.  Both layouts run this code — they
+            differ only in the slot table handed in (compacted occupied
+            slots vs the flattened padded (R, C) grid).  Segment scatter-
+            adds fold left from +0, so the dense table's phantom slots
+            (segment R, dropped row; exact-zero weights) are bitwise
+            neutral — the bit-for-bit layout-parity argument
+            (tests/test_ragged.py)."""
+            slot_mask_l = slot_seg_l < R_srv             # (S_loc,)
+            seg_gather = jnp.minimum(slot_seg_l, R_srv - 1)
+            cut_slots_l = cuts[members_l]
+            w_slots_l = lengths_f[members_l] * slot_mask_l
+
+            def seg_sum(vals):
+                out = jnp.zeros((R_srv + 1,) + vals.shape[1:],
+                                vals.dtype).at[slot_seg_l].add(vals)[:R_srv]
+                return lax.psum(out, MESH_AXIS) if psum_out else out
+
+            w_seg = seg_sum(w_slots_l)                   # (R_srv,)
+            den = jnp.maximum(w_seg, 1.0)
+            any_active = w_seg > 0.0
+            gw = w_slots_l / den[seg_gather]             # (S_loc,)
+            # (S_loc, P) / (S_loc, W): positions each slot's replica owns
+            keep_full = slot_mask_l[:, None] \
+                & (unit_ids[None, :] < cut_slots_l[:, None])
+            keep_w = keep_full[:, O:O + W]
+            sv0 = edge_stack_in                          # (R_srv, P)
+            cu = sv0[:, O:O + W][seg_gather]             # (S_loc, W)
             co = jax.vmap(opt.init)(cu)
-            sv, so = edge_flat, opt.init(edge_flat)
-            w_slots = lengths_f[members] * mask          # (C,)
-            w_total = jnp.sum(w_slots)
-            any_active = w_total > 0.0
-            # (C, P): positions each slot's replica owns while active
-            keep_c = mask[:, None] & (unit_ids[None, :] < cut_slots[:, None])
-            gw = (w_slots / jnp.maximum(w_total, 1.0))[:, None]
+            so = jax.vmap(opt.init)(sv0)
 
             def step_body(carry, idx_s):
                 if ef:
-                    sv, so, cu, co, res = carry
+                    sv_stack, so, cu, co, res = carry
                     g, losses, res_new = jax.vmap(
-                        par_slot_grad, in_axes=(0, 0, 0, 0, None, 0))(
-                            cu, cut_slots, members, idx_s, sv, res)
-                    res = jnp.where(mask[:, None], res_new, res)
+                        par_slot_grad, in_axes=(0, 0, 0, 0, 0, 0))(
+                            cu, cut_slots_l, members_l, idx_s,
+                            sv_stack[seg_gather], res)
+                    res = jnp.where(slot_mask_l[:, None], res_new, res)
                 else:
-                    sv, so, cu, co = carry
+                    sv_stack, so, cu, co = carry
                     g, losses = jax.vmap(
-                        par_slot_grad, in_axes=(0, 0, 0, 0, None))(
-                            cu, cut_slots, members, idx_s, sv)
-                # RSU: one |D_n|-weighted mean-gradient step over the
-                # cohort's server-side gradient shares
-                g_srv = jnp.sum(jnp.where(keep_c, 0.0, g) * gw, axis=0)
-                upd_s, so2 = opt.update(g_srv, so, sv)
-                sv = jnp.where(any_active, optim.apply_updates(sv, upd_s),
-                               sv)
-                so = _sel_flat_state(any_active, any_active, so2, so,
-                                     sv.shape)
-                # vehicles: per-replica updates, batched over the slot axis
-                upd_c, co2 = jax.vmap(opt.update)(g, co, cu)
-                cu = jnp.where(keep_c, optim.apply_updates(cu, upd_c), cu)
-                co = _sel_flat_state(keep_c, mask, co2, co, cu.shape)
-                out = (sv, so, cu, co, res) if ef else (sv, so, cu, co)
-                return out, (
-                    jnp.sum(jnp.where(mask, losses, 0.0)),
-                    jnp.sum(mask.astype(jnp.float32)))
+                        par_slot_grad, in_axes=(0, 0, 0, 0, 0))(
+                            cu, cut_slots_l, members_l, idx_s,
+                            sv_stack[seg_gather])
+                # RSUs: one |D_n|-weighted mean-gradient step each over
+                # their cohorts' server-side gradient shares
+                contrib = jnp.where(keep_full, 0.0, g) * gw[:, None]
+                g_srv = seg_sum(contrib)                 # (R_srv, P)
+                upd_s, so2 = jax.vmap(opt.update)(g_srv, so, sv_stack)
+                sv2 = optim.apply_updates(sv_stack, upd_s)
+                sv_stack = jnp.where(any_active[:, None], sv2, sv_stack)
+                so = _sel_flat_state(any_active[:, None], any_active,
+                                     so2, so, sv_stack.shape)
+                # vehicles: per-replica prefix updates over the slot axis
+                upd_c, co2 = jax.vmap(opt.update)(g[:, O:O + W], co, cu)
+                cu = jnp.where(keep_w, optim.apply_updates(cu, upd_c), cu)
+                co = _sel_flat_state(keep_w, slot_mask_l, co2, co,
+                                     cu.shape)
+                out = (sv_stack, so, cu, co, res) if ef \
+                    else (sv_stack, so, cu, co)
+                return out, seg_sum(jnp.where(slot_mask_l, losses, 0.0))
 
-            init = (sv, so, cu, co, res_slots) if ef else (sv, so, cu, co)
-            (sv, so, cu, co, *res_t), (ls, cs) = lax.scan(
-                step_body, init, idx_slots,
+            init = (sv0, so, cu, co, res_slots_l) if ef \
+                else (sv0, so, cu, co)
+            (sv_stack, so, cu, co, *res_t), ls_steps = lax.scan(
+                step_body, init, idx_slots_l,
                 unroll=min(steps, 4))
-            # unit-wise FedAvg on the flat plane: two fused reductions
-            wk = w_slots[:, None] * keep_c               # (C, P)
-            num = jnp.sum(wk * cu, axis=0)
-            w_srv = w_total - jnp.sum(wk, axis=0)
-            merged = (num + w_srv * sv) / jnp.maximum(w_total, 1.0)
-            merged = jnp.where(any_active, merged, edge_flat)
+            ls_rows = jnp.sum(ls_steps, axis=0)          # (R_srv,)
+            # unit-wise FedAvg: segment-sums over the owned window, the
+            # untouched remainder of the plane merges as (w_seg * sv) / den
+            # (its client weight is identically zero)
+            wk = w_slots_l[:, None] * keep_w             # (S_loc, W)
+            num = seg_sum(wk * cu)                       # (R_srv, W)
+            w_srv = w_seg[:, None] - seg_sum(wk)
+            merged_w = (num + w_srv * sv_stack[:, O:O + W]) / den[:, None]
+            if O > 0 or O + W < P:
+                merged = jnp.concatenate(
+                    [(w_seg[:, None] * sv_stack[:, :O]) / den[:, None],
+                     merged_w,
+                     (w_seg[:, None] * sv_stack[:, O + W:]) / den[:, None]],
+                    axis=1)
+            else:
+                merged = merged_w
+            edge_new = jnp.where(any_active[:, None], merged,
+                                 edge_stack_in)
             if ef:
-                return merged, jnp.sum(ls), jnp.sum(cs), w_total, res_t[0]
-            return merged, jnp.sum(ls), jnp.sum(cs), w_total
-
-        rsu_round = (rsu_round_seq if self.schedule == "sequential"
-                     else rsu_round_par)
+                return edge_new, ls_rows, w_seg, slot_mask_l, res_t[0]
+            return edge_new, ls_rows, w_seg, slot_mask_l
 
         def round_body(carry, x):
             rnd = x["rnd"]
@@ -598,18 +815,9 @@ class SuperStepPrograms:
                 serving, rates, residence = (st.serving_rsu, st.rates_bps,
                                              st.residence_s)
             cuts = pick_cuts(serving, rates, residence)
-            members, mask, counts = slot_table(serving, cuts)
+            order, seg_v, counts = slot_sort(serving, cuts)
             idx_all = fleet_batch_indices_traced(
                 jax.random.fold_in(base_key, rnd), lengths_dev, steps, batch)
-            if fm is not None:
-                # the slot table is fleet-wide and replicated; each shard
-                # trains its contiguous block of RSU rows
-                members_l = fleet_sharding.local_slice(members, R_loc)
-                mask_l = fleet_sharding.local_slice(mask, R_loc)
-            else:
-                members_l, mask_l = members, mask
-            idx_rsu = jnp.moveaxis(idx_all[:, members_l], 1, 0)
-            cut_slots = cuts[members_l]                # (R_loc, C)
             sched = cuts > 0
             if ef:
                 # residuals follow the vehicle (the plane is fleet-indexed
@@ -619,27 +827,85 @@ class SuperStepPrograms:
                 stale = sched & (cuts != carry["wire_cut"])
                 res_base = jnp.where(stale[:, None], 0.0,
                                      carry["wire_res"])
-                res_slots = res_base[members_l]        # (R_loc, C, res)
-                edge, ls, cs, w_tot, res_out = jax.vmap(rsu_round)(
-                    carry["edge"], members_l, mask_l, cut_slots, idx_rsu,
-                    res_slots)
+            if self.schedule == "sequential":
+                members, mask = slot_table_seq(order, counts)
+                if fm is not None:
+                    # the slot table is fleet-wide and replicated; each
+                    # shard trains its contiguous block of RSU rows
+                    members_l = fleet_sharding.local_slice(members, R_loc)
+                    mask_l = fleet_sharding.local_slice(mask, R_loc)
+                else:
+                    members_l, mask_l = members, mask
+                idx_rsu = jnp.moveaxis(idx_all[:, members_l], 1, 0)
+                cut_slots = cuts[members_l]            # (R_loc, C)
+                if ef:
+                    res_slots = res_base[members_l]    # (R_loc, C, res)
+                    edge, ls, cs, w_tot, res_out = jax.vmap(rsu_round_seq)(
+                        carry["edge"], members_l, mask_l, cut_slots,
+                        idx_rsu, res_slots)
+                else:
+                    edge, ls, cs, w_tot = jax.vmap(rsu_round_seq)(
+                        carry["edge"], members_l, mask_l, cut_slots,
+                        idx_rsu)
+                ef_mask, ef_members = mask_l, members_l
+                cnt = jnp.sum(cs)
+                if fm is not None:
+                    # per-RSU results come home via all_gather so every
+                    # total (loss/count sums, the sample counters, the
+                    # cloud merge) reduces the full (R,) stack in the SAME
+                    # order as the single-device program — gather-then-
+                    # reduce is the order-preserving form of the weighted
+                    # all-reduce, which is what keeps sharded sgd
+                    # bit-for-bit (a psum of per-shard partials would
+                    # reassociate the fp additions)
+                    ls = lax.all_gather(ls, MESH_AXIS, tiled=True)
+                    cnt = jnp.sum(lax.all_gather(cs, MESH_AXIS,
+                                                 tiled=True))
+                    w_tot = lax.all_gather(w_tot, MESH_AXIS, tiled=True)
+                    edge_stack = aggregation.gathered_stack(edge,
+                                                            MESH_AXIS)
+                else:
+                    edge_stack = edge
             else:
-                edge, ls, cs, w_tot = jax.vmap(rsu_round)(
-                    carry["edge"], members_l, mask_l, cut_slots, idx_rsu)
-            if fm is not None:
-                # per-RSU results come home via all_gather so every total
-                # (loss/count sums, the sample counters, the cloud merge)
-                # reduces the full (R,) stack in the SAME order as the
-                # single-device program — gather-then-reduce is the order-
-                # preserving form of the weighted all-reduce, which is what
-                # keeps sharded sgd bit-for-bit (a psum of per-shard
-                # partials would reassociate the fp additions)
-                ls = lax.all_gather(ls, MESH_AXIS, tiled=True)
-                cs = lax.all_gather(cs, MESH_AXIS, tiled=True)
-                w_tot = lax.all_gather(w_tot, MESH_AXIS, tiled=True)
-                edge_stack = aggregation.gathered_stack(edge, MESH_AXIS)
-            else:
-                edge_stack = edge
+                members, slot_seg = slot_table_flat(order, seg_v, counts)
+                if fm is None:
+                    members_l, slot_seg_l = members, slot_seg
+                elif layout == "dense":
+                    # RSU-aligned blocks: this shard's slots are its R_loc
+                    # rows of the padded grid; localize segment ids and
+                    # clip the phantom segment R onto the local drop row
+                    members_l = fleet_sharding.local_slice(members, S_loc)
+                    seg = fleet_sharding.local_slice(slot_seg, S_loc)
+                    r0 = lax.axis_index(MESH_AXIS) * R_loc
+                    slot_seg_l = jnp.minimum(seg - r0,
+                                             R_loc).astype(jnp.int32)
+                else:
+                    # occupancy-balanced blocks of the compacted axis
+                    members_l = fleet_sharding.local_slice(members, S_loc)
+                    slot_seg_l = fleet_sharding.local_slice(slot_seg,
+                                                            S_loc)
+                idx_slots = idx_all[:, members_l]      # (steps, S_loc, b)
+                if ef:
+                    res_slots = res_base[members_l]    # (S_loc, res)
+                    edge, ls, w_tot, slot_mask_l, res_out = \
+                        fleet_round_par(carry["edge"], cuts, members_l,
+                                        slot_seg_l, idx_slots, res_slots)
+                else:
+                    edge, ls, w_tot, slot_mask_l = fleet_round_par(
+                        carry["edge"], cuts, members_l, slot_seg_l,
+                        idx_slots)
+                ef_mask, ef_members = slot_mask_l, members_l
+                # every occupied slot runs exactly `steps` batches
+                cnt = (jnp.sum(counts) * steps).astype(jnp.float32)
+                if fm is not None and layout == "dense":
+                    ls = lax.all_gather(ls, MESH_AXIS, tiled=True)
+                    w_tot = lax.all_gather(w_tot, MESH_AXIS, tiled=True)
+                    edge_stack = aggregation.gathered_stack(edge,
+                                                            MESH_AXIS)
+                else:
+                    # single device, or ragged mesh: segment-sums were
+                    # already psum'd full-width and the edge is replicated
+                    edge_stack = edge
             samples = carry["samples"] + w_tot
             if ef:
                 # masked scatter-ADD of the residual deltas back onto the
@@ -648,10 +914,10 @@ class SuperStepPrograms:
                 # unique per round (a vehicle is served by one RSU), and
                 # under a mesh the psum of per-shard deltas reassembles
                 # the replicated plane — other shards contribute zeros
-                delta = jnp.where(mask_l[..., None], res_out - res_slots,
+                delta = jnp.where(ef_mask[..., None], res_out - res_slots,
                                   0.0)
                 upd = jnp.zeros_like(res_base).at[
-                    members_l.reshape(-1)].add(
+                    ef_members.reshape(-1)].add(
                         delta.reshape(-1, delta.shape[-1]))
                 if fm is not None:
                     upd = lax.psum(upd, MESH_AXIS)
@@ -679,7 +945,7 @@ class SuperStepPrograms:
             if ef:
                 carry2["wire_res"] = wire_res2
                 carry2["wire_cut"] = wire_cut2
-            ys = {"loss": jnp.sum(ls), "cnt": jnp.sum(cs), "cuts": cuts,
+            ys = {"loss": jnp.sum(ls), "cnt": cnt, "cuts": cuts,
                   "serving": serving.astype(jnp.int32),
                   "rates": rates.astype(jnp.float32),
                   "handover": handover, "counts": counts}
@@ -689,7 +955,11 @@ class SuperStepPrograms:
             return lax.scan(round_body, carry, xs)
 
         if fm is not None:
-            carry_spec = {"edge": PSpec(MESH_AXIS), "samples": PSpec(),
+            # ragged + parallel replicates the edge stack (the mesh splits
+            # the compacted slot axis, not the RSU axis); every other
+            # combination shards the edge's leading RSU axis as before
+            edge_spec = PSpec() if ragged_par else PSpec(MESH_AXIS)
+            carry_spec = {"edge": edge_spec, "samples": PSpec(),
                           "prev": PSpec(), "global": PSpec()}
             if ef:
                 carry_spec["wire_res"] = PSpec()
@@ -701,8 +971,20 @@ class SuperStepPrograms:
         return jax.jit(superstep, donate_argnums=(0,))
 
     # ---- cache / AOT --------------------------------------------------
-    def signature(self, k: int, capacity: int) -> SuperStepSignature:
-        return SuperStepSignature(k, capacity, not self.traced_mobility)
+    def signature(self, k: int, capacity: int,
+                  slots: int = 0) -> SuperStepSignature:
+        """The compile-cache key for a K-window at per-RSU capacity
+        ``capacity``.  ``slots`` (the bucketed max TOTAL covered count) is
+        honored only by the ragged layout's parallel schedule; callers that
+        do not plan it fall back to ``R * capacity`` — always sufficient,
+        merely uncompacted."""
+        if self.layout == "ragged" and self.schedule == "parallel":
+            s = int(slots) if slots and int(slots) > 0 \
+                else self.n_rsus_padded * int(capacity)
+        else:
+            s = 0
+        return SuperStepSignature(k, capacity, not self.traced_mobility,
+                                  s, self.max_cut_bucket)
 
     def get(self, sig: SuperStepSignature):
         """The program for ``sig``; builds one (a counted compile fallback)

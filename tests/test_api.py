@@ -82,7 +82,8 @@ def test_builtin_registries_present():
     text = {a for a in ARCH_IDS if get_config(a).frontend == "none"}
     assert text <= set(api.MODELS)
     assert set(api.SCENARIOS) == {"single_rsu", "highway_corridor",
-                                  "urban_grid", "trace_replay"}
+                                  "highway_zipf", "urban_grid",
+                                  "trace_replay"}
     assert set(api.SCHEDULES) == {"sequential", "parallel"}
     assert {"paper", "paper-literal", "latency", "energy", "memory",
             "residence"} == set(api.STRATEGIES)
@@ -229,9 +230,9 @@ def test_every_registry_combination_builds_or_fails_actionably():
                                         "allowed" in msg), msg
             failed += 1
     # both populations exist, and the valid grid is the expected size:
-    # models x (1 single-RSU x 5 strategies + 3 scenarios x 3 strategies
+    # models x (1 single-RSU x 5 strategies + 4 scenarios x 3 strategies
     #           x 2 schedules)
-    assert built == len(api.MODELS) * (5 + 3 * 3 * 2)
+    assert built == len(api.MODELS) * (5 + 4 * 3 * 2)
     assert failed > 0
 
 

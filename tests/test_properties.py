@@ -184,3 +184,42 @@ def test_wire_error_feedback_residual_bounded(k_frac, amp, seed):
     assert max(norms[15:]) <= 8.0 * x_norm + 1e-3
     # and the plateau is flat, not climbing
     assert max(norms[25:]) <= 1.25 * max(norms[10:20]) + 1e-3
+
+
+# ------------------------------------------------------ cut-prefix planes
+@SET
+@given(st.integers(2, 12),                       # n_units
+       st.lists(st.integers(1, 40), min_size=1, max_size=12),  # unit sizes
+       st.integers(1, 30),                       # head size
+       st.lists(st.integers(0, 12), min_size=1, max_size=64),  # cut vector
+       st.integers(0, 2 ** 31 - 1))
+def test_prefix_plane_covers_every_cut(n_units, sizes, head, cuts, seed):
+    """DESIGN.md §12 invariant, for ARBITRARY cut vectors and unit sizes:
+    the signature's max-cut bucket is a pow2 (or n_units-1) upper bound on
+    every reachable cut, and the owned prefix window is exactly the
+    contiguous run of parameters whose unit id falls below the bucket —
+    so a plane sized to the window can hold any scheduled client's owned
+    units, and nothing more."""
+    from repro.core.superstep import cut_prefix_bucket, owned_window
+    sizes = (sizes * n_units)[:n_units]
+    cuts = [min(c, n_units - 1) for c in cuts]
+    bucket = cut_prefix_bucket(max(cuts), n_units)
+    # upper bound on every cut, pow2-bucketed (retrace-free under churn)
+    assert bucket >= max(cuts)
+    assert bucket <= max(n_units - 1, 1)
+    assert bucket == n_units - 1 or (bucket & (bucket - 1)) == 0
+    # the engine's plane layout: head serializes first (ids = n_units),
+    # then units ascending — mirrored here without building a model
+    ids = np.concatenate([np.full(head, n_units, np.int32)]
+                         + [np.full(sizes[u], u, np.int32)
+                            for u in range(n_units)])
+    off, width = owned_window(ids, bucket)
+    assert width == int((ids < bucket).sum())
+    assert width == sum(sizes[:bucket])
+    owned = np.flatnonzero(ids < bucket)
+    if width:
+        np.testing.assert_array_equal(owned, np.arange(off, off + width))
+    # every parameter a scheduled cut can own lies inside the window
+    for c in set(cuts):
+        assert (np.flatnonzero(ids < c) >= off).all()
+        assert (np.flatnonzero(ids < c) < off + width).all()
