@@ -1,0 +1,148 @@
+"""Chaos benchmark: accuracy vs dropout under the fault plane (DESIGN.md §13).
+
+Sweeps the seeded mid-round dropout rate over ``--dropouts`` (default
+0, 0.1, 0.2, 0.4) on the multi-RSU fused super-step engine and reports, per
+rate, the accuracy the survivor-weighted merges reach plus the robustness
+telemetry the fault plane exposes: effective participation
+(``survivor_frac``), the update mass that never merged
+(``lost_update_bytes``), and the per-process failure counts.  With
+``--straggler-factor > 0`` the staleness bank engages and the row gains the
+run's staleness histogram.
+
+Every row is one ``repro.api.run(ExperimentSpec)`` call — same front door,
+same engines, same compiled programs as the clean benchmarks; the dropout
+rate is the ONLY thing that varies, so the curve isolates what failures
+cost the model, not what they cost the harness.  Each row asserts
+``compile_fallbacks == 0``: fault churn is carried data, never a program
+signature, so the chaos sweep compiles exactly as often as a clean run.
+
+  PYTHONPATH=src python benchmarks/bench_faults.py
+  -> BENCH_faults.json (repo root) + benchmarks/out/BENCH_faults.json
+"""
+from __future__ import annotations
+
+import argparse
+import gc
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))
+
+import jax
+import numpy as np
+
+from bench_io import write_bench
+from repro import api
+
+
+def _spec(args, dropout: float) -> api.ExperimentSpec:
+    return api.ExperimentSpec(
+        model="mlp9",
+        train=api.TrainConfig(scheme="asfl", rounds=args.rounds,
+                              local_steps=args.local_steps,
+                              batch_size=args.batch, lr=1e-3,
+                              eval_every=1,
+                              server_schedule=args.schedule),
+        faults=api.FaultsConfig(dropout_rate=dropout,
+                                upload_loss_rate=args.upload_loss,
+                                straggler_factor=args.straggler_factor,
+                                rsu_outage_rate=args.rsu_outage,
+                                seed=args.fault_seed),
+        adaptive=api.AdaptiveConfig(strategy=args.strategy),
+        fleet=api.FleetConfig(n_vehicles=args.fleet, scenario=args.scenario,
+                              scenario_kwargs={"seed": args.fleet},
+                              cloud_sync_every=1, round_interval_s=10.0,
+                              per_vehicle_samples=64, data_seed=args.fleet),
+        runtime=api.RuntimeConfig(superstep=args.superstep, precompile=True))
+
+
+def bench_one(args, dropout: float) -> dict:
+    res = api.run(_spec(args, dropout), timeit=args.timeit)
+    assert all(np.isfinite(m.loss) for m in res.history)
+    assert res.diagnostics["compile_fallbacks"] == 0
+    accs = [m.test_acc for m in res.history if np.isfinite(m.test_acc)]
+    row = {
+        "dropout": dropout,
+        "upload_loss": args.upload_loss,
+        "straggler_factor": args.straggler_factor,
+        "rsu_outage": args.rsu_outage,
+        "final_acc": float(accs[-1]) if accs else float("nan"),
+        "final_loss": float(res.history[-1].loss),
+        # robustness telemetry (DESIGN.md §13)
+        "survivor_frac": res.totals["survivor_frac"],
+        "lost_update_bytes": res.totals["lost_update_bytes"],
+        "n_dropout": res.totals["n_dropout"],
+        "n_upload_lost": res.totals["n_upload_lost"],
+        "n_straggler": res.totals["n_straggler"],
+        "round_s": res.timing["round_s"],
+        "rounds_per_s": res.timing["rounds_per_s"],
+    }
+    if "staleness_hist" in res.diagnostics:
+        row["staleness_hist"] = res.diagnostics["staleness_hist"]
+    return row
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dropouts", default="0,0.1,0.2,0.4",
+                    help="mid-round dropout rates to sweep")
+    ap.add_argument("--upload-loss", type=float, default=0.0,
+                    help="P[update lost after full local work], every row")
+    ap.add_argument("--straggler-factor", type=float, default=0.0,
+                    help=">0 engages the staleness bank (deadline = factor "
+                         "x residence)")
+    ap.add_argument("--rsu-outage", type=float, default=0.0)
+    ap.add_argument("--fault-seed", type=int, default=0)
+    ap.add_argument("--fleet", type=int, default=64)
+    ap.add_argument("--scenario", default="highway_corridor")
+    ap.add_argument("--strategy", default="paper")
+    ap.add_argument("--rounds", type=int, default=12)
+    ap.add_argument("--local-steps", type=int, default=2)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--schedule", default="sequential",
+                    choices=sorted(api.SCHEDULES))
+    ap.add_argument("--superstep", type=int, default=4)
+    ap.add_argument("--timeit", type=int, default=1)
+    ap.add_argument("--no-write", action="store_true")
+    args = ap.parse_args()
+
+    results = []
+    for rate in (float(s) for s in args.dropouts.split(",")):
+        gc.collect()
+        row = bench_one(args, rate)
+        results.append(row)
+        print(f"dropout={rate:4.2f} acc={row['final_acc']:.3f} "
+              f"loss={row['final_loss']:.3f} "
+              f"survivor_frac={row['survivor_frac']:.2f} "
+              f"lost={row['lost_update_bytes']/1e6:6.2f} MB "
+              f"dropped={row['n_dropout']:3d} "
+              f"upload_lost={row['n_upload_lost']:3d} "
+              f"({row['rounds_per_s']:.2f} rounds/s)", flush=True)
+
+    clean = next((r for r in results if r["dropout"] == 0.0), None)
+    out = {
+        "config": {"fleet": args.fleet, "scenario": args.scenario,
+                   "strategy": args.strategy, "rounds": args.rounds,
+                   "local_steps": args.local_steps, "batch": args.batch,
+                   "schedule": args.schedule, "superstep": args.superstep,
+                   "upload_loss": args.upload_loss,
+                   "straggler_factor": args.straggler_factor,
+                   "rsu_outage": args.rsu_outage,
+                   "fault_seed": args.fault_seed,
+                   "backend": jax.default_backend(),
+                   "driver": "repro.api.run"},
+        "accuracy_vs_dropout": {str(r["dropout"]): r["final_acc"]
+                                for r in results},
+        # accuracy the failures cost, relative to the clean row
+        "acc_drop_vs_clean": ({str(r["dropout"]):
+                               float(clean["final_acc"] - r["final_acc"])
+                               for r in results} if clean else None),
+        "results": results,
+    }
+    if not args.no_write:
+        write_bench("BENCH_faults", out, "benchmarks/bench_faults.py")
+
+
+if __name__ == "__main__":
+    main()

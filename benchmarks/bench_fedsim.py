@@ -226,6 +226,13 @@ def bench(sizes: List[int], schemes: List[str], model_kind: str,
                        "mode": res.diagnostics["mode"],
                        "engine_round_s": t_eng,
                        "warmup_s": res.timing["warmup_s"],
+                       # fault-plane telemetry (DESIGN.md §13) — trivial
+                       # values here (this bench runs clean), kept so the
+                       # row schema matches bench_scenarios
+                       "survivor_frac": res.totals["survivor_frac"],
+                       "lost_update_bytes": res.totals["lost_update_bytes"],
+                       "n_dropout": res.totals["n_dropout"],
+                       "n_upload_lost": res.totals["n_upload_lost"],
                        "seed_round_s": None, "speedup": None}
                 # the seed-loop reference and the api-overhead probe run on
                 # the single-device rows only (they measure engine overhead,

@@ -46,7 +46,11 @@ from repro.configs.base import cache_dir_is_warm
 from repro.core.fedsim import ScenarioEngine
 
 
-def _spec(name: str, n: int, args, devices: int = 1) -> api.ExperimentSpec:
+def _spec(name: str, n: int, args, devices: int = 1,
+          fault_dropout: float = None,
+          fault_upload_loss: float = None) -> api.ExperimentSpec:
+    fd = args.fault_dropout if fault_dropout is None else fault_dropout
+    fu = args.fault_upload_loss if fault_upload_loss is None else fault_upload_loss
     return api.ExperimentSpec(
         model="mlp9",
         train=api.TrainConfig(scheme="asfl", rounds=args.rounds,
@@ -54,6 +58,8 @@ def _spec(name: str, n: int, args, devices: int = 1) -> api.ExperimentSpec:
                               batch_size=args.batch, lr=1e-3, eval_every=0,
                               server_schedule=args.schedule,
                               wire=args.wire, wire_k=args.wire_k),
+        faults=api.FaultsConfig(dropout_rate=fd, upload_loss_rate=fu,
+                                seed=args.fault_seed),
         adaptive=api.AdaptiveConfig(strategy=args.strategy),
         fleet=api.FleetConfig(n_vehicles=n, scenario=name,
                               scenario_kwargs={"seed": n},
@@ -68,13 +74,26 @@ def _spec(name: str, n: int, args, devices: int = 1) -> api.ExperimentSpec:
                                   compilation_cache_dir=args.compilation_cache))
 
 
-def bench_one(name: str, n: int, args, devices: int = 1) -> dict:
-    res = api.run(_spec(name, n, args, devices), timeit=args.timeit)
+def bench_one(name: str, n: int, args, devices: int = 1,
+              fault_dropout: float = None,
+              fault_upload_loss: float = None) -> dict:
+    spec = _spec(name, n, args, devices, fault_dropout, fault_upload_loss)
+    res = api.run(spec, timeit=args.timeit)
     assert all(np.isfinite(m.loss) for m in res.history)
+    # zero retraces even under fault churn (DESIGN.md §13): fault masks are
+    # data on the carry, never part of a program signature
     assert res.diagnostics["compile_fallbacks"] == 0
     occ = res.diagnostics["occupancy"]
     return {
         "scenario": name, "n_vehicles": n, "devices": devices,
+        # fault plane: rates + robustness telemetry (zero-fault rows report
+        # the trivial values, keeping the row schema uniform)
+        "fault_dropout": spec.faults.dropout_rate,
+        "fault_upload_loss": spec.faults.upload_loss_rate,
+        "survivor_frac": res.totals["survivor_frac"],
+        "lost_update_bytes": res.totals["lost_update_bytes"],
+        "n_dropout": res.totals["n_dropout"],
+        "n_upload_lost": res.totals["n_upload_lost"],
         "n_rsus": res.diagnostics["n_rsus"],
         "mode": res.diagnostics["mode"], "schedule": args.schedule,
         "superstep": args.superstep, "rounds": args.rounds,
@@ -133,7 +152,7 @@ def check_baseline(out: dict, baseline_path: str, max_regress: float) -> int:
     # committed baseline's — that means the baseline needs regenerating
     keys = ("local_steps", "batch", "strategy", "cloud_sync_every",
             "superstep", "schedule", "slot_capacity", "wire",
-            "superstep_layout")
+            "superstep_layout", "fault_dropout", "fault_upload_loss")
     mismatch = {k: (base.get("config", {}).get(k), out["config"].get(k))
                 for k in keys
                 if base.get("config", {}).get(k) != out["config"].get(k)}
@@ -141,11 +160,18 @@ def check_baseline(out: dict, baseline_path: str, max_regress: float) -> int:
         print(f"baseline config mismatch {mismatch}; skipping perf check "
               f"(regenerate {baseline_path})")
         return 0
-    base_rows = {(r["scenario"], r["n_vehicles"], r.get("devices", 1)):
-                 r["rounds_per_s"] for r in base.get("results", [])}
+    def _perf_key(r):
+        # the chaos row times different work than its zero-fault twin —
+        # give it its own baseline slot
+        faulted = bool(r.get("fault_dropout") or r.get("fault_upload_loss"))
+        return (r["scenario"], r["n_vehicles"], r.get("devices", 1),
+                "faulted" if faulted else "clean")
+
+    base_rows = {_perf_key(r): r["rounds_per_s"]
+                 for r in base.get("results", [])}
     failures = []
     for row in out["results"]:
-        key = (row["scenario"], row["n_vehicles"], row.get("devices", 1))
+        key = _perf_key(row)
         if key not in base_rows:
             print(f"no baseline row for {key}; skipping")
             continue
@@ -189,6 +215,17 @@ def main():
                     help="cut-boundary wire scheme (kernels/wire.py)")
     ap.add_argument("--wire-k", type=float, default=0.25,
                     help="topk_int8 keep fraction per group")
+    ap.add_argument("--fault-dropout", type=float, default=0.0,
+                    help="P[vehicle drops mid-round] applied to EVERY row "
+                         "(core/faults.py; 0 = clean rows + one dedicated "
+                         "chaos row)")
+    ap.add_argument("--fault-upload-loss", type=float, default=0.0,
+                    help="P[update lost after full local work], every row")
+    ap.add_argument("--fault-seed", type=int, default=0)
+    ap.add_argument("--no-fault-row", action="store_true",
+                    help="skip the dedicated seeded-chaos row (dropout 0.2 "
+                         "+ upload loss 0.1 on the first scenario) that the "
+                         "CI perf gate tracks")
     ap.add_argument("--compilation-cache", default=None, metavar="DIR",
                     help="persistent XLA compilation cache directory")
     ap.add_argument("--devices", default="1", metavar="N[,M...]",
@@ -226,6 +263,23 @@ def main():
                       f"({row['rounds_per_s']:.2f} rounds/s) "
                       f"handovers={row['handovers']}", flush=True)
 
+    if (args.fault_dropout == 0.0 and args.fault_upload_loss == 0.0
+            and not args.no_fault_row):
+        # dedicated chaos row (DESIGN.md §13): seeded 20% dropout + 10%
+        # upload loss on the first scenario at the smallest fleet, so the
+        # perf gate tracks the survivor-weighted merge path too
+        name = args.scenarios.split(",")[0]
+        n = min(int(s) for s in args.sizes.split(","))
+        gc.collect()
+        row = bench_one(name, n, args, DEVICE_COUNTS[0],
+                        fault_dropout=0.2, fault_upload_loss=0.1)
+        results.append(row)
+        print(f"{name:17s} n={n:4d} CHAOS drop=0.20 loss=0.10 "
+              f"survivor_frac={row['survivor_frac']:.2f} "
+              f"lost={row['lost_update_bytes']/1e6:.2f} MB "
+              f"round={row['round_s']*1e3:9.1f} ms "
+              f"({row['rounds_per_s']:.2f} rounds/s)", flush=True)
+
     api_overhead = None
     if not args.skip_api_overhead:
         fleet = (64 if 64 in [int(s) for s in args.sizes.split(",")]
@@ -237,8 +291,11 @@ def main():
               f"{api_overhead['direct_round_s']*1e3:.1f})", flush=True)
 
     def row_key(r):
-        return device_row_key(f"{r['scenario']}@{r['n_vehicles']}",
-                              r["devices"])
+        key = device_row_key(f"{r['scenario']}@{r['n_vehicles']}",
+                             r["devices"])
+        if r.get("fault_dropout") or r.get("fault_upload_loss"):
+            key += "+faults"
+        return key
 
     out = {
         "config": {"local_steps": args.local_steps, "batch": args.batch,
@@ -249,6 +306,8 @@ def main():
                    "superstep_layout": args.layout,
                    "timeit": args.timeit,
                    "wire": args.wire, "wire_k": args.wire_k,
+                   "fault_dropout": args.fault_dropout,
+                   "fault_upload_loss": args.fault_upload_loss,
                    "devices": list(DEVICE_COUNTS),
                    "compilation_cache": args.compilation_cache,
                    "backend": jax.default_backend(),

@@ -30,13 +30,13 @@ from repro.api.registry import (  # noqa: F401
     register_wire)
 from repro.api.runner import RunResult, build_engine, run  # noqa: F401
 from repro.api.spec import (  # noqa: F401
-    SIM_CONFIG_FIELD_MAP, AdaptiveConfig, ExperimentSpec, FleetConfig,
-    RuntimeConfig, TrainConfig)
+    SIM_CONFIG_FIELD_MAP, AdaptiveConfig, ExperimentSpec, FaultsConfig,
+    FleetConfig, RuntimeConfig, TrainConfig)
 
 __all__ = [
     # spec
     "ExperimentSpec", "TrainConfig", "AdaptiveConfig", "FleetConfig",
-    "RuntimeConfig", "SIM_CONFIG_FIELD_MAP",
+    "RuntimeConfig", "FaultsConfig", "SIM_CONFIG_FIELD_MAP",
     # registries
     "MODELS", "SCENARIOS", "STRATEGIES", "SCHEDULES", "WIRES",
     "ModelEntry", "StrategyEntry", "ScheduleEntry", "WireEntry",

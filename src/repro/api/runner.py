@@ -130,7 +130,7 @@ def _drive(engine, on_round, on_cloud_merge):
 
 def _totals(history) -> Dict[str, float]:
     accs = [m.test_acc for m in history if np.isfinite(m.test_acc)]
-    return {
+    totals = {
         "rounds": len(history),
         "comm_bytes": float(sum(m.comm_bytes for m in history)),
         "energy_j": float(sum(m.energy_j for m in history)),
@@ -138,6 +138,21 @@ def _totals(history) -> Dict[str, float]:
         "final_loss": float(history[-1].loss) if history else float("nan"),
         "final_acc": float(accs[-1]) if accs else float("nan"),
     }
+    if history:
+        # fault-plane robustness telemetry (DESIGN.md §13): effective
+        # participation and the update mass that never merged.  getattr
+        # defaults keep loaded pre-fault histories working
+        totals["survivor_frac"] = float(np.mean(
+            [getattr(m, "survivor_frac", 1.0) for m in history]))
+        totals["lost_update_bytes"] = float(sum(
+            getattr(m, "lost_update_bytes", 0.0) for m in history))
+        totals["n_dropout"] = int(sum(
+            getattr(m, "n_dropout", 0) for m in history))
+        totals["n_upload_lost"] = int(sum(
+            getattr(m, "n_upload_lost", 0) for m in history))
+        totals["n_straggler"] = int(sum(
+            getattr(m, "n_straggler", 0) for m in history))
+    return totals
 
 
 def run(spec: ExperimentSpec, *,
@@ -199,6 +214,13 @@ def run(spec: ExperimentSpec, *,
     diagnostics.update(
         mesh_devices=(mesh.n_devices if mesh is not None else 1),
         fleet_axis=(mesh.axis if mesh is not None else None))
+    if spec.faults.straggler_factor > 0.0:
+        # staleness histogram (DESIGN.md §13): distribution of the banked
+        # straggler weight merged per round across the run
+        stale = [float(getattr(m, "stale_merged", 0.0)) for m in history]
+        counts, edges = np.histogram(stale, bins=8)
+        diagnostics["staleness_hist"] = {"counts": counts.tolist(),
+                                         "edges": edges.tolist()}
     # final_params come home to host numpy: results must not pin (or be
     # stranded on) mesh device buffers after the run
     return RunResult(spec=spec, engine_kind=spec.engine_kind,

@@ -1,7 +1,7 @@
 """Declarative experiment specs: nested config groups over one flat engine
 config, validated against the registries at construction time.
 
-An :class:`ExperimentSpec` is pure data — strings, numbers, and four nested
+An :class:`ExperimentSpec` is pure data — strings, numbers, and five nested
 groups — that fully determines a federation experiment:
 
 * :class:`TrainConfig` — the learning loop: scheme, batches, epochs/steps,
@@ -14,6 +14,9 @@ groups — that fully determines a federation experiment:
   sync cadence, data sizing, and the analytic-cost knobs.
 * :class:`RuntimeConfig` — XLA execution: seed, intra-bucket schedule,
   super-step fusion K, slot capacity, AOT precompile, compilation cache.
+* :class:`FaultsConfig` — the fault plane (core/faults.py, DESIGN.md §13):
+  seeded dropout / upload-loss / straggler / RSU-outage processes plus the
+  legacy coverage test.  All-defaults = no faults, byte-identical programs.
 
 Validation happens in ``__post_init__``: unknown registry keys, field
 values outside the allowed sets, and combinations the selected engine
@@ -37,7 +40,7 @@ from repro.core.fedsim import SimConfig
 
 __all__ = [
     "TrainConfig", "AdaptiveConfig", "FleetConfig", "RuntimeConfig",
-    "ExperimentSpec", "SIM_CONFIG_FIELD_MAP",
+    "FaultsConfig", "ExperimentSpec", "SIM_CONFIG_FIELD_MAP",
 ]
 
 
@@ -112,6 +115,21 @@ class RuntimeConfig:
     fleet_axis: str = "auto"
 
 
+@dataclasses.dataclass(frozen=True)
+class FaultsConfig:
+    """The fault plane (core/faults.py, DESIGN.md §13).  All-defaults is
+    the no-fault spec: the engines gate every fault hook at Python level,
+    so the compiled programs are byte-identical to a pre-fault build.
+    ``fleet.mobility_dropout`` is the legacy spelling of ``coverage``."""
+    coverage: bool = False            # deterministic §II-C in-range test
+    dropout_rate: float = 0.0         # P[vehicle drops mid-round]
+    upload_loss_rate: float = 0.0     # P[update lost after full local work]
+    straggler_factor: float = 0.0     # >0: deadline factor x residence
+    rsu_outage_rate: float = 0.0      # P[RSU misses a round] (multi-RSU)
+    staleness_discount: float = 0.5   # weight for banked straggler updates
+    seed: int = 0                     # dedicated fault PRNG stream
+
+
 # SimConfig field -> (spec group, group field): the deprecation shim's
 # field-for-field mapping, used by both converters below (and asserted
 # exhaustive over SimConfig's fields in tests/test_api.py)
@@ -134,6 +152,13 @@ SIM_CONFIG_FIELD_MAP: Dict[str, Tuple[str, str]] = {
     "round_interval_s": ("fleet", "round_interval_s"),
     "mobility_dropout": ("fleet", "mobility_dropout"),
     "server_flops": ("fleet", "server_flops"),
+    "fault_coverage": ("faults", "coverage"),
+    "fault_dropout": ("faults", "dropout_rate"),
+    "fault_upload_loss": ("faults", "upload_loss_rate"),
+    "fault_straggler": ("faults", "straggler_factor"),
+    "fault_rsu_outage": ("faults", "rsu_outage_rate"),
+    "fault_staleness_discount": ("faults", "staleness_discount"),
+    "fault_seed": ("faults", "seed"),
     "seed": ("runtime", "seed"),
     "cohort_parallel": ("runtime", "cohort_parallel"),
     "superstep": ("runtime", "superstep"),
@@ -145,7 +170,8 @@ SIM_CONFIG_FIELD_MAP: Dict[str, Tuple[str, str]] = {
 }
 
 _GROUP_TYPES = {"train": TrainConfig, "adaptive": AdaptiveConfig,
-                "fleet": FleetConfig, "runtime": RuntimeConfig}
+                "fleet": FleetConfig, "runtime": RuntimeConfig,
+                "faults": FaultsConfig}
 
 
 @dataclasses.dataclass(frozen=True)
@@ -160,6 +186,7 @@ class ExperimentSpec:
         default_factory=AdaptiveConfig)
     fleet: FleetConfig = dataclasses.field(default_factory=FleetConfig)
     runtime: RuntimeConfig = dataclasses.field(default_factory=RuntimeConfig)
+    faults: FaultsConfig = dataclasses.field(default_factory=FaultsConfig)
     model_kwargs: Dict[str, Any] = dataclasses.field(default_factory=dict)
 
     # ---- engine routing ------------------------------------------------
@@ -247,6 +274,11 @@ class ExperimentSpec:
                     "'memory' strategy; the scenario engine's on-device "
                     "strategies are: "
                     f"{' | '.join(sorted(n for n, s in registry.STRATEGIES.items() if registry.SCENARIO in s.engines))}")
+            if self.faults.coverage:
+                raise ValueError(
+                    "faults.coverage is the single-RSU §II-C in-range "
+                    "test; multi-RSU scenarios model coverage through the "
+                    "scenario itself (serving_rsu == -1)")
         else:
             if self.runtime.superstep > 1:
                 raise ValueError(
@@ -259,6 +291,19 @@ class ExperimentSpec:
                     "fleet.cloud_sync_every is the multi-RSU edge->cloud "
                     "cadence; the single-RSU engine aggregates at its one "
                     "RSU every round (leave it at 1 or set a scenario)")
+            fl = self.faults
+            if fl.straggler_factor > 0.0 or fl.rsu_outage_rate > 0.0:
+                raise ValueError(
+                    "faults.straggler_factor / faults.rsu_outage_rate need "
+                    "a multi-RSU scenario (residence deadlines and RSU "
+                    "outages are scenario concepts); the single-RSU engine "
+                    "supports dropout_rate / upload_loss_rate / coverage")
+            if ((fl.dropout_rate > 0.0 or fl.upload_loss_rate > 0.0)
+                    and self.train.scheme not in ("sfl", "asfl")):
+                raise ValueError(
+                    f"stochastic fault injection is wired into the "
+                    f"split-federation round (sfl | asfl); scheme "
+                    f"{self.train.scheme!r} does not support it")
 
         rt = self.runtime
         if rt.mesh_devices > 1:

@@ -70,6 +70,39 @@ def stacked_fedavg(stacked_tree: Any, weights: jnp.ndarray) -> Any:
         lambda n, ref: (n / den).astype(ref.dtype), num, stacked_tree)
 
 
+def survivor_weighted_sum(stacked_tree: Any, weights: jnp.ndarray,
+                          survivors: jnp.ndarray) -> Any:
+    """Partial-aggregation numerator (DESIGN.md §13): a failed replica folds
+    in as an exact ``+0`` — its weight is zeroed by the bool ``survivors``
+    mask before the same tensordot :func:`stacked_weighted_sum` uses, so the
+    reduction order (and therefore the floats) is identical to the
+    full-participation sum whenever the mask is all-True.  The caller
+    renormalises by the surviving weight, not the cohort weight."""
+    w = jnp.asarray(weights, jnp.float32) * jnp.asarray(survivors, jnp.float32)
+    return stacked_weighted_sum(stacked_tree, w)
+
+
+def survivor_fedavg(stacked_tree: Any, weights: jnp.ndarray,
+                    survivors: jnp.ndarray, fallback: Any) -> Any:
+    """Survivor-weighted FedAvg: Eq. 1/2 restricted to the surviving
+    replicas, with the weight renormalised over survivors so the effective
+    weights still sum to 1.  When no replica survives the ``fallback`` tree
+    (the pre-round model) is returned unchanged — the at-least-one-
+    participant guarantee upstream makes this a rare degenerate case, but
+    the merge must stay well-defined under arbitrary fault schedules."""
+    w = jnp.asarray(weights, jnp.float32) * jnp.asarray(survivors, jnp.float32)
+    total = jnp.sum(w)
+    # NOT maximum(total, 1): surviving weight in (0, 1) must still
+    # renormalize exactly (fractional weights under staleness discounts)
+    den = jnp.where(total > 0.0, total, 1.0)
+    num = stacked_weighted_sum(stacked_tree, w)
+
+    def f(n, fb):
+        return jnp.where(total > 0.0, (n / den).astype(fb.dtype), fb)
+
+    return jax.tree.map(f, num, fallback)
+
+
 def unitwise_fedavg(unit_replicas: List[List[Any]],
                     weights_per_unit: List[List[float]]) -> List[Any]:
     """ASFL heterogeneous-cut aggregation: each stack unit is averaged over

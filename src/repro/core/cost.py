@@ -47,11 +47,16 @@ def wire_smashed_ratio(profile: "SplitProfile", cuts, wire: str = "none",
 
 def effective_comm_bytes(profile: "SplitProfile", cuts, steps, batch: int,
                          wire: str = "none", wire_k: Optional[float] = None,
-                         include_model_transfer: bool = True):
+                         include_model_transfer: bool = True,
+                         model_upload=True):
     """(up, down) bytes for one round: smashed traffic charged at actual
     on-wire size in both directions, model transfer (aggregation up + fresh
     copy down) always dense fp32 — the wire compresses activations and
-    gradients, never parameters."""
+    gradients, never parameters.  ``model_upload`` (scalar or bool array
+    broadcast over the fleet) drops the aggregation-upload bytes for
+    vehicles whose update never made it onto the wire (mid-round dropouts,
+    DESIGN.md §13) — the fresh-copy download at round start is still
+    charged, as is every smashed exchange in ``steps``."""
     cuts = np.asarray(cuts, dtype=np.int64)
     smashed = (np.asarray(profile.smashed_bytes_per_sample)[cuts - 1] * batch
                / wire_smashed_ratio(profile, cuts, wire, wire_k))
@@ -59,7 +64,7 @@ def effective_comm_bytes(profile: "SplitProfile", cuts, steps, batch: int,
     down = np.asarray(steps) * smashed
     if include_model_transfer:
         bytes_cum = np.concatenate([[0], np.cumsum(profile.unit_param_bytes)])
-        up = up + bytes_cum[cuts]
+        up = up + bytes_cum[cuts] * np.asarray(model_upload)
         down = down + bytes_cum[cuts]
     return up, down
 
@@ -264,7 +269,8 @@ def sfl_round_cost_arrays(profile: SplitProfile, cuts, n_batches, batch: int,
                           local_epochs: int = 1, tx_power_w=0.5,
                           compute_power_w=15.0,
                           include_model_transfer: bool = True,
-                          wire: str = "none", wire_k: Optional[float] = None
+                          wire: str = "none", wire_k: Optional[float] = None,
+                          model_upload=True
                           ) -> RoundCostArrays:
     """Vectorized :func:`sfl_client_round_cost`.  ``cuts``, ``n_batches``,
     ``rates_bps``, ``client_flops``, ``tx_power_w``, ``compute_power_w`` may
@@ -272,13 +278,17 @@ def sfl_round_cost_arrays(profile: SplitProfile, cuts, n_batches, batch: int,
     candidate cuts (k,) yields an (n,k) cost matrix for cut selection).
     Smashed traffic is charged at on-wire bytes in BOTH directions via
     :func:`effective_comm_bytes`; latency and radio energy follow from the
-    compressed byte counts (the engines no longer rescale post-hoc)."""
+    compressed byte counts (the engines no longer rescale post-hoc).  Under
+    fault injection, pass per-vehicle *performed* steps as ``n_batches``
+    (with ``local_epochs=1``) and a ``model_upload`` mask so dropouts are
+    charged only the work they actually did."""
     cuts = np.asarray(cuts, dtype=np.int64)
     fwd_cum = np.concatenate([[0.0], np.cumsum(profile.unit_fwd_flops)])
 
     steps = np.asarray(n_batches) * local_epochs
     up, down = effective_comm_bytes(profile, cuts, steps, batch, wire,
-                                    wire_k, include_model_transfer)
+                                    wire_k, include_model_transfer,
+                                    model_upload)
     c_fwd = fwd_cum[cuts] * batch
     s_fwd = (fwd_cum[-1] - fwd_cum[cuts] + profile.head_flops) * batch
     t_client = steps * c_fwd * (1 + BWD_FWD_RATIO) / np.asarray(client_flops)
@@ -342,6 +352,15 @@ def sl_round_cost(profile: SplitProfile, cut: int, n_batches_per_client: Sequenc
     return RoundCost(up, down, t_c, t_s, t_comm, energy)
 
 
-def parallel_round_latency(costs: Sequence[RoundCost]) -> float:
-    """SFL/FL round latency: slowest client (straggler) bounds the round."""
-    return max(c.latency for c in costs)
+def parallel_round_latency(costs: Sequence[RoundCost],
+                           survivors: Optional[Sequence[bool]] = None) -> float:
+    """SFL/FL round latency: slowest client (straggler) bounds the round.
+
+    ``survivors`` restricts the bound to clients whose update actually made
+    the round (DESIGN.md §13): a dropout's partial work and a deadline
+    straggler's late upload do not extend the round — the server closes the
+    merge without them.  An empty survivor set costs 0 (nothing merged)."""
+    if survivors is None:
+        return max(c.latency for c in costs)
+    lats = [c.latency for c, s in zip(costs, survivors) if s]
+    return max(lats) if lats else 0.0

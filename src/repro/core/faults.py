@@ -1,0 +1,157 @@
+"""Fault plane: seeded, fully traced failure processes for the fused engines.
+
+The paper's VEI setting is defined by mobility-induced failure (§II-C):
+vehicles leave RSU coverage mid-round, uplinks fade after local work is
+already done, slow links miss the residence deadline, and whole RSUs fail.
+This module owns the *failure processes*; the engines own their
+*consequences* (survivor-weighted merges, staleness banking, cohort skips).
+
+Four stochastic processes, each an independent per-round Bernoulli draw from
+a dedicated fault PRNG stream (``fold_in(fault_key, round)`` — so a K-fused
+super-step samples identically to K single rounds, the same construction
+the batch-index stream uses):
+
+- **mid-round dropout** (per vehicle): the vehicle performs only a prefix of
+  its local steps (``drop_step`` of ``steps``) and its client update never
+  reaches the merge; the server-side gradients it contributed *before*
+  dropping are kept (they already landed on the RSU).
+- **upload loss** (per vehicle): full local work, but the model upload is
+  lost.  Compute and transmit costs are charged; the update is not merged.
+- **deadline straggler** (per vehicle, scenario engine only): the analytic
+  round latency at the chosen cut exceeds ``straggler_factor x residence``.
+  The update is not lost — it lands in a staleness bank on the super-step
+  carry and merges next round with a ``staleness_discount``.
+- **RSU outage** (per RSU, scenario engine only): the whole cohort sits the
+  round out (cuts forced to SKIP); the cell's edge model and sample counter
+  are untouched, so cloud-merge weights adjust by construction.
+
+``coverage`` is the legacy deterministic §II-C in-range test from
+``FederationSim.mobility_dropout`` (single-RSU engine only; multi-RSU
+scenarios model coverage through the scenario itself via serving_rsu == -1).
+
+Zero-fault invariant: every engine hook is gated at Python level on
+``FaultConfig.enabled`` / ``.stochastic`` (the ``wire="none"`` precedent), so
+the default config compiles to a byte-identical program and trains
+bit-for-bit vs a build without the fault plane.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+# domain-separates the fault stream from the batch-index / fading streams,
+# which already use seed*1000+rnd and seed^0x5EED5EED
+FAULT_SALT = 0xFA17
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultConfig:
+    """Seeded failure processes injected into a federation engine.
+
+    All-defaults means *no faults*: engines gate every fault hook at Python
+    level on ``enabled`` so the zero-fault program is byte-identical to one
+    built before the fault plane existed.
+    """
+
+    dropout_rate: float = 0.0       # P[vehicle drops mid-round]
+    upload_loss_rate: float = 0.0   # P[client update lost after local work]
+    straggler_factor: float = 0.0   # >0: deadline = factor * residence_s
+    rsu_outage_rate: float = 0.0    # P[RSU misses the round entirely]
+    staleness_discount: float = 0.5  # weight multiplier for banked updates
+    coverage: bool = False          # legacy §II-C in-range test (FederationSim)
+    seed: int = 0
+
+    def __post_init__(self):
+        for name in ("dropout_rate", "upload_loss_rate", "rsu_outage_rate"):
+            v = getattr(self, name)
+            if not 0.0 <= float(v) < 1.0:
+                raise ValueError(f"{name} must be in [0, 1), got {v!r}")
+        if not 0.0 <= float(self.staleness_discount) <= 1.0:
+            raise ValueError(
+                f"staleness_discount must be in [0, 1], got {self.staleness_discount!r}"
+            )
+        if float(self.straggler_factor) < 0.0:
+            raise ValueError(
+                f"straggler_factor must be >= 0, got {self.straggler_factor!r}"
+            )
+
+    @property
+    def stochastic(self) -> bool:
+        """Any traced (sampled) failure process active."""
+        return (
+            float(self.dropout_rate) > 0.0
+            or float(self.upload_loss_rate) > 0.0
+            or float(self.straggler_factor) > 0.0
+            or float(self.rsu_outage_rate) > 0.0
+        )
+
+    @property
+    def enabled(self) -> bool:
+        return self.stochastic or self.coverage
+
+
+def fault_key(cfg: FaultConfig, rnd) -> jax.Array:
+    """Per-round fault PRNG key; ``rnd`` may be traced (window-independent)."""
+    return jax.random.fold_in(jax.random.PRNGKey(cfg.seed ^ FAULT_SALT), rnd)
+
+
+def sample_faults_traced(cfg: FaultConfig, rnd, n_vehicles: int, n_rsus: int):
+    """Draw one round of failures inside the traced program.
+
+    Returns ``(drop, drop_frac, lost, rsu_down)``: bool (n,), f32 (n,) in
+    [0,1), bool (n,), bool (R,).  ``drop_frac`` positions the mid-round
+    dropout within the local step schedule (see :func:`drop_steps`).
+    Straggling is not sampled — it is *derived* from channel rates x
+    residence by the engine.
+    """
+    kd, kf, ku, kr = jax.random.split(fault_key(cfg, rnd), 4)
+    drop = jax.random.uniform(kd, (n_vehicles,)) < cfg.dropout_rate
+    drop_frac = jax.random.uniform(kf, (n_vehicles,))
+    lost = jax.random.uniform(ku, (n_vehicles,)) < cfg.upload_loss_rate
+    rsu_down = jax.random.uniform(kr, (n_rsus,)) < cfg.rsu_outage_rate
+    return drop, drop_frac, lost, rsu_down
+
+
+def sample_faults_host(cfg: FaultConfig, rnd: int, n_vehicles: int):
+    """Host-side twin for the legacy ``FederationSim`` round loop.
+
+    An independent stream from the traced sampler (numpy vs threefry) — the
+    two engines never share a fault schedule, only a distribution.
+    """
+    rng = np.random.default_rng((cfg.seed ^ FAULT_SALT) * 1_000_003 + rnd)
+    drop = rng.random(n_vehicles) < cfg.dropout_rate
+    drop_frac = rng.random(n_vehicles)
+    lost = rng.random(n_vehicles) < cfg.upload_loss_rate
+    return drop, drop_frac, lost
+
+
+def drop_steps(drop, drop_frac, steps: int):
+    """Per-vehicle performed local steps: ``floor(frac*steps)`` when dropped
+    (possibly 0), the full ``steps`` otherwise.  int32 (n,)."""
+    partial = jnp.floor(drop_frac * steps).astype(jnp.int32)
+    return jnp.where(drop, partial, jnp.int32(steps))
+
+
+def ensure_rsu_up(rsu_down):
+    """Never let an outage take the whole network down: if every RSU drew an
+    outage this round, RSU 0 is kept up."""
+    all_down = jnp.all(rsu_down)
+    keep = all_down & (jnp.arange(rsu_down.shape[0]) == 0)
+    return rsu_down & ~keep
+
+
+def rescue_mask(sched, failed):
+    """At-least-one-participant guarantee.
+
+    Returns a bool (n,) mask selecting the first *scheduled* vehicle iff the
+    combined failures would wipe every scheduled vehicle; the engine clears
+    that vehicle's failure bits.  All-False when any survivor exists (or
+    nothing is scheduled), so the rescue is inert on typical rounds.
+    """
+    surv = sched & ~failed
+    none_left = jnp.any(sched) & ~jnp.any(surv)
+    first = jnp.argmax(sched)  # index of the first scheduled vehicle
+    return none_left & sched & (jnp.arange(sched.shape[0]) == first)

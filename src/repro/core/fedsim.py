@@ -40,7 +40,7 @@ from jax.sharding import PartitionSpec as P
 
 from repro.configs.base import enable_compilation_cache
 from repro.core import adaptive, aggregation, channel, compression, cost
-from repro.core import fleet_sharding
+from repro.core import faults, fleet_sharding
 from repro.core.fleet_sharding import AXIS as MESH_AXIS, FLEET_AXES, FleetMesh
 from repro.core.superstep import (SERVER_SCHEDULES, SUPERSTEP_LAYOUTS,
                                   SuperStepPrograms)
@@ -143,8 +143,19 @@ class SimConfig:
     server_flops: float = 2e12    # RSU (GPU-class)
     round_interval_s: float = 5.0
     # mobility: vehicles outside RSU coverage at round start skip the round
-    # (the paper's §II-C training-interruption challenge)
+    # (the paper's §II-C training-interruption challenge).  Legacy spelling
+    # of fault_coverage=True — see fault_config()
     mobility_dropout: bool = False
+    # fault plane (core/faults.py, DESIGN.md §13): seeded stochastic failure
+    # processes.  All-zero defaults are gated out at Python level, so the
+    # compiled programs are byte-identical to a no-fault build
+    fault_coverage: bool = False      # deterministic §II-C in-range test
+    fault_dropout: float = 0.0        # P[vehicle drops mid-round]
+    fault_upload_loss: float = 0.0    # P[update lost after full local work]
+    fault_straggler: float = 0.0      # >0: deadline factor x residence
+    fault_rsu_outage: float = 0.0     # P[RSU misses a round] (scenario only)
+    fault_staleness_discount: float = 0.5  # weight for banked late updates
+    fault_seed: int = 0
     # intra-bucket schedule: "vmap" vectorizes client replicas across the
     # stacked axis (accelerators), "scan" fuses them sequentially (CPU);
     # "auto" picks by platform.  Same math either way (DESIGN.md §6).
@@ -229,6 +240,12 @@ class SimConfig:
                 f"SimConfig.compress_smashed=True conflicts with "
                 f"wire={self.wire!r}: compress_smashed is the legacy "
                 f"spelling of wire='int8' — set wire alone")
+        if self.mobility_dropout and self.fault_coverage:
+            raise ValueError(
+                "SimConfig.mobility_dropout=True conflicts with "
+                "fault_coverage=True: mobility_dropout is the legacy "
+                "spelling of fault_coverage — set fault_coverage alone")
+        self.fault_config()  # rate/discount validation (FaultConfig raises)
 
     def wire_scheme(self) -> str:
         """The effective cut-boundary wire: compress_smashed=True is kept as
@@ -237,6 +254,20 @@ class SimConfig:
         if self.wire == "none" and self.compress_smashed:
             return "int8"
         return self.wire
+
+    def fault_config(self) -> faults.FaultConfig:
+        """The effective fault plane (core/faults.py, DESIGN.md §13).
+        ``mobility_dropout=True`` is kept as a working alias for
+        ``fault_coverage=True`` — the same shim pattern as
+        ``compress_smashed`` → ``wire="int8"``."""
+        return faults.FaultConfig(
+            dropout_rate=self.fault_dropout,
+            upload_loss_rate=self.fault_upload_loss,
+            straggler_factor=self.fault_straggler,
+            rsu_outage_rate=self.fault_rsu_outage,
+            staleness_discount=self.fault_staleness_discount,
+            coverage=self.mobility_dropout or self.fault_coverage,
+            seed=self.fault_seed)
 
 
 @dataclasses.dataclass
@@ -248,6 +279,12 @@ class RoundMetrics:
     sim_time_s: float
     energy_j: float
     cuts: List[int]
+    # fault-plane telemetry (DESIGN.md §13); the defaults are the no-fault
+    # values, so pre-fault code paths need no changes
+    n_dropout: int = 0
+    n_upload_lost: int = 0
+    survivor_frac: float = 1.0
+    lost_update_bytes: float = 0.0
 
 
 def _make_opt(cfg: SimConfig):
@@ -1063,6 +1100,18 @@ class FederationSim:
                 f"scheme {cfg.scheme!r} is an inherently sequential chain; "
                 f"the vehicle-axis mesh shards parallel cohorts only "
                 f"(fl | sfl | asfl) — set mesh_devices=1")
+        self.faults = cfg.fault_config()
+        if (self.faults.straggler_factor > 0.0
+                or self.faults.rsu_outage_rate > 0.0):
+            raise ValueError(
+                "FederationSim is the single-RSU engine: fault_straggler "
+                "and fault_rsu_outage need the multi-RSU ScenarioEngine "
+                "(residence deadlines and RSU outages are scenario "
+                "concepts)")
+        if self.faults.stochastic and cfg.scheme not in ("sfl", "asfl"):
+            raise ValueError(
+                f"fault injection is wired into the split-federation round "
+                f"(sfl | asfl); scheme {cfg.scheme!r} does not support it")
         self.reset()
 
     def reset(self):
@@ -1086,9 +1135,10 @@ class FederationSim:
                                           self.cfg.seed * 1000 + rnd)
 
     def _participants(self, rnd: int) -> List[int]:
-        """Vehicle indices in RSU coverage this round (all, if mobility
-        dropout is disabled).  At least one vehicle always participates."""
-        if not self.cfg.mobility_dropout:
+        """Vehicle indices in RSU coverage this round (all, unless the
+        coverage fault — legacy mobility_dropout — is enabled).  At least
+        one vehicle always participates."""
+        if not self.faults.coverage:
             return list(range(len(self.clients)))
         t = rnd * self.cfg.round_interval_s
         inr = np.nonzero(channel.in_range_mask(self.ch, self.fleet_arr, t))[0]
@@ -1231,11 +1281,21 @@ class FederationSim:
         return self._parallel_split_round(rnd)
 
     def _plan_split_round(self, rnd: int, cuts: List[int],
-                          participants: List[int]) -> RoundPlan:
+                          participants: List[int],
+                          performed: Optional[Dict[int, int]] = None,
+                          survivors: Optional[Dict[int, bool]] = None
+                          ) -> RoundPlan:
         """Stage one SFL/ASFL round: bucket participants by cut (ascending,
         stable by client index), pad buckets to powers of two (bounds the
         compile cache under per-round adaptive cut churn), and pre-draw every
-        client's batch-index stream for the whole round."""
+        client's batch-index stream for the whole round.
+
+        Fault plane (DESIGN.md §13): ``performed[ci]`` truncates a mid-round
+        dropout's step mask to the steps it actually ran; ``survivors[ci]``
+        zeroes the merge weight of any failed vehicle so its client-side
+        update folds into the aggregation as an exact ``+0``.  Both are
+        *data* (mask and weight tensors) — the compiled round program and
+        its signature are untouched, so fault churn never retraces."""
         cfgc = self.cfg
         n_units = self.model.n_units
         buckets: Dict[int, List[int]] = {}
@@ -1254,8 +1314,10 @@ class FederationSim:
             w = np.zeros(n_pad, np.float64)
             for j, ci in enumerate(members):
                 ln = len(self.clients[ci])
-                w[j] = ln
-                for s in range(self._local_steps(self.clients[ci])):
+                w[j] = ln if survivors is None or survivors[ci] else 0.0
+                n_s = (self._local_steps(self.clients[ci])
+                       if performed is None else performed[ci])
+                for s in range(n_s):
                     idx[s, j] = sample_batch_indices(
                         ln, cfgc.batch_size,
                         cfgc.seed + rnd * 983 + s * 31 + ci)
@@ -1281,33 +1343,83 @@ class FederationSim:
         The whole round — every bucket, every local step, the aggregation —
         is one compiled CohortEngine program."""
         cfgc = self.cfg
+        fc = self.faults
         rates = self._round_rates(rnd)
         participants = self._participants(rnd)
         cuts = [max(1, min(c, self.model.n_units - 1))
                 for c in self._pick_cuts(rates)]
-        plan = self._plan_split_round(rnd, cuts, participants)
+        performed = survivors = uploads = None
+        if fc.stochastic:
+            # host twin of the traced fault plane (DESIGN.md §13): dropouts
+            # truncate the step mask, upload losses zero the merge weight —
+            # both data, so the compiled round program never retraces
+            drop, dfrac, lost = faults.sample_faults_host(
+                fc, rnd, len(self.clients))
+            lost = lost & ~drop          # dropout precedence (never uploads)
+            if all(drop[ci] or lost[ci] for ci in participants):
+                # at-least-one-participant guarantee: clear the first
+                # scheduled vehicle's failure bits (faults.rescue_mask twin)
+                drop[participants[0]] = lost[participants[0]] = False
+            performed = {ci: (int(dfrac[ci] * self._local_steps(
+                                  self.clients[ci])) if drop[ci]
+                              else self._local_steps(self.clients[ci]))
+                         for ci in participants}
+            survivors = {ci: not (drop[ci] or lost[ci])
+                         for ci in participants}
+            uploads = {ci: not drop[ci] for ci in participants}
+        plan = self._plan_split_round(rnd, cuts, participants, performed,
+                                      survivors)
         self.units, self.head, ls, cnt = self.engine.split_round(
             self.units, self.head, plan, cfgc.batch_size)
 
         part = np.asarray(participants)
-        rc = cost.sfl_round_cost_arrays(
-            self.profile, np.asarray(cuts)[part],
-            np.array([max(len(self.clients[ci]) // cfgc.batch_size, 1)
-                      for ci in participants]),
-            cfgc.batch_size, rates[part],
-            self.fleet_arr["compute_flops"][part], cfgc.server_flops,
-            cfgc.local_epochs, self.fleet_arr["tx_power_w"][part],
-            self.fleet_arr["compute_power_w"][part],
-            wire=cfgc.wire_scheme(), wire_k=cfgc.wire_k)
+        if fc.stochastic:
+            # charge only the work performed: a dropout pays its partial
+            # smashed traffic and compute but no aggregation upload; an
+            # upload loss pays everything (the upload went out and was
+            # lost); the straggler latency bound is over merge survivors
+            rc = cost.sfl_round_cost_arrays(
+                self.profile, np.asarray(cuts)[part],
+                np.array([performed[ci] for ci in participants]),
+                cfgc.batch_size, rates[part],
+                self.fleet_arr["compute_flops"][part], cfgc.server_flops,
+                1, self.fleet_arr["tx_power_w"][part],
+                self.fleet_arr["compute_power_w"][part],
+                wire=cfgc.wire_scheme(), wire_k=cfgc.wire_k,
+                model_upload=np.array([uploads[ci]
+                                       for ci in participants]))
+            surv_arr = np.array([survivors[ci] for ci in participants])
+            latency = float(np.max(rc.latency[surv_arr], initial=0.0))
+        else:
+            rc = cost.sfl_round_cost_arrays(
+                self.profile, np.asarray(cuts)[part],
+                np.array([max(len(self.clients[ci]) // cfgc.batch_size, 1)
+                          for ci in participants]),
+                cfgc.batch_size, rates[part],
+                self.fleet_arr["compute_flops"][part], cfgc.server_flops,
+                cfgc.local_epochs, self.fleet_arr["tx_power_w"][part],
+                self.fleet_arr["compute_power_w"][part],
+                wire=cfgc.wire_scheme(), wire_k=cfgc.wire_k)
+            latency = float(rc.latency.max())
         # cost.effective_comm_bytes charges the wire inside the model: the
         # smashed bytes (both directions) shrink by the per-cut packed-byte
         # ratio while model-transfer bytes stay dense, and latency/energy
         # follow the compressed counts (previously a post-hoc division here
         # wrongly discounted the model bytes and left energy uncompressed)
-        latency = rc.latency
-        return self._metrics(rnd, float(ls) / max(float(cnt), 1.0), cuts,
-                             float(rc.comm_bytes.sum()),
-                             float(latency.max()), float(rc.energy_j.sum()))
+        m = self._metrics(rnd, float(ls) / max(float(cnt), 1.0), cuts,
+                          float(rc.comm_bytes.sum()), latency,
+                          float(rc.energy_j.sum()))
+        if fc.stochastic:
+            bytes_cum = np.concatenate(
+                [[0.0], np.cumsum(self.profile.unit_param_bytes)])
+            failed = [ci for ci in participants if not survivors[ci]]
+            m.n_dropout = int(sum(drop[ci] for ci in participants))
+            m.n_upload_lost = int(sum(lost[ci] for ci in participants))
+            m.survivor_frac = (float(sum(survivors.values()))
+                               / max(len(participants), 1))
+            m.lost_update_bytes = float(
+                sum(bytes_cum[cuts[ci]] for ci in failed))
+        return m
 
 
 # --------------------------------------------------------------------------
@@ -1327,6 +1439,14 @@ class ScenarioRoundMetrics:
     n_handover: int          # vehicles that re-associated since last round
     rsu_loads: List[int]     # participants per RSU
     cuts: List[int]          # fleet-wide cuts; 0 = sat the round out
+    # fault-plane telemetry (DESIGN.md §13); defaults = no faults
+    n_dropout: int = 0       # scheduled vehicles that dropped mid-round
+    n_upload_lost: int = 0   # full work done, update lost on the uplink
+    n_straggler: int = 0     # deadline-exceeded; update banked, not lost
+    n_rsu_down: int = 0      # RSUs that sat the round out
+    survivor_frac: float = 1.0   # merged / scheduled (effective participation)
+    lost_update_bytes: float = 0.0  # client-side params that never merged
+    stale_merged: float = 0.0    # banked straggler weight merged this round
 
 
 class ScenarioEngine:
@@ -1637,10 +1757,18 @@ class ScenarioEngine:
         sched = cuts > 0
         active = serving >= 0
         handover = np.asarray(ys["handover"][i], bool)
+        fault = None
+        if self.programs.fz:
+            # drop/lost/strag come out of the program already scheduled-
+            # masked, precedence-ordered, and rescue-cleared
+            fault = (np.asarray(ys["dstep"][i], np.int64),
+                     np.asarray(ys["drop"][i], bool),
+                     np.asarray(ys["lost"][i], bool),
+                     np.asarray(ys["strag"][i], bool))
         comm, lat, energy = self._accounting(ys["rates"][i], cuts, sched,
-                                             handover)
+                                             handover, fault)
         loss = float(ys["loss"][i]) / max(float(ys["cnt"][i]), 1.0)
-        return ScenarioRoundMetrics(
+        m = ScenarioRoundMetrics(
             rnd, loss, float("nan"), comm, lat, energy,
             n_scheduled=int(sched.sum()),
             n_skipped=int((active & ~sched).sum()),
@@ -1649,6 +1777,21 @@ class ScenarioEngine:
             # cells never receive members — report the real cells only
             rsu_loads=[int(c) for c in ys["counts"][i][:self.n_rsus]],
             cuts=[int(c) for c in cuts])
+        if fault is not None:
+            _, drop, lost, strag = fault
+            bytes_cum = np.concatenate(
+                [[0.0], np.cumsum(self.profile.unit_param_bytes)])
+            surv = sched & ~drop & ~lost & ~strag
+            m.n_dropout = int(drop.sum())
+            m.n_upload_lost = int(lost.sum())
+            m.n_straggler = int(strag.sum())
+            m.n_rsu_down = int(
+                np.asarray(ys["rsu_down"][i], bool)[:self.n_rsus].sum())
+            m.survivor_frac = float(surv.sum()) / max(int(sched.sum()), 1)
+            # stragglers are banked, not lost — only drop/lost updates die
+            m.lost_update_bytes = float(bytes_cum[cuts[drop | lost]].sum())
+            m.stale_merged = float(ys["stale_w"][i])
+        return m
 
     def run_round(self, rnd: int) -> ScenarioRoundMetrics:
         return self.run_superstep(rnd, 1)[0]
@@ -1681,11 +1824,18 @@ class ScenarioEngine:
                     on_cloud_merge(m.round, self)
         return self.history
 
-    def _accounting(self, rates, cuts, sched, handover):
+    def _accounting(self, rates, cuts, sched, handover, fault=None):
         """Analytic per-round comm/latency/energy over the scheduled set +
         the handover model-migration bytes (vehicle-side sub-model
         re-download at the new cell).  Pure numpy over arrays the super-step
-        emitted — part of the Python accounting tier by design."""
+        emitted — part of the Python accounting tier by design.
+
+        With ``fault = (dstep, drop, lost, strag)`` (DESIGN.md §13) each
+        vehicle is charged the work it performed: dropouts pay their partial
+        smashed traffic and compute but no aggregation upload; upload losses
+        pay in full (the upload went out and was lost); the straggler bound
+        on round latency is over merge survivors — a dropout's partial work
+        and a deadline straggler's banked upload do not extend the round."""
         cfgc = self.cfg
         act = np.nonzero(sched)[0]
         bytes_cum = np.concatenate(
@@ -1694,13 +1844,26 @@ class ScenarioEngine:
         if not len(act):
             return ho_bytes, 0.0, 0.0
         nb, ep = self._nb_ep()
-        rc = cost.sfl_round_cost_arrays(
-            self.profile, cuts[act], nb, cfgc.batch_size,
-            np.maximum(np.asarray(rates, np.float64)[act], 1.0),
-            self.fa["compute_flops"][act], cfgc.server_flops, ep,
-            self.fa["tx_power_w"][act], self.fa["compute_power_w"][act],
-            wire=cfgc.wire_scheme(), wire_k=cfgc.wire_k)
+        if fault is None:
+            rc = cost.sfl_round_cost_arrays(
+                self.profile, cuts[act], nb, cfgc.batch_size,
+                np.maximum(np.asarray(rates, np.float64)[act], 1.0),
+                self.fa["compute_flops"][act], cfgc.server_flops, ep,
+                self.fa["tx_power_w"][act], self.fa["compute_power_w"][act],
+                wire=cfgc.wire_scheme(), wire_k=cfgc.wire_k)
+            lat = float(rc.latency.max())
+        else:
+            dstep, drop, lost, strag = fault
+            rc = cost.sfl_round_cost_arrays(
+                self.profile, cuts[act], dstep[act], cfgc.batch_size,
+                np.maximum(np.asarray(rates, np.float64)[act], 1.0),
+                self.fa["compute_flops"][act], cfgc.server_flops, 1,
+                self.fa["tx_power_w"][act], self.fa["compute_power_w"][act],
+                wire=cfgc.wire_scheme(), wire_k=cfgc.wire_k,
+                model_upload=~drop[act])
+            surv = ~(drop | lost | strag)[act]
+            lat = float(np.max(rc.latency[surv], initial=0.0))
         # wire bytes charged inside the cost model (smashed both directions;
         # model transfer and handover migration stay dense) — see cost.py
-        return (float(rc.comm_bytes.sum()) + ho_bytes,
-                float(rc.latency.max()), float(rc.energy_j.sum()))
+        return (float(rc.comm_bytes.sum()) + ho_bytes, lat,
+                float(rc.energy_j.sum()))

@@ -106,6 +106,23 @@ would execute both branches anyway, so the select form is the honest
 spelling of that cost (see DESIGN.md §11 for the CPU-interpret numbers).
 ``wire="none"`` stays byte-identical to the pre-wire engine: every hook
 below is gated at Python level, so the traced program is unchanged.
+
+Fault plane (DESIGN.md §13): ``cfg.fault_*`` turns on seeded, fully traced
+failure processes from :mod:`repro.core.faults` — mid-round dropout, upload
+loss, deadline stragglers (analytic latency at the chosen cut vs
+``straggler_factor x residence``), and whole-RSU outages.  Consequences are
+computed in-round: outages zero the cohort's cuts before slot grouping;
+per-step activity masks stop a dropout's batches after its drop step
+(server-side gradients it contributed before dropping stand — they already
+landed on the RSU); the unit-wise FedAvg renormalizes over *survivors*
+(``aggregation.survivor_weighted_sum`` — failed slots fold in as exact +0);
+and straggler client updates land in a staleness bank on the donated carry
+(``stale_num``/``stale_den``) that merges next round at a
+``staleness_discount``.  Every hook is gated at Python level on
+``FaultConfig.stochastic`` (the ``wire="none"`` precedent), so the
+zero-fault program is byte-identical and trains bit-for-bit vs a build
+without the fault plane — on both schedules, both layouts, and under a
+mesh (tests/test_faults.py).
 """
 from __future__ import annotations
 
@@ -120,7 +137,8 @@ from jax.experimental.shard_map import shard_map
 from jax.flatten_util import ravel_pytree
 from jax.sharding import PartitionSpec as PSpec
 
-from repro.core import adaptive, aggregation, compression, fleet_sharding
+from repro.core import (adaptive, aggregation, compression, faults,
+                        fleet_sharding)
 from repro.core.fleet_sharding import AXIS as MESH_AXIS, FleetMesh
 from repro.data.pipeline import StackedClients, fleet_batch_indices_traced
 from repro import optim
@@ -342,6 +360,16 @@ class SuperStepPrograms:
         else:
             self.boundary_shapes, self.res_size = None, 0
             self.wire_units = 0
+        # fault plane (DESIGN.md §13): every hook below is gated at Python
+        # level on `fz`, so a zero-fault config traces the identical program
+        self.faults = (cfg.fault_config() if hasattr(cfg, "fault_config")
+                       else faults.FaultConfig())
+        if self.faults.coverage:
+            raise ValueError(
+                "fault coverage (the legacy single-RSU mobility_dropout "
+                "in-range test) does not apply to the multi-RSU super-step "
+                "engine: scenarios model coverage through serving_rsu == -1")
+        self.fz = self.faults.stochastic
 
     def flatten(self, units, head) -> jnp.ndarray:
         return ravel_pytree({"units": list(units), "head": head})[0]
@@ -375,6 +403,23 @@ class SuperStepPrograms:
             carry["wire_res"] = jnp.zeros((n_vehicles, self.res_size),
                                           jnp.float32)
             carry["wire_cut"] = jnp.full((n_vehicles,), -1, jnp.int32)
+        if self.fz:
+            # staleness bank (DESIGN.md §13): last round's deadline-
+            # straggler client updates, banked per RSU as a weighted
+            # numerator (sequential: per-unit trees; parallel: the owned
+            # prefix window of the flat plane) plus the per-unit banked
+            # weight, merged next round at the staleness discount
+            CU = self.client_units
+            if self.schedule == "sequential":
+                carry["stale_num"] = [
+                    jax.tree.map(
+                        lambda a: jnp.zeros((R,) + a.shape, jnp.float32),
+                        units[u])
+                    for u in range(CU)]
+            else:
+                carry["stale_num"] = jnp.zeros((R, self.plane_width),
+                                               jnp.float32)
+            carry["stale_den"] = jnp.zeros((R, CU), jnp.float32)
         if self.mesh is not None:
             if self.schedule == "parallel" and self.layout == "ragged":
                 # ragged + parallel shards the compacted SLOT axis, not the
@@ -383,9 +428,12 @@ class SuperStepPrograms:
                 # per-RSU segment-sums come home via psum)
                 carry = {k: self.mesh.replicate(v) for k, v in carry.items()}
             else:
-                carry["edge"] = self.mesh.shard_leading(carry["edge"])
+                # the staleness bank is per-RSU state and shards with the
+                # edge stack
                 for k in carry:
-                    if k != "edge":
+                    if k in ("edge", "stale_num", "stale_den"):
+                        carry[k] = self.mesh.shard_leading(carry[k])
+                    else:
                         carry[k] = self.mesh.replicate(carry[k])
         return carry
 
@@ -424,6 +472,10 @@ class SuperStepPrograms:
         wire, ef, wire_k = self.wire, self.ef, self.wire_k
         bshapes, res_size = self.boundary_shapes, self.res_size
         wire_units = self.wire_units
+        # fault-plane statics (DESIGN.md §13): gated at Python level on
+        # `fz` throughout — zero-fault configs trace the identical program
+        fc, fz = self.faults, self.fz
+        disc = float(fc.staleness_discount)
         # ragged layout statics (DESIGN.md §12): the owned-prefix window of
         # the plane, the per-replica unit count (sequential), and the flat
         # slot-axis geometry (parallel).  Dense: window = whole plane,
@@ -602,13 +654,25 @@ class SuperStepPrograms:
             return (sv3, so3), ys
 
         def rsu_round_seq(edge_tree, members, mask, cut_slots, idx_slots,
-                          res_slots=None):
+                          *extra):
             """One RSU's whole round (replica init, every local step,
             unit-wise FedAvg) with the sequential server schedule — vmapped
             across the RSU axis by the round body.  Params stay in pytree
             form here: the sequential slot scan is dominated by per-slot
             tree math, and ravelling in/out of the flat plane per round
-            measurably loses to plain trees on CPU."""
+            measurably loses to plain trees on CPU.
+
+            ``extra`` packs the statically gated optional planes, in order:
+            the EF residual slots (when ``ef``), then the fault planes
+            (when ``fz``): per-step slot activity (steps, C), survivor
+            slots, straggler slots, and the incoming staleness bank."""
+            i = 0
+            if ef:
+                res_slots = extra[0]
+                i = 1
+            if fz:
+                (act_steps, surv_slots, strag_slots,
+                 st_num_in, st_den_in) = extra[i:]
             sv = {"units": list(edge_tree["units"]),
                   "head": edge_tree["head"]}
             so = opt.init(sv)
@@ -620,15 +684,20 @@ class SuperStepPrograms:
                 for u in edge_tree["units"][:CU]]
             co = jax.vmap(opt.init)(cu)
             w_slots = lengths_f[members] * mask          # (C,)
-            keep_cu = [mask & (cut_slots > u) for u in range(CU)]
+            if not fz:
+                keep_cu = [mask & (cut_slots > u) for u in range(CU)]
 
-            def step_body(carry, idx_s):
+            def step_body(carry, x_s):
+                if fz:
+                    idx_s, act_s = x_s
+                else:
+                    idx_s, act_s = x_s, mask
                 if ef:
                     sv, so, cu, co, res = carry
-                    xs = (cu, members, cut_slots, mask, idx_s, res)
+                    xs = (cu, members, cut_slots, act_s, idx_s, res)
                 else:
                     sv, so, cu, co = carry
-                    xs = (cu, members, cut_slots, mask, idx_s)
+                    xs = (cu, members, cut_slots, act_s, idx_s)
                 (sv, so), ys = lax.scan(
                     seq_slot_body, (sv, so), xs,
                     unroll=2 if C >= 64 else 1)
@@ -638,20 +707,36 @@ class SuperStepPrograms:
                     g_cu, losses = ys
                 upd_c, co2 = jax.vmap(opt.update)(g_cu, co, cu)
                 cu2 = optim.apply_updates(cu, upd_c)
-                cu = [_select(keep_cu[u], cu2[u], cu[u])
+                # a dropout's replica stops updating at its drop step (per-
+                # step keep); the zero-fault path keeps the hoisted masks
+                keep_s = ([act_s & (cut_slots > u) for u in range(CU)]
+                          if fz else keep_cu)
+                cu = [_select(keep_s[u], cu2[u], cu[u])
                       for u in range(CU)]
-                co = _sel_list_state(co2, co, keep_cu, jnp.asarray(mask))
+                co = _sel_list_state(co2, co, keep_s, jnp.asarray(act_s))
                 out = (sv, so, cu, co, res) if ef else (sv, so, cu, co)
                 return out, (jnp.sum(losses),
-                             jnp.sum(mask.astype(jnp.float32)))
+                             jnp.sum(act_s.astype(jnp.float32)))
 
             init = (sv, so, cu, co, res_slots) if ef else (sv, so, cu, co)
+            xs_steps = (idx_slots, act_steps) if fz else idx_slots
             (sv, so, cu, co, *res_t), (ls, cs) = lax.scan(
-                step_body, init, idx_slots,
+                step_body, init, xs_steps,
                 unroll=min(steps, 2))
-            w_total = jnp.sum(w_slots)
+            if fz:
+                # survivor weights (DESIGN.md §13): a dropped / lost /
+                # straggling slot's client update folds into the FedAvg as
+                # an exact +0 and the denominator renormalizes over the
+                # survivors.  Server-side contributions stand for every
+                # in-round-active slot — those gradients already landed on
+                # the RSU's own copy
+                w_merge = lengths_f[members] * surv_slots
+                w_bank = lengths_f[members] * strag_slots
+            else:
+                w_merge = w_slots
+            w_total = jnp.sum(w_merge)
             den = jnp.maximum(w_total, 1.0)
-            merged = []
+            merged, st_num_out, st_den_out = [], [], []
             for u in range(U):
                 if u >= CU:
                     # no replica exists past the bucket: every slot's
@@ -667,6 +752,31 @@ class SuperStepPrograms:
                         sv["units"][u], edge_tree["units"][u]))
                     continue
                 w_u = w_slots * (cut_slots > u)
+                if fz:
+                    # survivor-weighted numerator + last round's staleness
+                    # bank at the discount; den_u can sit in (0, 1) when
+                    # only discounted bank weight remains, so the guard is
+                    # a where, not a max
+                    num = aggregation.survivor_weighted_sum(
+                        cu[u], w_u, surv_slots)
+                    swu = w_total - jnp.sum(w_merge * (cut_slots > u))
+                    den_u = w_total + disc * st_den_in[u]
+                    den_safe = jnp.where(den_u > 0.0, den_u, 1.0)
+                    num = jax.tree.map(
+                        lambda nm, s, st: (nm + swu * s.astype(jnp.float32)
+                                           + disc * st),
+                        num, sv["units"][u], st_num_in[u])
+                    merged.append(jax.tree.map(
+                        lambda nm, ref: jnp.where(
+                            den_u > 0.0,
+                            (nm / den_safe).astype(ref.dtype), ref),
+                        num, edge_tree["units"][u]))
+                    # this round's bank: straggler replicas fold with the
+                    # same exact-+0 masking and merge NEXT round
+                    st_num_out.append(aggregation.survivor_weighted_sum(
+                        cu[u], w_u, strag_slots))
+                    st_den_out.append(jnp.sum(w_bank * (cut_slots > u)))
+                    continue
                 swu = w_total - jnp.sum(w_u)
                 num = aggregation.stacked_weighted_sum(cu[u], w_u)
                 num = jax.tree.map(
@@ -677,9 +787,13 @@ class SuperStepPrograms:
                         w_total > 0.0, (nm / den).astype(ref.dtype), ref),
                     num, edge_tree["units"][u]))
             out = {"units": merged, "head": sv["head"]}
+            rets = [out, jnp.sum(ls), jnp.sum(cs), w_total]
             if ef:
-                return out, jnp.sum(ls), jnp.sum(cs), w_total, res_t[0]
-            return out, jnp.sum(ls), jnp.sum(cs), w_total
+                rets.append(res_t[0])
+            if fz:
+                rets.append(st_num_out)
+                rets.append(jnp.stack(st_den_out))
+            return tuple(rets)
 
         # ---- parallel schedule (arXiv:2405.18707: the RSUs execute the
         # cohorts' server-side passes in parallel and take one weighted
@@ -710,7 +824,7 @@ class SuperStepPrograms:
             return g, loss
 
         def fleet_round_par(edge_stack_in, cuts, members_l, slot_seg_l,
-                            idx_slots_l, res_slots_l=None):
+                            idx_slots_l, *extra):
             """The whole fleet's round over ONE flat slot axis: vmapped
             client fwd/bwd over this shard's ``S_loc`` slots, per-RSU
             aggregation as segment-sums.  Both layouts run this code — they
@@ -719,7 +833,20 @@ class SuperStepPrograms:
             adds fold left from +0, so the dense table's phantom slots
             (segment R, dropped row; exact-zero weights) are bitwise
             neutral — the bit-for-bit layout-parity argument
-            (tests/test_ragged.py)."""
+            (tests/test_ragged.py).
+
+            ``extra`` packs the statically gated optional planes, in order:
+            the EF residual slots (when ``ef``), then the fault planes
+            (when ``fz``): per-step slot activity (steps, S_loc), survivor
+            slots, straggler slots, and the incoming staleness bank
+            ((R_srv, W) numerator plane + (R_srv, CU) per-unit weight)."""
+            i = 0
+            if ef:
+                res_slots_l = extra[0]
+                i = 1
+            if fz:
+                (act_slots_l, surv_sl, strag_sl,
+                 st_num_in, st_den_in) = extra[i:]
             slot_mask_l = slot_seg_l < R_srv             # (S_loc,)
             seg_gather = jnp.minimum(slot_seg_l, R_srv - 1)
             cut_slots_l = cuts[members_l]
@@ -743,44 +870,112 @@ class SuperStepPrograms:
             co = jax.vmap(opt.init)(cu)
             so = jax.vmap(opt.init)(sv0)
 
-            def step_body(carry, idx_s):
+            def step_body(carry, x_s):
+                if fz:
+                    idx_s, act_s = x_s
+                else:
+                    idx_s = x_s
                 if ef:
                     sv_stack, so, cu, co, res = carry
                     g, losses, res_new = jax.vmap(
                         par_slot_grad, in_axes=(0, 0, 0, 0, 0, 0))(
                             cu, cut_slots_l, members_l, idx_s,
                             sv_stack[seg_gather], res)
-                    res = jnp.where(slot_mask_l[:, None], res_new, res)
                 else:
                     sv_stack, so, cu, co = carry
                     g, losses = jax.vmap(
                         par_slot_grad, in_axes=(0, 0, 0, 0, 0))(
                             cu, cut_slots_l, members_l, idx_s,
                             sv_stack[seg_gather])
+                if fz:
+                    # per-step survivorship: a dropped slot stops
+                    # contributing weight (and gradient) after its drop
+                    # step, so the server's |D_n|-weighted mean-gradient
+                    # renormalizes per step over the still-active slots
+                    amask = slot_mask_l & act_s
+                    w_act = w_slots_l * act_s
+                    w_seg_s = seg_sum(w_act)
+                    den_s = jnp.maximum(w_seg_s, 1.0)
+                    gw_s = w_act / den_s[seg_gather]
+                    any_s = w_seg_s > 0.0
+                else:
+                    amask, gw_s, any_s = slot_mask_l, gw, any_active
+                if ef:
+                    res = jnp.where(amask[:, None], res_new, res)
                 # RSUs: one |D_n|-weighted mean-gradient step each over
                 # their cohorts' server-side gradient shares
-                contrib = jnp.where(keep_full, 0.0, g) * gw[:, None]
+                contrib = jnp.where(keep_full, 0.0, g) * gw_s[:, None]
                 g_srv = seg_sum(contrib)                 # (R_srv, P)
                 upd_s, so2 = jax.vmap(opt.update)(g_srv, so, sv_stack)
                 sv2 = optim.apply_updates(sv_stack, upd_s)
-                sv_stack = jnp.where(any_active[:, None], sv2, sv_stack)
-                so = _sel_flat_state(any_active[:, None], any_active,
+                sv_stack = jnp.where(any_s[:, None], sv2, sv_stack)
+                so = _sel_flat_state(any_s[:, None], any_s,
                                      so2, so, sv_stack.shape)
                 # vehicles: per-replica prefix updates over the slot axis
                 upd_c, co2 = jax.vmap(opt.update)(g[:, O:O + W], co, cu)
-                cu = jnp.where(keep_w, optim.apply_updates(cu, upd_c), cu)
-                co = _sel_flat_state(keep_w, slot_mask_l, co2, co,
+                keep_w_s = keep_w & act_s[:, None] if fz else keep_w
+                cu = jnp.where(keep_w_s, optim.apply_updates(cu, upd_c), cu)
+                co = _sel_flat_state(keep_w_s, amask, co2, co,
                                      cu.shape)
                 out = (sv_stack, so, cu, co, res) if ef \
                     else (sv_stack, so, cu, co)
-                return out, seg_sum(jnp.where(slot_mask_l, losses, 0.0))
+                return out, seg_sum(jnp.where(amask, losses, 0.0))
 
             init = (sv0, so, cu, co, res_slots_l) if ef \
                 else (sv0, so, cu, co)
+            xs_steps = (idx_slots_l, act_slots_l) if fz else idx_slots_l
             (sv_stack, so, cu, co, *res_t), ls_steps = lax.scan(
-                step_body, init, idx_slots_l,
+                step_body, init, xs_steps,
                 unroll=min(steps, 4))
             ls_rows = jnp.sum(ls_steps, axis=0)          # (R_srv,)
+            if fz:
+                # survivor-weighted unit-wise FedAvg (DESIGN.md §13): the
+                # merge weight is the SURVIVING slot weight — dropped /
+                # lost / straggling slots fold in as exact +0 — plus last
+                # round's staleness bank at the discount.  The per-position
+                # denominator can sit in (0, 1) when only discounted bank
+                # weight remains, so the guards are wheres, not maxes
+                w_surv = w_slots_l * surv_sl.astype(jnp.float32)
+                w_seg_m = seg_sum(w_surv)                # (R_srv,)
+                wk = w_surv[:, None] * keep_w            # (S_loc, W)
+                num = seg_sum(wk * cu)                   # (R_srv, W)
+                w_srv = w_seg_m[:, None] - seg_sum(wk)
+                svw = sv_stack[:, O:O + W]
+                st_den_pos = st_den_in[:, unit_ids_w]    # (R_srv, W)
+                den_pos = w_seg_m[:, None] + disc * st_den_pos
+                den_pos_safe = jnp.where(den_pos > 0.0, den_pos, 1.0)
+                merged_w = jnp.where(
+                    den_pos > 0.0,
+                    (num + w_srv * svw + disc * st_num_in) / den_pos_safe,
+                    edge_stack_in[:, O:O + W])
+                row_act = w_seg_m > 0.0
+                den_row = jnp.maximum(w_seg_m, 1.0)
+                if O > 0 or O + W < P:
+                    edge_new = jnp.concatenate(
+                        [jnp.where(row_act[:, None],
+                                   (w_seg_m[:, None] * sv_stack[:, :O])
+                                   / den_row[:, None],
+                                   edge_stack_in[:, :O]),
+                         merged_w,
+                         jnp.where(row_act[:, None],
+                                   (w_seg_m[:, None] * sv_stack[:, O + W:])
+                                   / den_row[:, None],
+                                   edge_stack_in[:, O + W:])],
+                        axis=1)
+                else:
+                    edge_new = merged_w
+                # this round's bank: straggler replicas scattered into the
+                # same per-RSU segment rows, merged NEXT round
+                w_st = w_slots_l * strag_sl.astype(jnp.float32)
+                st_num_out = seg_sum((w_st[:, None] * keep_w) * cu)
+                unit_own = (cut_slots_l[:, None]
+                            > jnp.arange(CU, dtype=jnp.int32)[None, :])
+                st_den_out = seg_sum(w_st[:, None] * unit_own)
+                rets = [edge_new, ls_rows, w_seg_m, slot_mask_l]
+                if ef:
+                    rets.append(res_t[0])
+                rets += [st_num_out, st_den_out]
+                return tuple(rets)
             # unit-wise FedAvg: segment-sums over the owned window, the
             # untouched remainder of the plane merges as (w_seg * sv) / den
             # (its client weight is identically zero)
@@ -815,10 +1010,53 @@ class SuperStepPrograms:
                 serving, rates, residence = (st.serving_rsu, st.rates_bps,
                                              st.residence_s)
             cuts = pick_cuts(serving, rates, residence)
+            if fz:
+                drop, dfrac, lost, rsu_down = faults.sample_faults_traced(
+                    fc, rnd, n, R)
+                rsu_down = faults.ensure_rsu_up(rsu_down)
+                # whole-RSU outage: the cohort's cuts drop to SKIP before
+                # slot grouping — the cell trains nothing and accrues no
+                # samples this round, so the cloud merge reweights around
+                # it by construction
+                down_v = rsu_down[jnp.clip(serving, 0, R - 1)] \
+                    & (serving >= 0)
+                cuts = jnp.where(down_v, 0, cuts).astype(jnp.int32)
             order, seg_v, counts = slot_sort(serving, cuts)
             idx_all = fleet_batch_indices_traced(
                 jax.random.fold_in(base_key, rnd), lengths_dev, steps, batch)
             sched = cuts > 0
+            if fz:
+                # failure precedence: a mid-round dropout has nothing left
+                # to upload; an upload loss discards what a straggler
+                # would have banked
+                drop = drop & sched
+                lost = lost & sched & ~drop
+                if fc.straggler_factor > 0.0:
+                    # deadline stragglers are derived, not sampled: the
+                    # analytic round latency at the CHOSEN cut against the
+                    # scaled residence budget
+                    lat_m = adaptive.latency_matrix_traced(
+                        self.profile, jnp.maximum(rates, 1.0), flops,
+                        cfg.server_flops, nb, batch, ep, range(1, U))
+                    lat = lat_m[jnp.arange(n), jnp.clip(cuts - 1, 0, U - 2)]
+                    strag = sched & (lat > fc.straggler_factor * residence)
+                else:
+                    strag = jnp.zeros_like(sched)
+                strag = strag & ~drop & ~lost
+                rescue = faults.rescue_mask(sched, drop | lost | strag)
+                drop = drop & ~rescue
+                lost = lost & ~rescue
+                strag = strag & ~rescue
+                surv = sched & ~drop & ~lost & ~strag
+                dstep = faults.drop_steps(drop, dfrac, steps)
+                # (steps, n) per-step activity: a dropout runs only its
+                # first dstep local batches; everyone else runs them all
+                act_v = (jnp.arange(steps, dtype=jnp.int32)[:, None]
+                         < dstep[None, :]) & sched[None, :]
+                # banked weight merging THIS round (telemetry)
+                stale_w = jnp.sum(carry["stale_den"])
+                if fm is not None and not ragged_par:
+                    stale_w = lax.psum(stale_w, MESH_AXIS)
             if ef:
                 # residuals follow the vehicle (the plane is fleet-indexed
                 # and replicated): zero where this round's cut differs from
@@ -838,15 +1076,25 @@ class SuperStepPrograms:
                     members_l, mask_l = members, mask
                 idx_rsu = jnp.moveaxis(idx_all[:, members_l], 1, 0)
                 cut_slots = cuts[members_l]            # (R_loc, C)
+                args = [carry["edge"], members_l, mask_l, cut_slots,
+                        idx_rsu]
                 if ef:
                     res_slots = res_base[members_l]    # (R_loc, C, res)
-                    edge, ls, cs, w_tot, res_out = jax.vmap(rsu_round_seq)(
-                        carry["edge"], members_l, mask_l, cut_slots,
-                        idx_rsu, res_slots)
+                    args.append(res_slots)
+                if fz:
+                    act_rsu = jnp.moveaxis(act_v[:, members_l], 1, 0) \
+                        & mask_l[:, None, :]           # (R_loc, steps, C)
+                    args += [act_rsu, surv[members_l] & mask_l,
+                             strag[members_l] & mask_l,
+                             carry["stale_num"], carry["stale_den"]]
+                outs = jax.vmap(rsu_round_seq)(*args)
+                if fz:
+                    st_num2, st_den2 = outs[-2], outs[-1]
+                    outs = outs[:-2]
+                if ef:
+                    edge, ls, cs, w_tot, res_out = outs
                 else:
-                    edge, ls, cs, w_tot = jax.vmap(rsu_round_seq)(
-                        carry["edge"], members_l, mask_l, cut_slots,
-                        idx_rsu)
+                    edge, ls, cs, w_tot = outs
                 ef_mask, ef_members = mask_l, members_l
                 cnt = jnp.sum(cs)
                 if fm is not None:
@@ -885,18 +1133,31 @@ class SuperStepPrograms:
                     slot_seg_l = fleet_sharding.local_slice(slot_seg,
                                                             S_loc)
                 idx_slots = idx_all[:, members_l]      # (steps, S_loc, b)
+                args = [carry["edge"], cuts, members_l, slot_seg_l,
+                        idx_slots]
                 if ef:
                     res_slots = res_base[members_l]    # (S_loc, res)
-                    edge, ls, w_tot, slot_mask_l, res_out = \
-                        fleet_round_par(carry["edge"], cuts, members_l,
-                                        slot_seg_l, idx_slots, res_slots)
+                    args.append(res_slots)
+                if fz:
+                    args += [act_v[:, members_l], surv[members_l],
+                             strag[members_l],
+                             carry["stale_num"], carry["stale_den"]]
+                outs = fleet_round_par(*args)
+                if fz:
+                    st_num2, st_den2 = outs[-2], outs[-1]
+                    outs = outs[:-2]
+                if ef:
+                    edge, ls, w_tot, slot_mask_l, res_out = outs
                 else:
-                    edge, ls, w_tot, slot_mask_l = fleet_round_par(
-                        carry["edge"], cuts, members_l, slot_seg_l,
-                        idx_slots)
+                    edge, ls, w_tot, slot_mask_l = outs
                 ef_mask, ef_members = slot_mask_l, members_l
-                # every occupied slot runs exactly `steps` batches
-                cnt = (jnp.sum(counts) * steps).astype(jnp.float32)
+                if fz:
+                    # dropouts run only their dstep-batch prefix
+                    cnt = jnp.sum(
+                        jnp.where(sched, dstep, 0)).astype(jnp.float32)
+                else:
+                    # every occupied slot runs exactly `steps` batches
+                    cnt = (jnp.sum(counts) * steps).astype(jnp.float32)
                 if fm is not None and layout == "dense":
                     ls = lax.all_gather(ls, MESH_AXIS, tiled=True)
                     w_tot = lax.all_gather(w_tot, MESH_AXIS, tiled=True)
@@ -945,10 +1206,19 @@ class SuperStepPrograms:
             if ef:
                 carry2["wire_res"] = wire_res2
                 carry2["wire_cut"] = wire_cut2
+            if fz:
+                # the staleness bank drains every round: this round's
+                # straggler captures replace last round's (now-merged) bank
+                carry2["stale_num"] = st_num2
+                carry2["stale_den"] = st_den2
             ys = {"loss": jnp.sum(ls), "cnt": cnt, "cuts": cuts,
                   "serving": serving.astype(jnp.int32),
                   "rates": rates.astype(jnp.float32),
                   "handover": handover, "counts": counts}
+            if fz:
+                ys.update({"drop": drop, "lost": lost, "strag": strag,
+                           "rsu_down": rsu_down, "dstep": dstep,
+                           "stale_w": stale_w})
             return carry2, ys
 
         def superstep(carry, xs):
@@ -964,6 +1234,11 @@ class SuperStepPrograms:
             if ef:
                 carry_spec["wire_res"] = PSpec()
                 carry_spec["wire_cut"] = PSpec()
+            if fz:
+                # the staleness bank is per-RSU state: it shards with the
+                # edge stack (and replicates when the edge does)
+                carry_spec["stale_num"] = edge_spec
+                carry_spec["stale_den"] = edge_spec
             superstep = shard_map(superstep, mesh=fm.mesh,
                                   in_specs=(carry_spec, PSpec()),
                                   out_specs=(carry_spec, PSpec()),

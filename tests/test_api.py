@@ -56,7 +56,7 @@ def scenario_run():
 
 API_SURFACE = sorted([
     "ExperimentSpec", "TrainConfig", "AdaptiveConfig", "FleetConfig",
-    "RuntimeConfig", "SIM_CONFIG_FIELD_MAP",
+    "RuntimeConfig", "FaultsConfig", "SIM_CONFIG_FIELD_MAP",
     "MODELS", "SCENARIOS", "STRATEGIES", "SCHEDULES", "WIRES",
     "ModelEntry", "StrategyEntry", "ScheduleEntry", "WireEntry",
     "register_model", "register_scenario", "register_strategy",

@@ -1,0 +1,300 @@
+"""Fault plane (ISSUE 8, DESIGN.md §13): zero-fault byte-identity, seeded
+chaos schedules, survivor-weighted partial aggregation, the staleness bank,
+and fault-aware telemetry — across both engines, both server schedules, and
+both super-step layouts.
+
+The CI ``chaos`` job re-runs this file plus the superstep/engine-parity
+suites; the zero-fault invariants here are the PR's hard contract: a
+default :class:`~repro.core.faults.FaultConfig` must compile the exact
+program a pre-fault build compiled.
+"""
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core import faults
+from repro.core.fedsim import FederationSim, ScenarioEngine, SimConfig
+
+from test_scenario import TinyMLP, _two_cell_trace, _vector_clients
+
+ROUNDS, INTERVAL = 4, 5.0
+# the canonical seeded chaos schedule: ~20% dropout plus upload loss and an
+# always-firing deadline (latencies are ~ms against multi-second residence,
+# so a 1e-7 factor marks one vehicle per round as a straggler)
+CHAOS = dict(fault_dropout=0.2, fault_upload_loss=0.1, fault_straggler=1e-7)
+
+
+def _cfg(**kw):
+    base = dict(scheme="asfl", adaptive_strategy="paper", rounds=ROUNDS,
+                local_steps=2, batch_size=8, lr=1e-2, optimizer="sgd",
+                round_interval_s=INTERVAL, eval_every=0, superstep=1)
+    base.update(kw)
+    return SimConfig(**base)
+
+
+def _engine(cfg, sync=2):
+    sc = _two_cell_trace(ROUNDS, INTERVAL)
+    clients, test = _vector_clients(2)
+    return ScenarioEngine(TinyMLP(), clients, test, cfg, sc,
+                          cloud_sync_every=sync)
+
+
+def _params(eng):
+    return jax.tree.map(np.asarray, {"units": eng.units, "head": eng.head})
+
+
+# ------------------------------------------------------------ FaultConfig
+def test_fault_config_validation():
+    for bad in ({"dropout_rate": 1.0}, {"upload_loss_rate": -0.1},
+                {"rsu_outage_rate": 2.0}, {"staleness_discount": 1.5},
+                {"straggler_factor": -1.0}):
+        with pytest.raises(ValueError):
+            faults.FaultConfig(**bad)
+
+
+def test_fault_config_flags():
+    assert not faults.FaultConfig().stochastic
+    assert not faults.FaultConfig().enabled
+    assert faults.FaultConfig(coverage=True).enabled
+    assert not faults.FaultConfig(coverage=True).stochastic
+    for kw in ({"dropout_rate": 0.1}, {"upload_loss_rate": 0.1},
+               {"straggler_factor": 1.0}, {"rsu_outage_rate": 0.1}):
+        assert faults.FaultConfig(**kw).stochastic
+
+
+def test_sim_config_alias_and_conflict():
+    """mobility_dropout is the legacy spelling of fault_coverage — the
+    compress_smashed -> wire="int8" shim pattern."""
+    assert SimConfig(mobility_dropout=True).fault_config().coverage
+    assert SimConfig(fault_coverage=True).fault_config().coverage
+    assert not SimConfig().fault_config().coverage
+    with pytest.raises(ValueError, match="legacy spelling"):
+        SimConfig(mobility_dropout=True, fault_coverage=True)
+    with pytest.raises(ValueError, match="dropout_rate"):
+        SimConfig(fault_dropout=1.0)
+
+
+def test_drop_steps_bounds():
+    drop = np.array([True, True, False])
+    frac = np.array([0.0, 0.99, 0.5], np.float32)
+    out = np.asarray(faults.drop_steps(drop, frac, 4))
+    assert out.tolist() == [0, 3, 4]          # dropped strictly < steps
+
+
+def test_ensure_rsu_up_keeps_one():
+    down = np.array([True, True, True])
+    kept = np.asarray(faults.ensure_rsu_up(down))
+    assert kept.tolist() == [False, True, True]
+    some = np.array([True, False, True])
+    assert np.asarray(faults.ensure_rsu_up(some)).tolist() == some.tolist()
+
+
+# ----------------------------------------------------- zero-fault identity
+def test_zero_fault_carry_has_no_fault_planes():
+    eng = _engine(_cfg())
+    assert not eng.programs.fz
+    assert "stale_num" not in eng._carry
+    assert "stale_den" not in eng._carry
+
+
+def test_zero_fault_never_samples(monkeypatch):
+    """The Python-level gate: a default FaultConfig must never reach the
+    fault sampler, so the traced program cannot contain fault ops."""
+    def boom(*a, **kw):                      # pragma: no cover
+        raise AssertionError("fault sampler invoked on zero-fault config")
+    monkeypatch.setattr(faults, "sample_faults_traced", boom)
+    eng = _engine(_cfg(superstep=ROUNDS))
+    hist = eng.run()
+    assert len(hist) == ROUNDS
+    assert all(np.isfinite(m.loss) for m in hist)
+
+
+@pytest.mark.parametrize("schedule", ["sequential", "parallel"])
+def test_zero_fault_lowering_byte_identical_across_fault_seed(schedule):
+    """Byte-identity, provable in-repo: with zero fault rates, nothing of
+    the fault group may leak into the lowered program — two configs that
+    differ only in fault_seed lower to the identical text."""
+    txts = []
+    for seed in (0, 99):
+        eng = _engine(_cfg(server_schedule=schedule, superstep=ROUNDS,
+                           fault_seed=seed))
+        cap = eng._capacity(ROUNDS)
+        sig = eng.programs.signature(ROUNDS, cap, eng._total_slots(ROUNDS))
+        fn = eng.programs.get(sig)
+        txts.append(fn.lower(eng._carry,
+                             eng._window_xs(0, ROUNDS)).as_text())
+    assert txts[0] == txts[1]
+
+
+# --------------------------------------------------- chaos: fused engines
+@pytest.mark.parametrize("schedule", ["sequential", "parallel"])
+def test_fused_matches_per_round_under_faults(schedule):
+    """K fused rounds == K per-round dispatches stays bit-for-bit under the
+    seeded chaos schedule (sgd): the fault stream is round-indexed
+    (fold_in(key, rnd)), so the window size cannot change the draws."""
+    cfg1 = _cfg(server_schedule=schedule, **CHAOS)
+    cfgK = dataclasses.replace(cfg1, superstep=ROUNDS)
+    e1, eK = _engine(cfg1), _engine(cfgK)
+    h1, hK = e1.run(), eK.run()
+    jax.tree.map(np.testing.assert_array_equal, _params(e1), _params(eK))
+    np.testing.assert_array_equal([m.loss for m in h1],
+                                  [m.loss for m in hK])
+    assert [m.n_dropout for m in h1] == [m.n_dropout for m in hK]
+    assert [m.n_upload_lost for m in h1] == [m.n_upload_lost for m in hK]
+    assert [m.n_straggler for m in h1] == [m.n_straggler for m in hK]
+    # the schedule actually injected failures
+    assert sum(m.n_dropout + m.n_upload_lost + m.n_straggler
+               for m in h1) > 0
+    assert any(m.survivor_frac < 1.0 for m in h1)
+
+
+@pytest.mark.parametrize("schedule", ["sequential", "parallel"])
+def test_layouts_agree_under_faults(schedule):
+    """ragged == dense stays bit-for-bit with survivor-weighted merges and
+    the staleness bank in play (sgd)."""
+    engs = [_engine(_cfg(server_schedule=schedule, superstep=ROUNDS,
+                         superstep_layout=lay, **CHAOS))
+            for lay in ("ragged", "dense")]
+    hists = [e.run() for e in engs]
+    jax.tree.map(np.testing.assert_array_equal,
+                 _params(engs[0]), _params(engs[1]))
+    np.testing.assert_array_equal([m.loss for m in hists[0]],
+                                  [m.loss for m in hists[1]])
+
+
+@pytest.mark.parametrize("schedule", ["sequential", "parallel"])
+@pytest.mark.skipif(jax.device_count() < 8,
+                    reason="needs XLA_FLAGS=--xla_force_host_platform_"
+                           "device_count=8")
+def test_mesh_agrees_under_faults(schedule):
+    """FleetMesh(8) == single device, bit-for-bit, under the chaos
+    schedule (the staleness bank shards/replicates with the edge stack)."""
+    ref = _engine(_cfg(server_schedule=schedule, superstep=ROUNDS, **CHAOS))
+    msh = _engine(_cfg(server_schedule=schedule, superstep=ROUNDS,
+                       mesh_devices=8, **CHAOS))
+    hr, hm = ref.run(), msh.run()
+    jax.tree.map(np.testing.assert_array_equal, _params(ref), _params(msh))
+    np.testing.assert_array_equal([m.loss for m in hr],
+                                  [m.loss for m in hm])
+
+
+@pytest.mark.parametrize("schedule", ["sequential", "parallel"])
+def test_fault_churn_precompiled_zero_fallbacks(schedule):
+    """Fault churn is retrace-free: after precompile(), a chaos run builds
+    and XLA-compiles nothing (fault masks are data, the bank is carry)."""
+    eng = _engine(_cfg(server_schedule=schedule, superstep=2,
+                       fault_rsu_outage=0.2, **CHAOS))
+    eng.precompile()
+    events = []
+    jax.monitoring.register_event_duration_secs_listener(
+        lambda name, *a, **kw: events.append(name))
+    baseline = len([e for e in events if "compile" in e])
+    hist = eng.run()
+    assert eng.programs.compile_fallbacks == 0
+    assert not [e for e in events[baseline:] if "compile" in e]
+    assert len(hist) == ROUNDS
+    assert all(np.isfinite(m.loss) for m in hist)
+
+
+def test_staleness_bank_banks_and_merges():
+    """A straggler's update is banked, not lost: the round after a
+    straggler capture merges its discounted weight (stale_merged
+    telemetry), and the bank drains every round."""
+    eng = _engine(_cfg(fault_straggler=1e-7))
+    hist = eng.run()
+    strag = [m.n_straggler for m in hist]
+    stale = [m.stale_merged for m in hist]
+    assert sum(strag) > 0
+    assert stale[0] == 0.0                    # nothing banked before round 0
+    for prev, merged in zip(strag, stale[1:]):
+        # bank drains in one round: weight merges iff something was banked
+        assert (merged > 0.0) == (prev > 0)
+    # the bank never double-merges: the carry holds only the LAST round's
+    # captures
+    den = np.asarray(eng._carry["stale_den"])
+    assert den.sum() > 0.0 if strag[-1] else den.sum() == 0.0
+
+
+def test_rsu_outage_sits_cohort_out():
+    """An RSU outage forces its cohort to SKIP: scheduled counts drop on
+    outage rounds, rsu_loads show the dark cell, and training still
+    completes (ensure_rsu_up keeps the network alive)."""
+    eng = _engine(_cfg(fault_rsu_outage=0.4, superstep=ROUNDS))
+    hist = eng.run()
+    assert any(m.n_rsu_down > 0 for m in hist)
+    for m in hist:
+        # a down cell contributes no scheduled vehicles
+        assert sum(m.rsu_loads) == m.n_scheduled
+    assert all(np.isfinite(m.loss) for m in hist)
+
+
+def test_fault_telemetry_consistent():
+    """Precedence accounting: dropout/upload-loss/straggler are disjoint
+    and bounded by the scheduled count; survivor_frac matches them."""
+    eng = _engine(_cfg(fault_rsu_outage=0.2, **CHAOS))
+    hist = eng.run()
+    for m in hist:
+        failed = m.n_dropout + m.n_upload_lost + m.n_straggler
+        assert failed <= m.n_scheduled
+        if m.n_scheduled:
+            expect = (m.n_scheduled - failed) / m.n_scheduled
+            assert abs(m.survivor_frac - expect) < 1e-6
+        assert m.lost_update_bytes >= 0.0
+        # stragglers are banked, not lost: only drop/lost updates die
+        if m.n_dropout + m.n_upload_lost == 0:
+            assert m.lost_update_bytes == 0.0
+
+
+def test_fault_schedule_is_seeded():
+    """Same fault_seed -> identical failure schedule; different seed ->
+    (this trace) a different one.  The stream is dedicated: it cannot
+    collide with the batch-index or fading streams."""
+    h1 = _engine(_cfg(**CHAOS)).run()
+    h2 = _engine(_cfg(**CHAOS)).run()
+    assert [m.n_dropout for m in h1] == [m.n_dropout for m in h2]
+    assert [m.n_upload_lost for m in h1] == [m.n_upload_lost for m in h2]
+    h3 = _engine(_cfg(fault_seed=123, **CHAOS)).run()
+    assert ([m.n_dropout for m in h1] != [m.n_dropout for m in h3]
+            or [m.n_upload_lost for m in h1]
+            != [m.n_upload_lost for m in h3])
+
+
+# ------------------------------------------------- host engine (single RSU)
+def test_federation_fault_run_completes_with_telemetry():
+    clients, test = _vector_clients(4)
+    cfg = _cfg(fault_dropout=0.4, fault_upload_loss=0.2, superstep=1,
+               rounds=3, adaptive_strategy="paper")
+    sim = FederationSim(TinyMLP(), clients, test, cfg)
+    hist = sim.run()
+    assert all(np.isfinite(m.loss) for m in hist)
+    assert sum(m.n_dropout + m.n_upload_lost for m in hist) > 0
+    for m in hist:
+        assert 0.0 < m.survivor_frac <= 1.0   # rescue keeps >= 1 survivor
+        if m.n_dropout + m.n_upload_lost == 0:
+            assert m.survivor_frac == 1.0
+            assert m.lost_update_bytes == 0.0
+        else:
+            assert m.lost_update_bytes > 0.0
+    # seeded host stream: the schedule reproduces
+    sim2 = FederationSim(TinyMLP(), clients, test, cfg)
+    h2 = sim2.run()
+    assert [m.n_dropout for m in hist] == [m.n_dropout for m in h2]
+    np.testing.assert_array_equal([m.loss for m in hist],
+                                  [m.loss for m in h2])
+
+
+def test_federation_rejects_scenario_faults():
+    clients, test = _vector_clients(2)
+    for kw in ({"fault_straggler": 1.0}, {"fault_rsu_outage": 0.1}):
+        with pytest.raises(ValueError, match="multi-RSU"):
+            FederationSim(TinyMLP(), clients, test, _cfg(**kw))
+    with pytest.raises(ValueError, match="sfl | asfl"):
+        FederationSim(TinyMLP(), clients, test,
+                      _cfg(scheme="fl", fault_dropout=0.2))
+
+
+def test_scenario_rejects_coverage_fault():
+    with pytest.raises(ValueError, match="coverage"):
+        _engine(_cfg(fault_coverage=True))

@@ -223,3 +223,91 @@ def test_prefix_plane_covers_every_cut(n_units, sizes, head, cuts, seed):
     for c in set(cuts):
         assert (np.flatnonzero(ids < c) >= off).all()
         assert (np.flatnonzero(ids < c) < off + width).all()
+
+
+# -------------------------------------------------------------- fault plane
+@SET
+@given(st.integers(1, 8), st.integers(0, 2 ** 31 - 1))
+def test_survivor_fedavg_all_true_equals_plain_fedavg(n, seed):
+    """With every replica surviving, the partial merge IS stacked_fedavg —
+    same reduction, same floats (DESIGN.md §13 zero-fault invariant at the
+    aggregation level)."""
+    key = jax.random.PRNGKey(seed)
+    k1, k2 = jax.random.split(key)
+    stack = {"w": jax.random.normal(k1, (n, 3, 4)),
+             "b": jax.random.normal(k2, (n, 2))}
+    w = jnp.arange(1, n + 1, dtype=jnp.float32)
+    surv = jnp.ones((n,), bool)
+    full = aggregation.stacked_fedavg(stack, w)
+    part = aggregation.survivor_fedavg(stack, w, surv, fallback=full)
+    jax.tree.map(lambda a, b: np.testing.assert_array_equal(
+        np.asarray(a), np.asarray(b)), part, full)
+
+
+@SET
+@given(st.integers(2, 8),
+       st.lists(st.booleans(), min_size=2, max_size=8),
+       st.floats(0.05, 1.0), st.integers(0, 2 ** 31 - 1))
+def test_survivor_fedavg_renormalizes_over_any_nonempty_mask(
+        n, mask, scale, seed):
+    """The survivor weights renormalize to exactly 1 over ANY non-empty
+    mask — including fractional weights < 1 (staleness discounts), which
+    is why the denominator must be where(total>0, total, 1), not
+    maximum(total, 1).  Identical replicas come back unchanged iff anyone
+    survives; the fallback comes back when nobody does."""
+    mask = (mask * n)[:n]
+    key = jax.random.PRNGKey(seed)
+    leaf = jax.random.normal(key, (3,))
+    stack = {"w": jnp.broadcast_to(leaf, (n, 3))}
+    # fractional weights: surviving total can sit anywhere in (0, n]
+    w = jnp.full((n,), scale, jnp.float32)
+    surv = jnp.asarray(mask, bool)
+    fb = {"w": jnp.full((3,), 123.0)}
+    out = aggregation.survivor_fedavg(stack, w, surv, fallback=fb)
+    if any(mask):
+        np.testing.assert_allclose(np.asarray(out["w"]), np.asarray(leaf),
+                                   rtol=1e-6)
+    else:
+        np.testing.assert_array_equal(np.asarray(out["w"]),
+                                      np.asarray(fb["w"]))
+
+
+@SET
+@given(st.lists(st.booleans(), min_size=1, max_size=32),
+       st.lists(st.booleans(), min_size=1, max_size=32))
+def test_rescue_mask_guarantees_a_participant(sched, failed):
+    """For ARBITRARY scheduled/failed masks: clearing the rescue bits
+    always leaves >= 1 surviving scheduled vehicle (when anything is
+    scheduled), and the rescue is inert whenever a survivor already
+    exists."""
+    from repro.core import faults
+    n = max(len(sched), len(failed))
+    sched = np.array((sched * n)[:n])
+    failed = np.array((failed * n)[:n]) & sched
+    rescue = np.asarray(faults.rescue_mask(jnp.asarray(sched),
+                                           jnp.asarray(failed)))
+    surv_before = sched & ~failed
+    if surv_before.any() or not sched.any():
+        assert not rescue.any()          # inert
+    else:
+        assert rescue.sum() == 1
+        assert sched[np.argmax(rescue)]  # rescues a scheduled vehicle
+    surv_after = sched & ~(failed & ~rescue)
+    assert surv_after.any() == sched.any()
+
+
+@SET
+@given(st.lists(st.booleans(), min_size=1, max_size=16),
+       st.integers(1, 64), st.integers(0, 2 ** 31 - 1))
+def test_drop_steps_bounds(drop, steps, seed):
+    """Performed steps land in [0, steps]; a dropped vehicle performs a
+    strict prefix (< steps), a surviving one the full schedule."""
+    from repro.core import faults
+    rng = np.random.default_rng(seed)
+    drop = np.array(drop)
+    frac = rng.random(len(drop)).astype(np.float32)
+    out = np.asarray(faults.drop_steps(jnp.asarray(drop),
+                                       jnp.asarray(frac), steps))
+    assert (out >= 0).all() and (out <= steps).all()
+    assert (out[drop] < steps).all()
+    assert (out[~drop] == steps).all()
