@@ -84,7 +84,7 @@ def bench_one(name: str, n: int, args, devices: int = 1,
     # data on the carry, never part of a program signature
     assert res.diagnostics["compile_fallbacks"] == 0
     occ = res.diagnostics["occupancy"]
-    return {
+    row = {
         "scenario": name, "n_vehicles": n, "devices": devices,
         # fault plane: rates + robustness telemetry (zero-fault rows report
         # the trivial values, keeping the row schema uniform)
@@ -110,6 +110,9 @@ def bench_one(name: str, n: int, args, devices: int = 1,
         "handovers": int(sum(m.n_handover for m in res.history)),
         "final_loss": float(res.history[-1].loss),
     }
+    if "staleness_hist" in res.diagnostics:
+        row["staleness_hist"] = res.diagnostics["staleness_hist"]
+    return row
 
 
 def measure_api_overhead(args, fleet: int = 64,

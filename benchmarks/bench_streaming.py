@@ -1,0 +1,233 @@
+"""Continuous-fleet streaming benchmark (DESIGN.md §14).
+
+Two curve families over the multi-RSU fused super-step engine on the
+continuous highway scenario:
+
+* **goodput vs churn** — sweeps the presence-toggle rate over ``--churns``
+  (default 0, 0.1, 0.2, 0.4) under both the synchronous ``sequential``
+  schedule and the buffered-asynchronous ``streaming`` schedule, reporting
+  ``goodput_samples_per_s``: the sample mass the global model absorbed per
+  steady-state second.  Sync schedules make every arrival sit out its
+  arrival round (registration/model download), so their goodput decays as
+  churn rises; the streaming schedule admits arrivals immediately (ingest
+  is double-buffered behind device compute) and holds its goodput flat.
+* **staleness vs accuracy** — at fixed churn, sweeps the StreamBuffer
+  capacity over ``--buffers`` (default 2, 4, 8): a bigger buffer merges
+  less often, so the mean slot age at merge time grows and the
+  staleness-discounted model pays for it in accuracy.
+
+Every row is one ``repro.api.run(ExperimentSpec)`` call and asserts
+``compile_fallbacks == 0``: presence churn is carried data and the buffer
+is donated carry, so the streaming sweep compiles exactly as often as a
+static-fleet run.
+
+  PYTHONPATH=src python benchmarks/bench_streaming.py
+  -> BENCH_streaming.json (repo root) + benchmarks/out/BENCH_streaming.json
+"""
+from __future__ import annotations
+
+import argparse
+import gc
+import json
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))
+
+import jax
+import numpy as np
+
+from bench_io import write_bench
+from repro import api
+
+
+def _spec(args, schedule: str, churn: float, buffer_size: int,
+          kernel: str) -> api.ExperimentSpec:
+    return api.ExperimentSpec(
+        model="mlp9",
+        train=api.TrainConfig(scheme="asfl", rounds=args.rounds,
+                              local_steps=args.local_steps,
+                              batch_size=args.batch, lr=1e-3,
+                              eval_every=1, server_schedule=schedule),
+        stream=api.StreamConfig(buffer_size=buffer_size, churn_rate=churn,
+                                kernel=kernel, alpha=args.alpha,
+                                seed=args.stream_seed),
+        adaptive=api.AdaptiveConfig(strategy=args.strategy),
+        fleet=api.FleetConfig(n_vehicles=args.fleet, scenario=args.scenario,
+                              scenario_kwargs={"seed": args.fleet},
+                              cloud_sync_every=args.sync,
+                              round_interval_s=10.0,
+                              per_vehicle_samples=64, data_seed=args.fleet),
+        runtime=api.RuntimeConfig(superstep=args.superstep, precompile=True))
+
+
+def bench_one(args, schedule: str, churn: float, buffer_size: int,
+              kernel: str) -> dict:
+    res = api.run(_spec(args, schedule, churn, buffer_size, kernel),
+                  timeit=args.timeit)
+    assert all(np.isfinite(m.loss) for m in res.history)
+    assert res.diagnostics["compile_fallbacks"] == 0
+    accs = [m.test_acc for m in res.history if np.isfinite(m.test_acc)]
+    merges = res.totals["stream_merges"]
+    stale_total = float(sum(getattr(m, "stream_stale", 0.0)
+                            for m in res.history))
+    row = {
+        "schedule": schedule, "churn": churn,
+        "buffer_size": buffer_size, "kernel": kernel,
+        "final_acc": float(accs[-1]) if accs else float("nan"),
+        "final_loss": float(res.history[-1].loss),
+        # goodput (the headline): sample mass absorbed per second
+        "goodput_samples_per_s": res.totals["goodput_samples_per_s"],
+        "absorbed_samples": res.totals["absorbed_samples"],
+        "stream_merges": merges,
+        "n_arrived": res.totals["n_arrived"],
+        # mean slot age discharged per merge (each fire empties exactly
+        # buffer_size slots), the x-axis of the staleness/accuracy curve
+        "mean_slot_staleness": (stale_total / (merges * buffer_size)
+                                if merges else 0.0),
+        "round_s": res.timing["round_s"],
+        "rounds_per_s": res.timing["rounds_per_s"],
+    }
+    if "staleness_hist" in res.diagnostics:
+        row["staleness_hist"] = res.diagnostics["staleness_hist"]
+    return row
+
+
+def check_baseline(out: dict, baseline_path: str, max_regress: float) -> int:
+    """Exit status for the CI perf smoke: 1 if any matching row's goodput
+    dropped more than ``max_regress`` below the committed baseline."""
+    if not os.path.exists(baseline_path):
+        print(f"baseline {baseline_path} missing; skipping perf check")
+        return 0
+    with open(baseline_path) as f:
+        base = json.load(f)
+    keys = ("fleet", "scenario", "strategy", "rounds", "local_steps",
+            "batch", "superstep", "sync", "kernel", "alpha", "stream_seed")
+    mismatch = {k: (base.get("config", {}).get(k), out["config"].get(k))
+                for k in keys
+                if base.get("config", {}).get(k) != out["config"].get(k)}
+    if mismatch:
+        print(f"baseline config mismatch {mismatch}; skipping perf check "
+              f"(regenerate {baseline_path})")
+        return 0
+
+    def _perf_key(r):
+        return (r["schedule"], r["churn"], r["buffer_size"])
+
+    base_rows = {str(_perf_key(r)): r["goodput_samples_per_s"]
+                 for r in base.get("results", [])}
+    failures = []
+    for row in out["results"]:
+        key = str(_perf_key(row))
+        if key not in base_rows or not base_rows[key]:
+            print(f"no baseline goodput for {key}; skipping")
+            continue
+        floor = base_rows[key] * (1.0 - max_regress)
+        gp = row["goodput_samples_per_s"]
+        status = "OK" if gp >= floor else "REGRESSION"
+        print(f"goodput {key}: {gp:.0f} samples/s vs baseline "
+              f"{base_rows[key]:.0f} (floor {floor:.0f}) {status}")
+        if gp < floor:
+            failures.append(key)
+    if failures:
+        print(f"goodput regression >{max_regress:.0%} in rows: {failures}")
+        return 1
+    return 0
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--churns", default="0,0.1,0.2,0.4",
+                    help="presence-toggle rates for the goodput sweep")
+    ap.add_argument("--buffers", default="2,4,8",
+                    help="StreamBuffer capacities for the staleness sweep")
+    ap.add_argument("--staleness-churn", type=float, default=0.2,
+                    help="fixed churn for the staleness/accuracy sweep")
+    ap.add_argument("--kernel", default="poly",
+                    choices=["constant", "poly"])
+    ap.add_argument("--alpha", type=float, default=0.5)
+    ap.add_argument("--stream-seed", type=int, default=0)
+    ap.add_argument("--fleet", type=int, default=64)
+    ap.add_argument("--scenario", default="highway_corridor")
+    ap.add_argument("--strategy", default="paper")
+    ap.add_argument("--rounds", type=int, default=12)
+    ap.add_argument("--local-steps", type=int, default=2)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--sync", type=int, default=4)
+    ap.add_argument("--superstep", type=int, default=4)
+    ap.add_argument("--timeit", type=int, default=1)
+    ap.add_argument("--no-write", action="store_true")
+    ap.add_argument("--skip-staleness", action="store_true",
+                    help="goodput sweep only (the CI smoke)")
+    ap.add_argument("--check-baseline", metavar="PATH",
+                    help="compare goodput against a committed "
+                         "BENCH_streaming.json; missing baseline skips")
+    ap.add_argument("--max-regress", type=float, default=0.30)
+    args = ap.parse_args()
+
+    results = []
+    churns = [float(s) for s in args.churns.split(",")]
+    for schedule in ("sequential", "streaming"):
+        for churn in churns:
+            gc.collect()
+            row = bench_one(args, schedule, churn,
+                            buffer_size=4, kernel=args.kernel)
+            results.append(row)
+            print(f"{schedule:10s} churn={churn:4.2f} "
+                  f"goodput={row['goodput_samples_per_s']:8.0f} samples/s "
+                  f"acc={row['final_acc']:.3f} "
+                  f"merges={row['stream_merges']:3d} "
+                  f"arrived={row['n_arrived']:3d} "
+                  f"({row['rounds_per_s']:.2f} rounds/s)", flush=True)
+
+    if not args.skip_staleness:
+        for buf in (int(s) for s in args.buffers.split(",")):
+            gc.collect()
+            row = bench_one(args, "streaming", args.staleness_churn,
+                            buffer_size=buf, kernel=args.kernel)
+            results.append(row)
+            print(f"buffer={buf:2d} churn={args.staleness_churn:4.2f} "
+                  f"stale={row['mean_slot_staleness']:5.2f} "
+                  f"acc={row['final_acc']:.3f} "
+                  f"goodput={row['goodput_samples_per_s']:8.0f}", flush=True)
+
+    def _curve(schedule):
+        return {str(r["churn"]): r["goodput_samples_per_s"]
+                for r in results
+                if r["schedule"] == schedule and r["buffer_size"] == 4}
+
+    seq, strm = _curve("sequential"), _curve("streaming")
+    out = {
+        "config": {"fleet": args.fleet, "scenario": args.scenario,
+                   "strategy": args.strategy, "rounds": args.rounds,
+                   "local_steps": args.local_steps, "batch": args.batch,
+                   "sync": args.sync, "superstep": args.superstep,
+                   "kernel": args.kernel, "alpha": args.alpha,
+                   "stream_seed": args.stream_seed,
+                   "staleness_churn": args.staleness_churn,
+                   "backend": jax.default_backend(),
+                   "driver": "repro.api.run"},
+        "goodput_vs_churn": {"sequential": seq, "streaming": strm},
+        # the headline ratio: how much absorbed throughput the
+        # buffered-async plane keeps as the fleet churns
+        "goodput_ratio_streaming_vs_sequential": {
+            c: (strm[c] / seq[c] if seq.get(c) else None)
+            for c in strm if c in seq},
+        "staleness_vs_accuracy": [
+            {"buffer_size": r["buffer_size"],
+             "mean_slot_staleness": r["mean_slot_staleness"],
+             "final_acc": r["final_acc"]}
+            for r in results
+            if r["schedule"] == "streaming"
+            and r["churn"] == args.staleness_churn],
+        "results": results,
+    }
+    if not args.no_write:
+        write_bench("BENCH_streaming", out, "benchmarks/bench_streaming.py")
+    if args.check_baseline:
+        sys.exit(check_baseline(out, args.check_baseline, args.max_regress))
+
+
+if __name__ == "__main__":
+    main()

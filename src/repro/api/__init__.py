@@ -31,12 +31,13 @@ from repro.api.registry import (  # noqa: F401
 from repro.api.runner import RunResult, build_engine, run  # noqa: F401
 from repro.api.spec import (  # noqa: F401
     SIM_CONFIG_FIELD_MAP, AdaptiveConfig, ExperimentSpec, FaultsConfig,
-    FleetConfig, RuntimeConfig, TrainConfig)
+    FleetConfig, RuntimeConfig, StreamConfig, TrainConfig)
 
 __all__ = [
     # spec
     "ExperimentSpec", "TrainConfig", "AdaptiveConfig", "FleetConfig",
-    "RuntimeConfig", "FaultsConfig", "SIM_CONFIG_FIELD_MAP",
+    "RuntimeConfig", "FaultsConfig", "StreamConfig",
+    "SIM_CONFIG_FIELD_MAP",
     # registries
     "MODELS", "SCENARIOS", "STRATEGIES", "SCHEDULES", "WIRES",
     "ModelEntry", "StrategyEntry", "ScheduleEntry", "WireEntry",

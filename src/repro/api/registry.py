@@ -272,6 +272,11 @@ def _register_builtin_strategies():
         "parallel", (SCENARIO,),
         "arXiv:2405.18707: one |D_n|-weighted mean-gradient server step "
         "per local step, batched over the whole cohort"))
+    register_schedule(ScheduleEntry(
+        "streaming", (SCENARIO,),
+        "buffered-asynchronous (FedBuff-style): per-RSU StreamBuffer of "
+        "pending deltas, staleness-weighted merge whenever it reaches "
+        "stream.buffer_size (core/streaming.py, DESIGN.md §14)"))
     assert set(SCHEDULES) == set(SERVER_SCHEDULES)
 
     register_wire(WireEntry(

@@ -7,11 +7,13 @@ super-steps, honoring ``runtime.superstep``/``precompile``/compilation
 cache) — then returns a :class:`RunResult`: the full round-metrics history,
 aggregate cost accounting, wall-clock timing, and ``save``/``load``.
 
-Streaming: ``on_round(metrics)`` fires for every completed round and
-``on_cloud_merge(rnd, engine)`` after every multi-RSU cloud sync.  On the
-fused path both fire after each K-round window from the window's single
-host pull, so callbacks never add host syncs to the compiled program
-(DESIGN.md §8/§9).
+Streaming: ``on_round(metrics)`` fires for every completed round,
+``on_cloud_merge(rnd, engine)`` after every multi-RSU cloud sync, and
+``on_stream_merge(metrics, engine)`` after every round in which a
+StreamBuffer fired (``train.server_schedule="streaming"``).  On the fused
+path all fire after each K-round window from the window's single host
+pull, so callbacks never add host syncs to the compiled program
+(DESIGN.md §8/§9/§14).
 
 ``timeit=True`` runs the benchmark protocol: one warmup run (compiles every
 program), ``reset()``, then the timed re-run — ``timing["round_s"]`` is the
@@ -122,9 +124,10 @@ def build_engine(spec: ExperimentSpec):
     return FederationSim(model, clients, test, cfg, fleet=fleet, mesh=mesh)
 
 
-def _drive(engine, on_round, on_cloud_merge):
+def _drive(engine, on_round, on_cloud_merge, on_stream_merge=None):
     if isinstance(engine, ScenarioEngine):
-        return engine.run(on_round=on_round, on_cloud_merge=on_cloud_merge)
+        return engine.run(on_round=on_round, on_cloud_merge=on_cloud_merge,
+                          on_stream_merge=on_stream_merge)
     return engine.run(on_round=on_round)
 
 
@@ -152,17 +155,28 @@ def _totals(history) -> Dict[str, float]:
             getattr(m, "n_upload_lost", 0) for m in history))
         totals["n_straggler"] = int(sum(
             getattr(m, "n_straggler", 0) for m in history))
+        # streaming-plane telemetry (DESIGN.md §14): sample mass absorbed
+        # into the global model (the goodput numerator), buffered-merge
+        # count, and continuous-arrival volume
+        totals["absorbed_samples"] = float(sum(
+            getattr(m, "absorbed_samples", 0.0) for m in history))
+        totals["stream_merges"] = int(sum(
+            getattr(m, "stream_merges", 0) for m in history))
+        totals["n_arrived"] = int(sum(
+            getattr(m, "n_arrived", 0) for m in history))
     return totals
 
 
 def run(spec: ExperimentSpec, *,
         on_round: Optional[Callable[[Any], None]] = None,
         on_cloud_merge: Optional[Callable[[int, Any], None]] = None,
+        on_stream_merge: Optional[Callable[[Any, Any], None]] = None,
         timeit: Union[bool, int] = False) -> RunResult:
     """Execute an :class:`ExperimentSpec` end to end and return a
     :class:`RunResult`.
 
-    ``on_round``/``on_cloud_merge`` stream progress (see module docstring);
+    ``on_round``/``on_cloud_merge``/``on_stream_merge`` stream progress
+    (see module docstring);
     ``timeit`` truthy adds a warmup run plus ``int(timeit)`` timed
     **callback-free** re-runs (reset between; min wins) before the final
     callback-visible run, so ``round_s``/``rounds_per_s`` report
@@ -190,7 +204,7 @@ def run(spec: ExperimentSpec, *,
             best = rep if best is None else min(best, rep)
         engine.reset()
     t0 = time.perf_counter()
-    history = _drive(engine, on_round, on_cloud_merge)
+    history = _drive(engine, on_round, on_cloud_merge, on_stream_merge)
     run_s = time.perf_counter() - t0
     fastest = best if best is not None else run_s
     timing["warmup_s"] = warmup
@@ -221,10 +235,23 @@ def run(spec: ExperimentSpec, *,
         counts, edges = np.histogram(stale, bins=8)
         diagnostics["staleness_hist"] = {"counts": counts.tolist(),
                                          "edges": edges.tolist()}
+    elif spec.train.server_schedule == "streaming":
+        # streaming twin (DESIGN.md §14): distribution of the buffered
+        # slot-age mass discharged per round by StreamBuffer merges
+        stale = [float(getattr(m, "stream_stale", 0.0)) for m in history]
+        counts, edges = np.histogram(stale, bins=8)
+        diagnostics["staleness_hist"] = {"counts": counts.tolist(),
+                                         "edges": edges.tolist()}
+    totals = _totals(history)
+    # goodput (DESIGN.md §14): sample mass the global model absorbed per
+    # steady-state second — the continuous-fleet throughput metric
+    # BENCH_streaming sweeps against churn
+    totals["goodput_samples_per_s"] = (
+        totals.get("absorbed_samples", 0.0) / fastest if fastest else 0.0)
     # final_params come home to host numpy: results must not pin (or be
     # stranded on) mesh device buffers after the run
     return RunResult(spec=spec, engine_kind=spec.engine_kind,
-                     history=list(history), totals=_totals(history),
+                     history=list(history), totals=totals,
                      timing=timing, diagnostics=diagnostics,
                      final_params=fleet_sharding.host_fetch(
                          (list(engine.units), engine.head)))

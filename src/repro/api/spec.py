@@ -1,7 +1,7 @@
 """Declarative experiment specs: nested config groups over one flat engine
 config, validated against the registries at construction time.
 
-An :class:`ExperimentSpec` is pure data — strings, numbers, and five nested
+An :class:`ExperimentSpec` is pure data — strings, numbers, and six nested
 groups — that fully determines a federation experiment:
 
 * :class:`TrainConfig` — the learning loop: scheme, batches, epochs/steps,
@@ -17,6 +17,11 @@ groups — that fully determines a federation experiment:
 * :class:`FaultsConfig` — the fault plane (core/faults.py, DESIGN.md §13):
   seeded dropout / upload-loss / straggler / RSU-outage processes plus the
   legacy coverage test.  All-defaults = no faults, byte-identical programs.
+* :class:`StreamConfig` — the streaming plane (core/streaming.py,
+  DESIGN.md §14): seeded continuous arrival/departure churn plus the
+  buffered-asynchronous merge knobs consumed by
+  ``train.server_schedule="streaming"``.  All-defaults = no streaming,
+  byte-identical programs (the fault-plane contract).
 
 Validation happens in ``__post_init__``: unknown registry keys, field
 values outside the allowed sets, and combinations the selected engine
@@ -40,7 +45,8 @@ from repro.core.fedsim import SimConfig
 
 __all__ = [
     "TrainConfig", "AdaptiveConfig", "FleetConfig", "RuntimeConfig",
-    "FaultsConfig", "ExperimentSpec", "SIM_CONFIG_FIELD_MAP",
+    "FaultsConfig", "StreamConfig", "ExperimentSpec",
+    "SIM_CONFIG_FIELD_MAP",
 ]
 
 
@@ -57,7 +63,7 @@ class TrainConfig:
     optimizer: str = "adam"           # adam | sgd | momentum
     eval_every: int = 1               # 0 = never
     compress_smashed: bool = False    # legacy alias for wire="int8"
-    server_schedule: str = "sequential"  # sequential | parallel
+    server_schedule: str = "sequential"  # sequential | parallel | streaming
     # cut-boundary wire scheme (registry.WIRES): none | int8 | topk_int8
     wire: str = "none"
     wire_k: float = 0.25              # topk_int8 keep-fraction per group
@@ -130,6 +136,19 @@ class FaultsConfig:
     seed: int = 0                     # dedicated fault PRNG stream
 
 
+@dataclasses.dataclass(frozen=True)
+class StreamConfig:
+    """The streaming plane (core/streaming.py, DESIGN.md §14).
+    All-defaults is the no-streaming spec: zero churn and a buffer that
+    only exists under ``train.server_schedule="streaming"``, with every
+    hook gated at Python level so default programs stay byte-identical."""
+    buffer_size: int = 4        # B: buffered deltas per RSU before a merge
+    churn_rate: float = 0.0     # P[vehicle toggles presence each round]
+    kernel: str = "constant"    # staleness discount: constant | poly
+    alpha: float = 0.5          # poly kernel exponent: 1/(1+s)**alpha
+    seed: int = 0               # dedicated streaming PRNG stream
+
+
 # SimConfig field -> (spec group, group field): the deprecation shim's
 # field-for-field mapping, used by both converters below (and asserted
 # exhaustive over SimConfig's fields in tests/test_api.py)
@@ -159,6 +178,11 @@ SIM_CONFIG_FIELD_MAP: Dict[str, Tuple[str, str]] = {
     "fault_rsu_outage": ("faults", "rsu_outage_rate"),
     "fault_staleness_discount": ("faults", "staleness_discount"),
     "fault_seed": ("faults", "seed"),
+    "stream_buffer_size": ("stream", "buffer_size"),
+    "stream_churn_rate": ("stream", "churn_rate"),
+    "stream_kernel": ("stream", "kernel"),
+    "stream_alpha": ("stream", "alpha"),
+    "stream_seed": ("stream", "seed"),
     "seed": ("runtime", "seed"),
     "cohort_parallel": ("runtime", "cohort_parallel"),
     "superstep": ("runtime", "superstep"),
@@ -171,7 +195,7 @@ SIM_CONFIG_FIELD_MAP: Dict[str, Tuple[str, str]] = {
 
 _GROUP_TYPES = {"train": TrainConfig, "adaptive": AdaptiveConfig,
                 "fleet": FleetConfig, "runtime": RuntimeConfig,
-                "faults": FaultsConfig}
+                "faults": FaultsConfig, "stream": StreamConfig}
 
 
 @dataclasses.dataclass(frozen=True)
@@ -187,6 +211,7 @@ class ExperimentSpec:
     fleet: FleetConfig = dataclasses.field(default_factory=FleetConfig)
     runtime: RuntimeConfig = dataclasses.field(default_factory=RuntimeConfig)
     faults: FaultsConfig = dataclasses.field(default_factory=FaultsConfig)
+    stream: StreamConfig = dataclasses.field(default_factory=StreamConfig)
     model_kwargs: Dict[str, Any] = dataclasses.field(default_factory=dict)
 
     # ---- engine routing ------------------------------------------------
@@ -239,8 +264,8 @@ class ExperimentSpec:
             raise ValueError(
                 f"server schedule {sched.name!r} is not executable by the "
                 f"{engine} engine (fleet.scenario={sc!r}); schedules this "
-                f"engine supports: {' | '.join(ok)} (the parallel schedule "
-                f"needs a multi-RSU scenario)")
+                f"engine supports: {' | '.join(ok)} (the parallel and "
+                f"streaming schedules need a multi-RSU scenario)")
 
         wire = registry.WIRES.get(self.train.wire)
         if wire is None:
@@ -304,6 +329,12 @@ class ExperimentSpec:
                     f"stochastic fault injection is wired into the "
                     f"split-federation round (sfl | asfl); scheme "
                     f"{self.train.scheme!r} does not support it")
+            if self.stream.churn_rate > 0.0:
+                raise ValueError(
+                    "stream.churn_rate > 0 needs a multi-RSU scenario "
+                    "(continuous arrivals/departures live on the scenario "
+                    "engine's presence plane); the single-RSU engine "
+                    "models interruption via fleet.mobility_dropout")
 
         rt = self.runtime
         if rt.mesh_devices > 1:

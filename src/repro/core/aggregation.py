@@ -103,6 +103,29 @@ def survivor_fedavg(stacked_tree: Any, weights: jnp.ndarray,
     return jax.tree.map(f, num, fallback)
 
 
+def discounted_survivor_fedavg(stacked_tree: Any, weights: jnp.ndarray,
+                               survivors: jnp.ndarray,
+                               discounts: jnp.ndarray, fallback: Any) -> Any:
+    """Staleness-weighted survivor FedAvg (DESIGN.md §14): each replica's
+    sample weight is additionally scaled by a per-replica ``discount``
+    (typically ``streaming.staleness_kernel`` of its buffered age) before
+    the survivor-masked renormalised mean.  With all discounts exactly 1.0
+    this is *bitwise* :func:`survivor_fedavg` — ``w * 1.0`` is an IEEE
+    identity, so the tensordot reduces the identical floats
+    (tests/test_properties.py pins this)."""
+    w = (jnp.asarray(weights, jnp.float32)
+         * jnp.asarray(survivors, jnp.float32)
+         * jnp.asarray(discounts, jnp.float32))
+    total = jnp.sum(w)
+    den = jnp.where(total > 0.0, total, 1.0)
+    num = stacked_weighted_sum(stacked_tree, w)
+
+    def f(n, fb):
+        return jnp.where(total > 0.0, (n / den).astype(fb.dtype), fb)
+
+    return jax.tree.map(f, num, fallback)
+
+
 def unitwise_fedavg(unit_replicas: List[List[Any]],
                     weights_per_unit: List[List[float]]) -> List[Any]:
     """ASFL heterogeneous-cut aggregation: each stack unit is averaged over

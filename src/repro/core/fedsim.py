@@ -40,11 +40,11 @@ from jax.sharding import PartitionSpec as P
 
 from repro.configs.base import enable_compilation_cache
 from repro.core import adaptive, aggregation, channel, compression, cost
-from repro.core import faults, fleet_sharding
+from repro.core import faults, fleet_sharding, streaming
 from repro.core.fleet_sharding import AXIS as MESH_AXIS, FLEET_AXES, FleetMesh
 from repro.core.superstep import (SERVER_SCHEDULES, SUPERSTEP_LAYOUTS,
                                   SuperStepPrograms)
-from repro.data.pipeline import (ClientDataset, StackedClients,
+from repro.data.pipeline import (ClientDataset, DoubleBuffer, StackedClients,
                                  epoch_batch_indices, sample_batch_indices,
                                  stack_clients)
 from repro import optim
@@ -156,6 +156,15 @@ class SimConfig:
     fault_rsu_outage: float = 0.0     # P[RSU misses a round] (scenario only)
     fault_staleness_discount: float = 0.5  # weight for banked late updates
     fault_seed: int = 0
+    # streaming plane (core/streaming.py, DESIGN.md §14): seeded presence
+    # churn (any schedule) + the buffered-asynchronous streaming schedule's
+    # merge policy.  All-defaults are gated out at Python level, so the
+    # compiled programs are byte-identical to a no-streaming build
+    stream_buffer_size: int = 4       # B pending deltas per RSU per merge
+    stream_churn_rate: float = 0.0    # P[vehicle toggles presence per round]
+    stream_kernel: str = "constant"   # staleness discount: constant | poly
+    stream_alpha: float = 0.5         # poly kernel exponent 1/(1+s)**alpha
+    stream_seed: int = 0
     # intra-bucket schedule: "vmap" vectorizes client replicas across the
     # stacked axis (accelerators), "scan" fuses them sequentially (CPU);
     # "auto" picks by platform.  Same math either way (DESIGN.md §6).
@@ -168,7 +177,11 @@ class SimConfig:
     # model on every client batch, in cohort order); "parallel" is the
     # companion ASFL paper's parallel server-side execution
     # (arXiv:2405.18707) — one |D_n|-weighted mean-gradient server step per
-    # local step, with every matmul batched over the (RSU, vehicle) axes.
+    # local step, with every matmul batched over the (RSU, vehicle) axes;
+    # "streaming" rides the parallel machinery but commits each round's
+    # cohort delta into a capacity-B StreamBuffer and advances the edge
+    # model only when the buffer fires, via staleness-weighted survivor
+    # FedAvg (core/streaming.py, DESIGN.md §14)
     server_schedule: str = "sequential"
     # per-RSU slot-capacity rounding for the fused programs: "pow2" (the
     # bucket-signature scheme — most stable compile cache) or "tight8"
@@ -246,6 +259,7 @@ class SimConfig:
                 "fault_coverage=True: mobility_dropout is the legacy "
                 "spelling of fault_coverage — set fault_coverage alone")
         self.fault_config()  # rate/discount validation (FaultConfig raises)
+        self.stream_config()  # kernel/rate validation (StreamConfig raises)
 
     def wire_scheme(self) -> str:
         """The effective cut-boundary wire: compress_smashed=True is kept as
@@ -268,6 +282,16 @@ class SimConfig:
             staleness_discount=self.fault_staleness_discount,
             coverage=self.mobility_dropout or self.fault_coverage,
             seed=self.fault_seed)
+
+    def stream_config(self) -> streaming.StreamConfig:
+        """The effective streaming plane (core/streaming.py, DESIGN.md
+        §14)."""
+        return streaming.StreamConfig(
+            buffer_size=self.stream_buffer_size,
+            churn_rate=self.stream_churn_rate,
+            kernel=self.stream_kernel,
+            alpha=self.stream_alpha,
+            seed=self.stream_seed)
 
 
 @dataclasses.dataclass
@@ -1112,6 +1136,17 @@ class FederationSim:
             raise ValueError(
                 f"fault injection is wired into the split-federation round "
                 f"(sfl | asfl); scheme {cfg.scheme!r} does not support it")
+        if cfg.server_schedule == "streaming":
+            raise ValueError(
+                "server_schedule='streaming' needs the multi-RSU "
+                "ScenarioEngine (the StreamBuffer is per-RSU super-step "
+                "carry state); FederationSim runs the single-RSU "
+                "synchronous round loop")
+        if cfg.stream_config().churning:
+            raise ValueError(
+                "stream_churn_rate > 0 needs the multi-RSU ScenarioEngine "
+                "(presence churn is traced super-step carry state; the "
+                "single-RSU engine models coverage via fault_coverage)")
         self.reset()
 
     def reset(self):
@@ -1447,6 +1482,13 @@ class ScenarioRoundMetrics:
     survivor_frac: float = 1.0   # merged / scheduled (effective participation)
     lost_update_bytes: float = 0.0  # client-side params that never merged
     stale_merged: float = 0.0    # banked straggler weight merged this round
+    # streaming-plane telemetry (DESIGN.md §14); defaults = no streaming
+    n_present: int = -1          # fleet presence after churn (-1 = no churn)
+    n_arrived: int = 0           # vehicles that arrived this round
+    absorbed_samples: float = 0.0  # sample weight MERGED into an edge model
+    stream_merges: int = 0       # StreamBuffer fires this round
+    buffer_occupancy: float = 0.0  # pending deltas across RSUs, post-round
+    stream_stale: float = 0.0    # summed slot ages of the merged deltas
 
 
 class ScenarioEngine:
@@ -1533,6 +1575,9 @@ class ScenarioEngine:
         self._cohort_counts: Dict[int, int] = {}
         self._covered_totals: Dict[int, int] = {}
         self._state_cache: Dict[int, Any] = {}
+        # double-buffered window staging (DESIGN.md §14): the next window's
+        # batch/mobility arrays are built while the current one trains
+        self._xs_stage = DoubleBuffer()
         self.reset()
 
     def reset(self):
@@ -1598,7 +1643,7 @@ class ScenarioEngine:
         padded to a device multiple under a mesh
         (:meth:`~repro.core.fleet_sharding.FleetMesh.balanced_slots`).
         0 when the engine's layout/schedule has no compacted axis."""
-        if not (self.cfg.server_schedule == "parallel"
+        if not (self.cfg.server_schedule in ("parallel", "streaming")
                 and self.programs.layout == "ragged"):
             return 0
         for rnd in range(horizon):
@@ -1624,7 +1669,8 @@ class ScenarioEngine:
         pg = self.programs
         horizon = max(int(self.cfg.rounds), 1)
         cap = self._capacity(horizon)
-        if self.cfg.server_schedule == "parallel" and pg.layout == "ragged":
+        if (self.cfg.server_schedule in ("parallel", "streaming")
+                and pg.layout == "ragged"):
             executed = self._total_slots(horizon)
         else:
             executed = pg.n_rsus_padded * cap
@@ -1707,7 +1753,20 @@ class ScenarioEngine:
         cap = self._capacity(horizon)
         sig = self.programs.signature(k, cap, self._total_slots(horizon))
         fn = self.programs.get(sig)
-        carry, ys = fn(self._carry, self._window_xs(rnd0, k))
+        xs = self._xs_stage.take((rnd0, k),
+                                 lambda: self._window_xs(rnd0, k))
+        carry, ys = fn(self._carry, xs)            # async dispatch
+        # double-buffered staging (DESIGN.md §14): while the dispatched
+        # window trains on device, build the NEXT window's batch/mobility
+        # arrays and start their transfers — newly arrived vehicles' shards
+        # are resident before their first round forms, and the blocking
+        # host pull below overlaps the staging instead of serializing it
+        nxt = rnd0 + k
+        if nxt < self.cfg.rounds:
+            kk = min(max(int(self.cfg.superstep or 1), 1),
+                     self.cfg.rounds - nxt)
+            self._xs_stage.stage((nxt, kk),
+                                 lambda: self._window_xs(nxt, kk))
         ys = jax.tree.map(np.asarray, ys)          # ONE host sync per window
         if int(ys["counts"].max(initial=0)) > cap:
             # raise BEFORE committing the window: the window silently
@@ -1791,6 +1850,26 @@ class ScenarioEngine:
             # stragglers are banked, not lost — only drop/lost updates die
             m.lost_update_bytes = float(bytes_cum[cuts[drop | lost]].sum())
             m.stale_merged = float(ys["stale_w"][i])
+        if self.programs.cz:
+            m.n_present = int(ys["present"][i])
+            m.n_arrived = int(ys["arrived"][i])
+        if self.programs.sz:
+            # streaming: absorption happens at buffer fires, measured
+            # in-program (DESIGN.md §14)
+            m.absorbed_samples = float(ys["absorbed"][i])
+            m.stream_merges = int(ys["stream_fires"][i])
+            m.buffer_occupancy = float(ys["buf_occ"][i])
+            m.stream_stale = float(ys["stream_stale"][i])
+        else:
+            # synchronous schedules absorb every merge-surviving update the
+            # round it trained — the goodput baseline streaming is compared
+            # against (host arithmetic over the same scan outputs)
+            if fault is not None:
+                _, drop, lost, strag = fault
+                merged = sched & ~drop & ~lost & ~strag
+            else:
+                merged = sched
+            m.absorbed_samples = float(self.lengths[merged].sum())
         return m
 
     def run_round(self, rnd: int) -> ScenarioRoundMetrics:
@@ -1800,19 +1879,25 @@ class ScenarioEngine:
             on_round: Optional[Callable[[ScenarioRoundMetrics],
                                         None]] = None,
             on_cloud_merge: Optional[Callable[[int, "ScenarioEngine"],
-                                              None]] = None
+                                              None]] = None,
+            on_stream_merge: Optional[Callable[[ScenarioRoundMetrics,
+                                                "ScenarioEngine"],
+                                               None]] = None
             ) -> List[ScenarioRoundMetrics]:
         """Run ``cfg.rounds`` rounds as fused super-step windows.
 
         Streaming hooks (the api layer's callbacks): ``on_round(metrics)``
         fires for every completed round, ``on_cloud_merge(rnd, engine)``
-        after every cloud sync — both AFTER each fused window completes, fed
-        from the window's single host pull, so neither adds a host sync to
-        the fused path.  Consequence for ``superstep`` K > 1: the fused
-        window keeps no per-round model snapshots, so every
-        ``on_cloud_merge`` in a window observes ``engine.units/head`` as of
-        the window end (exactly the eval semantics above); run with K = 1
-        if a callback needs the global model at each individual sync."""
+        after every cloud sync, and ``on_stream_merge(metrics, engine)``
+        after every round in which at least one StreamBuffer fired
+        (``metrics.stream_merges > 0`` — streaming schedule only) — all
+        AFTER each fused window completes, fed from the window's single
+        host pull, so none adds a host sync to the fused path.  Consequence
+        for ``superstep`` K > 1: the fused window keeps no per-round model
+        snapshots, so every ``on_cloud_merge`` / ``on_stream_merge`` in a
+        window observes ``engine.units/head`` as of the window end (exactly
+        the eval semantics above); run with K = 1 if a callback needs the
+        global model at each individual sync."""
         for rnd0, kk in self._windows(self.cfg.rounds):
             window = self.run_superstep(rnd0, kk)
             self.history.extend(window)
@@ -1822,6 +1907,8 @@ class ScenarioEngine:
                 if (on_cloud_merge is not None
                         and (m.round + 1) % self.cloud_sync_every == 0):
                     on_cloud_merge(m.round, self)
+                if on_stream_merge is not None and m.stream_merges > 0:
+                    on_stream_merge(m, self)
         return self.history
 
     def _accounting(self, rates, cuts, sched, handover, fault=None):

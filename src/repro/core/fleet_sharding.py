@@ -190,3 +190,13 @@ def local_slice(x: jnp.ndarray, n_local: int, axis: int = 0) -> jnp.ndarray:
     array whose logical leading axis is split ``n_local`` per device."""
     start = jax.lax.axis_index(AXIS) * n_local
     return jax.lax.dynamic_slice_in_dim(x, start, n_local, axis=axis)
+
+
+def scalar_allsum(x: jnp.ndarray) -> jnp.ndarray:
+    """Inside ``shard_map``: sum a shard-local scalar (a telemetry total
+    reduced from sharded per-RSU state — staleness-bank weight, stream-
+    buffer occupancy/absorption) home across the mesh.  Scalars carry no
+    reduction-order contract, so a plain psum is the right tool here — the
+    bit-for-bit gather-then-reduce discipline applies to model planes, not
+    counters."""
+    return jax.lax.psum(x, AXIS)

@@ -79,6 +79,28 @@ jax.tree_util.register_pytree_node(
     lambda _, c: FleetState(*c))
 
 
+def apply_presence(state: FleetState, present) -> FleetState:
+    """Continuous arrivals/departures over any scenario (DESIGN.md §14): a
+    departed vehicle is indistinguishable from one outside coverage —
+    ``serving_rsu = -1``, zero rate, zero residence — so every downstream
+    consumer (cut selection, slot grouping, telemetry) handles churn through
+    the invariants it already honors.  Pure and backend-agnostic: works on
+    the host (np) snapshots and on traced (jnp) states alike, because the
+    streaming plane's presence bits live on the super-step carry."""
+    xp = jnp if isinstance(state.serving_rsu, jnp.ndarray) else np
+    present = xp.asarray(present)
+    return FleetState(
+        t=state.t,
+        positions=state.positions,
+        velocities=state.velocities,
+        serving_rsu=xp.where(present, state.serving_rsu,
+                             -1).astype(xp.int32),
+        rates_bps=xp.where(present, state.rates_bps,
+                           0.0).astype(xp.float32),
+        residence_s=xp.where(present, state.residence_s,
+                             0.0).astype(xp.float32))
+
+
 @runtime_checkable
 class Scenario(Protocol):
     """A mobility scenario: static RSU deployment + a fleet-state query.

@@ -1,0 +1,140 @@
+"""Streaming plane: seeded, fully traced arrival/departure processes and the
+buffered-asynchronous merge policy for continuous fleets (DESIGN.md §14).
+
+The paper's future-directions section argues synchronous SFL rounds break
+down under vehicular mobility: vehicles arrive, train, and vanish
+continuously, so a server that waits for the slowest survivor wastes the
+goodput of everyone who already finished.  This module owns the *streaming
+processes* — who is present this round, and how pending updates are
+discounted by age — while ``superstep.py`` owns their consequences (the
+``StreamBuffer`` carry plane and the ``streaming`` server schedule's
+buffer-fires-at-B merges).
+
+Two pieces:
+
+- **presence stream**: a per-vehicle Markov toggle chain.  Each round every
+  vehicle flips its presence bit with probability ``churn_rate``, drawn from
+  a dedicated PRNG stream (``fold_in(stream_key, round)`` — the fault-plane
+  construction, so a K-fused super-step samples identically to K single
+  rounds).  The chain's stationary presence is 1/2 regardless of churn, so
+  raising ``churn_rate`` raises the *arrival rate* (≈ n·churn/2 vehicles per
+  round) without starving the fleet — the knob sweeps event frequency, not
+  fleet size.  Presence lives on the donated scan carry; churn is data,
+  never a program signature.
+- **staleness kernel**: the pluggable discount the buffered merge applies to
+  a pending delta of age ``s`` rounds: ``constant`` (1.0 — FedAvg weights
+  untouched, bitwise, since ``x * 1.0`` is an IEEE identity) or ``poly``
+  (``1/(1+s)**alpha``, the FedBuff/arXiv:2210.15496 polynomial family).
+
+Zero-streaming invariant: every engine hook is gated at Python level on
+``StreamConfig.churning`` / the ``streaming`` schedule (the ``wire="none"``
+and zero-fault precedents), so a default config compiles to a byte-identical
+program and trains bit-for-bit vs a build without the streaming plane.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+# domain-separates the streaming stream from the batch-index (seed*1000+rnd),
+# fading (seed^0x5EED5EED) and fault (seed^0xFA17) streams
+STREAM_SALT = 0xB0FF
+
+STALENESS_KERNELS = ("constant", "poly")
+
+
+@dataclasses.dataclass(frozen=True)
+class StreamConfig:
+    """Seeded streaming-federation processes for a federation engine.
+
+    All-defaults means *no streaming*: engines gate every streaming hook at
+    Python level on ``churning`` (and the ``streaming`` schedule flag), so
+    the zero-streaming program is byte-identical to one built before the
+    streaming plane existed.
+    """
+
+    buffer_size: int = 4       # B: buffered deltas per RSU before a merge fires
+    churn_rate: float = 0.0    # P[vehicle toggles presence each round]
+    kernel: str = "constant"   # staleness discount: constant | poly
+    alpha: float = 0.5         # poly kernel exponent: 1/(1+s)**alpha
+    seed: int = 0
+
+    def __post_init__(self):
+        if self.kernel not in STALENESS_KERNELS:
+            raise ValueError(
+                f"kernel must be one of {STALENESS_KERNELS}, got {self.kernel!r}")
+        if not 0.0 <= float(self.churn_rate) < 1.0:
+            raise ValueError(
+                f"churn_rate must be in [0, 1), got {self.churn_rate!r}")
+        if int(self.buffer_size) < 1:
+            raise ValueError(
+                f"buffer_size must be >= 1, got {self.buffer_size!r}")
+        if float(self.alpha) < 0.0:
+            raise ValueError(f"alpha must be >= 0, got {self.alpha!r}")
+
+    @property
+    def churning(self) -> bool:
+        """Any traced (sampled) presence process active."""
+        return float(self.churn_rate) > 0.0
+
+
+def stream_key(cfg: StreamConfig, rnd) -> jax.Array:
+    """Per-round streaming PRNG key; ``rnd`` may be traced
+    (window-independent, so K-fused == per-round)."""
+    return jax.random.fold_in(jax.random.PRNGKey(cfg.seed ^ STREAM_SALT), rnd)
+
+
+def sample_toggles_traced(cfg: StreamConfig, rnd, n_vehicles: int):
+    """Draw one round of presence toggles inside the traced program.
+
+    Returns bool (n,): True where the vehicle flips between present and
+    departed this round.  The engine XORs this into the presence plane on
+    the carry — arrivals and departures are the two edges of the same
+    toggle, which is what keeps the stationary fleet size churn-invariant.
+    """
+    u = jax.random.uniform(stream_key(cfg, rnd), (n_vehicles,))
+    return u < cfg.churn_rate
+
+
+def sample_toggles_host(cfg: StreamConfig, rnd: int, n_vehicles: int):
+    """Host-side twin of :func:`sample_toggles_traced`.
+
+    An independent stream from the traced sampler (numpy vs threefry) — a
+    host consumer never shares a toggle schedule with the traced engines,
+    only a distribution (the fault-plane convention).
+    """
+    rng = np.random.default_rng((cfg.seed ^ STREAM_SALT) * 1_000_003 + rnd)
+    return rng.random(n_vehicles) < cfg.churn_rate
+
+
+def gate_presence(serving, rates, residence, admit):
+    """Apply an admission mask to the per-round fleet triple: a vehicle not
+    admitted this round is indistinguishable from one outside coverage
+    (``serving_rsu = -1``, zero rate, zero residence), so cut selection,
+    slot grouping, and telemetry all handle churn through invariants they
+    already honor.  :func:`repro.core.scenario.apply_presence` is the
+    FleetState-level twin for host consumers."""
+    admit = jnp.asarray(admit)
+    return (jnp.where(admit, serving, -1).astype(jnp.int32),
+            jnp.where(admit, rates, 0.0).astype(jnp.float32),
+            jnp.where(admit, residence, 0.0).astype(jnp.float32))
+
+
+def staleness_kernel(kind: str, alpha: float, staleness):
+    """Discount applied to a buffered delta of age ``staleness`` rounds.
+
+    ``constant`` returns exactly 1.0 per slot — multiplying a weight by it
+    is an IEEE identity, which is what makes the constant-kernel buffered
+    merge *bitwise* equal to plain survivor FedAvg
+    (tests/test_properties.py).  ``poly`` is the FedBuff polynomial family
+    ``1/(1+s)**alpha`` — monotone non-increasing in ``s`` for alpha >= 0.
+    """
+    s = jnp.asarray(staleness, jnp.float32)
+    if kind == "constant":
+        return jnp.ones_like(s)
+    if kind == "poly":
+        return (1.0 + s) ** (-float(alpha))
+    raise ValueError(f"unknown staleness kernel {kind!r}")

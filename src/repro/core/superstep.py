@@ -123,6 +123,20 @@ and straggler client updates land in a staleness bank on the donated carry
 zero-fault program is byte-identical and trains bit-for-bit vs a build
 without the fault plane — on both schedules, both layouts, and under a
 mesh (tests/test_faults.py).
+
+Streaming plane (DESIGN.md §14): ``cfg.stream_*`` adds a seeded presence
+process (a per-vehicle Markov toggle chain on the donated carry — see
+:mod:`repro.core.streaming`) that gates cut selection on any schedule, and
+a third server schedule ``"streaming"`` that rides the parallel machinery
+but commits its round update through a ``StreamBuffer`` carry plane: each
+RSU's survivor-aggregated cohort delta is pushed into a capacity-B slot
+ring (``sbuf``/``sbuf_w``/``sbuf_age``/``sbuf_cnt``), and the edge model
+advances only when the buffer reaches B pending deltas, via a
+staleness-weighted survivor FedAvg (``streaming.staleness_kernel`` over
+slot ages — the FedBuff policy).  Both planes are gated at Python level on
+``StreamConfig.churning`` / the schedule flag, so the zero-streaming
+program is byte-identical, and all state is carry — presence/buffer churn
+is data, never a program signature (tests/test_streaming.py).
 """
 from __future__ import annotations
 
@@ -138,12 +152,12 @@ from jax.flatten_util import ravel_pytree
 from jax.sharding import PartitionSpec as PSpec
 
 from repro.core import (adaptive, aggregation, compression, faults,
-                        fleet_sharding)
+                        fleet_sharding, streaming)
 from repro.core.fleet_sharding import AXIS as MESH_AXIS, FleetMesh
 from repro.data.pipeline import StackedClients, fleet_batch_indices_traced
 from repro import optim
 
-SERVER_SCHEDULES = ("sequential", "parallel")
+SERVER_SCHEDULES = ("sequential", "parallel", "streaming")
 SUPERSTEP_LAYOUTS = ("ragged", "dense")
 
 
@@ -370,6 +384,12 @@ class SuperStepPrograms:
                 "in-range test) does not apply to the multi-RSU super-step "
                 "engine: scenarios model coverage through serving_rsu == -1")
         self.fz = self.faults.stochastic
+        # streaming plane (DESIGN.md §14): presence churn (`cz`) gates any
+        # schedule; the StreamBuffer (`sz`) belongs to schedule="streaming"
+        self.stream = (cfg.stream_config() if hasattr(cfg, "stream_config")
+                       else streaming.StreamConfig())
+        self.cz = self.stream.churning
+        self.sz = self.schedule == "streaming"
 
     def flatten(self, units, head) -> jnp.ndarray:
         return ravel_pytree({"units": list(units), "head": head})[0]
@@ -420,18 +440,34 @@ class SuperStepPrograms:
                 carry["stale_num"] = jnp.zeros((R, self.plane_width),
                                                jnp.float32)
             carry["stale_den"] = jnp.zeros((R, CU), jnp.float32)
+        if self.cz:
+            # presence plane (DESIGN.md §14): the Markov toggle chain's
+            # state — all vehicles start present; churn flips bits in-round
+            carry["present"] = jnp.ones((n_vehicles,), bool)
+        if self.sz:
+            # StreamBuffer (DESIGN.md §14): per-RSU ring of B pending
+            # cohort deltas on the flat plane, their merge weights, their
+            # ages in rounds, and the fill count.  Per-RSU state: it shards
+            # with the edge stack (and replicates when the edge does)
+            B = int(self.stream.buffer_size)
+            carry["sbuf"] = jnp.zeros((R, B, self.n_params), jnp.float32)
+            carry["sbuf_w"] = jnp.zeros((R, B), jnp.float32)
+            carry["sbuf_age"] = jnp.zeros((R, B), jnp.int32)
+            carry["sbuf_cnt"] = jnp.zeros((R,), jnp.int32)
         if self.mesh is not None:
-            if self.schedule == "parallel" and self.layout == "ragged":
-                # ragged + parallel shards the compacted SLOT axis, not the
-                # RSU axis: every device owns a block of occupied slots of
-                # arbitrary RSUs, so the edge stack must be replicated (the
-                # per-RSU segment-sums come home via psum)
+            if self.schedule != "sequential" and self.layout == "ragged":
+                # ragged + parallel/streaming shards the compacted SLOT
+                # axis, not the RSU axis: every device owns a block of
+                # occupied slots of arbitrary RSUs, so the edge stack must
+                # be replicated (the per-RSU segment-sums come home via
+                # psum)
                 carry = {k: self.mesh.replicate(v) for k, v in carry.items()}
             else:
-                # the staleness bank is per-RSU state and shards with the
-                # edge stack
+                # the staleness bank and stream buffer are per-RSU state
+                # and shard with the edge stack
                 for k in carry:
-                    if k in ("edge", "stale_num", "stale_den"):
+                    if k in ("edge", "stale_num", "stale_den", "sbuf",
+                             "sbuf_w", "sbuf_age", "sbuf_cnt"):
                         carry[k] = self.mesh.shard_leading(carry[k])
                     else:
                         carry[k] = self.mesh.replicate(carry[k])
@@ -476,17 +512,21 @@ class SuperStepPrograms:
         # `fz` throughout — zero-fault configs trace the identical program
         fc, fz = self.faults, self.fz
         disc = float(fc.staleness_discount)
+        # streaming-plane statics (DESIGN.md §14): gated at Python level on
+        # `cz` (presence churn) and `sz` (the streaming schedule's buffer)
+        stc, cz, sz = self.stream, self.cz, self.sz
+        B = int(stc.buffer_size)
         # ragged layout statics (DESIGN.md §12): the owned-prefix window of
         # the plane, the per-replica unit count (sequential), and the flat
         # slot-axis geometry (parallel).  Dense: window = whole plane,
         # CU = U, and the flat axis is the flattened (R, C) table
         layout = self.layout
-        ragged_par = self.schedule == "parallel" and layout == "ragged"
+        ragged_par = self.schedule != "sequential" and layout == "ragged"
         O, W = self.plane_offset, self.plane_width
         CU = self.client_units
         unit_ids_w = unit_ids[O:O + W]
         S = sig.slots if ragged_par else R * C
-        if self.schedule == "parallel":
+        if self.schedule != "sequential":
             if fm is None:
                 S_loc, R_srv, psum_out = S, R, False
             elif layout == "dense":
@@ -1009,6 +1049,24 @@ class SuperStepPrograms:
                 st = sc.traced_fleet_state(t, fkey)
                 serving, rates, residence = (st.serving_rsu, st.rates_bps,
                                              st.residence_s)
+            if cz:
+                # presence churn (DESIGN.md §14): each vehicle flips its
+                # presence bit with P[churn_rate], round-keyed so a K-fused
+                # window samples identically to K single rounds.  A vehicle
+                # not admitted this round becomes indistinguishable from
+                # one outside coverage before cut selection.  Synchronous
+                # schedules admit a fresh arrival only NEXT round (it still
+                # has to register and download the cohort model after the
+                # round has formed); the streaming schedule admits it
+                # immediately — its shard is already staged on device by
+                # the double-buffered pipeline, and the buffered merge
+                # never waits on cohort formation
+                toggle = streaming.sample_toggles_traced(stc, rnd, n)
+                present2 = carry["present"] ^ toggle
+                arrived = present2 & ~carry["present"]
+                admit = present2 if sz else (present2 & ~arrived)
+                serving, rates, residence = streaming.gate_presence(
+                    serving, rates, residence, admit)
             cuts = pick_cuts(serving, rates, residence)
             if fz:
                 drop, dfrac, lost, rsu_down = faults.sample_faults_traced(
@@ -1158,6 +1216,65 @@ class SuperStepPrograms:
                 else:
                     # every occupied slot runs exactly `steps` batches
                     cnt = (jnp.sum(counts) * steps).astype(jnp.float32)
+                if sz:
+                    # StreamBuffer commit (DESIGN.md §14): the cohort's
+                    # round update becomes a PENDING delta in the RSU's
+                    # next free buffer slot; the edge model advances only
+                    # when the buffer holds B deltas and the staleness-
+                    # weighted survivor FedAvg fires.  Runs on the LOCAL
+                    # edge rows (before any gather), so the committed edge
+                    # is what the mesh combine sees.  All state is carry:
+                    # buffer churn is data, never a program signature
+                    edge_old = carry["edge"]
+                    delta = edge - edge_old               # (R_srv, P)
+                    pushed = w_tot > 0.0                  # (R_srv,)
+                    cnt_b = carry["sbuf_cnt"]
+                    slot_oh = (jnp.arange(B, dtype=jnp.int32)[None, :]
+                               == cnt_b[:, None]) & pushed[:, None]
+                    sb = jnp.where(slot_oh[:, :, None], delta[:, None, :],
+                                   carry["sbuf"])
+                    sbw = jnp.where(slot_oh, w_tot[:, None],
+                                    carry["sbuf_w"])
+                    sba = jnp.where(slot_oh, 0, carry["sbuf_age"])
+                    cnt2 = cnt_b + pushed.astype(jnp.int32)
+                    fire = cnt2 >= B                      # (R_srv,)
+                    valid = (jnp.arange(B, dtype=jnp.int32)[None, :]
+                             < cnt2[:, None])
+                    # staleness-weighted survivor FedAvg over the pending
+                    # deltas: weights are merge weight x kernel(age), and
+                    # empty slots fold in as exact +0 through their zero
+                    # weights.  The denominator can sit in (0, 1) under
+                    # polynomial discounts, so the guard is a where
+                    kw = (sbw * streaming.staleness_kernel(
+                        stc.kernel, stc.alpha, sba)
+                        * valid.astype(jnp.float32))
+                    tot_b = jnp.sum(kw, axis=1)           # (R_srv,)
+                    den_b = jnp.where(tot_b > 0.0, tot_b, 1.0)
+                    merged_b = edge_old + jnp.einsum(
+                        "rb,rbp->rp", kw, sb) / den_b[:, None]
+                    edge = jnp.where(fire[:, None], merged_b, edge_old)
+                    # merge telemetry, read BEFORE the post-fire reset
+                    absorbed = jnp.sum(jnp.where(
+                        fire[:, None], sbw * valid, 0.0))
+                    st_stream = jnp.sum(jnp.where(
+                        fire[:, None],
+                        sba.astype(jnp.float32) * valid, 0.0))
+                    fires = jnp.sum(fire.astype(jnp.int32))
+                    occ = jnp.sum(jnp.where(fire, 0, cnt2))
+                    # post-fire: fired buffers clear; survivors age one
+                    # round.  The delta plane itself needs no clear — its
+                    # weights are zero, the exact-+0 convention
+                    sbuf2 = sb
+                    sbw2 = jnp.where(fire[:, None], 0.0, sbw)
+                    sba2 = jnp.where(fire[:, None], 0,
+                                     jnp.where(valid, sba + 1, sba))
+                    cnt3 = jnp.where(fire, 0, cnt2)
+                    if fm is not None and not ragged_par:
+                        # per-RSU scalars: sum home across the shards
+                        absorbed = fleet_sharding.scalar_allsum(absorbed)
+                        st_stream = fleet_sharding.scalar_allsum(st_stream)
+                        fires = fleet_sharding.scalar_allsum(fires)
+                        occ = fleet_sharding.scalar_allsum(occ)
                 if fm is not None and layout == "dense":
                     ls = lax.all_gather(ls, MESH_AXIS, tiled=True)
                     w_tot = lax.all_gather(w_tot, MESH_AXIS, tiled=True)
@@ -1211,6 +1328,13 @@ class SuperStepPrograms:
                 # straggler captures replace last round's (now-merged) bank
                 carry2["stale_num"] = st_num2
                 carry2["stale_den"] = st_den2
+            if cz:
+                carry2["present"] = present2
+            if sz:
+                carry2["sbuf"] = sbuf2
+                carry2["sbuf_w"] = sbw2
+                carry2["sbuf_age"] = sba2
+                carry2["sbuf_cnt"] = cnt3
             ys = {"loss": jnp.sum(ls), "cnt": cnt, "cuts": cuts,
                   "serving": serving.astype(jnp.int32),
                   "rates": rates.astype(jnp.float32),
@@ -1219,6 +1343,13 @@ class SuperStepPrograms:
                 ys.update({"drop": drop, "lost": lost, "strag": strag,
                            "rsu_down": rsu_down, "dstep": dstep,
                            "stale_w": stale_w})
+            if cz:
+                ys.update({
+                    "present": jnp.sum(present2.astype(jnp.int32)),
+                    "arrived": jnp.sum(arrived.astype(jnp.int32))})
+            if sz:
+                ys.update({"absorbed": absorbed, "stream_fires": fires,
+                           "buf_occ": occ, "stream_stale": st_stream})
             return carry2, ys
 
         def superstep(carry, xs):
@@ -1239,6 +1370,15 @@ class SuperStepPrograms:
                 # edge stack (and replicates when the edge does)
                 carry_spec["stale_num"] = edge_spec
                 carry_spec["stale_den"] = edge_spec
+            if cz:
+                # presence is fleet-wide state, replicated like the slot
+                # table it gates
+                carry_spec["present"] = PSpec()
+            if sz:
+                # the stream buffer is per-RSU state: it shards with the
+                # edge stack (and replicates when the edge does)
+                for k in ("sbuf", "sbuf_w", "sbuf_age", "sbuf_cnt"):
+                    carry_spec[k] = edge_spec
             superstep = shard_map(superstep, mesh=fm.mesh,
                                   in_specs=(carry_spec, PSpec()),
                                   out_specs=(carry_spec, PSpec()),
@@ -1253,7 +1393,7 @@ class SuperStepPrograms:
         honored only by the ragged layout's parallel schedule; callers that
         do not plan it fall back to ``R * capacity`` — always sufficient,
         merely uncompacted."""
-        if self.layout == "ragged" and self.schedule == "parallel":
+        if self.layout == "ragged" and self.schedule != "sequential":
             s = int(slots) if slots and int(slots) > 0 \
                 else self.n_rsus_padded * int(capacity)
         else:

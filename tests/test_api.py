@@ -56,7 +56,7 @@ def scenario_run():
 
 API_SURFACE = sorted([
     "ExperimentSpec", "TrainConfig", "AdaptiveConfig", "FleetConfig",
-    "RuntimeConfig", "FaultsConfig", "SIM_CONFIG_FIELD_MAP",
+    "RuntimeConfig", "FaultsConfig", "StreamConfig", "SIM_CONFIG_FIELD_MAP",
     "MODELS", "SCENARIOS", "STRATEGIES", "SCHEDULES", "WIRES",
     "ModelEntry", "StrategyEntry", "ScheduleEntry", "WireEntry",
     "register_model", "register_scenario", "register_strategy",
@@ -84,7 +84,7 @@ def test_builtin_registries_present():
     assert set(api.SCENARIOS) == {"single_rsu", "highway_corridor",
                                   "highway_zipf", "urban_grid",
                                   "trace_replay"}
-    assert set(api.SCHEDULES) == {"sequential", "parallel"}
+    assert set(api.SCHEDULES) == {"sequential", "parallel", "streaming"}
     assert {"paper", "paper-literal", "latency", "energy", "memory",
             "residence"} == set(api.STRATEGIES)
     assert set(api.WIRES) == {"none", "int8", "topk_int8"}
@@ -231,8 +231,8 @@ def test_every_registry_combination_builds_or_fails_actionably():
             failed += 1
     # both populations exist, and the valid grid is the expected size:
     # models x (1 single-RSU x 5 strategies + 4 scenarios x 3 strategies
-    #           x 2 schedules)
-    assert built == len(api.MODELS) * (5 + 4 * 3 * 2)
+    #           x 3 schedules)
+    assert built == len(api.MODELS) * (5 + 4 * 3 * 3)
     assert failed > 0
 
 

@@ -311,3 +311,93 @@ def test_drop_steps_bounds(drop, steps, seed):
     assert (out >= 0).all() and (out <= steps).all()
     assert (out[drop] < steps).all()
     assert (out[~drop] == steps).all()
+
+
+# ---------------------------------------------------------- streaming plane
+@SET
+@given(st.integers(1, 8), st.lists(st.booleans(), min_size=1, max_size=8),
+       st.integers(0, 2 ** 31 - 1))
+def test_constant_discount_is_bitwise_survivor_fedavg(n, mask, seed):
+    """The streaming merge with staleness 0 IS plain survivor FedAvg, bit
+    for bit: the constant kernel multiplies every weight by exactly 1.0,
+    an IEEE identity, so the buffered-async path cannot perturb a
+    fresh-only merge (DESIGN.md §14 zero-staleness invariant)."""
+    from repro.core import streaming
+    key = jax.random.PRNGKey(seed)
+    k1, k2, k3 = jax.random.split(key, 3)
+    stack = {"w": jax.random.normal(k1, (n, 3, 4)),
+             "b": jax.random.normal(k2, (n, 2))}
+    w = jax.random.uniform(k3, (n,), minval=0.1, maxval=10.0)
+    surv = jnp.asarray((mask * n)[:n], bool)
+    disc = streaming.staleness_kernel("constant", 0.5, jnp.zeros((n,)))
+    fb = {"w": jnp.zeros((3, 4)), "b": jnp.zeros((2,))}
+    plain = aggregation.survivor_fedavg(stack, w, surv, fallback=fb)
+    disco = aggregation.discounted_survivor_fedavg(stack, w, surv, disc,
+                                                   fallback=fb)
+    jax.tree.map(lambda a, b: np.testing.assert_array_equal(
+        np.asarray(a), np.asarray(b)), disco, plain)
+
+
+@SET
+@given(st.sampled_from(["constant", "poly"]),
+       st.floats(0.0, 4.0),
+       st.lists(st.integers(0, 64), min_size=2, max_size=16))
+def test_staleness_kernel_monotone_non_increasing(kernel, alpha, ages):
+    """A staler delta never earns MORE merge weight: both kernels are
+    monotone non-increasing in staleness (and land in (0, 1])."""
+    from repro.core import streaming
+    s = jnp.asarray(sorted(ages), jnp.float32)
+    k = np.asarray(streaming.staleness_kernel(kernel, alpha, s))
+    assert (np.diff(k) <= 0).all()
+    assert (k > 0.0).all() and (k <= 1.0).all()
+    # and the discount propagates monotonically into the merge weight
+    w = k * 3.5
+    assert (np.diff(w) <= 0).all()
+
+
+# ------------------------------------------------- dirichlet partitioner
+@SET
+@given(st.integers(2, 8), st.floats(0.05, 5.0), st.integers(0, 10_000))
+def test_dirichlet_partition_invariants(n_clients, alpha, seed):
+    """Dirichlet(alpha) shards form an exact partition: disjoint, in
+    range, and together covering every sample once."""
+    from repro.data.partition import dirichlet_partition
+    rng = np.random.default_rng(seed)
+    labels = rng.integers(0, 10, size=600)
+    parts = dirichlet_partition(seed, labels, n_clients, alpha=alpha)
+    assert len(parts) == n_clients
+    allidx = np.concatenate([p for p in parts]) if parts else np.array([])
+    assert len(allidx) == len(labels)
+    assert len(np.unique(allidx)) == len(labels)
+
+
+@pytest.mark.parametrize("alpha", [0.1, 0.3])
+def test_dirichlet_label_distribution_skews_with_alpha(alpha):
+    """The label-distribution test at the paper-standard alphas: a small
+    concentration parameter puts most of each class on few clients
+    (measured by the mean max per-class share), strictly more skewed than
+    the near-IID alpha=100 reference — and lower alpha skews harder."""
+    from repro.data.partition import dirichlet_partition, partition_stats
+    rng = np.random.default_rng(0)
+    labels = rng.integers(0, 10, size=4000)
+    n_clients = 8
+
+    def mean_max_share(a):
+        parts = dirichlet_partition(7, labels, n_clients, alpha=a)
+        shares = np.zeros((10, n_clients))
+        for i, p in enumerate(parts):
+            for c in range(10):
+                shares[c, i] = (labels[p] == c).sum()
+        shares /= np.maximum(shares.sum(axis=1, keepdims=True), 1)
+        return shares.max(axis=1).mean(), parts
+
+    skewed, parts = mean_max_share(alpha)
+    iid, _ = mean_max_share(100.0)
+    assert skewed > iid + 0.1
+    assert iid < 0.25            # alpha=100 spreads classes near-uniformly
+    if alpha == 0.1:
+        assert skewed > 0.5      # most of a class concentrates on 1 client
+    # partition_stats reports the induced label footprints
+    stats = partition_stats(parts, labels)
+    assert sum(s["n"] for s in stats) == len(labels)
+    assert all(set(s["classes"]) <= set(range(10)) for s in stats)

@@ -1,0 +1,300 @@
+"""Streaming plane (ISSUE 9, DESIGN.md §14): zero-streaming byte-identity,
+seeded arrival/departure churn, the StreamBuffer's buffered-asynchronous
+merges, and goodput/staleness telemetry — across schedules, super-step
+layouts, and the device mesh.
+
+The CI ``streaming`` job re-runs this file plus the zero-streaming
+invariants; the hard contract mirrors the fault plane's: a default
+:class:`~repro.core.streaming.StreamConfig` must compile the exact program
+a pre-streaming build compiled.
+"""
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core import scenario, streaming
+from repro.core.fedsim import FederationSim, ScenarioEngine, SimConfig
+
+from test_scenario import TinyMLP, _two_cell_trace, _vector_clients
+
+ROUNDS, INTERVAL = 4, 5.0
+# the canonical streaming knob set: buffered-async schedule, 30% presence
+# churn, a small buffer so merges fire inside the short test window
+STREAM = dict(server_schedule="streaming", stream_churn_rate=0.3,
+              stream_buffer_size=2)
+CHAOS = dict(fault_dropout=0.2, fault_upload_loss=0.1, fault_straggler=1e-7)
+
+
+def _cfg(**kw):
+    base = dict(scheme="asfl", adaptive_strategy="paper", rounds=ROUNDS,
+                local_steps=2, batch_size=8, lr=1e-2, optimizer="sgd",
+                round_interval_s=INTERVAL, eval_every=0, superstep=1)
+    base.update(kw)
+    return SimConfig(**base)
+
+
+def _engine(cfg, sync=2):
+    sc = _two_cell_trace(ROUNDS, INTERVAL)
+    clients, test = _vector_clients(2)
+    return ScenarioEngine(TinyMLP(), clients, test, cfg, sc,
+                          cloud_sync_every=sync)
+
+
+def _params(eng):
+    return jax.tree.map(np.asarray, {"units": eng.units, "head": eng.head})
+
+
+# ----------------------------------------------------------- StreamConfig
+def test_stream_config_validation():
+    for bad in ({"kernel": "exp"}, {"churn_rate": 1.0},
+                {"churn_rate": -0.1}, {"buffer_size": 0}, {"alpha": -1.0}):
+        with pytest.raises(ValueError):
+            streaming.StreamConfig(**bad)
+
+
+def test_stream_config_flags():
+    assert not streaming.StreamConfig().churning
+    assert streaming.StreamConfig(churn_rate=0.1).churning
+    # schedule validation rides SimConfig's allowed-values check
+    with pytest.raises(ValueError, match="server_schedule"):
+        SimConfig(server_schedule="fedbuff")
+    assert SimConfig(**STREAM).stream_config().churning
+
+
+def test_staleness_kernel_values():
+    s = np.array([0.0, 1.0, 3.0], np.float32)
+    np.testing.assert_array_equal(
+        np.asarray(streaming.staleness_kernel("constant", 0.5, s)),
+        np.ones(3, np.float32))
+    poly = np.asarray(streaming.staleness_kernel("poly", 1.0, s))
+    np.testing.assert_allclose(poly, [1.0, 0.5, 0.25], rtol=1e-6)
+    assert (np.diff(poly) <= 0).all()
+    with pytest.raises(ValueError, match="kernel"):
+        streaming.staleness_kernel("exp", 0.5, s)
+
+
+def test_gate_presence_matches_apply_presence():
+    """The traced gate and the FleetState-level twin agree: a non-admitted
+    vehicle is exactly an out-of-coverage one."""
+    serving = np.array([0, 1, -1, 2], np.int32)
+    rates = np.array([1e6, 2e6, 0.0, 3e6], np.float32)
+    res = np.array([4.0, 5.0, 0.0, 6.0], np.float32)
+    admit = np.array([True, False, True, False])
+    s2, r2, d2 = streaming.gate_presence(serving, rates, res, admit)
+    assert np.asarray(s2).tolist() == [0, -1, -1, -1]
+    assert np.asarray(r2).tolist() == [1e6, 0.0, 0.0, 0.0]
+    st = scenario.FleetState(t=0.0, positions=np.zeros((4, 2)),
+                             velocities=np.zeros((4, 2)),
+                             serving_rsu=serving, rates_bps=rates,
+                             residence_s=res)
+    st2 = scenario.apply_presence(st, admit)
+    np.testing.assert_array_equal(np.asarray(s2), st2.serving_rsu)
+    np.testing.assert_array_equal(np.asarray(r2), st2.rates_bps)
+    np.testing.assert_array_equal(np.asarray(d2), st2.residence_s)
+
+
+# ------------------------------------------------- zero-streaming identity
+def test_zero_stream_carry_has_no_stream_planes():
+    eng = _engine(_cfg())
+    assert not eng.programs.cz and not eng.programs.sz
+    for key in ("present", "sbuf", "sbuf_w", "sbuf_age", "sbuf_cnt"):
+        assert key not in eng._carry
+
+
+def test_zero_stream_never_samples(monkeypatch):
+    """The Python-level gate: a default StreamConfig must never reach the
+    presence sampler, so the traced program cannot contain streaming ops."""
+    def boom(*a, **kw):                      # pragma: no cover
+        raise AssertionError("presence sampler invoked on zero-churn config")
+    monkeypatch.setattr(streaming, "sample_toggles_traced", boom)
+    eng = _engine(_cfg(superstep=ROUNDS))
+    hist = eng.run()
+    assert len(hist) == ROUNDS
+    assert all(np.isfinite(m.loss) for m in hist)
+
+
+@pytest.mark.parametrize("schedule", ["sequential", "parallel"])
+def test_zero_stream_lowering_byte_identical_across_stream_seed(schedule):
+    """Byte-identity, provable in-repo: with zero churn and a sync
+    schedule, nothing of the stream group may leak into the lowered
+    program — two configs that differ only in stream_seed (and buffer
+    shape knobs) lower to the identical text."""
+    txts = []
+    for seed, buf in ((0, 4), (99, 7)):
+        eng = _engine(_cfg(server_schedule=schedule, superstep=ROUNDS,
+                           stream_seed=seed, stream_buffer_size=buf))
+        cap = eng._capacity(ROUNDS)
+        sig = eng.programs.signature(ROUNDS, cap, eng._total_slots(ROUNDS))
+        fn = eng.programs.get(sig)
+        txts.append(fn.lower(eng._carry,
+                             eng._window_xs(0, ROUNDS)).as_text())
+    assert txts[0] == txts[1]
+
+
+# ----------------------------------------------- streaming: fused engines
+@pytest.mark.parametrize("kernel", ["constant", "poly"])
+def test_fused_matches_per_round_under_streaming(kernel):
+    """K fused rounds == K per-round dispatches stays bit-for-bit under
+    churn + buffered merges: the presence stream is round-indexed
+    (fold_in(key, rnd)) and the buffer lives on the donated carry."""
+    cfg1 = _cfg(stream_kernel=kernel, **STREAM)
+    cfgK = dataclasses.replace(cfg1, superstep=ROUNDS)
+    e1, eK = _engine(cfg1), _engine(cfgK)
+    h1, hK = e1.run(), eK.run()
+    jax.tree.map(np.testing.assert_array_equal, _params(e1), _params(eK))
+    np.testing.assert_array_equal([m.loss for m in h1],
+                                  [m.loss for m in hK])
+    assert [m.stream_merges for m in h1] == [m.stream_merges for m in hK]
+    assert [m.absorbed_samples for m in h1] == \
+        [m.absorbed_samples for m in hK]
+    assert [m.n_present for m in h1] == [m.n_present for m in hK]
+    assert sum(m.stream_merges for m in h1) > 0
+
+
+def test_layouts_agree_under_streaming():
+    """ragged == dense stays bit-for-bit with the StreamBuffer in play."""
+    engs = [_engine(_cfg(superstep=ROUNDS, superstep_layout=lay, **STREAM))
+            for lay in ("ragged", "dense")]
+    hists = [e.run() for e in engs]
+    jax.tree.map(np.testing.assert_array_equal,
+                 _params(engs[0]), _params(engs[1]))
+    np.testing.assert_array_equal([m.loss for m in hists[0]],
+                                  [m.loss for m in hists[1]])
+    assert [m.stream_merges for m in hists[0]] == \
+        [m.stream_merges for m in hists[1]]
+
+
+@pytest.mark.parametrize("layout", ["ragged", "dense"])
+@pytest.mark.skipif(jax.device_count() < 8,
+                    reason="needs XLA_FLAGS=--xla_force_host_platform_"
+                           "device_count=8")
+def test_mesh_agrees_under_streaming(layout):
+    """FleetMesh(8) == single device, bit-for-bit: the buffer planes shard
+    (dense) or replicate (ragged) with the edge stack, and the goodput
+    telemetry psums back to a replicated scalar."""
+    ref = _engine(_cfg(superstep=ROUNDS, superstep_layout=layout, **STREAM))
+    msh = _engine(_cfg(superstep=ROUNDS, superstep_layout=layout,
+                       mesh_devices=8, **STREAM))
+    hr, hm = ref.run(), msh.run()
+    jax.tree.map(np.testing.assert_array_equal, _params(ref), _params(msh))
+    np.testing.assert_array_equal([m.loss for m in hr],
+                                  [m.loss for m in hm])
+    assert [m.stream_merges for m in hr] == [m.stream_merges for m in hm]
+    assert [m.absorbed_samples for m in hr] == \
+        [m.absorbed_samples for m in hm]
+
+
+def test_stream_churn_precompiled_zero_fallbacks():
+    """Churn is retrace-free: after precompile(), a streaming run builds
+    and XLA-compiles nothing (presence is data, the buffer is carry)."""
+    eng = _engine(_cfg(superstep=2, **STREAM))
+    eng.precompile()
+    events = []
+    jax.monitoring.register_event_duration_secs_listener(
+        lambda name, *a, **kw: events.append(name))
+    baseline = len([e for e in events if "compile" in e])
+    hist = eng.run()
+    assert eng.programs.compile_fallbacks == 0
+    assert not [e for e in events[baseline:] if "compile" in e]
+    assert len(hist) == ROUNDS
+    assert all(np.isfinite(m.loss) for m in hist)
+
+
+# ------------------------------------------------ StreamBuffer semantics
+def test_buffer_fires_at_capacity():
+    """With zero churn every served RSU pushes every round, so a size-B
+    buffer fires exactly every B pushes — and absorbs sample mass only on
+    fire rounds."""
+    eng = _engine(_cfg(server_schedule="streaming", stream_buffer_size=2,
+                       superstep=ROUNDS), sync=ROUNDS)
+    hist = eng.run()
+    assert sum(m.stream_merges for m in hist) > 0
+    for m in hist:
+        assert (m.absorbed_samples > 0.0) == (m.stream_merges > 0)
+        assert m.buffer_occupancy >= 0.0
+    # an RSU that pushed every round fires on every second round
+    merges = [m.stream_merges for m in hist]
+    assert merges[0] == 0 and merges[1] > 0
+
+
+def test_buffer_size_one_tracks_parallel_schedule():
+    """B=1 with the constant kernel is the degenerate buffered-async case:
+    every push fires immediately, so the trajectory tracks the plain
+    parallel schedule (same updates modulo the (w*d)/w renormalization
+    rounding)."""
+    cfg = dict(superstep=ROUNDS, stream_buffer_size=1)
+    es = _engine(_cfg(server_schedule="streaming", **cfg))
+    ep = _engine(_cfg(server_schedule="parallel", superstep=ROUNDS))
+    hs, hp = es.run(), ep.run()
+    jax.tree.map(
+        lambda a, b: np.testing.assert_allclose(a, b, rtol=1e-5, atol=1e-7),
+        _params(es), _params(ep))
+    np.testing.assert_allclose([m.loss for m in hs], [m.loss for m in hp],
+                               rtol=1e-5)
+    # every fire merges age-0 slots only
+    assert all(m.stream_stale == 0.0 for m in hs)
+
+
+def test_stream_schedule_is_seeded():
+    """Same stream_seed -> identical presence trace; different seed ->
+    (this trace) a different one.  The stream is dedicated: it cannot
+    collide with the batch-index, fading, or fault streams."""
+    h1 = _engine(_cfg(**STREAM)).run()
+    h2 = _engine(_cfg(**STREAM)).run()
+    assert [m.n_present for m in h1] == [m.n_present for m in h2]
+    assert [m.n_arrived for m in h1] == [m.n_arrived for m in h2]
+    h3 = _engine(_cfg(stream_seed=123, **STREAM)).run()
+    assert ([m.n_present for m in h1] != [m.n_present for m in h3]
+            or [m.n_arrived for m in h1] != [m.n_arrived for m in h3])
+    # the host twin reproduces too (independent stream, same seeding rule)
+    sc = streaming.StreamConfig(churn_rate=0.3, seed=7)
+    np.testing.assert_array_equal(streaming.sample_toggles_host(sc, 3, 64),
+                                  streaming.sample_toggles_host(sc, 3, 64))
+
+
+def test_churn_on_sync_schedules_defers_arrivals():
+    """Presence churn composes with the sync schedules: arrivals sit out
+    their arrival round (registration/model download), telemetry reports
+    the presence/arrival counts, and sample absorption tracks the merged
+    survivor set."""
+    for schedule in ("sequential", "parallel"):
+        eng = _engine(_cfg(server_schedule=schedule, stream_churn_rate=0.3,
+                           superstep=ROUNDS))
+        hist = eng.run()
+        assert all(np.isfinite(m.loss) for m in hist)
+        assert all(0 <= m.n_present <= 2 for m in hist)
+        for m in hist:
+            # an arrival round absorbs nothing from the arrivers: with a
+            # 2-vehicle fleet, all-arrived rounds absorb zero
+            if m.n_arrived == m.n_present and m.n_arrived > 0:
+                assert m.absorbed_samples == 0.0
+        assert sum(m.stream_merges for m in hist) == 0
+
+
+def test_chaos_and_streaming_compose():
+    """The fault and streaming planes are orthogonal carry planes: seeded
+    chaos over a churning buffered-async run stays finite, fused ==
+    per-round, and both telemetry families report."""
+    cfg1 = _cfg(**STREAM, **CHAOS)
+    cfgK = dataclasses.replace(cfg1, superstep=ROUNDS)
+    e1, eK = _engine(cfg1), _engine(cfgK)
+    h1, hK = e1.run(), eK.run()
+    jax.tree.map(np.testing.assert_array_equal, _params(e1), _params(eK))
+    np.testing.assert_array_equal([m.loss for m in h1],
+                                  [m.loss for m in hK])
+    assert [m.stream_merges for m in h1] == [m.stream_merges for m in hK]
+    assert [m.n_dropout for m in h1] == [m.n_dropout for m in hK]
+    assert all(np.isfinite(m.loss) for m in h1)
+
+
+# ----------------------------------------------- host engine (single RSU)
+def test_federation_rejects_streaming():
+    clients, test = _vector_clients(2)
+    with pytest.raises(ValueError, match="multi-RSU"):
+        FederationSim(TinyMLP(), clients, test,
+                      _cfg(server_schedule="streaming"))
+    with pytest.raises(ValueError, match="multi-RSU"):
+        FederationSim(TinyMLP(), clients, test,
+                      _cfg(stream_churn_rate=0.2))
