@@ -1,0 +1,273 @@
+"""City-scale scale-out benchmark: rounds/s on the ``city`` scenario vs
+device count (DESIGN.md §15).
+
+The ``city`` scenario is the scale-out fixture: a ``grid_x x grid_y`` RSU
+lattice (hundreds of cells) with a Zipf cell-popularity fleet in the
+thousands, eccentric-orbit mobility, and geometric coverage gaps.  Every row
+is one ``repro.api.run(ExperimentSpec)`` on the ragged super-step layout and
+asserts ``compile_fallbacks == 0`` — across mobility churn, slot paging, and
+every mesh shape, nothing recompiles mid-run.
+
+Row families:
+
+* **device sweep** — each ``--devices`` count (forced host-platform devices
+  on CPU, parsed pre-jax-import by ``bench_devices``) runs each ``--sizes``
+  fleet on the 2-D ``(rsu, vehicle)`` mesh (``fleet_axis="grid"`` by
+  default), reporting rounds/s for the scaling curve.  Honesty note: forced
+  host devices SPLIT the host's cores — on a 1-2 core container the
+  multi-device rows measure sharding overhead, not speedup; near-linear
+  scaling is only observable when real cores/accelerators back the devices.
+  The per-device-count rows of one run remain mutually comparable and the
+  provenance block records the split.
+* **paged row** — the largest fleet re-runs with ``--page-slots`` bounding
+  the per-device *concurrent* slot window; the row asserts the planned slot
+  block genuinely exceeds one window (``slot_windows > 1``) so the paging
+  carry loop is actually exercised, and that its loss trajectory matches
+  the unpaged twin bit-for-bit (paging changes peak footprint, not math).
+
+  PYTHONPATH=src python benchmarks/bench_city.py --devices 1,8
+  -> BENCH_city.json (repo root) + benchmarks/out/BENCH_city.json
+
+``--check-baseline BASELINE.json [--max-regress 0.30]`` compares rounds/s
+rows against a committed baseline (the CI perf smoke); rows missing from
+the baseline are skipped gracefully.
+"""
+from __future__ import annotations
+
+import argparse
+import gc
+import json
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))
+
+from bench_devices import parse_devices_early
+
+# --devices N[,M,...]: forced host device count must precede any jax import
+DEVICE_COUNTS = parse_devices_early()
+
+import jax
+import numpy as np
+
+from bench_io import device_row_key, write_bench
+from repro import api
+from repro.configs.base import cache_dir_is_warm
+
+
+def _spec(args, n: int, devices: int, page: int) -> api.ExperimentSpec:
+    gx, gy = (int(s) for s in args.grid.split("x"))
+    stream = (api.StreamConfig(churn_source="mobility")
+              if args.churn == "mobility" else api.StreamConfig())
+    return api.ExperimentSpec(
+        model="mlp9",
+        train=api.TrainConfig(scheme="asfl", rounds=args.rounds,
+                              local_steps=args.local_steps,
+                              batch_size=args.batch, lr=1e-3, eval_every=0,
+                              optimizer="sgd",
+                              server_schedule=args.schedule),
+        adaptive=api.AdaptiveConfig(strategy=args.strategy),
+        stream=stream,
+        fleet=api.FleetConfig(n_vehicles=n, scenario="city",
+                              scenario_kwargs={"seed": n, "grid_x": gx,
+                                               "grid_y": gy},
+                              cloud_sync_every=args.sync,
+                              round_interval_s=10.0,
+                              per_vehicle_samples=args.samples,
+                              data_seed=n),
+        runtime=api.RuntimeConfig(superstep=args.superstep,
+                                  superstep_layout="ragged",
+                                  precompile=True,
+                                  mesh_devices=devices,
+                                  fleet_axis=args.fleet_axis,
+                                  page_slots=page,
+                                  compilation_cache_dir=args.compilation_cache))
+
+
+def bench_one(args, n: int, devices: int, page: int = 0) -> dict:
+    res = api.run(_spec(args, n, devices, page), timeit=args.timeit)
+    assert all(np.isfinite(m.loss) for m in res.history)
+    # zero retraces across mobility churn, paging windows, and mesh shapes:
+    # presence and page position are carried data, never a signature
+    assert res.diagnostics["compile_fallbacks"] == 0
+    occ = res.diagnostics["occupancy"]
+    # concurrent slot windows per device the paged sweep walks (1 = the
+    # whole block fits one window, i.e. paging is off or trivial)
+    per_dev = -(-occ["executed_slots"] // max(devices, 1))
+    windows = -(-per_dev // page) if page > 0 else 1
+    return {
+        "scenario": "city", "n_vehicles": n, "devices": devices,
+        "grid": args.grid, "n_rsus": res.diagnostics["n_rsus"],
+        "schedule": args.schedule, "superstep": args.superstep,
+        "rounds": args.rounds, "churn_source": args.churn,
+        "mesh_shape": res.diagnostics["mesh_shape"],
+        "page_slots": page, "slot_windows": int(windows),
+        "executed_slots": occ["executed_slots"],
+        "mean_occupied_slots": occ["mean_occupied_slots"],
+        "padded_slot_frac": occ["padded_slot_frac"],
+        "round_s": res.timing["round_s"],
+        "rounds_per_s": res.timing["rounds_per_s"],
+        "warmup_s": res.timing["warmup_s"],
+        "scheduled_per_round": [m.n_scheduled for m in res.history],
+        "final_loss": float(res.history[-1].loss),
+        "losses": [float(m.loss) for m in res.history],
+    }
+
+
+def check_baseline(out: dict, baseline_path: str, max_regress: float) -> int:
+    """Exit status for the CI perf smoke: 1 if any matching row's rounds/s
+    dropped more than ``max_regress`` below the baseline."""
+    if not os.path.exists(baseline_path):
+        print(f"baseline {baseline_path} missing; skipping perf check")
+        return 0
+    with open(baseline_path) as f:
+        base = json.load(f)
+    keys = ("local_steps", "batch", "rounds", "strategy", "superstep",
+            "schedule", "grid", "churn", "samples", "fleet_axis")
+    mismatch = {k: (base.get("config", {}).get(k), out["config"].get(k))
+                for k in keys
+                if base.get("config", {}).get(k) != out["config"].get(k)}
+    if mismatch:
+        print(f"baseline config mismatch {mismatch}; skipping perf check "
+              f"(regenerate {baseline_path})")
+        return 0
+
+    def _perf_key(r):
+        key = device_row_key(f"city@{r['n_vehicles']}", r["devices"])
+        if r.get("page_slots"):
+            key += f"+page{r['page_slots']}"
+        return key
+
+    base_rows = {_perf_key(r): r["rounds_per_s"]
+                 for r in base.get("results", [])}
+    failures = []
+    for row in out["results"]:
+        key = _perf_key(row)
+        if key not in base_rows:
+            print(f"no baseline row for {key}; skipping")
+            continue
+        floor = base_rows[key] * (1.0 - max_regress)
+        status = "OK" if row["rounds_per_s"] >= floor else "REGRESSION"
+        print(f"perf {key}: {row['rounds_per_s']:.2f} r/s vs baseline "
+              f"{base_rows[key]:.2f} (floor {floor:.2f}) {status}")
+        if row["rounds_per_s"] < floor:
+            failures.append(key)
+    if failures:
+        print(f"perf regression >{max_regress:.0%} in rows: {failures}")
+        return 1
+    return 0
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--sizes", default="4096",
+                    help="fleet sizes per device count (city is built for "
+                         "4k-100k vehicles)")
+    ap.add_argument("--grid", default="16x16",
+                    help="RSU lattice as GXxGY (256 cells default)")
+    ap.add_argument("--rounds", type=int, default=4)
+    ap.add_argument("--local-steps", type=int, default=1)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--samples", type=int, default=16,
+                    help="training samples per vehicle (kept small so the "
+                         "staged data for a 4k+ fleet fits the container)")
+    ap.add_argument("--strategy", default="paper")
+    ap.add_argument("--sync", type=int, default=1)
+    ap.add_argument("--superstep", type=int, default=4)
+    ap.add_argument("--schedule", default="parallel",
+                    choices=["parallel", "streaming"],
+                    help="paging targets the ragged compacted layouts")
+    ap.add_argument("--churn", default="mobility",
+                    choices=["markov", "mobility"],
+                    help="mobility: presence follows the scenario's "
+                         "coverage gaps (stream_churn_source)")
+    ap.add_argument("--fleet-axis", default="grid",
+                    choices=["auto", "rsu", "grid", "vehicle"])
+    ap.add_argument("--page-slots", type=int, default=128,
+                    help="per-device concurrent slot window for the paged "
+                         "row (0 skips it)")
+    ap.add_argument("--devices", default="1", metavar="N[,M...]",
+                    help="device counts to bench (2-D mesh rows; on CPU "
+                         "the host device count is forced pre-import — "
+                         "parsed by bench_devices before jax loads)")
+    ap.add_argument("--compilation-cache", default=None, metavar="DIR")
+    ap.add_argument("--timeit", type=int, default=2,
+                    help="timed compile-free re-runs per row (min wins)")
+    ap.add_argument("--check-baseline", default=None, metavar="JSON")
+    ap.add_argument("--max-regress", type=float, default=0.30)
+    ap.add_argument("--no-write", action="store_true")
+    args = ap.parse_args()
+
+    cache_hit = cache_dir_is_warm(args.compilation_cache)
+    sizes = [int(s) for s in args.sizes.split(",")]
+    results = []
+    for devices in DEVICE_COUNTS:
+        for n in sizes:
+            gc.collect()
+            row = bench_one(args, n, devices)
+            results.append(row)
+            print(f"city n={n:6d} dev={devices} mesh={row['mesh_shape']} "
+                  f"rsus={row['n_rsus']} slots={row['executed_slots']} "
+                  f"warmup={row['warmup_s']:6.1f}s "
+                  f"round={row['round_s']*1e3:9.1f} ms "
+                  f"({row['rounds_per_s']:.2f} rounds/s)", flush=True)
+
+    if args.page_slots > 0:
+        # paged twin of the largest fleet at the top device count: the
+        # planned per-device slot block must exceed one window (the paging
+        # loop actually runs) and the math must not move
+        n, devices = max(sizes), DEVICE_COUNTS[-1]
+        gc.collect()
+        row = bench_one(args, n, devices, page=args.page_slots)
+        results.append(row)
+        assert row["slot_windows"] > 1, (
+            f"page_slots={args.page_slots} does not page: the per-device "
+            f"block ({row['executed_slots']} / {devices} slots) fits one "
+            f"window — lower --page-slots or raise the fleet")
+        twin = next(r for r in results
+                    if r["n_vehicles"] == n and r["devices"] == devices
+                    and not r["page_slots"])
+        assert row["losses"] == twin["losses"], (
+            "paged run diverged from its unpaged twin")
+        print(f"city n={n:6d} dev={devices} PAGED window={args.page_slots} "
+              f"({row['slot_windows']} windows/device) "
+              f"round={row['round_s']*1e3:9.1f} ms "
+              f"({row['rounds_per_s']:.2f} rounds/s) "
+              f"losses match unpaged twin", flush=True)
+
+    out = {
+        "config": {"sizes": sizes, "grid": args.grid, "rounds": args.rounds,
+                   "local_steps": args.local_steps, "batch": args.batch,
+                   "samples": args.samples, "strategy": args.strategy,
+                   "cloud_sync_every": args.sync,
+                   "superstep": args.superstep, "schedule": args.schedule,
+                   "churn": args.churn, "fleet_axis": args.fleet_axis,
+                   "page_slots": args.page_slots,
+                   "timeit": args.timeit,
+                   "devices": list(DEVICE_COUNTS),
+                   "compilation_cache": args.compilation_cache,
+                   "backend": jax.default_backend(),
+                   # forced host devices SPLIT these cores: scaling rows
+                   # are honest only when host_cpus >= devices
+                   "host_cpus": len(os.sched_getaffinity(0)),
+                   "driver": "repro.api.run"},
+        "warmup_total_s": float(sum(r["warmup_s"] for r in results)),
+        "compile_cache_hit": cache_hit,
+        "rounds_per_s": {
+            device_row_key(f"city@{r['n_vehicles']}", r["devices"])
+            + (f"+page{r['page_slots']}" if r["page_slots"] else ""):
+            r["rounds_per_s"] for r in results},
+        "results": results,
+    }
+    if not args.no_write:
+        write_bench("BENCH_city", out, "benchmarks/bench_city.py")
+        print(f"(warmup_total_s={out['warmup_total_s']:.1f}, "
+              f"cache_hit={cache_hit})")
+
+    if args.check_baseline:
+        sys.exit(check_baseline(out, args.check_baseline, args.max_regress))
+
+
+if __name__ == "__main__":
+    main()

@@ -29,6 +29,12 @@ import sys
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))
 
+from bench_devices import parse_devices_early
+
+# --devices N[,M,...]: per-device-count rows; the host device count must be
+# forced BEFORE the first jax import (jax locks it on backend init)
+DEVICE_COUNTS = parse_devices_early()
+
 import jax
 import numpy as np
 
@@ -36,7 +42,7 @@ from bench_io import write_bench
 from repro import api
 
 
-def _spec(args, dropout: float) -> api.ExperimentSpec:
+def _spec(args, dropout: float, devices: int = 1) -> api.ExperimentSpec:
     return api.ExperimentSpec(
         model="mlp9",
         train=api.TrainConfig(scheme="asfl", rounds=args.rounds,
@@ -54,16 +60,17 @@ def _spec(args, dropout: float) -> api.ExperimentSpec:
                               scenario_kwargs={"seed": args.fleet},
                               cloud_sync_every=1, round_interval_s=10.0,
                               per_vehicle_samples=64, data_seed=args.fleet),
-        runtime=api.RuntimeConfig(superstep=args.superstep, precompile=True))
+        runtime=api.RuntimeConfig(superstep=args.superstep, precompile=True,
+                                  mesh_devices=devices))
 
 
-def bench_one(args, dropout: float) -> dict:
-    res = api.run(_spec(args, dropout), timeit=args.timeit)
+def bench_one(args, dropout: float, devices: int = 1) -> dict:
+    res = api.run(_spec(args, dropout, devices), timeit=args.timeit)
     assert all(np.isfinite(m.loss) for m in res.history)
     assert res.diagnostics["compile_fallbacks"] == 0
     accs = [m.test_acc for m in res.history if np.isfinite(m.test_acc)]
     row = {
-        "dropout": dropout,
+        "dropout": dropout, "devices": devices,
         "upload_loss": args.upload_loss,
         "straggler_factor": args.straggler_factor,
         "rsu_outage": args.rsu_outage,
@@ -103,24 +110,32 @@ def main():
     ap.add_argument("--schedule", default="sequential",
                     choices=sorted(api.SCHEDULES))
     ap.add_argument("--superstep", type=int, default=4)
+    ap.add_argument("--devices", default="1", metavar="N[,M...]",
+                    help="device counts to bench (RSU-axis mesh rows; on "
+                         "CPU the host device count is forced pre-import "
+                         "— parsed by bench_devices before jax loads)")
     ap.add_argument("--timeit", type=int, default=1)
     ap.add_argument("--no-write", action="store_true")
     args = ap.parse_args()
 
     results = []
-    for rate in (float(s) for s in args.dropouts.split(",")):
-        gc.collect()
-        row = bench_one(args, rate)
-        results.append(row)
-        print(f"dropout={rate:4.2f} acc={row['final_acc']:.3f} "
-              f"loss={row['final_loss']:.3f} "
-              f"survivor_frac={row['survivor_frac']:.2f} "
-              f"lost={row['lost_update_bytes']/1e6:6.2f} MB "
-              f"dropped={row['n_dropout']:3d} "
-              f"upload_lost={row['n_upload_lost']:3d} "
-              f"({row['rounds_per_s']:.2f} rounds/s)", flush=True)
+    for devices in DEVICE_COUNTS:
+        for rate in (float(s) for s in args.dropouts.split(",")):
+            gc.collect()
+            row = bench_one(args, rate, devices)
+            results.append(row)
+            print(f"dropout={rate:4.2f} dev={devices} "
+                  f"acc={row['final_acc']:.3f} "
+                  f"loss={row['final_loss']:.3f} "
+                  f"survivor_frac={row['survivor_frac']:.2f} "
+                  f"lost={row['lost_update_bytes']/1e6:6.2f} MB "
+                  f"dropped={row['n_dropout']:3d} "
+                  f"upload_lost={row['n_upload_lost']:3d} "
+                  f"({row['rounds_per_s']:.2f} rounds/s)", flush=True)
 
-    clean = next((r for r in results if r["dropout"] == 0.0), None)
+    clean = next((r for r in results
+                  if r["dropout"] == 0.0
+                  and r["devices"] == DEVICE_COUNTS[0]), None)
     out = {
         "config": {"fleet": args.fleet, "scenario": args.scenario,
                    "strategy": args.strategy, "rounds": args.rounds,
@@ -130,14 +145,18 @@ def main():
                    "straggler_factor": args.straggler_factor,
                    "rsu_outage": args.rsu_outage,
                    "fault_seed": args.fault_seed,
+                   "devices": list(DEVICE_COUNTS),
                    "backend": jax.default_backend(),
                    "driver": "repro.api.run"},
         "accuracy_vs_dropout": {str(r["dropout"]): r["final_acc"]
-                                for r in results},
+                                for r in results
+                                if r["devices"] == DEVICE_COUNTS[0]},
         # accuracy the failures cost, relative to the clean row
         "acc_drop_vs_clean": ({str(r["dropout"]):
                                float(clean["final_acc"] - r["final_acc"])
-                               for r in results} if clean else None),
+                               for r in results
+                               if r["devices"] == DEVICE_COUNTS[0]}
+                              if clean else None),
         "results": results,
     }
     if not args.no_write:

@@ -35,15 +35,21 @@ import sys
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))
 
+from bench_devices import parse_devices_early
+
+# --devices N[,M,...]: per-device-count rows; the host device count must be
+# forced BEFORE the first jax import (jax locks it on backend init)
+DEVICE_COUNTS = parse_devices_early()
+
 import jax
 import numpy as np
 
-from bench_io import write_bench
+from bench_io import device_row_key, write_bench
 from repro import api
 
 
 def _spec(args, schedule: str, churn: float, buffer_size: int,
-          kernel: str) -> api.ExperimentSpec:
+          kernel: str, devices: int = 1) -> api.ExperimentSpec:
     return api.ExperimentSpec(
         model="mlp9",
         train=api.TrainConfig(scheme="asfl", rounds=args.rounds,
@@ -59,12 +65,13 @@ def _spec(args, schedule: str, churn: float, buffer_size: int,
                               cloud_sync_every=args.sync,
                               round_interval_s=10.0,
                               per_vehicle_samples=64, data_seed=args.fleet),
-        runtime=api.RuntimeConfig(superstep=args.superstep, precompile=True))
+        runtime=api.RuntimeConfig(superstep=args.superstep, precompile=True,
+                                  mesh_devices=devices))
 
 
 def bench_one(args, schedule: str, churn: float, buffer_size: int,
-              kernel: str) -> dict:
-    res = api.run(_spec(args, schedule, churn, buffer_size, kernel),
+              kernel: str, devices: int = 1) -> dict:
+    res = api.run(_spec(args, schedule, churn, buffer_size, kernel, devices),
                   timeit=args.timeit)
     assert all(np.isfinite(m.loss) for m in res.history)
     assert res.diagnostics["compile_fallbacks"] == 0
@@ -73,7 +80,7 @@ def bench_one(args, schedule: str, churn: float, buffer_size: int,
     stale_total = float(sum(getattr(m, "stream_stale", 0.0)
                             for m in res.history))
     row = {
-        "schedule": schedule, "churn": churn,
+        "schedule": schedule, "churn": churn, "devices": devices,
         "buffer_size": buffer_size, "kernel": kernel,
         "final_acc": float(accs[-1]) if accs else float("nan"),
         "final_loss": float(res.history[-1].loss),
@@ -113,13 +120,15 @@ def check_baseline(out: dict, baseline_path: str, max_regress: float) -> int:
         return 0
 
     def _perf_key(r):
-        return (r["schedule"], r["churn"], r["buffer_size"])
+        return device_row_key(
+            f"{r['schedule']}@{r['churn']}x{r['buffer_size']}",
+            r.get("devices", 1))
 
-    base_rows = {str(_perf_key(r)): r["goodput_samples_per_s"]
+    base_rows = {_perf_key(r): r["goodput_samples_per_s"]
                  for r in base.get("results", [])}
     failures = []
     for row in out["results"]:
-        key = str(_perf_key(row))
+        key = _perf_key(row)
         if key not in base_rows or not base_rows[key]:
             print(f"no baseline goodput for {key}; skipping")
             continue
@@ -156,6 +165,10 @@ def main():
     ap.add_argument("--batch", type=int, default=8)
     ap.add_argument("--sync", type=int, default=4)
     ap.add_argument("--superstep", type=int, default=4)
+    ap.add_argument("--devices", default="1", metavar="N[,M...]",
+                    help="device counts to bench (RSU-axis mesh rows; on "
+                         "CPU the host device count is forced pre-import "
+                         "— parsed by bench_devices before jax loads)")
     ap.add_argument("--timeit", type=int, default=1)
     ap.add_argument("--no-write", action="store_true")
     ap.add_argument("--skip-staleness", action="store_true",
@@ -168,24 +181,27 @@ def main():
 
     results = []
     churns = [float(s) for s in args.churns.split(",")]
-    for schedule in ("sequential", "streaming"):
-        for churn in churns:
-            gc.collect()
-            row = bench_one(args, schedule, churn,
-                            buffer_size=4, kernel=args.kernel)
-            results.append(row)
-            print(f"{schedule:10s} churn={churn:4.2f} "
-                  f"goodput={row['goodput_samples_per_s']:8.0f} samples/s "
-                  f"acc={row['final_acc']:.3f} "
-                  f"merges={row['stream_merges']:3d} "
-                  f"arrived={row['n_arrived']:3d} "
-                  f"({row['rounds_per_s']:.2f} rounds/s)", flush=True)
+    for devices in DEVICE_COUNTS:
+        for schedule in ("sequential", "streaming"):
+            for churn in churns:
+                gc.collect()
+                row = bench_one(args, schedule, churn,
+                                buffer_size=4, kernel=args.kernel,
+                                devices=devices)
+                results.append(row)
+                print(f"{schedule:10s} churn={churn:4.2f} dev={devices} "
+                      f"goodput={row['goodput_samples_per_s']:8.0f} samples/s "
+                      f"acc={row['final_acc']:.3f} "
+                      f"merges={row['stream_merges']:3d} "
+                      f"arrived={row['n_arrived']:3d} "
+                      f"({row['rounds_per_s']:.2f} rounds/s)", flush=True)
 
     if not args.skip_staleness:
         for buf in (int(s) for s in args.buffers.split(",")):
             gc.collect()
             row = bench_one(args, "streaming", args.staleness_churn,
-                            buffer_size=buf, kernel=args.kernel)
+                            buffer_size=buf, kernel=args.kernel,
+                            devices=DEVICE_COUNTS[0])
             results.append(row)
             print(f"buffer={buf:2d} churn={args.staleness_churn:4.2f} "
                   f"stale={row['mean_slot_staleness']:5.2f} "
@@ -193,9 +209,12 @@ def main():
                   f"goodput={row['goodput_samples_per_s']:8.0f}", flush=True)
 
     def _curve(schedule):
+        # the headline curves come from the first device count; extra
+        # --devices rows live in results keyed by their device suffix
         return {str(r["churn"]): r["goodput_samples_per_s"]
                 for r in results
-                if r["schedule"] == schedule and r["buffer_size"] == 4}
+                if r["schedule"] == schedule and r["buffer_size"] == 4
+                and r["devices"] == DEVICE_COUNTS[0]}
 
     seq, strm = _curve("sequential"), _curve("streaming")
     out = {
@@ -206,6 +225,7 @@ def main():
                    "kernel": args.kernel, "alpha": args.alpha,
                    "stream_seed": args.stream_seed,
                    "staleness_churn": args.staleness_churn,
+                   "devices": list(DEVICE_COUNTS),
                    "backend": jax.default_backend(),
                    "driver": "repro.api.run"},
         "goodput_vs_churn": {"sequential": seq, "streaming": strm},

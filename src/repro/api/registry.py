@@ -169,7 +169,9 @@ def _register_builtin_models():
 # --------------------------------------------------------------------------
 
 # name -> builder(n_vehicles, seed=..., **kw) -> Scenario; the SINGLE_RSU
-# entry is None: the router dispatches it to FederationSim instead
+# entry is None: the router dispatches it to FederationSim instead.
+# Includes the city scale-out fixture (DESIGN.md §15): an RSU lattice with
+# Zipf cell popularity sized for the 2-D mesh + slot-paging paths
 SCENARIOS: Dict[str, Optional[Callable[..., Any]]] = {
     SINGLE_RSU: None,
     **_scenario.SCENARIOS,

@@ -27,6 +27,7 @@ import json
 import time
 from typing import Any, Callable, Dict, List, Optional, Union
 
+import jax
 import numpy as np
 
 from repro.api import registry
@@ -102,13 +103,20 @@ def build_engine(spec: ExperimentSpec):
     core/fleet_sharding.py), so a machine with too few devices fails with
     the ``--xla_force_host_platform_device_count`` recipe before any data
     is staged."""
+    rt = spec.runtime
+    # multi-host rendezvous first (DESIGN.md §15): jax.distributed must
+    # initialize before the first backend touch so the mesh below spans
+    # every process's devices.  No-op for the single-process default
+    fleet_sharding.maybe_init_distributed(rt.coordinator_address,
+                                          rt.num_processes, rt.process_id)
     entry = registry.model_entry(spec.model)
     model = entry.build(**spec.model_kwargs)
     f = spec.fleet
     clients, test = entry.make_data(f.n_vehicles, f.per_vehicle_samples,
                                     f.test_samples, f.data_seed)
     cfg = spec.to_sim_config()
-    mesh = fleet_sharding.from_config(cfg, spec.engine_kind)
+    mesh = fleet_sharding.from_config(cfg, spec.engine_kind,
+                                      fleet_size=f.n_vehicles)
     if spec.engine_kind == registry.SCENARIO:
         kw = dict(f.scenario_kwargs)
         kw.setdefault("seed", spec.runtime.seed)
@@ -227,7 +235,20 @@ def run(spec: ExperimentSpec, *,
         mesh = engine.engine.fleet_mesh
     diagnostics.update(
         mesh_devices=(mesh.n_devices if mesh is not None else 1),
-        fleet_axis=(mesh.axis if mesh is not None else None))
+        fleet_axis=(mesh.axis if mesh is not None else None),
+        mesh_shape=([mesh.rsu_devices, mesh.veh_devices]
+                    if mesh is not None else None),
+        n_processes=jax.process_count())
+    if spec.runtime.mesh_devices == "auto":
+        # the mesh_devices="auto" decision (core/fleet_sharding.py):
+        # chosen device count, the slots-per-device floor that drove it,
+        # and what was available — None mesh means auto chose 1
+        diagnostics["mesh_auto"] = (
+            mesh.auto_info if mesh is not None
+            else fleet_sharding.resolve_mesh_devices(
+                "auto", spec.fleet.n_vehicles)[1])
+    if spec.runtime.page_slots > 0:
+        diagnostics["page_slots"] = spec.runtime.page_slots
     if spec.faults.straggler_factor > 0.0:
         # staleness histogram (DESIGN.md §13): distribution of the banked
         # straggler weight merged per round across the run

@@ -110,15 +110,36 @@ class RuntimeConfig:
     superstep_layout: str = "ragged"
     precompile: bool = True           # scenario engine: AOT-compile the plan
     compilation_cache_dir: Optional[str] = None
-    # device mesh over the fleet (core/fleet_sharding.py, DESIGN.md §10):
-    # > 1 runs the compiled programs under shard_map across that many
+    # device mesh over the fleet (core/fleet_sharding.py, DESIGN.md §10,
+    # §15): > 1 runs the compiled programs under shard_map across that many
     # devices (on CPU: XLA_FLAGS=--xla_force_host_platform_device_count=N
-    # before the first jax import); 1 is the unsharded single-device path
-    mesh_devices: int = 1
-    # auto | vehicle | rsu — which fleet dimension the mesh partitions
-    # (auto = the engine's natural axis: RSU for multi-RSU scenarios,
-    # vehicle for the single-RSU cohort engine)
+    # before the first jax import); 1 is the unsharded single-device path;
+    # "auto" picks 1 vs every visible device from an occupied-slots-per-
+    # device floor (the decision lands in RunResult.diagnostics)
+    mesh_devices: Union[int, str] = 1
+    # auto | vehicle | rsu | grid — which fleet dimension(s) the mesh
+    # partitions (auto = the engine's natural axis: RSU for multi-RSU
+    # scenarios, vehicle for the single-RSU cohort engine; grid = the
+    # 2-D rsu x vehicle mesh, scenario engine only)
     fleet_axis: str = "auto"
+    # 2-D mesh factorization: "auto" derives (rsu, vehicle) counts from
+    # fleet_axis, or an explicit "RxV" string (e.g. "4x2") whose product
+    # must equal the resolved mesh_devices
+    mesh_shape: str = "auto"
+    # slot-capacity paging (DESIGN.md §15): > 0 caps the per-device
+    # concurrent slot window of the ragged parallel/streaming super-step;
+    # larger cohorts page through the compacted axis in fixed windows on
+    # the donated carry.  0 = unpaged
+    page_slots: int = 0
+    # multi-host execution (DESIGN.md §15): when num_processes > 1 and a
+    # coordinator address is set, the runner calls
+    # jax.distributed.initialize BEFORE the first backend touch, the mesh
+    # spans every process's devices, and RunResult.final_params gathers
+    # home to every host's numpy.  These never reach SimConfig — process
+    # topology is runner state, not engine math
+    coordinator_address: Optional[str] = None
+    num_processes: int = 1
+    process_id: int = 0
 
 
 @dataclasses.dataclass(frozen=True)
@@ -147,6 +168,10 @@ class StreamConfig:
     kernel: str = "constant"    # staleness discount: constant | poly
     alpha: float = 0.5          # poly kernel exponent: 1/(1+s)**alpha
     seed: int = 0               # dedicated streaming PRNG stream
+    # presence-departure source (DESIGN.md §15): "markov" samples the
+    # toggle chain at churn_rate; "mobility" derives departures from the
+    # scenario's coverage state (serving_rsu == -1) — churn_rate stays 0
+    churn_source: str = "markov"
 
 
 # SimConfig field -> (spec group, group field): the deprecation shim's
@@ -183,6 +208,7 @@ SIM_CONFIG_FIELD_MAP: Dict[str, Tuple[str, str]] = {
     "stream_kernel": ("stream", "kernel"),
     "stream_alpha": ("stream", "alpha"),
     "stream_seed": ("stream", "seed"),
+    "stream_churn_source": ("stream", "churn_source"),
     "seed": ("runtime", "seed"),
     "cohort_parallel": ("runtime", "cohort_parallel"),
     "superstep": ("runtime", "superstep"),
@@ -191,6 +217,8 @@ SIM_CONFIG_FIELD_MAP: Dict[str, Tuple[str, str]] = {
     "compilation_cache_dir": ("runtime", "compilation_cache_dir"),
     "mesh_devices": ("runtime", "mesh_devices"),
     "fleet_axis": ("runtime", "fleet_axis"),
+    "mesh_shape": ("runtime", "mesh_shape"),
+    "page_slots": ("runtime", "page_slots"),
 }
 
 _GROUP_TYPES = {"train": TrainConfig, "adaptive": AdaptiveConfig,
@@ -329,15 +357,37 @@ class ExperimentSpec:
                     f"stochastic fault injection is wired into the "
                     f"split-federation round (sfl | asfl); scheme "
                     f"{self.train.scheme!r} does not support it")
-            if self.stream.churn_rate > 0.0:
+            if self.stream.churn_rate > 0.0 \
+                    or self.stream.churn_source == "mobility":
                 raise ValueError(
-                    "stream.churn_rate > 0 needs a multi-RSU scenario "
-                    "(continuous arrivals/departures live on the scenario "
-                    "engine's presence plane); the single-RSU engine "
-                    "models interruption via fleet.mobility_dropout")
+                    "presence churn (stream.churn_rate > 0 or "
+                    "stream.churn_source='mobility') needs a multi-RSU "
+                    "scenario (continuous arrivals/departures live on the "
+                    "scenario engine's presence plane); the single-RSU "
+                    "engine models interruption via fleet.mobility_dropout")
+            if self.runtime.page_slots > 0:
+                raise ValueError(
+                    "runtime.page_slots pages the multi-RSU super-step's "
+                    "compacted slot axis; set a fleet.scenario (and "
+                    "superstep_layout='ragged' with a parallel or "
+                    "streaming schedule), or leave it at 0")
 
         rt = self.runtime
-        if rt.mesh_devices > 1:
+        if rt.page_slots < 0 or not isinstance(rt.page_slots, int):
+            raise ValueError(
+                f"runtime.page_slots={rt.page_slots!r} must be an int >= 0")
+        if rt.page_slots > 0 and engine == registry.SCENARIO \
+                and (rt.superstep_layout != "ragged"
+                     or self.train.server_schedule == "sequential"):
+            raise ValueError(
+                "runtime.page_slots pages the RAGGED layout's compacted "
+                "slot axis under the parallel/streaming schedules; the "
+                "dense layout and the sequential chain have no compacted "
+                "axis to page — set superstep_layout='ragged' and a "
+                "non-sequential train.server_schedule, or page_slots=0")
+        meshy = rt.mesh_devices == "auto" \
+            or (isinstance(rt.mesh_devices, int) and rt.mesh_devices > 1)
+        if meshy:
             # mesh/engine combinations that cannot execute — rejected here,
             # at spec-build time, with the axis the engine does shard named
             if engine == registry.SCENARIO:
@@ -345,14 +395,14 @@ class ExperimentSpec:
                     raise ValueError(
                         f"runtime.fleet_axis='vehicle' cannot partition the "
                         f"multi-RSU engine (fleet.scenario={sc!r}): it "
-                        f"shards the RSU axis — use fleet_axis='rsu' or "
-                        f"'auto'")
+                        f"shards the RSU axis — use fleet_axis='rsu', "
+                        f"'grid' or 'auto'")
             else:
-                if rt.fleet_axis == "rsu":
+                if rt.fleet_axis in ("rsu", "grid"):
                     raise ValueError(
-                        "runtime.fleet_axis='rsu' needs a multi-RSU "
-                        "scenario; the single-RSU engine shards the "
-                        "vehicle axis — use fleet_axis='vehicle' or "
+                        f"runtime.fleet_axis={rt.fleet_axis!r} needs a "
+                        "multi-RSU scenario; the single-RSU engine shards "
+                        "the vehicle axis — use fleet_axis='vehicle' or "
                         "'auto', or set a fleet.scenario")
                 if self.train.scheme in ("cl", "sl"):
                     raise ValueError(
@@ -366,6 +416,19 @@ class ExperimentSpec:
                         f"runtime.cohort_parallel={rt.cohort_parallel!r} "
                         f"serializes the replica axis the mesh shards; "
                         f"with mesh_devices > 1 use 'vmap' (or 'auto')")
+
+        if rt.num_processes < 1 or not (0 <= rt.process_id
+                                        < rt.num_processes):
+            raise ValueError(
+                f"runtime.num_processes={rt.num_processes!r} / "
+                f"process_id={rt.process_id!r} is not a valid process "
+                f"topology: need num_processes >= 1 and 0 <= process_id < "
+                f"num_processes")
+        if rt.num_processes > 1 and not rt.coordinator_address:
+            raise ValueError(
+                "runtime.num_processes > 1 needs "
+                "runtime.coordinator_address (host:port of process 0) so "
+                "jax.distributed.initialize can rendezvous the hosts")
 
         if self.train.scheme in ("sl", "sfl"):
             if not (1 <= self.adaptive.cut <= entry.n_units - 1):

@@ -158,20 +158,22 @@ def stacked_cloud_merge(edge_stack: Any, edge_weights: jnp.ndarray,
 
 
 def sharded_weighted_sum(stacked_tree: Any, weights: jnp.ndarray,
-                         axis_name: str) -> Any:
+                         axis_name: "str | tuple") -> Any:
     """:func:`stacked_weighted_sum` across a device-sharded replica axis:
     each shard reduces its local slots, then one ``psum`` over ``axis_name``
     completes the FedAvg numerator — the weighted all-reduce form of Eq. 1/2
     used by the sharded cohort engine (zero-weight padding slots stay
-    excluded shard-locally)."""
+    excluded shard-locally).  ``axis_name`` is one mesh axis name or a
+    tuple of them: the 2-D ``(rsu, vehicle)`` mesh (DESIGN.md §15) reduces
+    slot partials over ``fleet_sharding.ALL_AXES`` in one psum."""
     part = stacked_weighted_sum(stacked_tree, weights)
     return jax.tree.map(lambda a: jax.lax.psum(a, axis_name), part)
 
 
 def sharded_fedavg(stacked_tree: Any, weights: jnp.ndarray,
-                   axis_name: str) -> Any:
+                   axis_name: "str | tuple") -> Any:
     """:func:`stacked_fedavg` across a device-sharded replica axis (psum'd
-    numerator and denominator)."""
+    numerator and denominator, single axis name or tuple as above)."""
     w = jnp.asarray(weights, jnp.float32)
     num = sharded_weighted_sum(stacked_tree, w, axis_name)
     den = jax.lax.psum(jnp.sum(w), axis_name)

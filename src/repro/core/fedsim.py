@@ -29,7 +29,8 @@ from __future__ import annotations
 
 import dataclasses
 import functools
-from typing import Any, Callable, Dict, List, Optional, Protocol, Sequence, Tuple
+from typing import (Any, Callable, Dict, List, Optional, Protocol, Sequence,
+                    Tuple, Union)
 
 import jax
 import jax.numpy as jnp
@@ -41,7 +42,7 @@ from jax.sharding import PartitionSpec as P
 from repro.configs.base import enable_compilation_cache
 from repro.core import adaptive, aggregation, channel, compression, cost
 from repro.core import faults, fleet_sharding, streaming
-from repro.core.fleet_sharding import AXIS as MESH_AXIS, FLEET_AXES, FleetMesh
+from repro.core.fleet_sharding import VEH_AXIS as MESH_AXIS, FLEET_AXES, FleetMesh
 from repro.core.superstep import (SERVER_SCHEDULES, SUPERSTEP_LAYOUTS,
                                   SuperStepPrograms)
 from repro.data.pipeline import (ClientDataset, DoubleBuffer, StackedClients,
@@ -206,15 +207,35 @@ class SimConfig:
     # any engine latches it on for every compile in the process, and the
     # last configured directory wins (configs.base.enable_compilation_cache)
     compilation_cache_dir: Optional[str] = None
-    # device mesh over the fleet (core/fleet_sharding.py, DESIGN.md §10):
-    # mesh_devices > 1 runs the compiled round / super-step programs under
-    # shard_map across that many devices; 1 (the default) is the unsharded
-    # single-device path, bit-identical to the pre-mesh engines
-    mesh_devices: int = 1
+    # device mesh over the fleet (core/fleet_sharding.py, DESIGN.md §10,
+    # §15): mesh_devices > 1 runs the compiled round / super-step programs
+    # under shard_map across that many devices; 1 (the default) is the
+    # unsharded single-device path, bit-identical to the pre-mesh engines;
+    # "auto" picks 1 vs every addressable device from an occupied-slots-
+    # per-device floor, so small fleets never pay the sharding tax
+    mesh_devices: Union[int, str] = 1
     # which fleet dimension the mesh partitions: "vehicle" (cohort-engine
-    # slot axis), "rsu" (super-step RSU axis), or "auto" (the engine's
+    # slot axis), "rsu" (super-step RSU axis), "grid" (2-D rsu x vehicle —
+    # the super-step shards BOTH its axes), or "auto" (the engine's
     # natural axis)
     fleet_axis: str = "auto"
+    # 2-D mesh factorization (DESIGN.md §15): "auto" derives (rsu, vehicle)
+    # device counts from fleet_axis ("vehicle" -> (1, n), "rsu" -> (n, 1),
+    # "grid" -> the balanced power-of-2 split), or an explicit "RxV"
+    # string whose product must equal mesh_devices
+    mesh_shape: str = "auto"
+    # slot-capacity paging (DESIGN.md §15): > 0 caps the per-device
+    # CONCURRENT slot window of the ragged parallel/streaming super-step —
+    # cohorts beyond it page through the compacted axis in fixed windows
+    # on the donated carry (more planned slots never raises, and paging
+    # churn is data, not a program signature).  0 = unpaged
+    page_slots: int = 0
+    # presence-churn source (DESIGN.md §15): "markov" is the seeded toggle
+    # chain (stream_churn_rate); "mobility" derives departures from the
+    # scenario's coverage state (serving_rsu == -1) — a vehicle leaving
+    # coverage departs the stream, a vehicle entering it re-registers
+    # (synchronous schedules admit it next round; streaming immediately)
+    stream_churn_source: str = "markov"
 
     def __post_init__(self):
         for field, allowed in (("scheme", SCHEMES),
@@ -234,12 +255,24 @@ class SimConfig:
         for field, floor in (("n_clients", 1), ("batch_size", 1),
                              ("local_epochs", 1), ("rounds", 1),
                              ("superstep", 1), ("cut", 1), ("eval_every", 0),
-                             ("mesh_devices", 1)):
+                             ("page_slots", 0)):
             value = getattr(self, field)
             if not isinstance(value, int) or value < floor:
                 raise ValueError(
                     f"SimConfig.{field}={value!r} is not valid; expected an "
                     f"int >= {floor}")
+        md = self.mesh_devices
+        if not (md == "auto" or (isinstance(md, int) and md >= 1)):
+            raise ValueError(
+                f"SimConfig.mesh_devices={md!r} is not valid; expected an "
+                f"int >= 1 or 'auto'")
+        if self.stream_churn_source not in streaming.CHURN_SOURCES:
+            raise ValueError(
+                f"SimConfig.stream_churn_source="
+                f"{self.stream_churn_source!r} is not valid; allowed "
+                f"values: {' | '.join(streaming.CHURN_SOURCES)}")
+        if self.mesh_shape != "auto":
+            fleet_sharding.parse_shape_spec(self.mesh_shape)
         if self.local_steps is not None and self.local_steps < 1:
             raise ValueError(
                 f"SimConfig.local_steps={self.local_steps!r} is not valid; "
@@ -291,7 +324,8 @@ class SimConfig:
             churn_rate=self.stream_churn_rate,
             kernel=self.stream_kernel,
             alpha=self.stream_alpha,
-            seed=self.stream_seed)
+            seed=self.stream_seed,
+            churn_source=self.stream_churn_source)
 
 
 @dataclasses.dataclass
@@ -517,7 +551,8 @@ class CohortEngine:
         self.cfg = cfg
         self.opt = _make_opt(cfg)
         self.fleet_mesh = mesh if mesh is not None \
-            else fleet_sharding.from_config(cfg, "federation")
+            else fleet_sharding.from_config(cfg, "federation",
+                                            fleet_size=len(clients))
         if self.fleet_mesh is not None and self.fleet_mesh.axis != "vehicle":
             raise ValueError(
                 f"CohortEngine shards the vehicle axis; got a FleetMesh "
@@ -1144,9 +1179,10 @@ class FederationSim:
                 "synchronous round loop")
         if cfg.stream_config().churning:
             raise ValueError(
-                "stream_churn_rate > 0 needs the multi-RSU ScenarioEngine "
-                "(presence churn is traced super-step carry state; the "
-                "single-RSU engine models coverage via fault_coverage)")
+                "presence churn (stream_churn_rate > 0 or "
+                "stream_churn_source='mobility') needs the multi-RSU "
+                "ScenarioEngine (churn is traced super-step carry state; "
+                "the single-RSU engine models coverage via fault_coverage)")
         self.reset()
 
     def reset(self):
@@ -1560,11 +1596,15 @@ class ScenarioEngine:
         self.lengths = np.array([len(c) for c in clients], dtype=np.int64)
         self.cloud_sync_every = max(int(cloud_sync_every), 1)
         self.fleet_mesh = mesh if mesh is not None \
-            else fleet_sharding.from_config(cfg, "scenario")
-        if self.fleet_mesh is not None and self.fleet_mesh.axis != "rsu":
+            else fleet_sharding.from_config(cfg, "scenario",
+                                            fleet_size=scenario.n_vehicles)
+        if self.fleet_mesh is not None and \
+                self.fleet_mesh.axis not in ("rsu", "grid"):
             raise ValueError(
-                f"ScenarioEngine shards the RSU axis; got a FleetMesh over "
-                f"{self.fleet_mesh.axis!r} (fleet_axis='rsu' or 'auto')")
+                f"ScenarioEngine shards the RSU axis (optionally x the "
+                f"vehicle slot axis); got a FleetMesh over "
+                f"{self.fleet_mesh.axis!r} (fleet_axis='rsu', 'grid' or "
+                f"'auto')")
         nb, ep = self._nb_ep()
         self.programs = SuperStepPrograms(
             model, cfg, stack_clients(self.clients), self.lengths, scenario,
@@ -1632,9 +1672,13 @@ class ScenarioEngine:
                     if (s >= 0).any() else 0
                 self._cohort_counts[rnd] = c
         mx = max([self._cohort_counts[r] for r in range(horizon)] + [1])
-        if self.cfg.slot_capacity == "tight8":
-            return ((mx + 7) // 8) * 8
-        return _pow2(mx)
+        cap = ((mx + 7) // 8) * 8 \
+            if self.cfg.slot_capacity == "tight8" else _pow2(mx)
+        if self.fleet_mesh is not None:
+            # dense 2-D: each RSU's slot row splits into vehicle-axis
+            # column blocks, so the capacity must be a dv multiple
+            cap = self.fleet_mesh.pad_slots(cap)
+        return cap
 
     def _total_slots(self, horizon: int) -> int:
         """Capacity of the ragged layout's compacted global slot axis over

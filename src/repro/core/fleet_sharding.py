@@ -1,4 +1,5 @@
-"""Device-sharded fleets: one mesh axis over the federation's scale axes.
+"""Device-sharded fleets: a 2-D ``(rsu, vehicle)`` mesh over the
+federation's scale axes.
 
 The paper's ASFL scheme targets fleets far beyond what one accelerator can
 hold; this module is the partitioning layer that lets the compiled
@@ -7,30 +8,43 @@ multi-RSU super-steps, DESIGN.md §6/§8) execute across a device mesh while
 staying *the same programs* — ``mesh_devices=1`` (the default) bypasses
 every collective and reproduces today's single-device executables exactly.
 
-One 1-D mesh, one axis name (:data:`AXIS`), two partitionings:
+One 2-D mesh, two axis names (:data:`RSU_AXIS`, :data:`VEH_AXIS`), three
+partitionings (DESIGN.md §15):
 
-* ``axis="vehicle"`` — the single-RSU cohort engine shards the stacked
-  client-replica (slot) axis of each cut bucket: per-vehicle forward/
-  backward passes and optimizer updates are shard-local, the shared RSU
-  server state is **replicated** (every shard consumes the all-gathered
-  smashed batches in the same canonical order, so paper §III-B sequential
-  semantics survive sharding), and the unit-wise FedAvg becomes a
-  ``psum``-weighted all-reduce (:func:`repro.core.aggregation.
-  sharded_weighted_sum`).
-* ``axis="rsu"`` — the scenario engine shards the RSU axis of the fused
-  super-step: each device trains ``n_rsus / n_devices`` whole RSU cohorts
-  (per-RSU rounds are independent between cloud syncs, so this axis is
-  embarrassingly parallel), and the edge→cloud merge all-gathers the edge
-  stack so the weighted reduction runs in the *identical order* on every
-  shard — which is what makes the sharded K-fused sgd path bit-for-bit
-  equal to the single-device one (tests/test_fleet_sharding.py).
+* ``axis="vehicle"`` — mesh shape ``(1, n)``.  The single-RSU cohort engine
+  shards the stacked client-replica (slot) axis of each cut bucket:
+  per-vehicle forward/backward passes and optimizer updates are
+  shard-local, the shared RSU server state is **replicated** (every shard
+  consumes the all-gathered smashed batches in the same canonical order, so
+  paper §III-B sequential semantics survive sharding), and the unit-wise
+  FedAvg becomes a ``psum``-weighted all-reduce
+  (:func:`repro.core.aggregation.sharded_weighted_sum`).
+* ``axis="rsu"`` — mesh shape ``(n, 1)``.  The scenario engine shards the
+  RSU axis of the fused super-step: each device trains
+  ``n_rsus / n_devices`` whole RSU cohorts (per-RSU rounds are independent
+  between cloud syncs, so this axis is embarrassingly parallel), and the
+  edge→cloud merge all-gathers the edge stack so the weighted reduction
+  runs in the *identical order* on every shard — which is what makes the
+  sharded K-fused sgd path bit-for-bit equal to the single-device one
+  (tests/test_fleet_sharding.py).
+* ``axis="grid"`` — mesh shape ``(dr, dv)``, both > 1 allowed.  The
+  scenario engine shards the RSU axis ``dr``-way AND each RSU's slot axis
+  ``dv``-way simultaneously.  Dense layout: the per-RSU slot tables split
+  into RSU-aligned column blocks whose segment-sums come home through an
+  order-restoring all-gather over the vehicle sub-axis (bit-for-bit with
+  the single-device program); ragged layout: :meth:`FleetMesh.
+  balanced_slots` splits the compacted occupied-slot axis over the
+  flattened ``(rsu, vehicle)`` grid with psum'd segment partials
+  (tolerance-level parity).  The sequential server schedule is a per-RSU
+  slot *chain* — inherently serial — so it shards only the RSU axis and
+  replicates across the vehicle sub-axis.
 
 Ragged slot sharding (DESIGN.md §12): with ``superstep_layout="ragged"``
-and the parallel server schedule, the super-step's unit of work is no
+and a non-sequential server schedule, the super-step's unit of work is no
 longer an RSU row but a slot of the globally compacted occupied-slot axis.
-The same ``axis="rsu"`` mesh then splits THAT axis into equal contiguous
-blocks (:meth:`FleetMesh.balanced_slots` pads the compacted capacity to a
-device multiple): every device carries the same number of *occupied* slots
+The mesh then splits THAT axis into equal contiguous blocks
+(:meth:`FleetMesh.balanced_slots` pads the compacted capacity to a device
+multiple): every device carries the same number of *occupied* slots
 regardless of how skewed the per-RSU load is, which removes the 256-fleet
 sharding inversions where one device trained a crowded cell's whole padded
 table while its neighbors trained phantoms.  The per-RSU segment-sums
@@ -38,11 +52,13 @@ become psum'd partials and the edge stack replicates — tolerance-level
 (not bit-for-bit) parity with the single-device program, asserted in
 tests/test_fleet_sharding.py.
 
-Padding rules (DESIGN.md §10): bucket slot counts are padded pow2-first,
-then up to the next multiple of the device count; the RSU axis is padded to
-a device multiple with phantom cells no vehicle can be served by.  Both
-paddings are inert — padded slots carry zero aggregation weight and padded
-RSUs never accumulate samples — asserted by the padding-inertness tests.
+Padding rules (DESIGN.md §10/§15): bucket slot counts are padded
+pow2-first, then up to the next multiple of the device count; the RSU axis
+is padded to an ``rsu``-axis multiple with phantom cells no vehicle can be
+served by; under a grid mesh the dense per-RSU capacity additionally pads
+to a ``vehicle``-axis multiple (phantom columns).  All paddings are inert —
+padded slots carry zero aggregation weight and padded RSUs never
+accumulate samples — asserted by the padding-inertness tests.
 
 Data placement: the master :class:`~repro.data.pipeline.StackedClients`
 tensors stay **replicated** on the mesh.  Handover moves a vehicle (and the
@@ -52,6 +68,15 @@ shard from any device; what is sharded is everything derived per round
 (replica stacks, optimizer moments, batch index slabs), which is where the
 O(fleet x params) memory actually lives.
 
+Multi-host (DESIGN.md §15): :func:`maybe_init_distributed` wires
+``jax.distributed.initialize`` from the runtime config (coordinator
+address / process id / process count) before the first backend touch; the
+mesh is then built over the *global* device list (host-local discovery is
+jax's — each process contributes its addressable devices), and
+:func:`host_fetch` gathers non-addressable shards home so
+``RunResult.final_params`` lands as plain host-0 numpy regardless of where
+training ran.
+
 CPU note: ``--xla_force_host_platform_device_count=N`` (the same trick
 ``launch/dryrun.py`` uses) splits the host into N XLA devices for testing
 and CI; on a 2-core container this demonstrates partitioning, not speed —
@@ -60,7 +85,7 @@ the benchmarks record per-device-count rounds/s honestly.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Optional
+from typing import Any, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -69,67 +94,132 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.data.pipeline import StackedClients
 
-AXIS = "fleet"                      # the one mesh axis name
-FLEET_AXES = ("auto", "vehicle", "rsu")   # SimConfig.fleet_axis values
+RSU_AXIS = "rsu"                    # leading mesh axis: RSU rows
+VEH_AXIS = "vehicle"                # trailing mesh axis: per-RSU slots
+ALL_AXES = (RSU_AXIS, VEH_AXIS)     # the flattened device grid
+# SimConfig.fleet_axis values ("grid" = both engine axes simultaneously)
+FLEET_AXES = ("auto", "vehicle", "rsu", "grid")
+
+# mesh_devices="auto" floor: shard only when every device would own at
+# least this many vehicle slots — below it the collective overhead and the
+# 2-core CPU floor invert the win (ROADMAP "City-scale scale-out")
+AUTO_SLOTS_PER_DEVICE = 64
 
 
 @dataclasses.dataclass(frozen=True)
 class FleetMesh:
-    """A 1-D device mesh plus which fleet dimension it partitions.
+    """A 2-D ``(rsu, vehicle)`` device mesh plus which fleet dimension(s)
+    it partitions.
 
-    ``axis`` is ``"vehicle"`` (cohort-engine slot axis) or ``"rsu"``
-    (super-step RSU axis); the mesh axis name is always :data:`AXIS`.
+    ``axis`` is ``"vehicle"`` (cohort-engine slot axis, mesh ``(1, n)``),
+    ``"rsu"`` (super-step RSU axis, mesh ``(n, 1)``) or ``"grid"`` (both
+    super-step axes, mesh ``(dr, dv)``).  The mesh axis names are always
+    :data:`RSU_AXIS` and :data:`VEH_AXIS`; 1-D configurations are the
+    degenerate shapes, so every program traces against the same axis pair.
     """
     mesh: Mesh
     axis: str
+    # mesh_devices="auto" provenance (None when the count was explicit):
+    # {"requested", "chosen", "floor", "fleet_size", "available"}
+    auto_info: Optional[dict] = None
 
     @property
     def n_devices(self) -> int:
         return self.mesh.size
 
+    @property
+    def rsu_devices(self) -> int:
+        """Devices along the RSU sub-axis."""
+        return self.mesh.shape[RSU_AXIS]
+
+    @property
+    def veh_devices(self) -> int:
+        """Devices along the vehicle (slot) sub-axis."""
+        return self.mesh.shape[VEH_AXIS]
+
+    @property
+    def primary(self) -> str:
+        """The mesh axis name the *leading* engine axis shards over: the
+        RSU axis for scenario meshes (``rsu``/``grid``), the vehicle axis
+        for cohort meshes."""
+        return VEH_AXIS if self.axis == "vehicle" else RSU_AXIS
+
+    @property
+    def primary_devices(self) -> int:
+        return self.mesh.shape[self.primary]
+
     # ---- padding ------------------------------------------------------
     def pad(self, n: int) -> int:
-        """Smallest multiple of the device count >= max(n, 1)."""
-        d = self.n_devices
+        """Smallest multiple of the PRIMARY axis device count >= max(n, 1)
+        — the padding rule for the engine's leading axis (RSU rows for
+        scenario meshes, cohort slots for vehicle meshes)."""
+        d = self.primary_devices
+        return ((max(int(n), 1) + d - 1) // d) * d
+
+    def pad_slots(self, n: int) -> int:
+        """Smallest multiple of the VEHICLE sub-axis device count
+        >= max(n, 1): the dense per-RSU slot capacity must split evenly
+        into the grid mesh's column blocks (phantom columns are inert)."""
+        d = self.veh_devices
         return ((max(int(n), 1) + d - 1) // d) * d
 
     def balanced_slots(self, n_slots: int) -> int:
         """Occupancy-balanced capacity of the ragged super-step's compacted
         slot axis (module docstring; DESIGN.md §12): the axis counts
-        OCCUPIED slots fleet-wide, so padding it to a device multiple and
-        splitting contiguously gives every device an equal share of real
-        work even under fully skewed per-RSU load — unlike padded per-RSU
-        tables, whose shards inherit the load imbalance."""
-        return self.pad(n_slots)
+        OCCUPIED slots fleet-wide, so padding it to a multiple of the WHOLE
+        device grid and splitting contiguously gives every device an equal
+        share of real work even under fully skewed per-RSU load — unlike
+        padded per-RSU tables, whose shards inherit the load imbalance."""
+        d = self.n_devices
+        return ((max(int(n_slots), 1) + d - 1) // d) * d
 
     # ---- shardings ----------------------------------------------------
     def leading_sharding(self) -> NamedSharding:
-        """Leading axis split over the mesh, everything else replicated."""
-        return NamedSharding(self.mesh, P(AXIS))
+        """Leading axis split over the primary mesh axis, everything else
+        replicated (including over the other mesh axis)."""
+        return NamedSharding(self.mesh, P(self.primary))
+
+    def slot_sharding(self) -> NamedSharding:
+        """Leading (flat slot) axis split over the WHOLE device grid — the
+        ragged compacted axis placement."""
+        return NamedSharding(self.mesh, P(ALL_AXES))
 
     def replicated_sharding(self) -> NamedSharding:
         return NamedSharding(self.mesh, P())
 
     # ---- placement ----------------------------------------------------
+    def _put(self, a: Any, s: NamedSharding) -> jax.Array:
+        """Place one host array under ``s``.  Single-process: plain
+        ``device_put``.  Multi-process: every host holds the full array
+        (the engines stage identical host state everywhere), so build the
+        global array from each process's addressable shards — collective-
+        free, unlike ``device_put`` on a cross-process sharding, whose
+        implicit equality check broadcasts every leaf through the CPU
+        collectives layer (and trips gloo's in-order message matching)."""
+        if jax.process_count() > 1:
+            arr = np.asarray(a)
+            return jax.make_array_from_callback(
+                arr.shape, s, lambda idx: arr[idx])
+        return jax.device_put(a, s)
+
     def shard_leading(self, tree: Any) -> Any:
-        """device_put every leaf with its leading axis split over the mesh
-        (leaf leading dims must be device-count multiples — use
-        :meth:`pad` upstream)."""
+        """Place every leaf with its leading axis split over the primary
+        mesh axis (leaf leading dims must be :meth:`pad` multiples)."""
         s = self.leading_sharding()
-        return jax.tree.map(lambda a: jax.device_put(a, s), tree)
+        return jax.tree.map(lambda a: self._put(a, s), tree)
 
     def replicate(self, tree: Any) -> Any:
-        """device_put every leaf fully replicated on the mesh."""
+        """Place every leaf fully replicated on the mesh."""
         s = self.replicated_sharding()
-        return jax.tree.map(lambda a: jax.device_put(a, s), tree)
+        return jax.tree.map(lambda a: self._put(a, s), tree)
 
     def place_stacked(self, stacked: StackedClients) -> StackedClients:
         """The master client tensors, replicated on the mesh (see module
         docstring for why they cannot shard by vehicle: handover makes the
         per-round gather pattern cross-shard by design)."""
         return StackedClients(
-            images=jax.device_put(stacked.images, self.replicated_sharding()),
-            labels=jax.device_put(stacked.labels, self.replicated_sharding()),
+            images=self._put(stacked.images, self.replicated_sharding()),
+            labels=self._put(stacked.labels, self.replicated_sharding()),
             lengths=stacked.lengths)
 
 
@@ -142,17 +232,69 @@ def resolve_axis(fleet_axis: str, engine_kind: str) -> str:
     return fleet_axis
 
 
+def grid_shape(n_devices: int) -> Tuple[int, int]:
+    """Default ``(dr, dv)`` factorization of a grid mesh: the vehicle
+    sub-axis takes the largest power of two <= sqrt(n) that divides n
+    (dense capacities pad to ``dv`` — keeping it small keeps phantom
+    columns rare), the RSU axis takes the rest."""
+    n = int(n_devices)
+    dv = 1
+    while dv * 2 <= n and n % (dv * 2) == 0 and (dv * 2) ** 2 <= n:
+        dv *= 2
+    return n // dv, dv
+
+
+def parse_shape_spec(spec) -> Optional[Tuple[int, int]]:
+    """Syntax-only ``mesh_shape`` validation: ``"auto"`` -> None, ``"RxV"``
+    (e.g. ``"4x2"``) -> ``(dr, dv)``.  Device-count consistency is checked
+    at mesh-build time (:func:`parse_mesh_shape`) — config construction
+    must not depend on how many devices this process happens to see."""
+    if spec in (None, "", "auto"):
+        return None
+    try:
+        dr, dv = (int(p) for p in str(spec).lower().split("x"))
+    except ValueError:
+        raise ValueError(f"mesh_shape must be 'auto' or 'RxV' (e.g. '4x2'),"
+                         f" got {spec!r}") from None
+    if dr < 1 or dv < 1:
+        raise ValueError(f"mesh_shape={spec!r} must have both factors >= 1")
+    return dr, dv
+
+
+def parse_mesh_shape(spec: str, n_devices: int, axis: str) -> Tuple[int, int]:
+    """``mesh_shape`` -> ``(dr, dv)``.  ``"auto"`` places all devices on
+    the resolved engine axis (``grid`` axis: :func:`grid_shape`); an
+    explicit ``"RxV"`` (e.g. ``"4x2"``) must multiply to ``n_devices``."""
+    parsed = parse_shape_spec(spec)
+    if parsed is None:
+        if axis == "vehicle":
+            return 1, n_devices
+        if axis == "rsu":
+            return n_devices, 1
+        return grid_shape(n_devices)
+    dr, dv = parsed
+    if dr * dv != n_devices:
+        raise ValueError(
+            f"mesh_shape={spec!r} asks for {dr}x{dv}={dr * dv} devices but "
+            f"mesh_devices={n_devices}")
+    return dr, dv
+
+
 def build_fleet_mesh(n_devices: int, axis: str,
-                     devices: Optional[list] = None) -> FleetMesh:
-    """A :class:`FleetMesh` over the first ``n_devices`` local devices.
+                     devices: Optional[list] = None,
+                     shape: Optional[Tuple[int, int]] = None,
+                     auto_info: Optional[dict] = None) -> FleetMesh:
+    """A :class:`FleetMesh` over the first ``n_devices`` devices.
 
     Raises with the ``--xla_force_host_platform_device_count`` recipe when
     the process has fewer devices than requested (on CPU the flag must be
     set *before* jax initialises its backend — benchmarks set it from the
-    ``--devices`` flag before importing jax)."""
-    if axis not in ("vehicle", "rsu"):
-        raise ValueError(f"fleet mesh axis must be 'vehicle' or 'rsu', "
-                         f"got {axis!r}")
+    ``--devices`` flag before importing jax).  Under multi-host
+    ``jax.distributed`` the default device list is the GLOBAL one, so the
+    mesh spans every process's addressable devices."""
+    if axis not in ("vehicle", "rsu", "grid"):
+        raise ValueError(f"fleet mesh axis must be 'vehicle', 'rsu' or "
+                         f"'grid', got {axis!r}")
     devs = list(devices if devices is not None else jax.devices())
     if n_devices < 1:
         raise ValueError(f"mesh_devices={n_devices!r} must be >= 1")
@@ -163,40 +305,145 @@ def build_fleet_mesh(n_devices: int, axis: str,
             f"XLA_FLAGS=--xla_force_host_platform_device_count={n_devices} "
             f"before the first jax import (launch/dryrun.py and the "
             f"benchmark --devices flag do exactly this)")
-    mesh = Mesh(np.asarray(devs[:n_devices]), (AXIS,))
-    return FleetMesh(mesh, axis)
+    dr, dv = shape if shape is not None \
+        else parse_mesh_shape("auto", n_devices, axis)
+    if dr * dv != n_devices:
+        raise ValueError(f"mesh shape {dr}x{dv} != mesh_devices={n_devices}")
+    if axis == "vehicle" and dr != 1:
+        raise ValueError(f"axis='vehicle' requires a (1, n) mesh, "
+                         f"got {dr}x{dv}")
+    if axis == "rsu" and dv != 1:
+        raise ValueError(f"axis='rsu' requires a (n, 1) mesh, got {dr}x{dv}")
+    grid = np.asarray(devs[:n_devices]).reshape(dr, dv)
+    return FleetMesh(Mesh(grid, ALL_AXES), axis, auto_info)
 
 
-def from_config(cfg, engine_kind: str) -> Optional[FleetMesh]:
+def resolve_mesh_devices(requested, fleet_size: Optional[int] = None,
+                         available: Optional[int] = None):
+    """``mesh_devices`` -> ``(n_devices, info)``.
+
+    ``"auto"`` picks the largest power of two <= the available device count
+    that keeps >= :data:`AUTO_SLOTS_PER_DEVICE` vehicles per device — small
+    fleets stay on one device and never pay the sharding tax that inverts
+    the 256-fleet rows on the 2-core CPU floor.  ``info`` records the
+    decision for ``RunResult.diagnostics`` (None for explicit counts)."""
+    if requested != "auto":
+        return max(int(requested or 1), 1), None
+    avail = int(available if available is not None else len(jax.devices()))
+    fleet = int(fleet_size) if fleet_size else 0
+    n = 1
+    while (n * 2 <= avail
+           and fleet // (n * 2) >= AUTO_SLOTS_PER_DEVICE):
+        n *= 2
+    info = {"requested": "auto", "chosen": n,
+            "floor": AUTO_SLOTS_PER_DEVICE,
+            "fleet_size": fleet, "available": avail}
+    return n, info
+
+
+def from_config(cfg, engine_kind: str,
+                fleet_size: Optional[int] = None) -> Optional[FleetMesh]:
     """The mesh a :class:`~repro.core.fedsim.SimConfig` asks for — ``None``
-    when ``mesh_devices == 1`` (the default single-device path, which must
-    stay bit-identical to the pre-mesh engines and therefore never wraps
-    anything in ``shard_map``)."""
-    n = int(getattr(cfg, "mesh_devices", 1) or 1)
+    when it resolves to one device (the default single-device path, which
+    must stay bit-identical to the pre-mesh engines and therefore never
+    wraps anything in ``shard_map``).  ``fleet_size`` feeds the
+    ``mesh_devices="auto"`` occupied-slots-per-device floor."""
+    n, info = resolve_mesh_devices(getattr(cfg, "mesh_devices", 1) or 1,
+                                   fleet_size)
     if n <= 1:
         return None
-    return build_fleet_mesh(n, resolve_axis(cfg.fleet_axis, engine_kind))
+    axis = resolve_axis(cfg.fleet_axis, engine_kind)
+    shape = parse_mesh_shape(getattr(cfg, "mesh_shape", "auto"), n, axis)
+    return build_fleet_mesh(n, axis, shape=shape, auto_info=info)
+
+
+def maybe_init_distributed(coordinator_address: Optional[str],
+                           num_processes: int = 1,
+                           process_id: int = 0) -> bool:
+    """Initialize ``jax.distributed`` for multi-host meshes (no-op for the
+    single-process default, and idempotent: re-entry with an already-live
+    runtime is ignored so repeated ``build_engine`` calls in one process
+    stay cheap).  Returns True when this call (or a previous one)
+    initialized the runtime."""
+    if num_processes <= 1 or not coordinator_address:
+        return False
+    from jax._src import distributed as _dist   # no public state accessor
+    if getattr(_dist.global_state, "client", None) is not None:
+        return True                 # already initialized (idempotent)
+    try:
+        # XLA:CPU builds its client without cross-process collectives by
+        # default ("Multiprocess computations aren't implemented on the
+        # CPU backend"); the gloo implementation must be selected BEFORE
+        # the first backend touch.  The flag ignores its env var on this
+        # jax, so set it programmatically; only make_cpu_client reads it,
+        # so accelerator backends are unaffected.
+        if jax.config.read("jax_cpu_collectives_implementation") == "none":
+            jax.config.update("jax_cpu_collectives_implementation", "gloo")
+        # gloo matches messages by posting order per TCP pair: async CPU
+        # dispatch lets concurrently-executing programs interleave their
+        # collectives differently per process, which gloo rejects with a
+        # preamble-length mismatch.  Lockstep dispatch is the documented
+        # multi-process CPU mode.
+        jax.config.update("jax_cpu_enable_async_dispatch", False)
+    except AttributeError:          # options absent on this jax version
+        pass
+    jax.distributed.initialize(coordinator_address=coordinator_address,
+                               num_processes=int(num_processes),
+                               process_id=int(process_id))
+    return True
 
 
 def host_fetch(tree: Any) -> Any:
     """Pull a (possibly mesh-sharded) pytree to host numpy arrays — the
     runner calls this on ``RunResult.final_params`` so results survive the
-    mesh (and serialize) regardless of where training ran."""
-    return jax.tree.map(np.asarray, tree)
+    mesh (and serialize) regardless of where training ran.  Under
+    multi-host meshes, shards another process owns come home through an
+    all-gather so every host (host 0 included) sees the full array."""
+    def fetch(a):
+        if isinstance(a, jax.Array) and not a.is_fully_addressable:
+            from jax.experimental import multihost_utils
+            return np.asarray(multihost_utils.process_allgather(
+                a, tiled=True))
+        return np.asarray(a)
+
+    return jax.tree.map(fetch, tree)
 
 
-def local_slice(x: jnp.ndarray, n_local: int, axis: int = 0) -> jnp.ndarray:
+def _flat_device_index(axes: Sequence[str]):
+    """This device's rank in the row-major flattening of ``axes``."""
+    idx = jax.lax.axis_index(axes[0])
+    for a in axes[1:]:
+        idx = idx * jax.lax.psum(1, a) + jax.lax.axis_index(a)
+    return idx
+
+
+def local_slice(x: jnp.ndarray, n_local: int, axis: int = 0,
+                axes: Sequence[str] = ALL_AXES) -> jnp.ndarray:
     """Inside ``shard_map``: this shard's contiguous block of a replicated
-    array whose logical leading axis is split ``n_local`` per device."""
-    start = jax.lax.axis_index(AXIS) * n_local
+    array whose logical leading axis is split ``n_local`` per device over
+    ``axes`` (default: the whole device grid; pass ``(RSU_AXIS,)`` for
+    RSU-row blocks that replicate across the vehicle sub-axis)."""
+    start = _flat_device_index(axes) * n_local
     return jax.lax.dynamic_slice_in_dim(x, start, n_local, axis=axis)
 
 
-def scalar_allsum(x: jnp.ndarray) -> jnp.ndarray:
+def local_block2d(x: jnp.ndarray, r_local: int,
+                  c_local: int) -> jnp.ndarray:
+    """Inside ``shard_map``: this device's ``(r_local, c_local)`` tile of a
+    replicated 2-D table whose rows split over the RSU axis and columns
+    over the vehicle axis — the dense grid-mesh slot-table partitioning."""
+    r0 = jax.lax.axis_index(RSU_AXIS) * r_local
+    c0 = jax.lax.axis_index(VEH_AXIS) * c_local
+    return jax.lax.dynamic_slice(x, (r0, c0), (r_local, c_local))
+
+
+def scalar_allsum(x: jnp.ndarray,
+                  axes: Sequence[str] = ALL_AXES) -> jnp.ndarray:
     """Inside ``shard_map``: sum a shard-local scalar (a telemetry total
     reduced from sharded per-RSU state — staleness-bank weight, stream-
     buffer occupancy/absorption) home across the mesh.  Scalars carry no
     reduction-order contract, so a plain psum is the right tool here — the
     bit-for-bit gather-then-reduce discipline applies to model planes, not
-    counters."""
-    return jax.lax.psum(x, AXIS)
+    counters.  Pass ``(RSU_AXIS,)`` when the value is replicated across the
+    vehicle sub-axis (a psum over a replicated axis would multiply it)."""
+    return jax.lax.psum(x, tuple(axes))

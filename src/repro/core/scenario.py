@@ -401,6 +401,128 @@ class UrbanGrid:
 
 
 # --------------------------------------------------------------------------
+# city grid (scale-out fixture)
+# --------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class CityGrid:
+    """City-scale deployment: a ``grid_x`` x ``grid_y`` lattice of RSU cells
+    (hundreds to thousands of RSUs) serving thousands of vehicles.
+
+    Each vehicle is anchored to a *home cell* drawn from the Zipf popularity
+    law over the flattened cell index (the skewed-load pattern introduced
+    with the ragged layout: downtown cells crowded, the periphery a long
+    sparse tail) and follows an *eccentric orbit* around that cell's center:
+    the radius breathes between ``r0*(1 - ecc)`` and ``r0*(1 + ecc)`` while
+    the phase advances at an individual angular rate.  Because the radius
+    band straddles the RSU coverage radius for much of the fleet, vehicles
+    periodically swing through the inter-cell coverage gap:
+    ``serving_rsu == -1`` episodes — the signal the mobility-coupled churn
+    source (``stream_churn_source="mobility"``) turns into departures and
+    re-registrations — arise from the geometry, not from a sampled process,
+    and wide orbits near cell edges hand over to neighbouring cells.
+
+    Built for scale: every kinematic quantity is a closed-form function of
+    ``t`` (no per-segment walk like :class:`UrbanGrid`), the fleet attribute
+    arrays are drawn vectorized (no per-vehicle profile objects), and cell
+    association exploits the lattice — the nearest center of a square grid
+    is found by flooring, O(n), instead of the O(n x n_rsus) distance
+    matrix — so a 100k-vehicle fleet over a 1000-cell grid answers
+    ``fleet_state`` in a handful of vector ops."""
+    name: str = "city"
+    n_vehicles: int = 4096
+    grid_x: int = 16
+    grid_y: int = 16
+    cell_m: float = 900.0        # lattice pitch; > 2*rsu_range_m leaves gaps
+    orbit_frac: Sequence[float] = (0.35, 1.15)  # mean orbit r / rsu_range_m
+    eccentricity: float = 0.45   # radial breathing amplitude, x mean radius
+    speed_mps: float = 14.0
+    seed: int = 0
+    load_skew: Optional[str] = "zipf"       # "zipf" | None (uniform)
+    ch: channel.ChannelConfig = dataclasses.field(
+        default_factory=channel.ChannelConfig)
+    fleet: Optional[object] = None
+
+    def __post_init__(self):
+        rng = np.random.default_rng(self.seed)
+        n = self.n_vehicles
+        self.n_rsus = self.grid_x * self.grid_y
+        self.fleet_arrays = (self._vector_fleet(rng) if self.fleet is None
+                             else _resolve_fleet(n, self.seed, self.fleet))
+        gx, gy = np.meshgrid(np.arange(self.grid_x), np.arange(self.grid_y),
+                             indexing="ij")
+        self.rsu_positions = ((np.stack([gx.ravel(), gy.ravel()], axis=-1)
+                               + 0.5) * self.cell_m).astype(np.float64)
+        if self.load_skew is None:
+            home = rng.integers(0, self.n_rsus, size=n)
+        elif self.load_skew == "zipf":
+            w = 1.0 / (np.arange(self.n_rsus) + 1.0)
+            home = rng.choice(self.n_rsus, size=n, p=w / w.sum())
+        else:
+            raise ValueError(f"unknown load_skew {self.load_skew!r}; "
+                             f"expected None or 'zipf'")
+        self._center = self.rsu_positions[home]
+        lo, hi = self.orbit_frac
+        self._radius = self.ch.rsu_range_m * rng.uniform(lo, hi, size=n)
+        self._phase = rng.uniform(0.0, 2.0 * np.pi, size=n)
+        speed = self.speed_mps * rng.uniform(0.85, 1.15, size=n)
+        spin = rng.choice(np.array([-1.0, 1.0]), size=n)
+        self._omega = spin * speed / np.maximum(self._radius, 1e-9)
+        # radial breathing: r(t) = r0 * (1 + ecc * sin(nu t + psi)) — an
+        # incommensurate rate vs the angular sweep, so the coverage-boundary
+        # crossings don't phase-lock to the revolution
+        self._nu = np.abs(self._omega) * rng.uniform(0.4, 0.9, size=n)
+        self._psi = rng.uniform(0.0, 2.0 * np.pi, size=n)
+
+    def _vector_fleet(self, rng) -> Dict[str, np.ndarray]:
+        """Vectorized twin of ``channel.make_fleet`` + ``fleet_arrays``
+        (same attribute distributions, one draw per column instead of a
+        Python loop per vehicle — the loop is what caps make_fleet at a few
+        thousand vehicles)."""
+        n = self.n_vehicles
+        return {
+            "compute_flops": rng.uniform(5e9, 50e9, size=n),
+            "tx_power_w": rng.uniform(0.2, 1.0, size=n),
+            "compute_power_w": rng.uniform(8.0, 25.0, size=n),
+            "x0_m": rng.uniform(-350.0, -50.0, size=n),
+            "speed_mps": rng.uniform(8.0, 30.0, size=n),
+            "memory_budget_bytes": np.full(n, float("inf")),
+        }
+
+    def _associate(self, pos: np.ndarray):
+        """Lattice cell association: the Voronoi cell of a square grid is
+        the enclosing cell, so nearest-center is floor + clip, O(n)."""
+        ij = np.floor(pos / self.cell_m).astype(np.int64)
+        ij = np.clip(ij, 0, [self.grid_x - 1, self.grid_y - 1])
+        flat = ij[:, 0] * self.grid_y + ij[:, 1]
+        rel = pos - self.rsu_positions[flat]
+        dist = np.sqrt(np.einsum("nd,nd->n", rel, rel))
+        serving = np.where(dist <= self.ch.rsu_range_m, flat, -1)
+        return serving.astype(np.int32), dist
+
+    def fleet_state(self, t: float, seed: int) -> FleetState:
+        theta = self._phase + self._omega * t
+        ct, st = np.cos(theta), np.sin(theta)
+        breathe = self._nu * t + self._psi
+        r = self._radius * (1.0 + self.eccentricity * np.sin(breathe))
+        dr = self._radius * self.eccentricity * self._nu * np.cos(breathe)
+        pos = self._center + r[:, None] * np.stack([ct, st], -1)
+        vel = (dr[:, None] * np.stack([ct, st], -1)
+               + (r * self._omega)[:, None] * np.stack([-st, ct], -1))
+        serving, dist = self._associate(pos)
+        rates = _rates_to_serving(self.ch, dist,
+                                  self.fleet_arrays["tx_power_w"], serving,
+                                  seed)
+        # residence linearizes the orbit at the current velocity — the same
+        # tangent-line deadline every other scenario reports
+        centers = self.rsu_positions[np.maximum(serving, 0)]
+        res = np.where(serving >= 0,
+                       coverage_exit_time(pos, vel, centers,
+                                          self.ch.rsu_range_m), 0.0)
+        return FleetState(t, pos, vel, serving, rates, res)
+
+
+# --------------------------------------------------------------------------
 # trace replay
 # --------------------------------------------------------------------------
 
@@ -540,11 +662,18 @@ def highway_zipf(n_vehicles: int, seed: int = 0, **kw) -> HighwayCorridor:
     return HighwayCorridor(n_vehicles=n_vehicles, seed=seed, **kw)
 
 
+def city(n_vehicles: int, seed: int = 0, **kw) -> CityGrid:
+    """City-scale RSU lattice with Zipf cell popularity, orbit mobility,
+    and geometric coverage gaps — the scale-out / paging fixture."""
+    return CityGrid(n_vehicles=n_vehicles, seed=seed, **kw)
+
+
 SCENARIOS = {
     "highway_corridor": highway_corridor,
     "highway_zipf": highway_zipf,
     "urban_grid": urban_grid,
     "trace_replay": trace_replay,
+    "city": city,
 }
 
 

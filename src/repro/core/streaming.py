@@ -45,6 +45,13 @@ STREAM_SALT = 0xB0FF
 
 STALENESS_KERNELS = ("constant", "poly")
 
+# where presence departures come from: the seeded Markov toggle chain
+# ("markov", gated on churn_rate > 0) or the scenario's coverage state
+# ("mobility": a vehicle with serving_rsu == -1 has departed the stream,
+# and a vehicle re-entering coverage re-registers — synchronous schedules
+# admit it next round, the streaming schedule immediately)
+CHURN_SOURCES = ("markov", "mobility")
+
 
 @dataclasses.dataclass(frozen=True)
 class StreamConfig:
@@ -61,14 +68,24 @@ class StreamConfig:
     kernel: str = "constant"   # staleness discount: constant | poly
     alpha: float = 0.5         # poly kernel exponent: 1/(1+s)**alpha
     seed: int = 0
+    churn_source: str = "markov"  # markov (toggle chain) | mobility
 
     def __post_init__(self):
         if self.kernel not in STALENESS_KERNELS:
             raise ValueError(
                 f"kernel must be one of {STALENESS_KERNELS}, got {self.kernel!r}")
+        if self.churn_source not in CHURN_SOURCES:
+            raise ValueError(
+                f"churn_source must be one of {CHURN_SOURCES}, "
+                f"got {self.churn_source!r}")
         if not 0.0 <= float(self.churn_rate) < 1.0:
             raise ValueError(
                 f"churn_rate must be in [0, 1), got {self.churn_rate!r}")
+        if self.churn_source == "mobility" and float(self.churn_rate) > 0.0:
+            raise ValueError(
+                "churn_source='mobility' derives departures from coverage; "
+                "churn_rate must stay 0 (the Markov chain is the 'markov' "
+                "source)")
         if int(self.buffer_size) < 1:
             raise ValueError(
                 f"buffer_size must be >= 1, got {self.buffer_size!r}")
@@ -77,8 +94,9 @@ class StreamConfig:
 
     @property
     def churning(self) -> bool:
-        """Any traced (sampled) presence process active."""
-        return float(self.churn_rate) > 0.0
+        """Any traced presence process active (a sampled toggle chain or
+        the mobility-coupled coverage stream)."""
+        return float(self.churn_rate) > 0.0 or self.churn_source == "mobility"
 
 
 def stream_key(cfg: StreamConfig, rnd) -> jax.Array:

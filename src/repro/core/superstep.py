@@ -153,7 +153,8 @@ from jax.sharding import PartitionSpec as PSpec
 
 from repro.core import (adaptive, aggregation, compression, faults,
                         fleet_sharding, streaming)
-from repro.core.fleet_sharding import AXIS as MESH_AXIS, FleetMesh
+from repro.core.fleet_sharding import (ALL_AXES, RSU_AXIS, VEH_AXIS,
+                                       FleetMesh)
 from repro.data.pipeline import StackedClients, fleet_batch_indices_traced
 from repro import optim
 
@@ -488,7 +489,8 @@ class SuperStepPrograms:
         U = model.n_units
         R, C, n = self.n_rsus_padded, sig.capacity, self.n_vehicles
         fm = self.mesh
-        R_loc = R if fm is None else R // fm.n_devices
+        R_loc = R if fm is None else R // fm.rsu_devices
+        dv = 1 if fm is None else fm.veh_devices
         P = self.n_params
         steps, batch = self.steps, cfg.batch_size
         interval = float(cfg.round_interval_s)
@@ -526,18 +528,49 @@ class SuperStepPrograms:
         CU = self.client_units
         unit_ids_w = unit_ids[O:O + W]
         S = sig.slots if ragged_par else R * C
+        C_loc = C if fm is None else C // dv
+        # dense2d: the grid mesh splits each RSU's dense slot row into
+        # vehicle-axis column blocks; segment-sums regroup through an
+        # order-restoring all-gather (DESIGN.md §15)
+        dense2d = (fm is not None and layout == "dense"
+                   and self.schedule != "sequential" and dv > 1)
+        if fm is not None and layout == "dense" and C % dv != 0:
+            raise ValueError(
+                f"dense slot capacity {C} must divide over the vehicle "
+                f"sub-axis ({dv} devices); pad it with "
+                f"FleetMesh.pad_slots upstream")
+        paged, n_pages, page = False, 1, int(getattr(cfg, "page_slots", 0))
         if self.schedule != "sequential":
             if fm is None:
                 S_loc, R_srv, psum_out = S, R, False
             elif layout == "dense":
-                # RSU-aligned slot blocks: device d's slots are exactly its
-                # R_loc RSU rows, so segment-sums stay shard-local and the
-                # PR 5 bit-for-bit all-gather combine applies unchanged
-                S_loc, R_srv, psum_out = R_loc * C, R_loc, False
+                # RSU-aligned slot blocks: device (i, j)'s slots are its
+                # R_loc RSU rows x its C_loc slot columns.  With dv == 1
+                # segment-sums stay shard-local and the PR 5 bit-for-bit
+                # all-gather combine applies unchanged; with dv > 1 the
+                # per-RSU sums regroup over the vehicle axis first
+                S_loc, R_srv, psum_out = R_loc * C_loc, R_loc, False
             else:
-                # compacted slots shard by occupancy: blocks of occupied
-                # slots, RSUs interleaved — per-RSU sums are psum'd partials
+                # compacted slots shard by occupancy over the WHOLE device
+                # grid: blocks of occupied slots, RSUs interleaved —
+                # per-RSU sums are psum'd partials
                 S_loc, R_srv, psum_out = S // fm.n_devices, R, True
+            # slot-capacity paging (DESIGN.md §15): when the planned
+            # compacted block exceeds the per-device concurrent window,
+            # each local step sweeps the slots in fixed `page`-slot
+            # windows instead of one S_loc-wide vmap — peak activation
+            # memory is set by page_slots, while the slot axis (and the
+            # program signature) tracks the planned capacity.  Ragged
+            # parallel/streaming only: the dense grid's bit-exact regroup
+            # needs the whole (R_loc, C) row in flight
+            if ragged_par and page > 0 and S_loc > page:
+                if S_loc % page:
+                    raise ValueError(
+                        f"page_slots={page} must divide the per-device "
+                        f"compacted slot block {S_loc} (signature() pads "
+                        f"planned slots to a page multiple — pass slots "
+                        f"through SuperStepPrograms.signature)")
+                paged, n_pages = True, S_loc // page
 
         def pick_cuts(serving, rates, residence):
             """(n,) int32 cuts, 0 = SKIP/uncovered (traced twin of the PR 2
@@ -892,10 +925,26 @@ class SuperStepPrograms:
             cut_slots_l = cuts[members_l]
             w_slots_l = lengths_f[members_l] * slot_mask_l
 
+            def regroup(vals):
+                """Order-restoring gather over the vehicle sub-axis
+                (dense grid mesh): this device's (R_loc, C_loc) column
+                block rejoins its row's other blocks, so per-RSU
+                reductions see the full C columns in the single-device
+                slot order — the bit-for-bit combine, where a psum of
+                column-block partials would reassociate the fp adds."""
+                v = lax.all_gather(vals, VEH_AXIS)      # (dv, S_loc, ...)
+                v = v.reshape((dv, R_loc, C_loc) + vals.shape[1:])
+                v = jnp.moveaxis(v, 0, 1)               # (R_loc, dv, C_loc)
+                return v.reshape((R_loc * C,) + vals.shape[1:])
+
+            seg_full = regroup(slot_seg_l) if dense2d else slot_seg_l
+
             def seg_sum(vals):
+                if dense2d:
+                    vals = regroup(vals)
                 out = jnp.zeros((R_srv + 1,) + vals.shape[1:],
-                                vals.dtype).at[slot_seg_l].add(vals)[:R_srv]
-                return lax.psum(out, MESH_AXIS) if psum_out else out
+                                vals.dtype).at[seg_full].add(vals)[:R_srv]
+                return lax.psum(out, ALL_AXES) if psum_out else out
 
             w_seg = seg_sum(w_slots_l)                   # (R_srv,)
             den = jnp.maximum(w_seg, 1.0)
@@ -910,6 +959,60 @@ class SuperStepPrograms:
             co = jax.vmap(opt.init)(cu)
             so = jax.vmap(opt.init)(sv0)
 
+            def paged_sweep(sv_stack, cu, idx_s, amask, gw_s, res):
+                """One local step's fwd/bwd in fixed slot windows
+                (DESIGN.md §15): each page vmaps ``page`` slots, scatters
+                its weighted gradient share into an (R_srv + 1, P)
+                accumulator (row R_srv drops the phantoms), and emits only
+                its owned-window gradient columns — the full-width
+                (S_loc, P) gradient and the S_loc-wide activations never
+                materialize, so peak memory is set by ``page_slots``, not
+                the planned compacted capacity.  Pages are a lax.scan of
+                static length: paging churn is data, never a signature."""
+                pg = lambda a: a.reshape((n_pages, page) + a.shape[1:])
+                xs = {"cu": pg(cu), "cut": pg(cut_slots_l),
+                      "m": pg(members_l), "idx": pg(idx_s),
+                      "seg": pg(slot_seg_l), "mask": pg(slot_mask_l),
+                      "amask": pg(amask), "gw": pg(gw_s)}
+                if ef:
+                    xs["res"] = pg(res)
+
+                def page_fn(accs, xp):
+                    g_acc, l_acc = accs
+                    sv_g = sv_stack[jnp.minimum(xp["seg"], R_srv - 1)]
+                    if ef:
+                        g, losses, res_n = jax.vmap(
+                            par_slot_grad, in_axes=(0, 0, 0, 0, 0, 0))(
+                                xp["cu"], xp["cut"], xp["m"], xp["idx"],
+                                sv_g, xp["res"])
+                    else:
+                        g, losses = jax.vmap(
+                            par_slot_grad, in_axes=(0, 0, 0, 0, 0))(
+                                xp["cu"], xp["cut"], xp["m"], xp["idx"],
+                                sv_g)
+                    keep_p = xp["mask"][:, None] \
+                        & (unit_ids[None, :] < xp["cut"][:, None])
+                    contrib = jnp.where(keep_p, 0.0, g) * xp["gw"][:, None]
+                    g_acc = g_acc.at[xp["seg"]].add(contrib)
+                    l_acc = l_acc.at[xp["seg"]].add(
+                        jnp.where(xp["amask"], losses, 0.0))
+                    ys = (g[:, O:O + W], res_n) if ef else g[:, O:O + W]
+                    return (g_acc, l_acc), ys
+
+                accs0 = (jnp.zeros((R_srv + 1, P), jnp.float32),
+                         jnp.zeros((R_srv + 1,), jnp.float32))
+                (g_acc, l_acc), ys = lax.scan(page_fn, accs0, xs)
+                if ef:
+                    g_w = ys[0].reshape(S_loc, W)
+                    res_new = ys[1].reshape(S_loc, res_size)
+                else:
+                    g_w, res_new = ys.reshape(S_loc, W), None
+                g_srv, ls_seg = g_acc[:R_srv], l_acc[:R_srv]
+                if psum_out:
+                    g_srv = lax.psum(g_srv, ALL_AXES)
+                    ls_seg = lax.psum(ls_seg, ALL_AXES)
+                return g_w, g_srv, ls_seg, res_new
+
             def step_body(carry, x_s):
                 if fz:
                     idx_s, act_s = x_s
@@ -917,16 +1020,9 @@ class SuperStepPrograms:
                     idx_s = x_s
                 if ef:
                     sv_stack, so, cu, co, res = carry
-                    g, losses, res_new = jax.vmap(
-                        par_slot_grad, in_axes=(0, 0, 0, 0, 0, 0))(
-                            cu, cut_slots_l, members_l, idx_s,
-                            sv_stack[seg_gather], res)
                 else:
                     sv_stack, so, cu, co = carry
-                    g, losses = jax.vmap(
-                        par_slot_grad, in_axes=(0, 0, 0, 0, 0))(
-                            cu, cut_slots_l, members_l, idx_s,
-                            sv_stack[seg_gather])
+                    res = None
                 if fz:
                     # per-step survivorship: a dropped slot stops
                     # contributing weight (and gradient) after its drop
@@ -940,26 +1036,43 @@ class SuperStepPrograms:
                     any_s = w_seg_s > 0.0
                 else:
                     amask, gw_s, any_s = slot_mask_l, gw, any_active
+                if paged:
+                    g_w, g_srv, ls_seg, res_new = paged_sweep(
+                        sv_stack, cu, idx_s, amask, gw_s, res)
+                else:
+                    if ef:
+                        g, losses, res_new = jax.vmap(
+                            par_slot_grad, in_axes=(0, 0, 0, 0, 0, 0))(
+                                cu, cut_slots_l, members_l, idx_s,
+                                sv_stack[seg_gather], res)
+                    else:
+                        g, losses = jax.vmap(
+                            par_slot_grad, in_axes=(0, 0, 0, 0, 0))(
+                                cu, cut_slots_l, members_l, idx_s,
+                                sv_stack[seg_gather])
+                        res_new = None
+                    # RSUs: one |D_n|-weighted mean-gradient step each
+                    # over their cohorts' server-side gradient shares
+                    contrib = jnp.where(keep_full, 0.0, g) * gw_s[:, None]
+                    g_srv = seg_sum(contrib)             # (R_srv, P)
+                    ls_seg = seg_sum(jnp.where(amask, losses, 0.0))
+                    g_w = g[:, O:O + W]
                 if ef:
                     res = jnp.where(amask[:, None], res_new, res)
-                # RSUs: one |D_n|-weighted mean-gradient step each over
-                # their cohorts' server-side gradient shares
-                contrib = jnp.where(keep_full, 0.0, g) * gw_s[:, None]
-                g_srv = seg_sum(contrib)                 # (R_srv, P)
                 upd_s, so2 = jax.vmap(opt.update)(g_srv, so, sv_stack)
                 sv2 = optim.apply_updates(sv_stack, upd_s)
                 sv_stack = jnp.where(any_s[:, None], sv2, sv_stack)
                 so = _sel_flat_state(any_s[:, None], any_s,
                                      so2, so, sv_stack.shape)
                 # vehicles: per-replica prefix updates over the slot axis
-                upd_c, co2 = jax.vmap(opt.update)(g[:, O:O + W], co, cu)
+                upd_c, co2 = jax.vmap(opt.update)(g_w, co, cu)
                 keep_w_s = keep_w & act_s[:, None] if fz else keep_w
                 cu = jnp.where(keep_w_s, optim.apply_updates(cu, upd_c), cu)
                 co = _sel_flat_state(keep_w_s, amask, co2, co,
                                      cu.shape)
                 out = (sv_stack, so, cu, co, res) if ef \
                     else (sv_stack, so, cu, co)
-                return out, seg_sum(jnp.where(amask, losses, 0.0))
+                return out, ls_seg
 
             init = (sv0, so, cu, co, res_slots_l) if ef \
                 else (sv0, so, cu, co)
@@ -1061,8 +1174,17 @@ class SuperStepPrograms:
                 # immediately — its shard is already staged on device by
                 # the double-buffered pipeline, and the buffered merge
                 # never waits on cohort formation
-                toggle = streaming.sample_toggles_traced(stc, rnd, n)
-                present2 = carry["present"] ^ toggle
+                if stc.churn_source == "mobility":
+                    # mobility-coupled stream (DESIGN.md §15): departures
+                    # ARE the coverage state — a vehicle whose serving
+                    # cell is -1 has left the stream, one re-entering
+                    # coverage re-registers.  Same admission contract as
+                    # the sampled chain: synchronous schedules admit the
+                    # re-arrival next round, streaming immediately
+                    present2 = serving >= 0
+                else:
+                    toggle = streaming.sample_toggles_traced(stc, rnd, n)
+                    present2 = carry["present"] ^ toggle
                 arrived = present2 & ~carry["present"]
                 admit = present2 if sz else (present2 & ~arrived)
                 serving, rates, residence = streaming.gate_presence(
@@ -1114,7 +1236,10 @@ class SuperStepPrograms:
                 # banked weight merging THIS round (telemetry)
                 stale_w = jnp.sum(carry["stale_den"])
                 if fm is not None and not ragged_par:
-                    stale_w = lax.psum(stale_w, MESH_AXIS)
+                    # the bank is per-RSU state, sharded over the RSU axis
+                    # and replicated across the vehicle sub-axis — psum
+                    # over the RSU axis only (both would multiply by dv)
+                    stale_w = lax.psum(stale_w, RSU_AXIS)
             if ef:
                 # residuals follow the vehicle (the plane is fleet-indexed
                 # and replicated): zero where this round's cut differs from
@@ -1127,9 +1252,15 @@ class SuperStepPrograms:
                 members, mask = slot_table_seq(order, counts)
                 if fm is not None:
                     # the slot table is fleet-wide and replicated; each
-                    # shard trains its contiguous block of RSU rows
-                    members_l = fleet_sharding.local_slice(members, R_loc)
-                    mask_l = fleet_sharding.local_slice(mask, R_loc)
+                    # RSU-axis shard trains its contiguous block of RSU
+                    # rows.  The sequential schedule is a per-RSU slot
+                    # CHAIN (slot i+1's server pass consumes slot i's
+                    # updated state), so the vehicle sub-axis has nothing
+                    # to split — it replicates the chain (DESIGN.md §15)
+                    members_l = fleet_sharding.local_slice(
+                        members, R_loc, axes=(RSU_AXIS,))
+                    mask_l = fleet_sharding.local_slice(
+                        mask, R_loc, axes=(RSU_AXIS,))
                 else:
                     members_l, mask_l = members, mask
                 idx_rsu = jnp.moveaxis(idx_all[:, members_l], 1, 0)
@@ -1164,12 +1295,12 @@ class SuperStepPrograms:
                     # all-reduce, which is what keeps sharded sgd
                     # bit-for-bit (a psum of per-shard partials would
                     # reassociate the fp additions)
-                    ls = lax.all_gather(ls, MESH_AXIS, tiled=True)
-                    cnt = jnp.sum(lax.all_gather(cs, MESH_AXIS,
+                    ls = lax.all_gather(ls, RSU_AXIS, tiled=True)
+                    cnt = jnp.sum(lax.all_gather(cs, RSU_AXIS,
                                                  tiled=True))
-                    w_tot = lax.all_gather(w_tot, MESH_AXIS, tiled=True)
+                    w_tot = lax.all_gather(w_tot, RSU_AXIS, tiled=True)
                     edge_stack = aggregation.gathered_stack(edge,
-                                                            MESH_AXIS)
+                                                            RSU_AXIS)
                 else:
                     edge_stack = edge
             else:
@@ -1177,16 +1308,21 @@ class SuperStepPrograms:
                 if fm is None:
                     members_l, slot_seg_l = members, slot_seg
                 elif layout == "dense":
-                    # RSU-aligned blocks: this shard's slots are its R_loc
-                    # rows of the padded grid; localize segment ids and
-                    # clip the phantom segment R onto the local drop row
-                    members_l = fleet_sharding.local_slice(members, S_loc)
-                    seg = fleet_sharding.local_slice(slot_seg, S_loc)
-                    r0 = lax.axis_index(MESH_AXIS) * R_loc
+                    # RSU-aligned tiles: device (i, j)'s slots are its
+                    # R_loc rows x C_loc columns of the padded (R, C)
+                    # grid (with dv == 1 that is exactly the old R_loc-row
+                    # block); localize segment ids and clip the phantom
+                    # segment R onto the local drop row
+                    members_l = fleet_sharding.local_block2d(
+                        members.reshape(R, C), R_loc, C_loc).reshape(-1)
+                    seg = fleet_sharding.local_block2d(
+                        slot_seg.reshape(R, C), R_loc, C_loc).reshape(-1)
+                    r0 = lax.axis_index(RSU_AXIS) * R_loc
                     slot_seg_l = jnp.minimum(seg - r0,
                                              R_loc).astype(jnp.int32)
                 else:
-                    # occupancy-balanced blocks of the compacted axis
+                    # occupancy-balanced blocks of the compacted axis,
+                    # split over the WHOLE (rsu, vehicle) device grid
                     members_l = fleet_sharding.local_slice(members, S_loc)
                     slot_seg_l = fleet_sharding.local_slice(slot_seg,
                                                             S_loc)
@@ -1270,16 +1406,25 @@ class SuperStepPrograms:
                                      jnp.where(valid, sba + 1, sba))
                     cnt3 = jnp.where(fire, 0, cnt2)
                     if fm is not None and not ragged_par:
-                        # per-RSU scalars: sum home across the shards
-                        absorbed = fleet_sharding.scalar_allsum(absorbed)
-                        st_stream = fleet_sharding.scalar_allsum(st_stream)
-                        fires = fleet_sharding.scalar_allsum(fires)
-                        occ = fleet_sharding.scalar_allsum(occ)
+                        # per-RSU scalars sharded over the RSU axis (and
+                        # replicated across the vehicle sub-axis): sum
+                        # home across the RSU shards only
+                        rsu_only = (RSU_AXIS,)
+                        absorbed = fleet_sharding.scalar_allsum(absorbed,
+                                                                rsu_only)
+                        st_stream = fleet_sharding.scalar_allsum(st_stream,
+                                                                 rsu_only)
+                        fires = fleet_sharding.scalar_allsum(fires,
+                                                             rsu_only)
+                        occ = fleet_sharding.scalar_allsum(occ, rsu_only)
                 if fm is not None and layout == "dense":
-                    ls = lax.all_gather(ls, MESH_AXIS, tiled=True)
-                    w_tot = lax.all_gather(w_tot, MESH_AXIS, tiled=True)
+                    # per-RSU rows are vehicle-replicated after the
+                    # regrouped segment-sums, so the combine is the same
+                    # RSU-axis gather as the 1-D mesh
+                    ls = lax.all_gather(ls, RSU_AXIS, tiled=True)
+                    w_tot = lax.all_gather(w_tot, RSU_AXIS, tiled=True)
                     edge_stack = aggregation.gathered_stack(edge,
-                                                            MESH_AXIS)
+                                                            RSU_AXIS)
                 else:
                     # single device, or ragged mesh: segment-sums were
                     # already psum'd full-width and the edge is replicated
@@ -1298,7 +1443,14 @@ class SuperStepPrograms:
                     ef_members.reshape(-1)].add(
                         delta.reshape(-1, delta.shape[-1]))
                 if fm is not None:
-                    upd = lax.psum(upd, MESH_AXIS)
+                    # sequential: slots live on RSU-axis shards and the
+                    # vehicle sub-axis replicates them (psum over both
+                    # would multiply by dv); flat schedules: every slot
+                    # lives on exactly one (rsu, vehicle) device
+                    upd = lax.psum(upd,
+                                   (RSU_AXIS,)
+                                   if self.schedule == "sequential"
+                                   else ALL_AXES)
                 wire_res2 = res_base + upd
                 wire_cut2 = jnp.where(sched, cuts,
                                       carry["wire_cut"]).astype(jnp.int32)
@@ -1359,7 +1511,7 @@ class SuperStepPrograms:
             # ragged + parallel replicates the edge stack (the mesh splits
             # the compacted slot axis, not the RSU axis); every other
             # combination shards the edge's leading RSU axis as before
-            edge_spec = PSpec() if ragged_par else PSpec(MESH_AXIS)
+            edge_spec = PSpec() if ragged_par else PSpec(RSU_AXIS)
             carry_spec = {"edge": edge_spec, "samples": PSpec(),
                           "prev": PSpec(), "global": PSpec()}
             if ef:
@@ -1396,6 +1548,18 @@ class SuperStepPrograms:
         if self.layout == "ragged" and self.schedule != "sequential":
             s = int(slots) if slots and int(slots) > 0 \
                 else self.n_rsus_padded * int(capacity)
+            if self.mesh is not None:
+                s = self.mesh.balanced_slots(s)
+            page = int(getattr(self.cfg, "page_slots", 0))
+            if page > 0:
+                # pad each device's block to a page multiple so the paged
+                # sweep's fixed windows tile it exactly (padding is
+                # phantom slots — inert by the exact-+0 convention)
+                nd = 1 if self.mesh is None else self.mesh.n_devices
+                per = -(-s // nd)
+                if per > page:
+                    per = -(-per // page) * page
+                s = per * nd
         else:
             s = 0
         return SuperStepSignature(k, capacity, not self.traced_mobility,

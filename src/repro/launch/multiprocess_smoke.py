@@ -1,0 +1,177 @@
+"""Multi-process ``jax.distributed`` smoke: 2 local processes x 4 forced
+host devices must train the SAME model as one process (DESIGN.md §15).
+
+The parent (no ``--process-id``) runs three children and compares:
+
+* a single-process **reference** forcing all 8 host-platform CPU devices,
+  so the engine builds the same ``(4, 2)`` 2-D ``(rsu, vehicle)`` mesh the
+  workers will — every collective present, all of them in-process;
+* two **worker** processes, each forcing 4 host devices and rendezvousing
+  through ``jax.distributed`` on a loopback coordinator, so the SAME
+  8-device mesh now spans a process boundary (cross-process collectives
+  via gloo).
+
+All three run the identical ``ExperimentSpec`` — the ``city`` scenario on
+the fused ragged super-step engine with sgd — and process 0 of the worker
+pair must reproduce the reference ``final_params`` bit for bit: splitting
+the mesh across processes changes which transport moves the bytes, never
+the math (§10/§15).  (Mesh-vs-single-device parity is the in-process
+suites' job — ragged grid layouts carry the documented psum-partials
+tolerance there.)
+
+  PYTHONPATH=src python -m repro.launch.multiprocess_smoke
+
+Exit status 0 on parity; non-zero on divergence, a worker crash, or a
+rendezvous timeout.  CI runs this as the scale-out smoke.
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import socket
+import subprocess
+import sys
+import tempfile
+
+
+def _spec(api, args):
+    """The one spec every process runs; only RuntimeConfig's process
+    topology differs between reference and workers."""
+    return api.ExperimentSpec(
+        model="mlp9",
+        train=api.TrainConfig(scheme="asfl", rounds=args.rounds,
+                              local_steps=1, batch_size=8, lr=1e-3,
+                              eval_every=0, optimizer="sgd",
+                              server_schedule="sequential"),
+        fleet=api.FleetConfig(n_vehicles=args.fleet, scenario="city",
+                              scenario_kwargs={"seed": 7, "grid_x": 2,
+                                               "grid_y": 2},
+                              cloud_sync_every=1, round_interval_s=10.0,
+                              per_vehicle_samples=16, data_seed=7),
+        runtime=api.RuntimeConfig(
+            superstep=2, superstep_layout="ragged", precompile=True,
+            fleet_axis="grid",
+            mesh_devices=args.mesh_devices,
+            coordinator_address=args.coordinator,
+            num_processes=args.num_processes,
+            process_id=args.process_id))
+
+
+def _run_and_save(args) -> None:
+    """Child body (reference or worker): run the spec, save flattened
+    ``final_params`` + losses as npz.  Every worker saves (host_fetch
+    all-gathers non-addressable shards home), but only process 0's file is
+    compared — the others just prove the gather works everywhere."""
+    import numpy as np
+    import jax
+    from repro import api
+
+    res = api.run(_spec(api, args))
+    leaves = jax.tree.leaves(res.final_params)
+    payload = {f"leaf{i}": np.asarray(a) for i, a in enumerate(leaves)}
+    payload["losses"] = np.asarray([m.loss for m in res.history])
+    payload["fallbacks"] = np.asarray(res.diagnostics["compile_fallbacks"])
+    payload["n_processes"] = np.asarray(res.diagnostics["n_processes"])
+    np.savez(args.out, **payload)
+    print(f"[{args.tag}] devices={jax.device_count()} "
+          f"local={jax.local_device_count()} "
+          f"mesh={res.diagnostics['mesh_shape']} "
+          f"losses={payload['losses'].tolist()}", flush=True)
+
+
+def _child_env(local_devices: int) -> dict:
+    env = dict(os.environ)
+    flags = [f for f in env.get("XLA_FLAGS", "").split()
+             if "host_platform_device_count" not in f]
+    if local_devices > 1:
+        flags.append(f"--xla_force_host_platform_device_count"
+                     f"={local_devices}")
+    env["XLA_FLAGS"] = " ".join(flags)
+    # cross-process CPU collectives need the gloo implementation; the
+    # default ("none") can only move bytes inside one process
+    env.setdefault("JAX_CPU_COLLECTIVES_IMPLEMENTATION", "gloo")
+    return env
+
+
+def _parent(args) -> int:
+    import numpy as np
+
+    port = socket.socket()
+    port.bind(("127.0.0.1", 0))
+    coordinator = f"127.0.0.1:{port.getsockname()[1]}"
+    port.close()
+
+    with tempfile.TemporaryDirectory() as tmp:
+        base = [sys.executable, "-m", "repro.launch.multiprocess_smoke",
+                "--fleet", str(args.fleet), "--rounds", str(args.rounds)]
+        ref = os.path.join(tmp, "ref.npz")
+        total = 2 * args.local_devices
+        print(f"[parent] single-process reference "
+              f"({total} in-process devices) ...", flush=True)
+        subprocess.run(base + ["--process-id", "0", "--num-processes", "1",
+                               "--mesh-devices", str(total),
+                               "--tag", "ref", "--out", ref],
+                       env=_child_env(total), check=True,
+                       timeout=args.timeout)
+
+        print(f"[parent] 2 processes x {args.local_devices} devices via "
+              f"{coordinator} ...", flush=True)
+        outs, procs = [], []
+        for pid in range(2):
+            out = os.path.join(tmp, f"worker{pid}.npz")
+            outs.append(out)
+            procs.append(subprocess.Popen(
+                base + ["--process-id", str(pid), "--num-processes", "2",
+                        "--mesh-devices", str(2 * args.local_devices),
+                        "--coordinator", coordinator,
+                        "--tag", f"worker{pid}", "--out", out],
+                env=_child_env(args.local_devices)))
+        codes = [p.wait(timeout=args.timeout) for p in procs]
+        if any(codes):
+            print(f"[parent] FAIL: worker exit codes {codes}")
+            return 1
+
+        a, b = np.load(ref), np.load(outs[0])
+        assert int(b["n_processes"]) == 2, "worker did not run distributed"
+        assert int(b["fallbacks"]) == 0, "worker recompiled outside precompile"
+        keys = sorted(k for k in a.files if k.startswith("leaf"))
+        assert keys and keys == sorted(
+            k for k in b.files if k.startswith("leaf"))
+        worst = 0.0
+        for k in keys + ["losses"]:
+            d = np.abs(a[k].astype(np.float64) - b[k].astype(np.float64))
+            worst = max(worst, float(d.max()) if d.size else 0.0)
+        status = "bit-exact" if worst == 0.0 else f"max |delta|={worst:g}"
+        print(f"[parent] single-process vs 2-process mesh: {status}")
+        if worst != 0.0:
+            print("[parent] FAIL: crossing the process boundary moved the "
+                  "math — same mesh, same spec must be bit-identical")
+            return 1
+        print("[parent] PASS")
+        return 0
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fleet", type=int, default=64)
+    ap.add_argument("--rounds", type=int, default=2)
+    ap.add_argument("--local-devices", type=int, default=4,
+                    help="forced host devices per worker process")
+    ap.add_argument("--timeout", type=float, default=600.0)
+    # child-mode plumbing (set by the parent; absent => parent mode)
+    ap.add_argument("--process-id", type=int, default=None)
+    ap.add_argument("--num-processes", type=int, default=1)
+    ap.add_argument("--mesh-devices", type=int, default=1)
+    ap.add_argument("--coordinator", default=None)
+    ap.add_argument("--tag", default="child")
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args()
+    if args.process_id is None:
+        return _parent(args)
+    args.mesh_devices = int(args.mesh_devices)
+    _run_and_save(args)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -83,7 +83,7 @@ def test_builtin_registries_present():
     assert text <= set(api.MODELS)
     assert set(api.SCENARIOS) == {"single_rsu", "highway_corridor",
                                   "highway_zipf", "urban_grid",
-                                  "trace_replay"}
+                                  "trace_replay", "city"}
     assert set(api.SCHEDULES) == {"sequential", "parallel", "streaming"}
     assert {"paper", "paper-literal", "latency", "energy", "memory",
             "residence"} == set(api.STRATEGIES)
@@ -230,9 +230,9 @@ def test_every_registry_combination_builds_or_fails_actionably():
                                         "allowed" in msg), msg
             failed += 1
     # both populations exist, and the valid grid is the expected size:
-    # models x (1 single-RSU x 5 strategies + 4 scenarios x 3 strategies
+    # models x (1 single-RSU x 5 strategies + 5 scenarios x 3 strategies
     #           x 3 schedules)
-    assert built == len(api.MODELS) * (5 + 4 * 3 * 3)
+    assert built == len(api.MODELS) * (5 + 5 * 3 * 3)
     assert failed > 0
 
 

@@ -310,3 +310,186 @@ def test_api_run_on_mesh_gathers_final_params():
                                rtol=1e-6, atol=0)
     jax.tree.map(np.testing.assert_array_equal,
                  res.final_params, ref.final_params)
+
+
+# --------------------------------------- 2-D grid mesh, paging, auto sizing
+# (ISSUE 10, DESIGN.md §15)
+
+def test_grid_shape_and_shape_spec():
+    assert [fleet_sharding.grid_shape(n) for n in (1, 2, 4, 8, 16)] == \
+        [(1, 1), (2, 1), (2, 2), (4, 2), (4, 4)]
+    assert fleet_sharding.parse_shape_spec("auto") is None
+    assert fleet_sharding.parse_shape_spec("4x2") == (4, 2)
+    with pytest.raises(ValueError, match="mesh_shape"):
+        fleet_sharding.parse_shape_spec("4by2")
+    with pytest.raises(ValueError, match=">= 1"):
+        fleet_sharding.parse_shape_spec("0x2")
+    # device-count consistency is a BUILD-time check, not config syntax
+    with pytest.raises(ValueError, match="mesh_devices"):
+        fleet_sharding.parse_mesh_shape("4x2", 4, "grid")
+    with pytest.raises(ValueError, match="mesh_shape"):
+        SimConfig(mesh_shape="x")
+    SimConfig(mesh_shape="64x2")    # syntax-valid on any device count
+
+
+def test_balanced_and_padded_slot_rules():
+    m1 = build_fleet_mesh(1, "grid")
+    assert (m1.rsu_devices, m1.veh_devices) == (1, 1)
+    assert [m1.balanced_slots(s) for s in (0, 1, 5)] == [1, 1, 5]
+    assert m1.pad_slots(3) == 3
+    if DEV >= 8:
+        m = build_fleet_mesh(8, "grid")
+        assert (m.rsu_devices, m.veh_devices) == (4, 2)
+        assert m.pad(3) == 4            # RSU rows pad to the rsu sub-axis
+        assert m.pad_slots(3) == 4      # dense capacity pads to the veh axis
+        for s in (1, 3, 7, 8, 9, 64):   # compacted axis: whole device grid
+            b = m.balanced_slots(s)
+            assert b % m.n_devices == 0 and b >= s and b - s < m.n_devices
+        # explicit shapes must factor the device count; 1-D axes stay 1-D
+        with pytest.raises(ValueError, match="requires"):
+            build_fleet_mesh(8, "rsu", shape=(4, 2))
+        m42 = build_fleet_mesh(8, "grid", shape=(2, 4))
+        assert (m42.rsu_devices, m42.veh_devices) == (2, 4)
+
+
+def test_mesh_devices_auto_resolution():
+    n, info = fleet_sharding.resolve_mesh_devices("auto", fleet_size=32,
+                                                  available=8)
+    assert n == 1 and info["chosen"] == 1
+    n, _ = fleet_sharding.resolve_mesh_devices("auto", fleet_size=4096,
+                                               available=8)
+    assert n == 8
+    # 200 vehicles: 2 devices keep >= 64 slots each, 4 would not
+    n, info = fleet_sharding.resolve_mesh_devices("auto", fleet_size=200,
+                                                  available=8)
+    assert n == 2 and info["floor"] == fleet_sharding.AUTO_SLOTS_PER_DEVICE
+    n, info = fleet_sharding.resolve_mesh_devices(4, fleet_size=None)
+    assert n == 4 and info is None
+    SimConfig(mesh_devices="auto")      # config accepts the sentinel
+    with pytest.raises(ValueError, match="mesh_devices"):
+        SimConfig(mesh_devices="many")
+
+
+def test_api_auto_mesh_decision_in_diagnostics():
+    """mesh_devices="auto" on a tiny fleet chooses one device (below the
+    slots-per-device floor) and records the decision."""
+    from repro import api
+    spec = api.ExperimentSpec(
+        model="mlp9",
+        train=api.TrainConfig(scheme="asfl", rounds=1, local_steps=1,
+                              batch_size=4, lr=1e-3, eval_every=0),
+        fleet=api.FleetConfig(n_vehicles=4, scenario="trace_replay",
+                              per_vehicle_samples=8, test_samples=8),
+        runtime=api.RuntimeConfig(mesh_devices="auto", precompile=False))
+    res = api.run(spec)
+    assert res.diagnostics["mesh_devices"] == 1
+    auto = res.diagnostics["mesh_auto"]
+    assert auto["requested"] == "auto" and auto["chosen"] == 1
+    assert auto["floor"] == fleet_sharding.AUTO_SLOTS_PER_DEVICE
+
+
+def _city_engines(page, mesh=None, n=24):
+    """(unpaged reference, paged engine) on a small city lattice — enough
+    occupied slots that ``page_slots`` genuinely splits the per-device
+    block into multiple windows."""
+    from repro.core import scenario as S
+    sc = S.make_scenario("city", n, seed=1, grid_x=2, grid_y=2)
+    clients, test = _vector_clients(n)
+    base = _cfg(server_schedule="parallel", superstep_layout="ragged",
+                n_clients=n)
+    ref = ScenarioEngine(TinyMLP(), clients, test, base, sc,
+                         cloud_sync_every=2, mesh=mesh)
+    eng = ScenarioEngine(TinyMLP(), clients, test,
+                         dataclasses.replace(base, page_slots=page), sc,
+                         cloud_sync_every=2, mesh=mesh)
+    sigs = eng.precompile()
+    # the paged program must actually page: > 1 window per device block
+    nd = mesh.n_devices if mesh is not None else 1
+    assert all(s.slots // nd > page for s in sigs), (page, sigs)
+    return ref, eng
+
+
+def test_paged_ragged_parallel_bitexact():
+    """Slot paging (page_slots) bounds the CONCURRENT slot window of the
+    ragged compacted axis: the paged lax.scan walks fixed windows over the
+    same slots in the same order, so it is bit-identical to the unpaged
+    vmap — paging changes peak footprint, never math — and the paged
+    signature precompiles (page position is loop state, not a signature)."""
+    ref, eng = _city_engines(page=4)
+    h1, h2 = ref.run(), eng.run()
+    assert eng.programs.compile_fallbacks == 0
+    _assert_histories_equal(h1, h2)
+    jax.tree.map(np.testing.assert_array_equal, _params(ref), _params(eng))
+
+
+def test_page_slots_validation():
+    with pytest.raises(ValueError, match="page_slots"):
+        SimConfig(page_slots=-1)
+    from repro import api
+    with pytest.raises(ValueError, match="page_slots"):
+        api.ExperimentSpec(
+            fleet=api.FleetConfig(n_vehicles=8, scenario="highway_corridor"),
+            runtime=api.RuntimeConfig(page_slots=4,
+                                      superstep_layout="dense"))
+    with pytest.raises(ValueError, match="page_slots"):
+        api.ExperimentSpec(runtime=api.RuntimeConfig(page_slots=4))
+
+
+def test_process_topology_validation():
+    from repro import api
+    with pytest.raises(ValueError, match="process_id"):
+        api.ExperimentSpec(runtime=api.RuntimeConfig(num_processes=2,
+                                                     process_id=2,
+                                                     coordinator_address="localhost:1"))
+    with pytest.raises(ValueError, match="coordinator_address"):
+        api.ExperimentSpec(runtime=api.RuntimeConfig(num_processes=2))
+    api.ExperimentSpec(runtime=api.RuntimeConfig(
+        num_processes=2, process_id=1, coordinator_address="localhost:1"))
+
+
+@need8
+@pytest.mark.parametrize("schedule,layout,exact", [
+    ("sequential", "ragged", True),
+    ("parallel", "dense", True),
+    ("parallel", "ragged", False),
+])
+def test_grid_mesh_superstep_parity(schedule, layout, exact):
+    """The 2-D (rsu, vehicle) mesh shards RSU rows AND slot columns at
+    once (4x2 over 8 devices).  Sequential chains replicate the vehicle
+    sub-axis (bit-exact); the dense parallel schedule splits each RSU's
+    slot columns and regroups gathers into single-device order (bit-exact
+    — this is also the 2-D padding-inertness case: the 2-RSU trace pads to
+    4 phantom RSU rows x phantom slot columns, all folding out as exact
+    +0s); the ragged compacted axis psums segment partials (tolerance)."""
+    sc = _two_cell_trace(ROUNDS, INTERVAL)
+    clients, test = _vector_clients(2)
+    cfg = _cfg(server_schedule=schedule, superstep_layout=layout)
+    ref = ScenarioEngine(TinyMLP(), clients, test, cfg, sc,
+                         cloud_sync_every=2)
+    mesh = build_fleet_mesh(8, "grid")
+    assert (mesh.rsu_devices, mesh.veh_devices) == (4, 2)
+    eng = ScenarioEngine(TinyMLP(), clients, test, cfg, sc,
+                         cloud_sync_every=2, mesh=mesh)
+    assert eng.programs.n_rsus_padded == 4      # phantom RSU rows in play
+    h1, h2 = ref.run(), eng.run()
+    assert sum(m.n_handover for m in h1) >= 1
+    _assert_histories_equal(h1, h2, exact=exact)
+    if exact:
+        jax.tree.map(np.testing.assert_array_equal,
+                     _params(ref), _params(eng))
+    else:
+        jax.tree.map(lambda a, b: np.testing.assert_allclose(
+            a, b, atol=1e-5, rtol=1e-5), _params(ref), _params(eng))
+
+
+@need8
+def test_paged_grid_mesh_matches_unpaged():
+    """Paging composes with the 2-D mesh: each device pages its own
+    compacted block through fixed windows; parity with the same-mesh
+    unpaged program is exact (same slots, same order, same psums)."""
+    ref, eng = _city_engines(page=2, mesh=build_fleet_mesh(8, "grid"),
+                             n=64)
+    h1, h2 = ref.run(), eng.run()
+    assert eng.programs.compile_fallbacks == 0
+    _assert_histories_equal(h1, h2)
+    jax.tree.map(np.testing.assert_array_equal, _params(ref), _params(eng))

@@ -401,3 +401,38 @@ def test_dirichlet_label_distribution_skews_with_alpha(alpha):
     stats = partition_stats(parts, labels)
     assert sum(s["n"] for s in stats) == len(labels)
     assert all(set(s["classes"]) <= set(range(10)) for s in stats)
+
+
+# ------------------------------------------------------------- fleet mesh
+@SET
+@given(st.integers(0, 5000),
+       st.sampled_from(["vehicle", "rsu", "grid"]),
+       st.integers(0, 2 ** 31 - 1))
+def test_mesh_padding_is_minimal_device_multiple(s, axis, _seed):
+    """Every FleetMesh pad rule returns the SMALLEST multiple of its device
+    divisor that holds the payload (ISSUE 10): ``pad`` over the primary
+    axis, ``pad_slots`` over the vehicle sub-axis, ``balanced_slots`` over
+    the whole 2-D mesh — and a 1-device mesh pads nothing."""
+    from repro.core import fleet_sharding as fs
+    for n in sorted({1, jax.device_count()}):
+        mesh = fs.build_fleet_mesh(n, axis)
+        for fn, d in ((mesh.pad, mesh.primary_devices),
+                      (mesh.pad_slots, mesh.veh_devices),
+                      (mesh.balanced_slots, mesh.n_devices)):
+            b = fn(s)
+            assert b % d == 0            # shardable across the divisor
+            assert b >= max(s, 1)        # holds the payload (never empty)
+            assert b - max(s, 1) < d     # and not one row more than needed
+
+
+@SET
+@given(st.integers(1, 4096))
+def test_grid_shape_factorization(n):
+    """grid_shape splits n devices into (rsu, vehicle) with the vehicle
+    sub-axis a power of two at most sqrt(n), so both factors multiply back
+    to n and the slot axis always gets the smaller side."""
+    from repro.core import fleet_sharding as fs
+    dr, dv = fs.grid_shape(n)
+    assert dr * dv == n
+    assert dv >= 1 and (dv & (dv - 1)) == 0      # power of two
+    assert dv * dv <= n                          # vehicle side <= sqrt(n)

@@ -309,3 +309,56 @@ def test_residence_aware_skip_path_in_engine():
     assert hist[0].cuts[1] == adaptive.SKIP
     assert hist[0].n_skipped >= 1
     assert np.isfinite(hist[0].loss)
+
+
+# ---------------------------------------------------- city scale-out fixture
+# (ISSUE 10: Zipf cell popularity, geometric coverage gaps, O(n) lattice
+# association — the scenario the 2-D mesh and slot paging are sized for)
+
+def test_city_zipf_skew_and_coverage_gaps():
+    sc = S.city(512, seed=1, grid_x=4, grid_y=4)
+    assert sc.n_rsus == 16
+    assert sc.rsu_positions.shape == (16, 2)
+    st = sc.fleet_state(0.0, seed=0)
+    assert st.serving_rsu.min() >= -1 and st.serving_rsu.max() < 16
+    # the lattice pitch (900 m) exceeds 2x coverage (400 m): gaps exist,
+    # but the orbit radii keep most of the fleet in coverage
+    covered = float(st.active.mean())
+    assert 0.5 < covered < 0.98
+    # Zipf home cells: the hottest cell carries far more than the median
+    counts = np.bincount(st.serving_rsu[st.active], minlength=16)
+    assert counts.max() > 3 * max(np.median(counts), 1)
+    # eccentric orbits breathe across the coverage edge: presence flips
+    st2 = sc.fleet_state(30.0, seed=0)
+    assert (st.active != st2.active).sum() > 0
+    # deterministic in (seed, t)
+    twin = S.city(512, seed=1, grid_x=4, grid_y=4)
+    np.testing.assert_array_equal(st.serving_rsu,
+                                  twin.fleet_state(0.0, seed=0).serving_rsu)
+    with pytest.raises(ValueError, match="load_skew"):
+        S.city(8, seed=0, grid_x=2, grid_y=2, load_skew="bogus")
+
+
+def test_city_lattice_association_matches_brute_force():
+    """The O(n) floor+clip lattice lookup must agree with the O(n*n_rsus)
+    nearest-RSU search: on a square lattice the enclosing cell IS the
+    Voronoi cell, and coverage (400 m) never reaches a neighbour's centre."""
+    sc = S.city(256, seed=3, grid_x=3, grid_y=5)
+    for t in (0.0, 17.0, 123.0):
+        st = sc.fleet_state(t, seed=0)
+        ref, _ = S.nearest_rsu(st.positions, sc.rsu_positions,
+                               sc.ch.rsu_range_m)
+        np.testing.assert_array_equal(st.serving_rsu, ref)
+
+
+def test_city_residence_and_rates_consistent():
+    sc = S.city(128, seed=2, grid_x=2, grid_y=2)
+    st = sc.fleet_state(5.0, seed=0)
+    assert (st.rates_bps[st.active] > 0).all()
+    assert (st.rates_bps[~st.active] == 0).all()
+    assert (st.residence_s[st.active] > 0).all()
+    assert (st.residence_s[~st.active] == 0).all()
+    # uniform load (load_skew=None) spreads homes across all cells
+    flat = S.city(128, seed=2, grid_x=2, grid_y=2, load_skew=None)
+    st_f = flat.fleet_state(5.0, seed=0)
+    assert len(np.unique(st_f.serving_rsu[st_f.active])) == 4

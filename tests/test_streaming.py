@@ -298,3 +298,90 @@ def test_federation_rejects_streaming():
     with pytest.raises(ValueError, match="multi-RSU"):
         FederationSim(TinyMLP(), clients, test,
                       _cfg(stream_churn_rate=0.2))
+
+
+# ------------------------------------------- mobility-coupled churn source
+# (ISSUE 10: stream_churn_source="mobility" — presence follows coverage)
+
+def _gap_trace(rounds, interval):
+    """Vehicle 0: covered (RSU0) -> coverage gap -> covered again; vehicle
+    1 parks inside RSU0.  The gap is geometric (serving == -1), exactly
+    what the mobility churn source turns into a departure + re-arrival."""
+    times = np.arange(rounds + 1, dtype=np.float64) * interval
+    n_steps = len(times)
+    x0 = np.array([300.0, 600.0] + [300.0] * (n_steps - 2))
+    x1 = np.full(n_steps, 310.0)
+    x = np.stack([x0, x1], axis=-1)
+    pos = np.stack([x, np.zeros_like(x)], axis=-1)
+    rsus = np.array([[300.0, 0.0], [900.0, 0.0]])
+    from repro.core import channel
+    ch = channel.ChannelConfig(fading_std_db=0.0, rsu_range_m=200.0)
+    return scenario.TraceReplay(times, pos, rsus, ch=ch, seed=0)
+
+
+def test_mobility_churn_config_validation():
+    with pytest.raises(ValueError, match="churn_source"):
+        streaming.StreamConfig(churn_source="gps")
+    with pytest.raises(ValueError, match="churn_rate must stay 0"):
+        streaming.StreamConfig(churn_source="mobility", churn_rate=0.2)
+    assert streaming.StreamConfig(churn_source="mobility").churning
+    with pytest.raises(ValueError, match="stream_churn_source"):
+        SimConfig(stream_churn_source="gps")
+
+
+def test_mobility_churn_defers_reentry_on_sync_schedules():
+    """With churn_source="mobility" a vehicle leaving coverage DEPARTS the
+    stream; on a synchronous schedule its re-entry is an arrival that sits
+    out the arrival round (registration/model download), one round behind
+    the no-churn engine, which re-schedules it the moment it is covered."""
+    sc = _gap_trace(ROUNDS, INTERVAL)
+    clients, test = _vector_clients(2)
+    base = ScenarioEngine(TinyMLP(), clients, test, _cfg(), sc,
+                          cloud_sync_every=2)
+    mob = ScenarioEngine(TinyMLP(), clients, test,
+                         _cfg(stream_churn_source="mobility"), sc,
+                         cloud_sync_every=2)
+    hb, hm = base.run(), mob.run()
+    assert [m.n_scheduled for m in hb] == [2, 1, 2, 2]
+    assert [m.n_scheduled for m in hm] == [2, 1, 1, 2]
+    # round 2 is the re-arrival: present again, not yet admitted
+    assert [m.n_arrived for m in hm] == [0, 0, 1, 0]
+    assert [m.n_present for m in hm] == [2, 1, 2, 2]
+
+
+def test_mobility_churn_fused_matches_per_round():
+    """The mobility presence plane lives on the donated carry: K-fused
+    super-steps see the same presence sequence as per-round dispatch, bit
+    for bit, and the fused signature precompiles (zero fallbacks)."""
+    sc = _gap_trace(ROUNDS, INTERVAL)
+    clients, test = _vector_clients(2)
+    cfg1 = _cfg(stream_churn_source="mobility")
+    cfgK = dataclasses.replace(cfg1, superstep=ROUNDS)
+    e1 = ScenarioEngine(TinyMLP(), clients, test, cfg1, sc,
+                        cloud_sync_every=2)
+    eK = ScenarioEngine(TinyMLP(), clients, test, cfgK, sc,
+                        cloud_sync_every=2)
+    eK.precompile()
+    h1, hK = e1.run(), eK.run()
+    assert eK.programs.compile_fallbacks == 0
+    np.testing.assert_array_equal([m.loss for m in h1],
+                                  [m.loss for m in hK])
+    assert [m.n_arrived for m in h1] == [m.n_arrived for m in hK]
+    jax.tree.map(np.testing.assert_array_equal, _params(e1), _params(eK))
+
+
+def test_mobility_churn_streaming_admits_immediately():
+    """The buffered-async schedule registers re-entering vehicles the round
+    they re-appear (no sit-out round): the re-arrival round schedules the
+    full covered set."""
+    sc = _gap_trace(ROUNDS, INTERVAL)
+    clients, test = _vector_clients(2)
+    eng = ScenarioEngine(TinyMLP(), clients, test,
+                         _cfg(server_schedule="streaming",
+                              stream_churn_source="mobility",
+                              stream_buffer_size=2), sc,
+                         cloud_sync_every=2)
+    hist = eng.run()
+    assert all(np.isfinite(m.loss) for m in hist)
+    assert [m.n_scheduled for m in hist] == [2, 1, 2, 2]
+    assert [m.n_arrived for m in hist] == [0, 0, 1, 0]
